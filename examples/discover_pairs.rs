@@ -1,0 +1,73 @@
+//! Scenario example: reproduce the paper's §2.1 discovery claim — scan
+//! every network for complementary convolution pairs, across workspace
+//! budgets, and print the census.
+//!
+//! ```bash
+//! cargo run --release --offline --example discover_pairs -- [batch]
+//! ```
+
+use parconv::coordinator::discover_pairs;
+use parconv::gpusim::DeviceSpec;
+use parconv::graph::Network;
+use parconv::util::{fmt_bytes, Table};
+
+fn main() -> anyhow::Result<()> {
+    let batch: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(32);
+    let dev = DeviceSpec::k40();
+    println!(
+        "complementary-pair census at batch {batch} on {} (min speedup 1.05x)\n",
+        dev.name
+    );
+    let budgets: [u64; 3] = [
+        512 * 1024 * 1024,
+        2 * 1024 * 1024 * 1024,
+        4 * 1024 * 1024 * 1024,
+    ];
+    let mut t = Table::new(vec![
+        "Network",
+        "Indep. conv pairs",
+        "Budget 512MB",
+        "Budget 2GB",
+        "Budget 4GB",
+        "Best speedup",
+    ]);
+    for net in Network::ALL {
+        let dag = net.build(batch);
+        let total = dag.independent_conv_pairs().len();
+        let mut counts = Vec::new();
+        let mut best = 0.0f64;
+        for b in budgets {
+            let f = discover_pairs(&dag, &dev, b, 1.05);
+            if let Some(top) = f.first() {
+                best = best.max(top.speedup());
+            }
+            counts.push(f.len());
+        }
+        t.row(vec![
+            net.name().to_string(),
+            total.to_string(),
+            counts[0].to_string(),
+            counts[1].to_string(),
+            counts[2].to_string(),
+            if best > 0.0 {
+                format!("{best:.2}x")
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "(budgets are the workspace headroom left beside tensors; {} total \
+         device memory)",
+        fmt_bytes(DeviceSpec::k40().global_mem)
+    );
+    println!("\npaper claim: \"We discover 27 similar cases in this network \
+             [GoogleNet] and more instances in other popular non-linear CNNs \
+             such as ResNet.\"");
+    Ok(())
+}

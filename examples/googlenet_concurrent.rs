@@ -1,0 +1,88 @@
+//! Scenario example: schedule one full GoogleNet training-iteration's
+//! forward graph under every policy/partition regime, print the comparison,
+//! and dump a chrome trace of the most interesting co-execution.
+//!
+//! ```bash
+//! cargo run --release --offline --example googlenet_concurrent -- [batch]
+//! ```
+
+use parconv::convlib::{kernel_desc, Algorithm, ConvParams};
+use parconv::coordinator::{Coordinator, ScheduleConfig, SelectionPolicy};
+use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
+use parconv::graph::Network;
+use parconv::profiler::chrome_trace_json;
+use parconv::util::{fmt_bytes, fmt_us, Table};
+
+fn main() -> anyhow::Result<()> {
+    let batch: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(32);
+    let dev = DeviceSpec::k40();
+    let dag = Network::GoogleNet.build(batch);
+    println!(
+        "GoogleNet, batch {batch}: {} ops, {} convs, {} independent conv pairs\n",
+        dag.len(),
+        dag.conv_ids().len(),
+        dag.independent_conv_pairs().len()
+    );
+
+    let mut table = Table::new(vec![
+        "Policy",
+        "Partition",
+        "Streams",
+        "Makespan",
+        "vs baseline",
+        "Conv overlap",
+        "Peak workspace",
+    ]);
+    let mut baseline = None;
+    for (policy, partition, streams) in [
+        (SelectionPolicy::FastestOnly, PartitionMode::Serial, 1),
+        (SelectionPolicy::FastestOnly, PartitionMode::StreamsOnly, 4),
+        (SelectionPolicy::MemoryMin, PartitionMode::Serial, 1),
+        (SelectionPolicy::Balanced, PartitionMode::Serial, 1),
+        (SelectionPolicy::ProfileGuided, PartitionMode::InterSm, 2),
+        (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 2),
+        (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 4),
+    ] {
+        let r = Coordinator::new(
+            dev.clone(),
+            ScheduleConfig {
+                policy,
+                partition,
+                streams,
+                workspace_limit: 4 * 1024 * 1024 * 1024,
+            },
+        )
+        .execute_dag(&dag);
+        let base = *baseline.get_or_insert(r.makespan_us);
+        table.row(vec![
+            policy.name().to_string(),
+            partition.name().to_string(),
+            streams.to_string(),
+            fmt_us(r.makespan_us),
+            format!("{:.2}x", base / r.makespan_us),
+            fmt_us(r.conv_overlap_us),
+            fmt_bytes(r.peak_workspace),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Trace the Table-1 pair co-executing under intra-SM quotas.
+    let p3 = ConvParams::incep3a_3x3(batch);
+    let p5 = ConvParams::incep3a_5x5(batch);
+    let mut e = Engine::new(dev.clone(), PartitionMode::IntraSm);
+    e.launch(
+        kernel_desc(Algorithm::ImplicitPrecompGemm, &p3, &dev).unwrap(),
+        0,
+    );
+    e.launch(kernel_desc(Algorithm::FftTiling, &p5, &dev).unwrap(), 1);
+    let sim = e.run();
+    std::fs::write("googlenet_pair_trace.json", chrome_trace_json(&sim))?;
+    println!(
+        "wrote googlenet_pair_trace.json (open in chrome://tracing or Perfetto)"
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Quickstart: the library in five minutes.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+//!
+//! Walks the paper's argument end to end: (1) non-linear networks expose
+//! independent convolutions; (2) cuDNN-style algorithm picks exhaust SM
+//! resources, so streams alone serialize; (3) profile-guided algorithm
+//! selection + intra-SM partitioning makes concurrency real.
+
+use parconv::convlib::{kernel_desc, Algorithm, ConvParams};
+use parconv::coordinator::{
+    discover_pairs, Coordinator, ScheduleConfig, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
+use parconv::graph::Network;
+use parconv::profiler::{table1_report, table1_row};
+use parconv::util::fmt_us;
+
+fn main() {
+    let dev = DeviceSpec::k40();
+    println!("device: {} ({} SMs)\n", dev.name, dev.num_sms);
+
+    // 1. Structure: AlexNet is a chain, GoogleNet forks four ways.
+    let alex = Network::AlexNet.build(32).stats();
+    let goog = Network::GoogleNet.build(32).stats();
+    println!(
+        "AlexNet:   {} convs, {} independent conv pairs (linear: {})",
+        alex.convs, alex.independent_conv_pairs, alex.is_linear()
+    );
+    println!(
+        "GoogleNet: {} convs, {} independent conv pairs (linear: {})\n",
+        goog.convs, goog.independent_conv_pairs, goog.is_linear()
+    );
+
+    // 2. Profile the two independent inception-3a convolutions (Table 1).
+    let p3 = ConvParams::incep3a_3x3(32);
+    let p5 = ConvParams::incep3a_5x5(32);
+    let rows: Vec<_> = [
+        ("3x3", Algorithm::ImplicitPrecompGemm, &p3),
+        ("3x3", Algorithm::FftTiling, &p3),
+        ("5x5", Algorithm::ImplicitPrecompGemm, &p5),
+        ("5x5", Algorithm::FftTiling, &p5),
+    ]
+    .iter()
+    .filter_map(|(l, a, p)| table1_row(l, *a, p, &dev))
+    .collect();
+    println!("{}", table1_report(&rows));
+
+    // 3. Streams alone don't help; complementary algos + intra-SM do.
+    let scenario = |aa, ab, mode| {
+        let mut e = Engine::new(dev.clone(), mode);
+        e.launch(kernel_desc(aa, &p3, &dev).unwrap(), 0);
+        e.launch(kernel_desc(ab, &p3, &dev).unwrap(), 1);
+        let r = e.run();
+        (r.makespan_us, r.speedup_vs_serial())
+    };
+    let (t_tf, s_tf) = scenario(
+        Algorithm::ImplicitPrecompGemm,
+        Algorithm::ImplicitPrecompGemm,
+        PartitionMode::StreamsOnly,
+    );
+    let (t_cp, s_cp) = scenario(
+        Algorithm::ImplicitPrecompGemm,
+        Algorithm::FftTiling,
+        PartitionMode::IntraSm,
+    );
+    println!(
+        "two streams, TF picks:            {} ({s_tf:.2}x vs serial)",
+        fmt_us(t_tf)
+    );
+    println!(
+        "intra-SM, complementary algos:    {} ({s_cp:.2}x vs serial)\n",
+        fmt_us(t_cp)
+    );
+
+    // 4. How many such opportunities exist in GoogleNet?
+    let dag = Network::GoogleNet.build(32);
+    let findings =
+        discover_pairs(&dag, &dev, 4 * 1024 * 1024 * 1024, 1.05);
+    println!(
+        "complementary pairs in GoogleNet:  {} (paper: \"27 similar cases\")\n",
+        findings.len()
+    );
+
+    // 5. Whole-network iteration under both regimes.
+    let serial = Coordinator::new(
+        dev.clone(),
+        ScheduleConfig {
+            policy: SelectionPolicy::FastestOnly,
+            partition: PartitionMode::Serial,
+            streams: 1,
+            ..Default::default()
+        },
+    )
+    .execute_dag(&dag);
+    let conc = Coordinator::new(
+        dev.clone(),
+        ScheduleConfig {
+            policy: SelectionPolicy::ProfileGuided,
+            partition: PartitionMode::IntraSm,
+            streams: 2,
+            ..Default::default()
+        },
+    )
+    .execute_dag(&dag);
+    println!(
+        "GoogleNet iteration, serial fastest-only:      {}",
+        fmt_us(serial.makespan_us)
+    );
+    println!(
+        "GoogleNet iteration, profile-guided intra-SM:  {}  ({:.2}x)",
+        fmt_us(conc.makespan_us),
+        serial.makespan_us / conc.makespan_us
+    );
+}

@@ -1,0 +1,70 @@
+//! End-to-end driver (E8): train the mini-GoogleNet for a few hundred steps
+//! through the full three-layer stack —
+//!
+//!   Rust loop  ->  PJRT CPU executable  ->  XLA HLO lowered from JAX,
+//!   containing the Pallas convolution kernels of the selected algorithms
+//!
+//! — and log the loss curve. Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --offline --example train_cnn -- [steps]
+//! ```
+
+use std::path::Path;
+
+use parconv::trainer::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(300);
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+
+    println!("loading AOT artifacts from {}", dir.display());
+    let mut trainer = Trainer::new(dir)?;
+    println!(
+        "mini-GoogleNet: {} parameter tensors, {} data batches\n",
+        trainer.num_params(),
+        trainer.num_batches()
+    );
+
+    let t0 = std::time::Instant::now();
+    let log_every = (steps / 25).max(1);
+    let logs = trainer.train(steps, log_every, |l| {
+        let bar_len = ((l.loss / 2.5).min(1.0) * 40.0) as usize;
+        println!(
+            "step {:4}  loss {:7.4}  |{}{}|",
+            l.step,
+            l.loss,
+            "#".repeat(bar_len),
+            " ".repeat(40 - bar_len)
+        );
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let first = logs.first().unwrap().loss;
+    let min = logs.iter().map(|l| l.loss).fold(f32::INFINITY, f32::min);
+    let last = logs.last().unwrap().loss;
+    let mean_ms: f64 =
+        logs.iter().map(|l| l.wall_ms).sum::<f64>() / logs.len() as f64;
+    println!("\n=== training summary ===");
+    println!("steps:        {steps}");
+    println!("loss:         {first:.4} -> {last:.4} (min {min:.4})");
+    println!("wall:         {wall:.1} s ({mean_ms:.1} ms/step)");
+    anyhow::ensure!(last < first, "loss did not descend");
+
+    std::fs::write(
+        "loss_curve.csv",
+        logs.iter()
+            .map(|l| format!("{},{}\n", l.step, l.loss))
+            .collect::<String>(),
+    )?;
+    println!("wrote loss_curve.csv");
+    Ok(())
+}

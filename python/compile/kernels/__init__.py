@@ -1,0 +1,56 @@
+"""Layer-1 kernels: the seven cuDNN forward-convolution algorithms.
+
+Each algorithm family is implemented as a real computation (Pallas where the
+inner loop is MXU-shaped, jnp where it is not) and validated against
+``ref.conv2d_ref``. ``ALGORITHMS`` maps the cuDNN enum names used throughout
+the paper (Tables 1-2) to the implementations; ``dispatch`` mirrors
+``cudnnConvolutionForward`` with an explicit algo argument.
+"""
+
+from __future__ import annotations
+
+from . import ref
+from .direct import conv2d_direct
+from .fft_conv import (
+    NotSupported as FftNotSupported,
+    conv2d_fft,
+    conv2d_fft_tiling,
+)
+from .im2col_gemm import conv2d_gemm
+from .implicit_gemm import conv2d_implicit_gemm, conv2d_precomp_gemm
+from .winograd import NotSupported as WinogradNotSupported, conv2d_winograd
+
+ALGORITHMS = {
+    "GEMM": conv2d_gemm,
+    "IMPLICIT_GEMM": conv2d_implicit_gemm,
+    "IMPLICIT_PRECOMP_GEMM": conv2d_precomp_gemm,
+    "WINOGRAD_NONFUSED": conv2d_winograd,
+    "DIRECT": conv2d_direct,
+    "FFT": conv2d_fft,
+    "FFT_TILING": conv2d_fft_tiling,
+}
+
+
+def dispatch(algo: str, x, w, stride=(1, 1), padding=(0, 0)):
+    """Run one forward convolution with an explicitly chosen algorithm.
+
+    Raises KeyError for unknown algorithms and the algorithm's NotSupported
+    for configurations it cannot handle (mirroring cuDNN's status codes).
+    """
+    return ALGORITHMS[algo](x, w, stride=stride, padding=padding)
+
+
+__all__ = [
+    "ALGORITHMS",
+    "dispatch",
+    "ref",
+    "conv2d_direct",
+    "conv2d_gemm",
+    "conv2d_implicit_gemm",
+    "conv2d_precomp_gemm",
+    "conv2d_winograd",
+    "conv2d_fft",
+    "conv2d_fft_tiling",
+    "FftNotSupported",
+    "WinogradNotSupported",
+]

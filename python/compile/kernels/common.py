@@ -1,0 +1,128 @@
+"""Shared Pallas building blocks: tiled matmul and batched matmul.
+
+These are the MXU-shaped inner loops every GEMM-family convolution algorithm
+reduces to (DESIGN.md §Hardware-Adaptation): on TPU the natural form of
+im2col-GEMM / implicit-GEMM / Winograd is a matmul tile that fits VMEM and
+feeds the 128x128 systolic array. BlockSpec expresses the HBM->VMEM schedule
+that the cuDNN kernels express with threadblocks.
+
+All kernels are lowered with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md), while interpret mode lowers to plain HLO that
+runs anywhere — the numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles. 128 matches the MXU systolic array edge; the
+# M tile is kept small so (bm, K) + (K, bn) + (bm, bn) stays well under the
+# ~16 MB VMEM budget for every shape used in this project (checked in
+# estimate_matmul_vmem / tests).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _pad_to(x, axis: int, multiple: int):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # One (bm, K) x (K, bn) tile product per grid step. f32 accumulate on
+    # the MXU; preferred_element_type pins the accumulator width.
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(a, b, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    """C = A @ B with a Pallas kernel, grid over (M/bm, N/bn) output tiles.
+
+    The contraction dim K is kept whole per tile: for every convolution in
+    this project K = C*R*S (or C) is at most a few thousand, so the A-panel
+    fits VMEM comfortably and no K-loop / revisiting is needed.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul inner dims {k} != {k2}"
+    ap = _pad_to(a, 0, bm)
+    bp = _pad_to(b, 1, bn)
+    mp, np_ = ap.shape[0], bp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _bmm_kernel(a_ref, b_ref, o_ref):
+    # Full per-batch matrices: (1, M, K) x (1, K, N). Each Winograd frequency
+    # position / FFT tile is one batch element.
+    o_ref[...] = jnp.einsum(
+        "bmk,bkn->bmn",
+        a_ref[...],
+        b_ref[...],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def bmm(a, b):
+    """Batched matmul C[t] = A[t] @ B[t] with grid over the batch dim.
+
+    Used by the Winograd kernel: the 16 frequency positions of F(2x2, 3x3)
+    are independent (K, C) x (C, P) products.
+    """
+    t, m, k = a.shape
+    t2, k2, n = b.shape
+    assert t == t2 and k == k2
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def estimate_matmul_vmem(m: int, k: int, n: int, bm: int = DEFAULT_BM,
+                         bn: int = DEFAULT_BN, bytes_per_el: int = 4) -> int:
+    """VMEM bytes resident per grid step of :func:`matmul`.
+
+    Structural perf metric recorded in EXPERIMENTS.md §Perf (interpret-mode
+    wallclock is CPU-numpy time, not a TPU proxy).
+    """
+    return (bm * k + k * bn + bm * bn) * bytes_per_el
+
+
+def estimate_mxu_utilization(m: int, k: int, n: int, bm: int = DEFAULT_BM,
+                             bn: int = DEFAULT_BN) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    mp = ((m + bm - 1) // bm) * bm
+    np_ = ((n + bn - 1) // bn) * bn
+    issued = mp * k * np_
+    useful = m * k * n
+    return useful / issued if issued else 0.0

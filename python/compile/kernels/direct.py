@@ -1,0 +1,72 @@
+"""DIRECT convolution as a Pallas kernel (cuDNN CUDNN_CONVOLUTION_FWD_ALGO_DIRECT).
+
+Zero workspace: each grid program owns one (image, output-channel-tile) pair,
+keeps the whole padded input image for that batch element in VMEM, and
+accumulates the R*S shifted-window products in registers. This is the TPU
+re-think of a CUDA direct kernel: the threadblock's shared-memory input
+staging becomes the BlockSpec HBM->VMEM copy, and the per-thread accumulator
+becomes a vector-register tile (DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _direct_kernel(x_ref, w_ref, o_ref, *, r, s, stride, ho, wo):
+    # x_ref: (1, C, Hp, Wp) padded input for one image
+    # w_ref: (bk, C, R, S)  filter tile
+    # o_ref: (1, bk, Ho, Wo)
+    x = x_ref[0]          # (C, Hp, Wp)
+    w = w_ref[...]        # (bk, C, R, S)
+    sh, sw = stride
+    acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.float32)  # (bk, Ho, Wo)
+    for dr in range(r):
+        for ds in range(s):
+            # (C, Ho, Wo) strided window
+            win = x[:, dr : dr + (ho - 1) * sh + 1 : sh,
+                       ds : ds + (wo - 1) * sw + 1 : sw]
+            # (bk, C) x (C, Ho, Wo) -> (bk, Ho, Wo)
+            acc = acc + jnp.einsum(
+                "kc,chw->khw", w[:, :, dr, ds], win,
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "bk"))
+def conv2d_direct(x, w, stride=(1, 1), padding=(0, 0), bk: int = 32):
+    """Direct convolution. Supports any stride/padding; workspace = 0."""
+    n, c, h, wd = x.shape
+    k, _, r, s = w.shape
+    ho, wo = ref.out_dims(h, wd, r, s, stride, padding)
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (padding[0], padding[0]), (padding[1], padding[1]))
+    )
+    hp, wp = xp.shape[2], xp.shape[3]
+    bk = min(bk, k)
+    # Pad K to a multiple of the channel tile.
+    krem = (-k) % bk
+    wpad = jnp.pad(w, ((0, krem), (0, 0), (0, 0), (0, 0)))
+    kp = k + krem
+    kern = functools.partial(
+        _direct_kernel, r=r, s=s, stride=stride, ho=ho, wo=wo
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(n, kp // bk),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((bk, c, r, s), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bk, ho, wo), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, kp, ho, wo), x.dtype),
+        interpret=True,
+    )(xp, wpad)
+    return out[:, :k]

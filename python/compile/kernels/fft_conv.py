@@ -1,0 +1,129 @@
+"""FFT and FFT_TILING convolutions (cuDNN FFT / FFT_TILING algorithms).
+
+Frequency-domain cross-correlation: Y_f[n,k] = sum_c X_f[n,c] * conj(W_f[k,c]),
+then inverse transform. The frequency tensors are the workspace — for FFT
+over the full image this is the 2.2 GB entry in the paper's Table 2; tiling
+the image into 32x32 chunks (cuDNN's ``fft2d_c2r_32x32`` kernel, Table 1)
+cuts the resident workspace roughly in half at the cost of redundant halo
+transforms, exactly the FFT vs FFT_TILING trade the paper tabulates.
+
+These stay at the jnp/XLA level rather than hand-written Pallas: FFT has no
+MXU-shaped inner loop to win on TPU (DESIGN.md §Hardware-Adaptation) and XLA
+fuses the pointwise frequency product already. Constraint (as in cuDNN):
+stride 1 only; FFT_TILING additionally requires R,S <= tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+
+class NotSupported(ValueError):
+    """Mirror of CUDNN_STATUS_NOT_SUPPORTED for the FFT family."""
+
+
+_TILE = 32  # cuDNN fft2d_*_32x32 tile edge
+
+
+def _freq_correlate(xp, w, lh, lw):
+    """Circular cross-correlation via rFFT over (lh, lw) signals."""
+    xf = jnp.fft.rfft2(xp, s=(lh, lw))              # (N, C, lh, lwf)
+    wf = jnp.fft.rfft2(w, s=(lh, lw))               # (K, C, lh, lwf)
+    yf = jnp.einsum("nchw,kchw->nkhw", xf, jnp.conj(wf))
+    return jnp.fft.irfft2(yf, s=(lh, lw))           # (N, K, lh, lw)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def conv2d_fft(x, w, stride=(1, 1), padding=(0, 0)):
+    """Full-image FFT convolution. Stride 1 only."""
+    if stride != (1, 1):
+        raise NotSupported(f"FFT requires stride 1, got {stride}")
+    n, c, h, wd = x.shape
+    k, _, r, s = w.shape
+    ho, wo = ref.out_dims(h, wd, r, s, stride, padding)
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (padding[0], padding[0]), (padding[1], padding[1]))
+    )
+    hp, wp = xp.shape[2], xp.shape[3]
+    y = _freq_correlate(xp, w, hp, wp)
+    return y[:, :, :ho, :wo].astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "tile"))
+def conv2d_fft_tiling(x, w, stride=(1, 1), padding=(0, 0), tile: int = _TILE):
+    """Tiled FFT convolution: independent (tile+halo) FFTs per output tile.
+
+    Matches cuDNN FFT_TILING: each 32x32 output tile is produced by a
+    transform over the (tile + R - 1) input patch; the per-tile frequency
+    workspace is reused across tiles.
+    """
+    if stride != (1, 1):
+        raise NotSupported(f"FFT_TILING requires stride 1, got {stride}")
+    n, c, h, wd = x.shape
+    k, _, r, s = w.shape
+    if r > tile or s > tile:
+        raise NotSupported(f"filter {r}x{s} exceeds FFT tile {tile}")
+    ho, wo = ref.out_dims(h, wd, r, s, stride, padding)
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (padding[0], padding[0]), (padding[1], padding[1]))
+    )
+    hp, wp = xp.shape[2], xp.shape[3]
+    lh, lw = tile + r - 1, tile + s - 1
+    # Pad so every tile's halo read is in bounds.
+    ty, tx = -(-ho // tile), -(-wo // tile)
+    xp = jnp.pad(
+        xp,
+        (
+            (0, 0),
+            (0, 0),
+            (0, max(0, (ty - 1) * tile + lh - hp)),
+            (0, max(0, (tx - 1) * tile + lw - wp)),
+        ),
+    )
+    rows = []
+    for i in range(ty):
+        cols = []
+        for j in range(tx):
+            patch = xp[:, :, i * tile : i * tile + lh, j * tile : j * tile + lw]
+            y = _freq_correlate(patch, w, lh, lw)[:, :, :tile, :tile]
+            cols.append(y)
+        rows.append(jnp.concatenate(cols, axis=3))
+    full = jnp.concatenate(rows, axis=2)
+    return full[:, :, :ho, :wo].astype(x.dtype)
+
+
+def _rfft_ws(n, c, k, lh, lw, batch_tiles=1, bytes_per_el=8):
+    lwf = lw // 2 + 1
+    return (n * c + k * c + n * k) * lh * lwf * bytes_per_el * batch_tiles
+
+
+def workspace_bytes_fft(x_shape, w_shape, stride=(1, 1), padding=(0, 0)):
+    """Frequency-domain workspace (complex64) for full-image FFT."""
+    n, c, h, wd = x_shape
+    k, _, r, s = w_shape
+    hp, wp = h + 2 * padding[0], wd + 2 * padding[1]
+    return _rfft_ws(n, c, k, hp, wp)
+
+
+def workspace_bytes_fft_tiling(x_shape, w_shape, stride=(1, 1),
+                               padding=(0, 0), tile: int = _TILE):
+    """Per-batch-of-tiles frequency workspace for FFT_TILING.
+
+    cuDNN processes tiles in batches, keeping roughly half the full-FFT
+    frequency state resident (Table 2: 1.1 GB vs 2.2 GB).
+    """
+    n, c, h, wd = x_shape
+    k, _, r, s = w_shape
+    ho, wo = ref.out_dims(h, wd, r, s, stride, padding)
+    ty, tx = -(-ho // tile), -(-wo // tile)
+    lh, lw = tile + r - 1, tile + s - 1
+    # filter transform is shared; input/output frequency state for half the
+    # tile grid is resident at once.
+    resident = max(1, (ty * tx) // 2)
+    lwf = lw // 2 + 1
+    return ((n * c + n * k) * lh * lwf * resident + k * c * lh * lwf) * 8

@@ -1,0 +1,44 @@
+"""GEMM convolution (cuDNN CUDNN_CONVOLUTION_FWD_ALGO_GEMM).
+
+The classic explicit-workspace algorithm: materialize the im2col matrix in
+device memory (this allocation IS the "workspace memory" column of the
+paper's Table 2), then one big GEMM through the shared Pallas matmul tile
+kernel. Workspace bytes = N * C*R*S * Ho*Wo * sizeof(dtype) — the largest of
+the GEMM family, which is why TensorFlow's fastest-only selection can blow
+the memory budget (paper §2.1 "Device Memory").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .common import matmul
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def conv2d_gemm(x, w, stride=(1, 1), padding=(0, 0)):
+    """Explicit im2col + GEMM convolution. Any stride/padding."""
+    n, c, h, wd = x.shape
+    k, _, r, s = w.shape
+    ho, wo = ref.out_dims(h, wd, r, s, stride, padding)
+    # Workspace: (N, C*R*S, Ho*Wo) materialized in device memory.
+    cols = ref.im2col(x, r, s, stride, padding)
+    # Fold batch into the GEMM's N dim: (C*R*S, N*Ho*Wo).
+    cols2 = jnp.transpose(cols, (1, 0, 2)).reshape(c * r * s, n * ho * wo)
+    wmat = w.reshape(k, c * r * s)
+    y = matmul(wmat, cols2)  # (K, N*Ho*Wo)
+    y = y.reshape(k, n, ho, wo)
+    return jnp.transpose(y, (1, 0, 2, 3))
+
+
+def workspace_bytes(x_shape, w_shape, stride=(1, 1), padding=(0, 0),
+                    bytes_per_el: int = 4) -> int:
+    """Device-memory workspace this algorithm allocates (Table 2 column)."""
+    n, c, h, wd = x_shape
+    k, _, r, s = w_shape
+    ho, wo = ref.out_dims(h, wd, r, s, stride, padding)
+    return n * c * r * s * ho * wo * bytes_per_el

@@ -1,0 +1,94 @@
+"""Pure-jnp correctness oracle for every convolution kernel in this package.
+
+All Layer-1 Pallas kernels (direct, im2col-GEMM, implicit-GEMM, Winograd,
+FFT) must agree with :func:`conv2d_ref` to float32 tolerance. This mirrors
+cuDNN's contract: seven algorithms, one mathematical convolution.
+
+Layout convention (used throughout the project):
+  input  x : (N, C, H, W)        NCHW
+  filter w : (K, C, R, S)        OIHW (cross-correlation, like cuDNN)
+  output y : (N, K, Ho, Wo)
+  Ho = (H + 2*pad_h - R) // stride_h + 1, similarly Wo.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def out_dims(h: int, w: int, r: int, s: int, stride=(1, 1), padding=(0, 0)):
+    """Output spatial dims for a convolution (matches cuDNN formula)."""
+    ho = (h + 2 * padding[0] - r) // stride[0] + 1
+    wo = (w + 2 * padding[1] - s) // stride[1] + 1
+    return ho, wo
+
+
+def conv2d_ref(x, w, stride=(1, 1), padding=(0, 0)):
+    """Reference 2-D cross-correlation via lax.conv_general_dilated.
+
+    This is the oracle: XLA's own convolution, independent of every kernel
+    implementation in this package.
+    """
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=[(padding[0], padding[0]), (padding[1], padding[1])],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def conv2d_loops(x, w, stride=(1, 1), padding=(0, 0)):
+    """Second, structurally independent oracle: explicit patch extraction.
+
+    Slower but trivially auditable; used in tests to cross-check the oracle
+    itself on small shapes.
+    """
+    n, c, h, wd = x.shape
+    k, _, r, s = w.shape
+    ho, wo = out_dims(h, wd, r, s, stride, padding)
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (padding[0], padding[0]), (padding[1], padding[1]))
+    )
+    rows = []
+    for i in range(ho):
+        cols = []
+        for j in range(wo):
+            patch = xp[
+                :,
+                :,
+                i * stride[0] : i * stride[0] + r,
+                j * stride[1] : j * stride[1] + s,
+            ]
+            # (N, C, R, S) x (K, C, R, S) -> (N, K)
+            cols.append(jnp.einsum("ncrs,kcrs->nk", patch, w))
+        rows.append(jnp.stack(cols, axis=-1))  # (N, K, Wo)
+    return jnp.stack(rows, axis=-2)  # (N, K, Ho, Wo)
+
+
+def im2col(x, r: int, s: int, stride=(1, 1), padding=(0, 0)):
+    """Materialize the im2col workspace matrix.
+
+    Returns (N, C*R*S, Ho*Wo) — this is exactly the "workspace memory" the
+    GEMM-family cuDNN algorithms allocate (paper §2, Table 2).
+    """
+    n, c, h, wd = x.shape
+    ho, wo = out_dims(h, wd, r, s, stride, padding)
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (padding[0], padding[0]), (padding[1], padding[1]))
+    )
+    cols = []
+    for dr in range(r):
+        for ds in range(s):
+            patch = xp[
+                :,
+                :,
+                dr : dr + ho * stride[0] : stride[0],
+                ds : ds + wo * stride[1] : stride[1],
+            ]
+            cols.append(patch.reshape(n, c, ho * wo))
+    # Stack as (N, C, R*S, Ho*Wo) -> (N, C*R*S, Ho*Wo), C-major to match
+    # w.reshape(K, C*R*S).
+    stacked = jnp.stack(cols, axis=2)
+    return stacked.reshape(n, c * r * s, ho * wo)

@@ -1,0 +1,128 @@
+"""WINOGRAD_NONFUSED convolution — F(2x2, 3x3) — as a Pallas kernel.
+
+cuDNN's *nonfused* Winograd runs the three stages as separate kernels with
+the transformed tensors staged in workspace memory (hence the 691 MB entry
+in the paper's Table 2): input transform, 16 independent batched GEMMs over
+the frequency positions, output transform. We mirror that structure:
+transforms at the jnp level (cheap, bandwidth-bound), the GEMM stage as the
+shared Pallas batched-matmul kernel (compute-bound, MXU-shaped).
+
+Constraints match cuDNN: 3x3 filter, stride 1 (the paper's Table 2 notes
+DIRECT/WINOGRAD unsupported for some inputs; we raise for unsupported
+configurations just like cuDNN returns CUDNN_STATUS_NOT_SUPPORTED).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .common import bmm
+
+# F(2x2, 3x3) transform matrices (Lavin & Gray, 2016).
+_BT = np.array(
+    [
+        [1, 0, -1, 0],
+        [0, 1, 1, 0],
+        [0, -1, 1, 0],
+        [0, 1, 0, -1],
+    ],
+    dtype=np.float32,
+)
+_G = np.array(
+    [
+        [1, 0, 0],
+        [0.5, 0.5, 0.5],
+        [0.5, -0.5, 0.5],
+        [0, 0, 1],
+    ],
+    dtype=np.float32,
+)
+_AT = np.array(
+    [
+        [1, 1, 1, 0],
+        [0, 1, -1, -1],
+    ],
+    dtype=np.float32,
+)
+
+
+class NotSupported(ValueError):
+    """Mirror of CUDNN_STATUS_NOT_SUPPORTED for this algorithm."""
+
+
+def _check(w_shape, stride):
+    k, c, r, s = w_shape
+    if (r, s) != (3, 3) or stride != (1, 1):
+        raise NotSupported(
+            f"WINOGRAD_NONFUSED supports 3x3/stride1 only, got {r}x{s}/{stride}"
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def conv2d_winograd(x, w, stride=(1, 1), padding=(0, 0)):
+    """Winograd F(2x2, 3x3) convolution (stride 1, 3x3 filters only)."""
+    _check(w.shape, stride)
+    n, c, h, wd = x.shape
+    k = w.shape[0]
+    ho, wo = ref.out_dims(h, wd, 3, 3, stride, padding)
+    # Pad: user padding, then round the output up to 2x2 tiles.
+    th, tw = (ho + 1) // 2, (wo + 1) // 2
+    need_h = 2 * th + 2  # input extent consumed by th tiles of F(2,3)
+    need_w = 2 * tw + 2
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (0, 0),
+            (padding[0], need_h - h - padding[0]),
+            (padding[1], need_w - wd - padding[1]),
+        ),
+    )
+    bt = jnp.asarray(_BT)
+    g = jnp.asarray(_G)
+    at = jnp.asarray(_AT)
+
+    # --- input transform: 4x4 tiles, stride 2 -> U (16, C, N*T) ---
+    tiles = []
+    for i in range(th):
+        for j in range(tw):
+            tiles.append(xp[:, :, 2 * i : 2 * i + 4, 2 * j : 2 * j + 4])
+    d = jnp.stack(tiles, axis=2)  # (N, C, T, 4, 4)
+    # U = BT @ d @ B per tile: (4,4) x (N,C,T,4,4) x (4,4)
+    u = jnp.einsum("ab,nqtbd->nqtad", bt, d)
+    u = jnp.einsum("nqtad,db->nqtab", u, bt.T)
+    p = n * th * tw
+    u = u.transpose(3, 4, 1, 0, 2).reshape(16, c, p)  # (16, C, P)
+
+    # --- filter transform: V (16, K, C) ---
+    v = jnp.einsum("ab,kqbd->kqad", g, w)
+    v = jnp.einsum("kqad,db->kqab", v, g.T)
+    v = v.transpose(2, 3, 0, 1).reshape(16, k, c)
+
+    # --- 16 independent GEMMs (the Pallas stage) : M (16, K, P) ---
+    m = bmm(v, u)
+
+    # --- output transform: Y = AT @ M @ A ---
+    m = m.reshape(4, 4, k, n, th * tw).transpose(3, 2, 4, 0, 1)  # (N,K,T,4,4)
+    y = jnp.einsum("ab,nktbd->nktad", at, m)
+    y = jnp.einsum("nktad,db->nktab", y, at.T)  # (N, K, T, 2, 2)
+    y = y.reshape(n, k, th, tw, 2, 2).transpose(0, 1, 2, 4, 3, 5)
+    y = y.reshape(n, k, 2 * th, 2 * tw)
+    return y[:, :, :ho, :wo].astype(x.dtype)
+
+
+def workspace_bytes(x_shape, w_shape, stride=(1, 1), padding=(0, 0),
+                    bytes_per_el: int = 4) -> int:
+    """Workspace for the nonfused pipeline: U + V + M staged in memory."""
+    _check(w_shape, stride)
+    n, c, h, wd = x_shape
+    k = w_shape[0]
+    ho, wo = ref.out_dims(h, wd, 3, 3, stride, padding)
+    th, tw = (ho + 1) // 2, (wo + 1) // 2
+    p = n * th * tw
+    return (16 * c * p + 16 * k * c + 16 * k * p) * bytes_per_el

@@ -1,0 +1,79 @@
+"""AOT path tests: HLO-text lowering and manifest format."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "dot" in text
+
+
+def test_to_hlo_text_contains_pallas_lowering():
+    from compile.kernels import conv2d_direct
+
+    xs = jax.ShapeDtypeStruct((1, 2, 6, 6), jnp.float32)
+    ws = jax.ShapeDtypeStruct((2, 2, 3, 3), jnp.float32)
+    fn = lambda x, w: (conv2d_direct(x, w, padding=(1, 1)),)
+    text = aot.to_hlo_text(jax.jit(fn).lower(xs, ws))
+    # interpret-mode pallas lowers to plain HLO (while/dynamic-slice loops),
+    # never a custom-call the CPU client can't run.
+    assert "HloModule" in text
+    assert "custom-call" not in text.lower() or "Mosaic" not in text
+
+
+def test_manifest_format():
+    m = aot.Manifest()
+    m.add(
+        "demo",
+        "demo.hlo.txt",
+        [jax.ShapeDtypeStruct((2, 3), jnp.float32)],
+        [jax.ShapeDtypeStruct((2,), jnp.int32)],
+    )
+    joined = "\n".join(m.lines)
+    assert "artifact demo" in joined
+    assert "input float32 2x3" in joined
+    assert "output int32 2" in joined
+
+
+def test_scalar_shape_formatting():
+    assert aot._fmt_shape(()) == "scalar"
+    assert aot._fmt_shape((4, 5)) == "4x5"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "manifest.txt")),
+    reason="artifacts not built",
+)
+def test_emitted_manifest_lists_all_artifacts():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(root, "manifest.txt")) as f:
+        text = f.read()
+    names = [
+        line.split()[1] for line in text.splitlines()
+        if line.startswith("artifact ")
+    ]
+    # 7 algos on c3 + 6 on c5 + 3 model artifacts
+    assert len(names) == 16
+    assert "train_step" in names and "model_fwd" in names
+    for n in names:
+        fname = os.path.join(root, f"{n}.hlo.txt")
+        assert os.path.exists(fname), fname
+        with open(fname) as f:
+            assert "HloModule" in f.read(200)
+
+
+def test_train_step_abi_matches_manifest():
+    # 30 inputs = x, y, 28 params; 29 outputs = 28 params + loss.
+    assert len(model.param_spec()) == 28

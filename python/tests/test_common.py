@@ -1,0 +1,70 @@
+"""Pallas building-block tests: matmul/bmm kernels + perf-structure estimates."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import common
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32))
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(4, 3, 5), (128, 64, 128), (130, 17, 250), (1, 1, 1), (256, 300, 64)],
+)
+def test_matmul_matches_jnp(m, k, n):
+    a, b = rand((m, k)), rand((k, n))
+    got = common.matmul(a, b)
+    want = a @ b
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_matmul_custom_tiles():
+    a, b = rand((100, 40)), rand((40, 90))
+    got = common.matmul(a, b, bm=32, bn=64)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(a @ b), rtol=2e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("t,m,k,n", [(1, 4, 5, 6), (16, 8, 3, 12)])
+def test_bmm_matches_einsum(t, m, k, n):
+    a, b = rand((t, m, k)), rand((t, k, n))
+    got = common.bmm(a, b)
+    want = jnp.einsum("bmk,bkn->bmn", a, b)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_vmem_estimate_within_budget():
+    # Perf-structure invariant (EXPERIMENTS.md §Perf): every matmul shape
+    # used by the conv kernels in this project fits the 16 MB VMEM budget.
+    VMEM = 16 * 1024 * 1024
+    # largest project shape: train_step stem GEMM on batch 16:
+    # (16, C*R*S=27) x (27, 16*32*32)
+    assert common.estimate_matmul_vmem(16, 27, 16 * 32 * 32) < VMEM
+    # inception 3x3 at paper scale (32, 96, 28, 28) -> (128, 864) x (864, 25088)
+    assert common.estimate_matmul_vmem(128, 864, 25088) < VMEM
+
+
+def test_mxu_utilization_bounds():
+    u = common.estimate_mxu_utilization(128, 64, 128)
+    assert u == 1.0
+    u2 = common.estimate_mxu_utilization(129, 64, 129)
+    assert 0.2 < u2 < 1.0
+    assert common.estimate_mxu_utilization(0, 1, 1) == 0.0
+
+
+def test_matmul_preserves_dtype():
+    a = rand((8, 8)).astype(jnp.bfloat16)
+    b = rand((8, 8)).astype(jnp.bfloat16)
+    out = common.matmul(a, b)
+    assert out.dtype == jnp.bfloat16

@@ -1,0 +1,87 @@
+"""Hypothesis sweep: every algorithm ≡ oracle over random shapes/params.
+
+The strategy draws (N, C, H, W, K, R, S, stride, padding) within each
+algorithm's support envelope — exactly the cuDNN support matrix the paper's
+Table 2 footnote alludes to (DIRECT/WINOGRAD unsupported for some inputs).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def run(algo, n, c, h, w, k, r, s, stride, pad):
+    rng = np.random.default_rng(hash((n, c, h, w, k, r, s)) % 2**32)
+    x = jnp.asarray(rng.standard_normal((n, c, h, w), dtype=np.float32))
+    wt = jnp.asarray(rng.standard_normal((k, c, r, s), dtype=np.float32))
+    got = kernels.dispatch(algo, x, wt, stride=stride, padding=pad)
+    want = ref.conv2d_ref(x, wt, stride, pad)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4
+    )
+
+
+general = st.tuples(
+    st.integers(1, 3),    # N
+    st.integers(1, 6),    # C
+    st.integers(5, 14),   # H
+    st.integers(5, 14),   # W
+    st.integers(1, 8),    # K
+    st.integers(1, 4),    # R
+    st.integers(1, 4),    # S
+    st.integers(1, 2),    # stride
+    st.integers(0, 2),    # pad
+).filter(lambda t: t[2] + 2 * t[8] >= t[5] and t[3] + 2 * t[8] >= t[6])
+
+
+@pytest.mark.parametrize(
+    "algo", ["GEMM", "IMPLICIT_GEMM", "IMPLICIT_PRECOMP_GEMM", "DIRECT"]
+)
+@given(params=general)
+@settings(**SETTINGS)
+def test_general_algorithms(algo, params):
+    n, c, h, w, k, r, s, stride, pad = params
+    run(algo, n, c, h, w, k, r, s, (stride, stride), (pad, pad))
+
+
+stride1 = st.tuples(
+    st.integers(1, 2),    # N
+    st.integers(1, 5),    # C
+    st.integers(6, 16),   # H
+    st.integers(6, 16),   # W
+    st.integers(1, 6),    # K
+    st.integers(1, 5),    # R
+    st.integers(1, 5),    # S
+    st.integers(0, 2),    # pad
+).filter(lambda t: t[2] + 2 * t[7] >= t[4 + 1] and t[3] + 2 * t[7] >= t[6])
+
+
+@pytest.mark.parametrize("algo", ["FFT", "FFT_TILING"])
+@given(params=stride1)
+@settings(**SETTINGS)
+def test_fft_family(algo, params):
+    n, c, h, w, k, r, s, pad = params
+    run(algo, n, c, h, w, k, r, s, (1, 1), (pad, pad))
+
+
+wino = st.tuples(
+    st.integers(1, 2),    # N
+    st.integers(1, 5),    # C
+    st.integers(4, 16),   # H
+    st.integers(4, 16),   # W
+    st.integers(1, 6),    # K
+    st.integers(0, 1),    # pad
+).filter(lambda t: t[2] + 2 * t[5] >= 3 and t[3] + 2 * t[5] >= 3)
+
+
+@given(params=wino)
+@settings(**SETTINGS)
+def test_winograd(params):
+    n, c, h, w, k, pad = params
+    run("WINOGRAD_NONFUSED", n, c, h, w, k, 3, 3, (1, 1), (pad, pad))

@@ -1,0 +1,206 @@
+"""Kernel vs oracle: the core correctness signal for Layer 1.
+
+Every cuDNN-style algorithm implementation must agree with the XLA
+convolution oracle (and the oracle with the loop-nest oracle) across
+shapes, strides, paddings, and dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels
+from compile.kernels import fft_conv, im2col_gemm, implicit_gemm, ref, winograd
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape, dtype=np.float32)).astype(
+        dtype
+    )
+
+
+def check(algo, xs, ws, stride=(1, 1), padding=(0, 0), tol=2e-4):
+    x, w = rand(xs), rand(ws)
+    got = kernels.dispatch(algo, x, w, stride=stride, padding=padding)
+    want = ref.conv2d_ref(x, w, stride, padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=tol, atol=tol
+    )
+
+
+ALL_ALGOS = sorted(kernels.ALGORITHMS)
+STRIDE1_ALGOS = ALL_ALGOS
+GENERAL_ALGOS = ["GEMM", "IMPLICIT_GEMM", "IMPLICIT_PRECOMP_GEMM", "DIRECT"]
+
+
+# ---------------------------------------------------------------------------
+# basic agreement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ALL_ALGOS)
+def test_3x3_pad1(algo):
+    check(algo, (2, 3, 14, 14), (8, 3, 3, 3), padding=(1, 1))
+
+
+@pytest.mark.parametrize(
+    "algo", [a for a in ALL_ALGOS if a != "WINOGRAD_NONFUSED"]
+)
+def test_5x5_pad2(algo):
+    check(algo, (2, 4, 12, 12), (6, 4, 5, 5), padding=(2, 2))
+
+
+@pytest.mark.parametrize("algo", ALL_ALGOS)
+def test_1x1_like_inception_reduce(algo):
+    if algo == "WINOGRAD_NONFUSED":
+        pytest.skip("winograd is 3x3-only")
+    check(algo, (2, 16, 8, 8), (4, 16, 1, 1))
+
+
+@pytest.mark.parametrize("algo", GENERAL_ALGOS)
+def test_stride2(algo):
+    check(algo, (2, 3, 15, 15), (5, 3, 3, 3), stride=(2, 2), padding=(1, 1))
+
+
+@pytest.mark.parametrize("algo", GENERAL_ALGOS)
+def test_asymmetric_stride_pad(algo):
+    check(algo, (1, 2, 13, 9), (3, 2, 3, 2), stride=(2, 1), padding=(1, 0))
+
+
+@pytest.mark.parametrize("algo", ALL_ALGOS)
+def test_single_pixel_output(algo):
+    if algo == "WINOGRAD_NONFUSED":
+        check(algo, (1, 2, 3, 3), (2, 2, 3, 3))
+    else:
+        check(algo, (1, 2, 5, 5), (2, 2, 5, 5))
+
+
+@pytest.mark.parametrize("algo", STRIDE1_ALGOS)
+def test_rectangular_input(algo):
+    r = 3 if algo == "WINOGRAD_NONFUSED" else 2
+    check(algo, (2, 3, 10, 17), (4, 3, r, r), padding=(1, 1))
+
+
+def test_batch_one_and_many():
+    for n in (1, 5):
+        check("DIRECT", (n, 3, 9, 9), (7, 3, 3, 3), padding=(1, 1))
+
+
+def test_many_channels_direct_tiling():
+    # K > bk tile so the output-channel grid dimension is exercised.
+    check("DIRECT", (1, 4, 8, 8), (70, 4, 3, 3), padding=(1, 1))
+
+
+# ---------------------------------------------------------------------------
+# oracle self-consistency
+# ---------------------------------------------------------------------------
+
+
+def test_oracle_vs_loops():
+    x, w = rand((2, 3, 8, 8)), rand((4, 3, 3, 3))
+    a = ref.conv2d_ref(x, w, (1, 1), (1, 1))
+    b = ref.conv2d_loops(x, w, (1, 1), (1, 1))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_oracle_vs_loops_strided():
+    x, w = rand((1, 2, 9, 9)), rand((3, 2, 3, 3))
+    a = ref.conv2d_ref(x, w, (2, 2), (1, 1))
+    b = ref.conv2d_loops(x, w, (2, 2), (1, 1))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_im2col_matches_gemm_identity():
+    # conv with identity-like filter == patch extraction
+    x = rand((1, 2, 6, 6))
+    cols = ref.im2col(x, 3, 3, (1, 1), (0, 0))
+    assert cols.shape == (1, 2 * 9, 16)
+
+
+# ---------------------------------------------------------------------------
+# NOT_SUPPORTED semantics (cuDNN status-code mirror)
+# ---------------------------------------------------------------------------
+
+
+def test_winograd_rejects_5x5():
+    x, w = rand((1, 2, 8, 8)), rand((2, 2, 5, 5))
+    with pytest.raises(winograd.NotSupported):
+        kernels.conv2d_winograd(x, w)
+
+
+def test_winograd_rejects_stride2():
+    x, w = rand((1, 2, 8, 8)), rand((2, 2, 3, 3))
+    with pytest.raises(winograd.NotSupported):
+        kernels.conv2d_winograd(x, w, stride=(2, 2))
+
+
+def test_fft_rejects_stride2():
+    x, w = rand((1, 2, 8, 8)), rand((2, 2, 3, 3))
+    with pytest.raises(fft_conv.NotSupported):
+        kernels.conv2d_fft(x, w, stride=(2, 2))
+    with pytest.raises(fft_conv.NotSupported):
+        kernels.conv2d_fft_tiling(x, w, stride=(2, 2))
+
+
+def test_dispatch_unknown_algo():
+    x, w = rand((1, 2, 8, 8)), rand((2, 2, 3, 3))
+    with pytest.raises(KeyError):
+        kernels.dispatch("NOT_AN_ALGO", x, w)
+
+
+# ---------------------------------------------------------------------------
+# workspace model sanity (Table 2 semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_gemm_workspace_is_im2col_size():
+    xs, ws = (2, 3, 14, 14), (8, 3, 3, 3)
+    b = im2col_gemm.workspace_bytes(xs, ws, padding=(1, 1))
+    assert b == 2 * 3 * 9 * 14 * 14 * 4
+
+
+def test_precomp_workspace_small_vs_gemm():
+    xs, ws = (32, 96, 28, 28), (128, 96, 3, 3)
+    small = implicit_gemm.precomp_workspace_bytes(xs, ws, padding=(1, 1))
+    big = im2col_gemm.workspace_bytes(xs, ws, padding=(1, 1))
+    assert small < big / 10
+
+
+def test_fft_tiling_workspace_below_fft():
+    # Table 2 shape relation: FFT_TILING uses roughly half of FFT. Holds
+    # once the image spans multiple 32x32 tiles (for single-tile images the
+    # halo makes tiling pointless, as in cuDNN).
+    xs, ws = (32, 16, 64, 64), (48, 16, 5, 5)
+    full = fft_conv.workspace_bytes_fft(xs, ws, padding=(2, 2))
+    tiled = fft_conv.workspace_bytes_fft_tiling(xs, ws, padding=(2, 2))
+    assert tiled < full
+
+
+def test_fft_tiling_large_filter_rejected():
+    x, w = rand((1, 2, 64, 64)), rand((2, 2, 33, 33))
+    with pytest.raises(fft_conv.NotSupported):
+        kernels.conv2d_fft_tiling(x, w)
+
+
+# ---------------------------------------------------------------------------
+# dtype coverage
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["DIRECT", "IMPLICIT_GEMM", "GEMM"])
+def test_bfloat16(algo):
+    x = rand((1, 3, 8, 8), jnp.bfloat16)
+    w = rand((4, 3, 3, 3), jnp.bfloat16)
+    got = kernels.dispatch(algo, x, w, padding=(1, 1))
+    want = ref.conv2d_ref(x, w, (1, 1), (1, 1))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=5e-2,
+        atol=5e-2,
+    )

@@ -1,0 +1,105 @@
+"""Layer-2 model tests: shapes, ABI stability, gradient flow, learnability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(0)
+
+
+def test_param_spec_matches_init(params):
+    spec = model.param_spec()
+    assert len(spec) == len(params)
+    for (name, shape), p in zip(spec, params):
+        assert tuple(p.shape) == shape, name
+
+
+def test_param_spec_is_stable_abi():
+    # The Rust runtime passes buffers positionally; the order must never
+    # silently change. Pin the first/last entries and the count.
+    spec = model.param_spec()
+    assert spec[0][0] == "stem_w"
+    assert spec[-1][0] == "fc_b"
+    assert len(spec) == 28
+
+
+def test_forward_shape(params):
+    x, _ = model.make_batch(0, batch=4)
+    logits = model.forward(params, x)
+    assert logits.shape == (4, model.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_inception_concat_channels(params):
+    p = {n: v for (n, _), v in zip(model.param_spec(), params)}
+    x = jnp.ones((2, 16, 16, 16), jnp.float32)
+    y = model.inception(p, "ia", x, model.DEFAULT_ALGOS)
+    # 8 + 16 + 8 + 8 branch outputs
+    assert y.shape == (2, 40, 16, 16)
+
+
+def test_loss_finite_positive(params):
+    x, y = model.make_batch(1)
+    loss = model.loss_fn(params, x, y)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+
+
+def test_gradients_nonzero_everywhere(params):
+    x, y = model.make_batch(2)
+    grads = jax.grad(model.loss_fn)(params, x, y)
+    names = [n for n, _ in model.param_spec()]
+    for name, g in zip(names, grads):
+        assert bool(jnp.all(jnp.isfinite(g))), name
+        assert float(jnp.max(jnp.abs(g))) > 0, f"dead gradient: {name}"
+
+
+def test_train_step_abi(params):
+    x, y = model.make_batch(0)
+    out = model.train_step(params, x, y)
+    assert len(out) == len(params) + 1
+    assert out[-1].shape == ()
+
+
+def test_loss_descends_30_steps(params):
+    p = list(params)
+    first = None
+    for step in range(30):
+        x, y = model.make_batch(step % 8)
+        out = model.train_step(p, x, y, lr=0.01)
+        p = list(out[:-1])
+        if first is None:
+            first = float(out[-1])
+    last = float(out[-1])
+    assert last < first * 0.7, (first, last)
+
+
+def test_algo_choice_does_not_change_numerics(params):
+    # The paper's premise: algorithm selection is a performance/memory knob,
+    # never a numerics knob.
+    x, _ = model.make_batch(3, batch=2)
+    base = model.forward(params, x, model.DEFAULT_ALGOS)
+    alt = dict(model.DEFAULT_ALGOS, b3="DIRECT", b5="GEMM", stem="GEMM")
+    other = model.forward(params, x, alt)
+    np.testing.assert_allclose(
+        np.asarray(base), np.asarray(other), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_make_batch_deterministic():
+    x1, y1 = model.make_batch(7)
+    x2, y2 = model.make_batch(7)
+    assert np.array_equal(np.asarray(x1), np.asarray(x2))
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_make_batch_class_balance_ish():
+    ys = np.concatenate(
+        [np.asarray(model.make_batch(s, 64)[1]) for s in range(4)]
+    )
+    assert len(np.unique(ys)) == model.NUM_CLASSES

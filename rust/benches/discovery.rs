@@ -1,0 +1,77 @@
+//! Bench E5 — the paper's §2.1 census: "We discover 27 similar cases in
+//! this network [GoogleNet] and more instances in other popular non-linear
+//! CNNs such as ResNet." Re-run the discovery over all networks and report
+//! counts, the speedup distribution, and discovery throughput.
+
+use std::time::Instant;
+
+use parconv::coordinator::discover_pairs;
+use parconv::gpusim::DeviceSpec;
+use parconv::graph::Network;
+use parconv::util::{Summary, Table};
+
+fn main() {
+    let dev = DeviceSpec::k40();
+    let budget = 4u64 * 1024 * 1024 * 1024;
+    let batch = 32;
+    println!(
+        "=== E5: complementary-pair discovery (batch {batch}, budget 4 GB, \
+         min speedup 1.05x) ===\n"
+    );
+    let mut t = Table::new(vec![
+        "Network",
+        "Indep. pairs",
+        "Complementary",
+        "Median speedup",
+        "Max speedup",
+        "Scan time",
+    ]);
+    for net in Network::ALL {
+        let dag = net.build(batch);
+        let total = dag.independent_conv_pairs().len();
+        let t0 = Instant::now();
+        let findings = discover_pairs(&dag, &dev, budget, 1.05);
+        let dt = t0.elapsed().as_secs_f64();
+        let mut s = Summary::new();
+        for f in &findings {
+            s.add(f.speedup());
+        }
+        t.row(vec![
+            net.name().to_string(),
+            total.to_string(),
+            findings.len().to_string(),
+            if s.count() > 0 {
+                format!("{:.2}x", s.median())
+            } else {
+                "-".into()
+            },
+            if s.count() > 0 {
+                format!("{:.2}x", s.max())
+            } else {
+                "-".into()
+            },
+            format!("{:.2} s", dt),
+        ]);
+    }
+    println!("{}", t.render());
+    let goog = discover_pairs(
+        &Network::GoogleNet.build(batch),
+        &dev,
+        budget,
+        1.05,
+    );
+    println!(
+        "GoogleNet complementary cases: {} (paper: 27) — top assignments:",
+        goog.len()
+    );
+    for f in goog.iter().take(5) {
+        println!(
+            "  {} [{}] + {} [{}]: {:.2}x",
+            f.name_a,
+            f.algo_a.name(),
+            f.name_b,
+            f.algo_b.name(),
+            f.speedup()
+        );
+    }
+}

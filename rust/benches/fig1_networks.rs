@@ -1,0 +1,66 @@
+//! Bench E3 — regenerate the paper's **Figure 1**: the structural contrast
+//! between linear (AlexNet) and non-linear (GoogleNet) networks, extended
+//! to all six implemented architectures. Prints the per-level width
+//! profile (the "shape" Figure 1 draws) and the parallelism census.
+
+use std::time::Instant;
+
+use parconv::graph::Network;
+use parconv::util::Table;
+
+fn sparkline(widths: &[usize]) -> String {
+    const GLYPHS: &[char] = &['.', ':', '+', '*', '#', '@'];
+    widths
+        .iter()
+        .map(|&w| GLYPHS[w.min(GLYPHS.len() - 1)])
+        .collect()
+}
+
+fn main() {
+    let batch = 32;
+    let t0 = Instant::now();
+    println!("=== Figure 1 (reproduced): network structure ===\n");
+    let mut t = Table::new(vec![
+        "Network",
+        "Class",
+        "Ops",
+        "Convs",
+        "Forks",
+        "Joins",
+        "MaxWidth",
+        "ConvWidth",
+        "CritPath",
+        "IndepPairs",
+    ]);
+    for net in Network::ALL {
+        let dag = net.build(batch);
+        let s = dag.stats();
+        t.row(vec![
+            net.name().to_string(),
+            if s.is_linear() { "linear" } else { "non-linear" }.to_string(),
+            s.ops.to_string(),
+            s.convs.to_string(),
+            s.forks.to_string(),
+            s.joins.to_string(),
+            s.max_width.to_string(),
+            s.max_conv_width.to_string(),
+            s.critical_path.to_string(),
+            s.independent_conv_pairs.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("per-level op-width profiles (. = 1 op wide, @ = 5+):\n");
+    for net in [Network::AlexNet, Network::GoogleNet] {
+        let dag = net.build(batch);
+        println!("  {:10} {}", net.name(), sparkline(&dag.width_profile()));
+    }
+    println!(
+        "\nAlexNet is a flat chain; GoogleNet pulses 4+ wide at every \
+         inception module — the inter-op parallelism the paper targets."
+    );
+    println!(
+        "\nbench wall time: {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+}

@@ -1,0 +1,73 @@
+//! Perf bench (L3) — simulator and coordinator throughput. Targets from
+//! DESIGN.md §Perf: >= 1M block-events/s through the engine; a full
+//! GoogleNet iteration scheduled in < 50 ms wall.
+
+use std::time::Instant;
+
+use parconv::convlib::{kernel_desc, Algorithm, ConvParams};
+use parconv::coordinator::{
+    discover_pairs, Coordinator, ScheduleConfig, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
+use parconv::graph::Network;
+
+fn main() {
+    let dev = DeviceSpec::k40();
+
+    // 1. engine block throughput: many medium kernels back to back
+    let p = ConvParams::incep3a_3x3(32);
+    let d = kernel_desc(Algorithm::ImplicitPrecompGemm, &p, &dev).unwrap();
+    let blocks_per_kernel = d.launch.grid_blocks;
+    let reps = 200u64;
+    let t0 = Instant::now();
+    let mut e = Engine::new(dev.clone(), PartitionMode::StreamsOnly);
+    for i in 0..reps {
+        e.launch(d.clone(), (i % 4) as usize);
+    }
+    let r = e.run();
+    let dt = t0.elapsed().as_secs_f64();
+    let total_blocks = blocks_per_kernel * reps;
+    println!(
+        "engine: {reps} kernels x {blocks_per_kernel} blocks in {dt:.3} s \
+         -> {:.2} M blocks/s (makespan {:.1} ms sim)",
+        total_blocks as f64 / dt / 1e6,
+        r.makespan_us / 1e3
+    );
+
+    // 2. full-network scheduling wall time
+    for net in [Network::GoogleNet, Network::ResNet50] {
+        let dag = net.build(32);
+        let coord = Coordinator::new(
+            dev.clone(),
+            ScheduleConfig {
+                policy: SelectionPolicy::ProfileGuided,
+                partition: PartitionMode::IntraSm,
+                streams: 2,
+                workspace_limit: 4 * 1024 * 1024 * 1024,
+            },
+        );
+        let t0 = Instant::now();
+        let r = coord.execute_dag(&dag);
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "coordinator: {} iteration scheduled in {wall:.1} ms wall \
+             (sim makespan {:.1} ms, {} rounds)",
+            net.name(),
+            r.makespan_us / 1e3,
+            r.rounds
+        );
+    }
+
+    // 3. discovery throughput
+    let dag = Network::GoogleNet.build(32);
+    let t0 = Instant::now();
+    let f = discover_pairs(&dag, &dev, 4 << 30, 1.05);
+    let wall = t0.elapsed().as_secs_f64() * 1e3;
+    let pairs = dag.independent_conv_pairs().len();
+    println!(
+        "discovery: {pairs} pairs x 49 algo combos in {wall:.1} ms \
+         ({:.0} pair-evals/s, {} findings)",
+        pairs as f64 * 49.0 / (wall / 1e3),
+        f.len()
+    );
+}

@@ -1,0 +1,71 @@
+//! Bench E1 — regenerate the paper's **Table 1**: resource utilization of
+//! two different algorithms for the two independent convolutions in
+//! GoogleNet's first inception module (Tesla K40).
+//!
+//! Paper reference values:
+//! | Incep.1 (3*3) PRECOMP_GEMM | 92% 39% 38% 19% | 70% 0.47% |
+//! | Incep.1 (3*3) FFT_TILING   | 38% 75% 25%  6% | 30% 15.2% |
+//! | Incep.1 (5*5) PRECOMP_GEMM | 100% 70% 50% 100%| 60% 0.03% |
+//! | Incep.1 (5*5) FFT_TILING   | 38% 75% 25%  6% | 20% 16.5% |
+
+use std::time::Instant;
+
+use parconv::convlib::{Algorithm, ConvParams};
+use parconv::gpusim::DeviceSpec;
+use parconv::profiler::{table1_report, table1_row};
+
+fn main() {
+    let dev = DeviceSpec::k40();
+    let batch = 32;
+    let t0 = Instant::now();
+    let mut rows = Vec::new();
+    for (label, p) in [
+        ("Incep. 1 (3*3)", ConvParams::incep3a_3x3(batch)),
+        ("Incep. 1 (5*5)", ConvParams::incep3a_5x5(batch)),
+    ] {
+        for algo in [Algorithm::ImplicitPrecompGemm, Algorithm::FftTiling] {
+            rows.push(table1_row(label, algo, &p, &dev).unwrap());
+        }
+    }
+    println!("=== Table 1 (reproduced) ===\n");
+    println!("{}", table1_report(&rows));
+
+    // paper-vs-measured deltas
+    let paper: [[f64; 6]; 4] = [
+        [92.0, 39.0, 38.0, 19.0, 70.0, 0.47],
+        [38.0, 75.0, 25.0, 6.0, 30.0, 15.2],
+        [100.0, 70.0, 50.0, 100.0, 60.0, 0.03],
+        [38.0, 75.0, 25.0, 6.0, 20.0, 16.5],
+    ];
+    println!("paper-vs-measured (abs delta, percentage points):");
+    let mut worst: f64 = 0.0;
+    for (r, p) in rows.iter().zip(paper) {
+        let got = [
+            r.registers_pct,
+            r.shared_memory_pct,
+            r.threads_pct,
+            r.blocks_pct,
+            r.alu_pct,
+            r.mem_stall_pct,
+        ];
+        let deltas: Vec<String> = got
+            .iter()
+            .zip(p)
+            .map(|(g, w)| {
+                worst = worst.max((g - w).abs());
+                format!("{:+.1}", g - w)
+            })
+            .collect();
+        println!(
+            "  {} {:14} {}",
+            r.layer,
+            r.algorithm,
+            deltas.join(" ")
+        );
+    }
+    println!("\nworst column delta: {worst:.1} points");
+    println!(
+        "bench wall time: {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+}

@@ -1,0 +1,77 @@
+//! Bench E2 — regenerate the paper's **Table 2**: workspace memory and
+//! execution time for the 5x5 convolution of the third inception module of
+//! GoogleNet, all cuDNN algorithms (Tesla K40).
+//!
+//! Paper reference: GEMM 0/58ms, IMPLICIT_GEMM 48KB/59ms, PRECOMP 4.8GB/
+//! 126ms, WINOGRAD_NONFUSED 691MB/46ms, FFT 2.2GB/36ms, FFT_TILING
+//! 1.1GB/48ms; DIRECT and WINOGRAD not supported.
+
+use std::time::Instant;
+
+use parconv::convlib::{kernel_desc, Algorithm, ConvParams, ALL_ALGORITHMS};
+use parconv::gpusim::{isolated_time_us, DeviceSpec};
+use parconv::util::{fmt_bytes, fmt_us, Table};
+
+fn main() {
+    let dev = DeviceSpec::k40();
+    let p = ConvParams::table2_5x5();
+    let t0 = Instant::now();
+    println!(
+        "=== Table 2 (reproduced) === workload {} on {}\n",
+        p.short(),
+        dev.name
+    );
+    let mut t = Table::new(vec![
+        "Convolution Algorithm",
+        "Workspace Memory",
+        "Runtime",
+        "Paper ws",
+        "Paper t",
+    ]);
+    let paper: &[(Algorithm, &str, &str)] = &[
+        (Algorithm::Gemm, "0", "58 ms"),
+        (Algorithm::ImplicitGemm, "48 KB", "59 ms"),
+        (Algorithm::ImplicitPrecompGemm, "4.8 GB", "126 ms"),
+        (Algorithm::WinogradNonfused, "691 MB", "46 ms"),
+        (Algorithm::Fft, "2.2 GB", "36 ms"),
+        (Algorithm::FftTiling, "1.1 GB", "48 ms"),
+        (Algorithm::Direct, "-", "not supported"),
+    ];
+    for (algo, pws, pt) in paper {
+        match kernel_desc(*algo, &p, &dev) {
+            Some(d) => t.row(vec![
+                algo.name().to_string(),
+                fmt_bytes(d.workspace_bytes),
+                fmt_us(isolated_time_us(&d, &dev)),
+                pws.to_string(),
+                pt.to_string(),
+            ]),
+            None => t.row(vec![
+                algo.name().to_string(),
+                "-".into(),
+                "not supported".into(),
+                pws.to_string(),
+                pt.to_string(),
+            ]),
+        }
+    }
+    println!("{}", t.render());
+
+    // shape checks the paper derives from this table
+    let d = |a| kernel_desc(a, &p, &dev).unwrap();
+    let t_of = |a| isolated_time_us(&d(a), &dev);
+    let fft = t_of(Algorithm::Fft);
+    let wino = t_of(Algorithm::WinogradNonfused);
+    let gap = (wino - fft) / wino * 100.0;
+    let extra = d(Algorithm::Fft).workspace_bytes as f64
+        - d(Algorithm::WinogradNonfused).workspace_bytes as f64;
+    println!(
+        "FFT vs WINOGRAD_NONFUSED: {gap:.0}% faster (paper: 21%), {} extra \
+         workspace (paper: ~1.5 GB)",
+        fmt_bytes(extra as u64)
+    );
+    println!(
+        "\nbench wall time: {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+}

@@ -1,0 +1,13 @@
+//! Configuration system: a hand-rolled TOML-subset parser plus the typed
+//! run configuration the launcher consumes.
+//!
+//! (The offline vendored registry has no `serde`/`toml`, so the parser is
+//! local. It supports the subset the project needs: `[section]` headers,
+//! `key = value` with string / integer / float / boolean / string-array
+//! values, `#` comments, and blank lines.)
+
+mod parser;
+mod run;
+
+pub use parser::{ConfigError, ParsedConfig, Value};
+pub use run::{RunConfig, SchedulerConfig};

@@ -1,0 +1,298 @@
+//! Minimal TOML-subset parser (sections, scalars, string arrays, comments).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrList(Vec<String>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str_list(&self) -> Option<&[String]> {
+        match self {
+            Value::StrList(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Sections -> key -> value. The empty-string section holds top-level keys.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedConfig {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl ParsedConfig {
+    /// Parse a config document.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = ParsedConfig::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let trimmed = strip_comment(raw).trim().to_string();
+            if trimmed.is_empty() {
+                continue;
+            }
+            if trimmed.starts_with('[') {
+                if !trimmed.ends_with(']') || trimmed.len() < 3 {
+                    return Err(ConfigError {
+                        line,
+                        msg: format!("malformed section header {trimmed:?}"),
+                    });
+                }
+                section = trimmed[1..trimmed.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = trimmed.find('=') else {
+                return Err(ConfigError {
+                    line,
+                    msg: format!("expected key = value, got {trimmed:?}"),
+                });
+            };
+            let key = trimmed[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(ConfigError {
+                    line,
+                    msg: "empty key".into(),
+                });
+            }
+            let val = parse_value(trimmed[eq + 1..].trim())
+                .map_err(|msg| ConfigError { line, msg })?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    /// Look up `section.key` (use "" for top level).
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    // typed helpers with defaults --------------------------------------
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(Value::as_float)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .and_then(Value::as_bool)
+            .unwrap_or(default)
+    }
+}
+
+impl fmt::Display for ParsedConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (name, kv) in &self.sections {
+            if !name.is_empty() {
+                writeln!(f, "[{name}]")?;
+            }
+            for (k, v) in kv {
+                writeln!(f, "{k} = {v:?}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(format!("unterminated string {s:?}"));
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated array {s:?}"));
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::StrList(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !(part.starts_with('"') && part.ends_with('"') && part.len() >= 2)
+            {
+                return Err(format!("array items must be strings: {part:?}"));
+            }
+            items.push(part[1..part.len() - 1].to_string());
+        }
+        return Ok(Value::StrList(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unrecognized value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# top-level
+seed = 42
+name = "k40-run"
+
+[device]
+sms = 15            # Kepler GK110B
+bandwidth = 288.0
+unified = false
+
+[scheduler]
+policies = ["fastest_only", "profile_guided"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ParsedConfig::parse(DOC).unwrap();
+        assert_eq!(c.get("", "seed"), Some(&Value::Int(42)));
+        assert_eq!(c.str_or("", "name", ""), "k40-run");
+        assert_eq!(c.int_or("device", "sms", 0), 15);
+        assert!((c.float_or("device", "bandwidth", 0.0) - 288.0).abs() < 1e-9);
+        assert!(!c.bool_or("device", "unified", true));
+        assert_eq!(
+            c.get("scheduler", "policies").unwrap().as_str_list().unwrap(),
+            &["fastest_only".to_string(), "profile_guided".to_string()]
+        );
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let c = ParsedConfig::parse(r##"k = "a#b" # trailing"##).unwrap();
+        assert_eq!(c.str_or("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = ParsedConfig::parse("").unwrap();
+        assert_eq!(c.int_or("x", "y", 7), 7);
+        assert_eq!(c.str_or("x", "y", "d"), "d");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = ParsedConfig::parse("x = 3").unwrap();
+        assert_eq!(c.float_or("", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let err = ParsedConfig::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_array() {
+        assert!(ParsedConfig::parse("x = [1, 2]").is_err());
+        assert!(ParsedConfig::parse("x = [\"a\"").is_err());
+    }
+
+    #[test]
+    fn empty_array_ok() {
+        let c = ParsedConfig::parse("x = []").unwrap();
+        assert_eq!(c.get("", "x").unwrap().as_str_list().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn roundtrip_display_reparses() {
+        let c = ParsedConfig::parse(DOC).unwrap();
+        let printed = format!("{c}");
+        // Display uses debug formatting for values; just check structure.
+        assert!(printed.contains("[device]"));
+        assert!(printed.contains("sms"));
+    }
+}

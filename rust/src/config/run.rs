@@ -1,0 +1,141 @@
+//! Typed run configuration consumed by the launcher (`main.rs`).
+
+use std::path::Path;
+
+use super::parser::{ConfigError, ParsedConfig};
+
+/// Scheduler-specific knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerConfig {
+    /// Algorithm-selection policy name: `fastest_only` (TensorFlow r1.10
+    /// behaviour), `memory_min`, `profile_guided`, `balanced`.
+    pub policy: String,
+    /// Partitioning mode: `none`, `streams`, `inter_sm`, `intra_sm`.
+    pub partition: String,
+    /// Number of CUDA-style streams available to the scheduler.
+    pub streams: usize,
+    /// Device-memory budget for workspaces, in bytes.
+    pub workspace_limit: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            policy: "profile_guided".into(),
+            partition: "intra_sm".into(),
+            streams: 4,
+            workspace_limit: 4 * 1024 * 1024 * 1024, // leave room beside tensors
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Device preset name (`k40`, `p100`, `v100`) — see `gpusim::spec`.
+    pub device: String,
+    /// Network name (`alexnet`, `vgg16`, `googlenet`, `resnet50`,
+    /// `densenet`, `pathnet`).
+    pub network: String,
+    /// Batch size the cost models are evaluated at.
+    pub batch: usize,
+    /// RNG seed for anything stochastic.
+    pub seed: u64,
+    pub scheduler: SchedulerConfig,
+    /// Directory holding AOT artifacts (`manifest.txt`, `*.hlo.txt`).
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            device: "k40".into(),
+            network: "googlenet".into(),
+            batch: 32,
+            seed: 0,
+            scheduler: SchedulerConfig::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from config text (TOML subset; see `config::parser`).
+    pub fn from_text(text: &str) -> Result<Self, ConfigError> {
+        let p = ParsedConfig::parse(text)?;
+        let d = RunConfig::default();
+        let sd = SchedulerConfig::default();
+        Ok(RunConfig {
+            device: p.str_or("", "device", &d.device),
+            network: p.str_or("", "network", &d.network),
+            batch: p.int_or("", "batch", d.batch as i64).max(1) as usize,
+            seed: p.int_or("", "seed", d.seed as i64) as u64,
+            artifacts_dir: p.str_or("", "artifacts_dir", &d.artifacts_dir),
+            scheduler: SchedulerConfig {
+                policy: p.str_or("scheduler", "policy", &sd.policy),
+                partition: p.str_or("scheduler", "partition", &sd.partition),
+                streams: p
+                    .int_or("scheduler", "streams", sd.streams as i64)
+                    .max(1) as usize,
+                workspace_limit: p
+                    .int_or(
+                        "scheduler",
+                        "workspace_limit_mb",
+                        (sd.workspace_limit / (1024 * 1024)) as i64,
+                    )
+                    .max(0) as u64
+                    * 1024
+                    * 1024,
+            },
+        })
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::from_text(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = RunConfig::from_text("").unwrap();
+        assert_eq!(c, RunConfig::default());
+    }
+
+    #[test]
+    fn full_round() {
+        let c = RunConfig::from_text(
+            r#"
+device = "v100"
+network = "resnet50"
+batch = 64
+seed = 9
+
+[scheduler]
+policy = "fastest_only"
+partition = "none"
+streams = 1
+workspace_limit_mb = 512
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.device, "v100");
+        assert_eq!(c.network, "resnet50");
+        assert_eq!(c.batch, 64);
+        assert_eq!(c.scheduler.policy, "fastest_only");
+        assert_eq!(c.scheduler.partition, "none");
+        assert_eq!(c.scheduler.streams, 1);
+        assert_eq!(c.scheduler.workspace_limit, 512 * 1024 * 1024);
+    }
+
+    #[test]
+    fn batch_clamped_to_one() {
+        let c = RunConfig::from_text("batch = 0").unwrap();
+        assert_eq!(c.batch, 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! Algorithm enum, launch configuration, and the kernel descriptor the
+//! simulator executes.
+
+use std::fmt;
+
+/// The seven cuDNN forward-convolution algorithms (paper §2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Algorithm {
+    /// CUDNN_CONVOLUTION_FWD_ALGO_GEMM
+    Gemm,
+    /// CUDNN_CONVOLUTION_FWD_ALGO_IMPLICIT_GEMM
+    ImplicitGemm,
+    /// CUDNN_CONVOLUTION_FWD_ALGO_IMPLICIT_PRECOMP_GEMM
+    ImplicitPrecompGemm,
+    /// CUDNN_CONVOLUTION_FWD_ALGO_DIRECT
+    Direct,
+    /// CUDNN_CONVOLUTION_FWD_ALGO_WINOGRAD_NONFUSED
+    WinogradNonfused,
+    /// CUDNN_CONVOLUTION_FWD_ALGO_FFT
+    Fft,
+    /// CUDNN_CONVOLUTION_FWD_ALGO_FFT_TILING
+    FftTiling,
+}
+
+/// All algorithms, in cuDNN enum order.
+pub const ALL_ALGORITHMS: &[Algorithm] = &[
+    Algorithm::Gemm,
+    Algorithm::ImplicitGemm,
+    Algorithm::ImplicitPrecompGemm,
+    Algorithm::Direct,
+    Algorithm::WinogradNonfused,
+    Algorithm::Fft,
+    Algorithm::FftTiling,
+];
+
+impl Algorithm {
+    /// The cuDNN-style name used in the paper's tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Gemm => "GEMM",
+            Algorithm::ImplicitGemm => "IMPLICIT_GEMM",
+            Algorithm::ImplicitPrecompGemm => "PRECOMP_GEMM",
+            Algorithm::Direct => "DIRECT",
+            Algorithm::WinogradNonfused => "WINOGRAD_NONFUSED",
+            Algorithm::Fft => "FFT",
+            Algorithm::FftTiling => "FFT_TILING",
+        }
+    }
+
+    /// The CUDA kernel symbol the paper's Table 1 lists for the algorithm.
+    pub fn kernel_name(&self) -> &'static str {
+        match self {
+            Algorithm::Gemm => "sgemm_128x64",
+            Algorithm::ImplicitGemm => "implicit_convolve_sgemm",
+            Algorithm::ImplicitPrecompGemm => "implicit_convolve_sgemm",
+            Algorithm::Direct => "direct_conv_kernel",
+            Algorithm::WinogradNonfused => "winograd_nonfused",
+            Algorithm::Fft => "fft2d_c2r",
+            Algorithm::FftTiling => "fft2d_c2r_32x32",
+        }
+    }
+
+    /// The artifact-name suffix used by `python/compile/aot.py`.
+    pub fn artifact_name(&self) -> &'static str {
+        match self {
+            Algorithm::Gemm => "GEMM",
+            Algorithm::ImplicitGemm => "IMPLICIT_GEMM",
+            Algorithm::ImplicitPrecompGemm => "IMPLICIT_PRECOMP_GEMM",
+            Algorithm::Direct => "DIRECT",
+            Algorithm::WinogradNonfused => "WINOGRAD_NONFUSED",
+            Algorithm::Fft => "FFT",
+            Algorithm::FftTiling => "FFT_TILING",
+        }
+    }
+
+    /// Parse any of the accepted spellings.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        let up = s.to_ascii_uppercase();
+        ALL_ALGORITHMS
+            .iter()
+            .copied()
+            .find(|a| a.name() == up || a.artifact_name() == up)
+    }
+}
+
+impl fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// CUDA-style launch configuration: the static-resource footprint that
+/// decides SM co-residency (the paper's central mechanism).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LaunchConfig {
+    pub grid_blocks: u64,
+    pub threads_per_block: u32,
+    pub regs_per_thread: u32,
+    pub smem_per_block: u32, // bytes
+}
+
+impl LaunchConfig {
+    /// Registers one block pins on an SM.
+    pub fn regs_per_block(&self) -> u64 {
+        self.threads_per_block as u64 * self.regs_per_thread as u64
+    }
+
+    /// Warps per block (warp size 32).
+    pub fn warps_per_block(&self) -> u32 {
+        self.threads_per_block.div_ceil(32)
+    }
+}
+
+/// Warp-issue characteristics of a kernel running alone at natural
+/// occupancy — the paper's Table 1 "ALUs" and "Memory stalls" columns.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IssueProfile {
+    /// Fraction of issue slots doing arithmetic (0..=1).
+    pub alu_util: f64,
+    /// Fraction of cycles stalled on memory (0..=1).
+    pub mem_stall_frac: f64,
+}
+
+/// Everything the simulator / scheduler needs to know about one kernel
+/// launch of one convolution under one algorithm.
+#[derive(Clone, Debug)]
+pub struct KernelDesc {
+    pub name: String,
+    pub algo: Algorithm,
+    /// The convolution this kernel computes (cost-model parameters).
+    pub params: super::ConvParams,
+    pub launch: LaunchConfig,
+    /// Useful floating-point work.
+    pub flops: f64,
+    /// DRAM traffic (bytes), including workspace passes.
+    pub dram_bytes: f64,
+    /// Device-memory workspace allocated at launch.
+    pub workspace_bytes: u64,
+    /// Issue profile (Table 1 columns).
+    pub alu_util: f64,
+    pub mem_stall_frac: f64,
+    /// Sustained fraction of device peak FLOP/s when running alone.
+    pub time_efficiency: f64,
+    pub(crate) _device: String,
+}
+
+impl KernelDesc {
+    /// Per-block share of the kernel's compute work.
+    pub fn flops_per_block(&self) -> f64 {
+        self.flops / self.launch.grid_blocks as f64
+    }
+
+    /// Per-block share of the kernel's DRAM traffic.
+    pub fn bytes_per_block(&self) -> f64 {
+        self.dram_bytes / self.launch.grid_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_paper_tables() {
+        assert_eq!(Algorithm::ImplicitPrecompGemm.name(), "PRECOMP_GEMM");
+        assert_eq!(Algorithm::FftTiling.kernel_name(), "fft2d_c2r_32x32");
+        assert_eq!(
+            Algorithm::ImplicitGemm.kernel_name(),
+            "implicit_convolve_sgemm"
+        );
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for &a in ALL_ALGORITHMS {
+            assert_eq!(Algorithm::parse(a.name()), Some(a), "{a}");
+            assert_eq!(Algorithm::parse(a.artifact_name()), Some(a));
+        }
+        assert_eq!(Algorithm::parse("precomp_gemm"), Some(Algorithm::ImplicitPrecompGemm));
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn launch_derived_quantities() {
+        let l = LaunchConfig {
+            grid_blocks: 784,
+            threads_per_block: 256,
+            regs_per_thread: 78,
+            smem_per_block: 6400,
+        };
+        assert_eq!(l.regs_per_block(), 256 * 78);
+        assert_eq!(l.warps_per_block(), 8);
+    }
+
+    #[test]
+    fn warps_round_up() {
+        let l = LaunchConfig {
+            grid_blocks: 1,
+            threads_per_block: 33,
+            regs_per_thread: 1,
+            smem_per_block: 0,
+        };
+        assert_eq!(l.warps_per_block(), 2);
+    }
+}

@@ -1,0 +1,140 @@
+//! Backward-pass convolutions (training): cuDNN's `ConvolutionBackwardData`
+//! and `ConvolutionBackwardFilter` each have their *own* algorithm choice,
+//! resource footprint, and workspace — the paper's selection problem
+//! triples for training iterations (fwd + dgrad + wgrad per layer).
+//!
+//! Cost-model mapping (documented approximation, exact in FLOPs):
+//!
+//! - **dgrad** is itself a convolution of the output gradient with the
+//!   rotated filter: for unit stride we model it as the *transposed*
+//!   convolution `(N, K, Ho, Wo) -> (N, C, H, W)` with full padding; for
+//!   strided convolutions (input dilation) we keep the forward geometry,
+//!   whose FLOP count is identical.
+//! - **wgrad** correlates input with output gradient; its virtual-GEMM
+//!   work equals the forward's (`2*N*K*C*R*S*Ho*Wo`), so it reuses the
+//!   forward parameters for the resource/cost models.
+//!
+//! Both directions then draw from the same seven algorithm families as the
+//! forward pass (cuDNN's bwd enums are family-wise the same kernels).
+
+use super::{kernel_desc, Algorithm, ConvParams, KernelDesc};
+use crate::gpusim::DeviceSpec;
+
+/// Which gradient a backward convolution computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BwdKind {
+    /// dL/dInput (cudnnConvolutionBackwardData)
+    Data,
+    /// dL/dFilter (cudnnConvolutionBackwardFilter)
+    Filter,
+}
+
+impl BwdKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BwdKind::Data => "dgrad",
+            BwdKind::Filter => "wgrad",
+        }
+    }
+}
+
+/// The convolution parameters whose *forward* cost model matches the
+/// backward-data computation.
+pub fn dgrad_params(p: &ConvParams) -> ConvParams {
+    if p.stride == (1, 1) {
+        let (ho, wo) = p.out_dims();
+        // full correlation: pad = r - 1 - pad_fwd (clamped to valid)
+        let ph = (p.r - 1).saturating_sub(p.padding.0);
+        let pw = (p.s - 1).saturating_sub(p.padding.1);
+        ConvParams::new(p.n, p.k, ho, wo, p.c, p.r, p.s, (1, 1), (ph, pw))
+    } else {
+        // strided dgrad = input-dilated conv; FLOP-equivalent stand-in
+        p.clone()
+    }
+}
+
+/// The parameters whose forward cost model matches backward-filter.
+pub fn wgrad_params(p: &ConvParams) -> ConvParams {
+    // identical virtual-GEMM volume: M=K, N=C*R*S, K=N*Ho*Wo — same
+    // footprint class as the forward GEMM.
+    p.clone()
+}
+
+/// Kernel descriptor for a backward convolution under an algorithm, or
+/// `None` if unsupported (same support matrix as forward).
+pub fn bwd_kernel_desc(
+    kind: BwdKind,
+    algo: Algorithm,
+    p: &ConvParams,
+    dev: &DeviceSpec,
+) -> Option<KernelDesc> {
+    let eq = match kind {
+        BwdKind::Data => dgrad_params(p),
+        BwdKind::Filter => wgrad_params(p),
+    };
+    let mut d = kernel_desc(algo, &eq, dev)?;
+    d.name = format!("{}_{}[{}]", algo.kernel_name(), kind.name(), p.short());
+    Some(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convlib::{model_for, AlgoModel};
+
+    #[test]
+    fn dgrad_flops_equal_forward() {
+        let p = ConvParams::incep3a_3x3(32);
+        let d = dgrad_params(&p);
+        assert_eq!(d.naive_flops(), p.naive_flops());
+        // transposed channel roles
+        assert_eq!(d.c, p.k);
+        assert_eq!(d.k, p.c);
+    }
+
+    #[test]
+    fn dgrad_output_shape_matches_input() {
+        let p = ConvParams::incep3a_5x5(8);
+        let d = dgrad_params(&p);
+        assert_eq!(d.out_dims(), (p.h, p.w));
+    }
+
+    #[test]
+    fn wgrad_work_equals_forward() {
+        let p = ConvParams::incep3a_3x3(16);
+        assert_eq!(wgrad_params(&p).naive_flops(), p.naive_flops());
+    }
+
+    #[test]
+    fn bwd_descs_exist_for_gemm_family() {
+        let dev = DeviceSpec::k40();
+        let p = ConvParams::incep3a_3x3(32);
+        for kind in [BwdKind::Data, BwdKind::Filter] {
+            let d =
+                bwd_kernel_desc(kind, Algorithm::ImplicitGemm, &p, &dev)
+                    .unwrap();
+            assert!(d.flops > 0.0);
+            assert!(d.name.contains(kind.name()));
+        }
+    }
+
+    #[test]
+    fn bwd_support_matrix_mirrors_forward() {
+        let dev = DeviceSpec::k40();
+        // strided conv: FFT family unsupported in either direction
+        let p = ConvParams::new(8, 64, 56, 56, 64, 3, 3, (2, 2), (1, 1));
+        assert!(bwd_kernel_desc(BwdKind::Data, Algorithm::Fft, &p, &dev)
+            .is_none());
+        assert!(
+            bwd_kernel_desc(BwdKind::Filter, Algorithm::Gemm, &p, &dev)
+                .is_some()
+        );
+        let _ = model_for(Algorithm::Gemm); // registry sanity
+    }
+
+    #[test]
+    fn strided_dgrad_standin_preserves_flops() {
+        let p = ConvParams::new(8, 64, 56, 56, 128, 3, 3, (2, 2), (1, 1));
+        assert_eq!(dgrad_params(&p).naive_flops(), p.naive_flops());
+    }
+}

@@ -1,0 +1,94 @@
+//! CUDNN_CONVOLUTION_FWD_ALGO_DIRECT: naive sliding-window kernel, zero
+//! workspace, modest efficiency. cuDNN ships it for a narrow set of
+//! configurations only (Table 2's caption: "DIRECT ... not supported for
+//! this input") — we mirror that support envelope.
+
+use super::calibration::{clamp, efficiency as eff};
+use super::{AlgoModel, Algorithm, ConvParams, IssueProfile, LaunchConfig};
+
+pub struct Direct;
+
+impl AlgoModel for Direct {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Direct
+    }
+
+    fn supported(&self, p: &ConvParams) -> bool {
+        // cuDNN's DIRECT path covers small odd filters at unit stride.
+        p.r == p.s && p.r <= 3 && p.stride == (1, 1)
+    }
+
+    fn launch(&self, p: &ConvParams) -> LaunchConfig {
+        let (ho, wo) = p.out_dims();
+        let pixels = ho * wo;
+        LaunchConfig {
+            grid_blocks: (p.n * p.k.div_ceil(32) * pixels.div_ceil(64)).max(1)
+                as u64,
+            threads_per_block: 128,
+            regs_per_thread: 40,
+            smem_per_block: 4096,
+        }
+    }
+
+    fn workspace_bytes(&self, _p: &ConvParams) -> u64 {
+        0
+    }
+
+    fn flops(&self, p: &ConvParams) -> f64 {
+        p.naive_flops()
+    }
+
+    fn dram_bytes(&self, p: &ConvParams) -> f64 {
+        // Each output-channel tile re-reads the input: K/32 passes, half
+        // caught by cache.
+        let passes = (p.k.div_ceil(32) as f64 / 2.0).max(1.0);
+        p.input_bytes() as f64 * passes
+            + p.filter_bytes() as f64
+            + p.output_bytes() as f64
+    }
+
+    fn issue_profile(&self, p: &ConvParams) -> IssueProfile {
+        // Little data reuse in registers: ALU share low, stalls high,
+        // improving with channel depth (more MACs per loaded pixel).
+        let depth = clamp((p.c as f64 / 64.0).powf(0.25), 0.5, 1.2);
+        IssueProfile {
+            alu_util: clamp(0.35 * depth, 0.15, 0.5),
+            mem_stall_frac: clamp(0.20 / depth, 0.05, 0.35),
+        }
+    }
+
+    fn time_efficiency(&self, p: &ConvParams) -> f64 {
+        let depth = clamp((p.c as f64 / 64.0).powf(0.25), 0.5, 1.2);
+        clamp(eff::DIRECT * depth, 0.01, 0.3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn support_envelope() {
+        assert!(Direct.supported(&ConvParams::incep3a_3x3(32)));
+        // 5x5 unsupported, as in Table 2's caption.
+        assert!(!Direct.supported(&ConvParams::incep3a_5x5(32)));
+        assert!(!Direct.supported(&ConvParams::new(
+            1, 3, 224, 224, 64, 7, 7, (2, 2), (3, 3)
+        )));
+    }
+
+    #[test]
+    fn zero_workspace() {
+        assert_eq!(Direct.workspace_bytes(&ConvParams::incep3a_3x3(32)), 0);
+    }
+
+    #[test]
+    fn slower_than_gemm_family_on_table1_conv() {
+        use super::super::{gemm_common, calibration::efficiency};
+        let p = ConvParams::incep3a_3x3(32);
+        assert!(
+            Direct.time_efficiency(&p)
+                < gemm_common::efficiency(&p, efficiency::IMPLICIT_GEMM)
+        );
+    }
+}

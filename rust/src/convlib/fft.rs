@@ -1,0 +1,116 @@
+//! CUDNN_CONVOLUTION_FWD_ALGO_FFT: full-image frequency-domain convolution.
+//!
+//! Table 2 pin: 2.2 GB workspace, 36 ms — the fastest algorithm there (and
+//! hence TensorFlow's pick) at the largest memory cost, the paper's prime
+//! exhibit for "fastest-only selection can be the wrong call".
+
+use super::calibration::{clamp, efficiency as eff, workspace as ws};
+use super::{AlgoModel, Algorithm, ConvParams, IssueProfile, LaunchConfig};
+
+/// Next power of two (cuFFT pads transforms).
+pub(crate) fn pow2_ceil(x: usize) -> usize {
+    x.next_power_of_two()
+}
+
+/// Frequency-domain buffer volume in f32-complex pairs:
+/// (N*C + K*C + N*K) * H2 * (W2/2 + 1) where H2/W2 are pow2-padded dims.
+pub(crate) fn freq_floats(p: &ConvParams) -> f64 {
+    let h2 = pow2_ceil(p.h + 2 * p.padding.0);
+    let w2 = pow2_ceil(p.w + 2 * p.padding.1);
+    let wf = w2 / 2 + 1;
+    ((p.n * p.c + p.k * p.c + p.n * p.k) * h2 * wf) as f64
+}
+
+pub struct Fft;
+
+impl AlgoModel for Fft {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Fft
+    }
+
+    fn supported(&self, p: &ConvParams) -> bool {
+        // cuFFT path: unit stride, filter fits the padded image.
+        p.stride == (1, 1)
+    }
+
+    fn launch(&self, p: &ConvParams) -> LaunchConfig {
+        // Batched full-image transforms + pointwise product.
+        LaunchConfig {
+            grid_blocks: ((p.n * (p.c + p.k)).max(16)) as u64,
+            threads_per_block: 256,
+            regs_per_thread: 64,
+            smem_per_block: 24576,
+        }
+    }
+
+    fn workspace_bytes(&self, p: &ConvParams) -> u64 {
+        (freq_floats(p) * 8.0 * ws::FFT_STAGING_FACTOR) as u64
+    }
+
+    fn flops(&self, p: &ConvParams) -> f64 {
+        // Timing is driven by time_efficiency against naive flops (the
+        // pointwise product dominates for deep channels).
+        p.naive_flops()
+    }
+
+    fn dram_bytes(&self, p: &ConvParams) -> f64 {
+        p.input_bytes() as f64
+            + p.filter_bytes() as f64
+            + p.output_bytes() as f64
+            + 2.0 * freq_floats(p) * 8.0
+    }
+
+    fn issue_profile(&self, p: &ConvParams) -> IssueProfile {
+        // Butterfly stages: shared-memory bound, heavy stalls (Table 1
+        // family fit, shifted slightly vs the tiled variant).
+        let ck = (p.c + p.k) as f64;
+        use super::calibration::fft_family as f;
+        IssueProfile {
+            alu_util: clamp(1.1 * f::ALU_A * ck.powf(f::ALU_B), f::ALU_MIN, f::ALU_MAX),
+            mem_stall_frac: clamp(
+                0.9 * (f::STALL_S0 - f::STALL_S1 * ck),
+                f::STALL_MIN,
+                f::STALL_MAX,
+            ),
+        }
+    }
+
+    fn time_efficiency(&self, p: &ConvParams) -> f64 {
+        // Frequency reuse improves with channel depth; pinned at Table 2.
+        let depth = clamp(((p.c + p.k) as f64 / 528.0).powf(0.2), 0.5, 1.2);
+        clamp(eff::FFT * depth, 0.01, 0.6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_workspace_near_2_2gb() {
+        let b = Fft.workspace_bytes(&ConvParams::table2_5x5());
+        let gb = b as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!((gb - 2.2).abs() < 0.25, "FFT ws = {gb} GB");
+    }
+
+    #[test]
+    fn table2_runtime_near_36ms() {
+        let p = ConvParams::table2_5x5();
+        let t_ms = Fft.flops(&p) / (4.29e12 * Fft.time_efficiency(&p)) * 1e3;
+        assert!((t_ms - 36.0).abs() < 4.0, "FFT t = {t_ms} ms");
+    }
+
+    #[test]
+    fn pow2_padding() {
+        assert_eq!(pow2_ceil(18), 32);
+        assert_eq!(pow2_ceil(32), 32);
+        assert_eq!(pow2_ceil(33), 64);
+    }
+
+    #[test]
+    fn stride_unsupported() {
+        assert!(!Fft.supported(&ConvParams::new(
+            1, 3, 32, 32, 8, 3, 3, (2, 2), (1, 1)
+        )));
+    }
+}

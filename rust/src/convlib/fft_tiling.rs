@@ -1,0 +1,131 @@
+//! CUDNN_CONVOLUTION_FWD_ALGO_FFT_TILING: 32x32-tile frequency convolution
+//! (the `fft2d_c2r_32x32` kernel of the paper's Table 1).
+//!
+//! Table 2 pin: 1.1 GB workspace, 48 ms — half the FFT footprint for a 33%
+//! slowdown. Table 1 pins its launch config and issue profile: 512 threads,
+//! one resident block (75% smem), ALU 20-30%, memory stalls 15-16.5% — the
+//! *memory-bound complement* to `implicit_convolve_sgemm`.
+
+use super::calibration::{clamp, efficiency as eff, fft_family as f, workspace as ws};
+use super::fft::freq_floats;
+use super::{AlgoModel, Algorithm, ConvParams, IssueProfile, LaunchConfig};
+
+const TILE: usize = 32;
+
+pub struct FftTiling;
+
+impl AlgoModel for FftTiling {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::FftTiling
+    }
+
+    fn supported(&self, p: &ConvParams) -> bool {
+        p.stride == (1, 1) && p.r <= TILE && p.s <= TILE
+    }
+
+    fn launch(&self, p: &ConvParams) -> LaunchConfig {
+        let (ho, wo) = p.out_dims();
+        let tiles = ho.div_ceil(TILE) * wo.div_ceil(TILE);
+        LaunchConfig {
+            // r2c over input channels + c2r over output channels, per tile.
+            grid_blocks: (p.n * tiles * (p.c + p.k)).max(1) as u64,
+            threads_per_block: 512,
+            regs_per_thread: 48,
+            smem_per_block: 36864, // 36 KB: 75% of the K40's 48 KB (Table 1)
+        }
+    }
+
+    fn workspace_bytes(&self, p: &ConvParams) -> u64 {
+        (freq_floats(p) * 8.0 * ws::FFT_STAGING_FACTOR
+            * ws::FFT_TILING_RESIDENT_FRACTION) as u64
+    }
+
+    fn flops(&self, p: &ConvParams) -> f64 {
+        p.naive_flops()
+    }
+
+    fn dram_bytes(&self, p: &ConvParams) -> f64 {
+        // Halo re-reads: each (TILE + r - 1)^2 patch over TILE^2 outputs.
+        let halo = ((TILE + p.r - 1) * (TILE + p.s - 1)) as f64
+            / (TILE * TILE) as f64;
+        p.input_bytes() as f64 * halo
+            + p.filter_bytes() as f64
+            + p.output_bytes() as f64
+            + 2.0 * self.workspace_bytes(p) as f64
+    }
+
+    fn issue_profile(&self, p: &ConvParams) -> IssueProfile {
+        let ck = (p.c + p.k) as f64;
+        IssueProfile {
+            alu_util: clamp(f::ALU_A * ck.powf(f::ALU_B), f::ALU_MIN, f::ALU_MAX),
+            mem_stall_frac: clamp(
+                f::STALL_S0 - f::STALL_S1 * ck,
+                f::STALL_MIN,
+                f::STALL_MAX,
+            ),
+        }
+    }
+
+    fn time_efficiency(&self, p: &ConvParams) -> f64 {
+        let depth = clamp(((p.c + p.k) as f64 / 528.0).powf(0.2), 0.5, 1.2);
+        clamp(eff::FFT_TILING * depth, 0.01, 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_workspace_near_1_1gb() {
+        let b = FftTiling.workspace_bytes(&ConvParams::table2_5x5());
+        let gb = b as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!((gb - 1.1).abs() < 0.15, "FFT_TILING ws = {gb} GB");
+    }
+
+    #[test]
+    fn table2_runtime_near_48ms() {
+        let p = ConvParams::table2_5x5();
+        let a = FftTiling;
+        let t_ms = a.flops(&p) / (4.29e12 * a.time_efficiency(&p)) * 1e3;
+        assert!((t_ms - 48.0).abs() < 5.0, "FFT_TILING t = {t_ms} ms");
+    }
+
+    #[test]
+    fn table1_launch_config() {
+        // 512 threads, 48 regs, 36 KB smem: exactly one resident block on a
+        // K40 SM, bounded by shared memory (75%).
+        let l = FftTiling.launch(&ConvParams::incep3a_3x3(32));
+        assert_eq!(l.threads_per_block, 512);
+        assert_eq!(l.regs_per_thread, 48);
+        assert_eq!(l.smem_per_block, 36864);
+    }
+
+    #[test]
+    fn table1_issue_profiles() {
+        // 3x3 (C+K=224): ALU 30%, stalls 15.2%; 5x5 (C+K=48): 20%, 16.5%.
+        let i3 = FftTiling.issue_profile(&ConvParams::incep3a_3x3(32));
+        let i5 = FftTiling.issue_profile(&ConvParams::incep3a_5x5(32));
+        assert!((i3.alu_util - 0.30).abs() < 0.02, "{i3:?}");
+        assert!((i3.mem_stall_frac - 0.152).abs() < 0.005, "{i3:?}");
+        assert!((i5.alu_util - 0.20).abs() < 0.02, "{i5:?}");
+        assert!((i5.mem_stall_frac - 0.165).abs() < 0.005, "{i5:?}");
+    }
+
+    #[test]
+    fn half_of_fft_workspace() {
+        use super::super::fft::Fft;
+        use super::super::AlgoModel;
+        let p = ConvParams::table2_5x5();
+        let ratio = FftTiling.workspace_bytes(&p) as f64
+            / Fft.workspace_bytes(&p) as f64;
+        assert!((ratio - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn large_filter_unsupported() {
+        assert!(!FftTiling.supported(&ConvParams::new(
+            1, 2, 64, 64, 2, 33, 33, (1, 1), (0, 0)
+        )));
+    }
+}

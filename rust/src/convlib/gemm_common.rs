@@ -1,0 +1,156 @@
+//! Shared machinery for the GEMM-family algorithms (GEMM, IMPLICIT_GEMM,
+//! IMPLICIT_PRECOMP_GEMM): tile/launch selection and issue-profile fits.
+//!
+//! cuDNN picks among several `*_sgemm` kernel variants by GEMM shape; the
+//! paper's Table 1 captures two of them (a 256-thread variant on the 3x3
+//! convolution, a 64-thread/full-occupancy variant on the 5x5). We model
+//! that selection with a depth threshold on K_gemm = C*R*S.
+
+use super::calibration::{clamp, gemm_family as cal};
+use super::{ConvParams, LaunchConfig};
+
+/// A GEMM kernel tile variant (one CUDA kernel template instantiation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileVariant {
+    pub tile_m: usize,
+    pub tile_n: usize,
+    pub threads: u32,
+    pub regs: u32,
+    pub smem: u32,
+}
+
+/// 256-thread variant: 64x64 output tile, register-hungry (Table 1 rows
+/// "Incep.1 (3*3) PRECOMP_GEMM": 92% regs / 39% smem / 38% thr / 19% blk).
+pub const VARIANT_A: TileVariant = TileVariant {
+    tile_m: 64,
+    tile_n: 64,
+    threads: 256,
+    regs: 78,
+    smem: 6144,
+};
+
+/// 64-thread variant: 32x32 tile, fills all 16 block slots (Table 1 rows
+/// "Incep.1 (5*5) PRECOMP_GEMM": 100% regs / 70% smem / 50% thr / 100% blk).
+pub const VARIANT_B: TileVariant = TileVariant {
+    tile_m: 32,
+    tile_n: 32,
+    threads: 64,
+    regs: 64,
+    smem: 2150,
+};
+
+/// Select the kernel variant for a convolution's virtual GEMM.
+pub fn select_variant(p: &ConvParams) -> TileVariant {
+    let (_, _, kd) = p.gemm_dims();
+    if kd >= cal::CFG_A_MIN_KDIM {
+        VARIANT_A
+    } else {
+        VARIANT_B
+    }
+}
+
+/// Launch configuration for the selected variant over the virtual GEMM.
+pub fn launch(p: &ConvParams) -> LaunchConfig {
+    let v = select_variant(p);
+    let (m, n, _) = p.gemm_dims();
+    let grid = (m.div_ceil(v.tile_m) * n.div_ceil(v.tile_n)) as u64;
+    LaunchConfig {
+        grid_blocks: grid.max(1),
+        threads_per_block: v.threads,
+        regs_per_thread: v.regs,
+        smem_per_block: v.smem,
+    }
+}
+
+/// ALU utilization fit: deeper GEMMs amortize address math better.
+pub fn alu_util(p: &ConvParams) -> f64 {
+    let (_, _, kd) = p.gemm_dims();
+    clamp(
+        cal::ALU_A * (kd as f64).powf(cal::ALU_B),
+        cal::ALU_MIN,
+        cal::ALU_MAX,
+    )
+}
+
+/// Memory-stall fraction: variant-specific base (occupancy-driven latency
+/// hiding), mildly modulated by arithmetic intensity relative to the
+/// Table 1 pin point of that variant.
+pub fn mem_stall(p: &ConvParams) -> f64 {
+    let v = select_variant(p);
+    let (base, ai_cal) = if v == VARIANT_A {
+        (cal::STALL_CFG_A, ConvParams::incep3a_3x3(32).arithmetic_intensity())
+    } else {
+        (cal::STALL_CFG_B, ConvParams::incep3a_5x5(32).arithmetic_intensity())
+    };
+    clamp(base * (ai_cal / p.arithmetic_intensity()).powf(0.3), 0.0, 0.30)
+}
+
+/// Structural modulation of time efficiency around the Table 2 pin:
+/// tile-quantization waste plus a shallow-K penalty.
+pub fn efficiency_modulation(p: &ConvParams) -> f64 {
+    let v = select_variant(p);
+    let (m, n, kd) = p.gemm_dims();
+    let mq = m as f64 / (m.div_ceil(v.tile_m) * v.tile_m) as f64;
+    let nq = n as f64 / (n.div_ceil(v.tile_n) * v.tile_n) as f64;
+    let depth = clamp((kd as f64 / 512.0).powf(0.15), 0.6, 1.0);
+    mq * nq * depth
+}
+
+/// Modulated efficiency: `pin * modulation(p) / modulation(pin_point)`.
+pub fn efficiency(p: &ConvParams, pin: f64) -> f64 {
+    let at_pin = efficiency_modulation(&ConvParams::table2_5x5());
+    clamp(pin * efficiency_modulation(p) / at_pin, 0.005, 0.95)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_3x3_selects_variant_a() {
+        let p = ConvParams::incep3a_3x3(32);
+        assert_eq!(select_variant(&p), VARIANT_A);
+        let l = launch(&p);
+        // ceil(128/64) * ceil(25088/64) = 2 * 392
+        assert_eq!(l.grid_blocks, 784);
+        assert_eq!(l.threads_per_block, 256);
+    }
+
+    #[test]
+    fn table1_5x5_selects_variant_b() {
+        let p = ConvParams::incep3a_5x5(32);
+        assert_eq!(select_variant(&p), VARIANT_B);
+        let l = launch(&p);
+        // ceil(32/32) * ceil(25088/32) = 784
+        assert_eq!(l.grid_blocks, 784);
+        assert_eq!(l.threads_per_block, 64);
+    }
+
+    #[test]
+    fn alu_util_matches_table1() {
+        assert!((alu_util(&ConvParams::incep3a_3x3(32)) - 0.70).abs() < 0.01);
+        assert!((alu_util(&ConvParams::incep3a_5x5(32)) - 0.60).abs() < 0.01);
+    }
+
+    #[test]
+    fn stall_matches_table1_at_pins() {
+        let s_a = mem_stall(&ConvParams::incep3a_3x3(32));
+        let s_b = mem_stall(&ConvParams::incep3a_5x5(32));
+        assert!((s_a - 0.0047).abs() < 5e-4, "{s_a}");
+        assert!((s_b - 0.0003).abs() < 5e-5, "{s_b}");
+    }
+
+    #[test]
+    fn efficiency_pin_is_identity() {
+        let p = ConvParams::table2_5x5();
+        assert!((efficiency(&p, 0.116) - 0.116).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantization_penalizes_ragged_tiles() {
+        // K=65 wastes almost half a 64-wide tile vs K=64.
+        let a = ConvParams::new(32, 96, 28, 28, 64, 3, 3, (1, 1), (1, 1));
+        let b = ConvParams::new(32, 96, 28, 28, 65, 3, 3, (1, 1), (1, 1));
+        assert!(efficiency_modulation(&b) < efficiency_modulation(&a));
+    }
+}

@@ -1,0 +1,90 @@
+//! CUDNN_CONVOLUTION_FWD_ALGO_IMPLICIT_GEMM: on-the-fly patch gather, no
+//! lowering workspace beyond fixed bookkeeping (Table 2: 48 KB, 59 ms).
+
+use super::calibration::{efficiency as eff, workspace as ws};
+use super::gemm_common;
+use super::{AlgoModel, Algorithm, ConvParams, IssueProfile, LaunchConfig};
+
+pub struct ImplicitGemm;
+
+impl AlgoModel for ImplicitGemm {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::ImplicitGemm
+    }
+
+    fn supported(&self, _p: &ConvParams) -> bool {
+        true
+    }
+
+    fn launch(&self, p: &ConvParams) -> LaunchConfig {
+        gemm_common::launch(p)
+    }
+
+    fn workspace_bytes(&self, _p: &ConvParams) -> u64 {
+        ws::IMPLICIT_GEMM_BYTES
+    }
+
+    fn flops(&self, p: &ConvParams) -> f64 {
+        p.naive_flops()
+    }
+
+    fn dram_bytes(&self, p: &ConvParams) -> f64 {
+        // The implicit gather re-touches input lines; with the tile-local
+        // reuse of the sgemm variants most re-reads hit cache. Charge a
+        // 1.5x input factor plus one filter broadcast per M-tile wave.
+        let v = gemm_common::select_variant(p);
+        let (m, _, _) = p.gemm_dims();
+        let m_tiles = m.div_ceil(v.tile_m) as f64;
+        p.input_bytes() as f64 * 1.5
+            + p.filter_bytes() as f64 * m_tiles.min(4.0)
+            + p.output_bytes() as f64
+    }
+
+    fn issue_profile(&self, p: &ConvParams) -> IssueProfile {
+        IssueProfile {
+            alu_util: gemm_common::alu_util(p),
+            mem_stall_frac: gemm_common::mem_stall(p),
+        }
+    }
+
+    fn time_efficiency(&self, p: &ConvParams) -> f64 {
+        gemm_common::efficiency(p, eff::IMPLICIT_GEMM)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_is_48kb() {
+        assert_eq!(
+            ImplicitGemm.workspace_bytes(&ConvParams::table2_5x5()),
+            48 * 1024
+        );
+    }
+
+    #[test]
+    fn table2_runtime_near_59ms() {
+        let p = ConvParams::table2_5x5();
+        let a = ImplicitGemm;
+        let t_ms = a.flops(&p) / (4.29e12 * a.time_efficiency(&p)) * 1e3;
+        assert!((t_ms - 59.0).abs() < 6.0, "IMPLICIT_GEMM t = {t_ms} ms");
+    }
+
+    #[test]
+    fn table1_launch_configs() {
+        // 3x3: 256-thread register-bound variant.
+        let l3 = ImplicitGemm.launch(&ConvParams::incep3a_3x3(32));
+        assert_eq!(
+            (l3.threads_per_block, l3.regs_per_thread, l3.smem_per_block),
+            (256, 78, 6144)
+        );
+        // 5x5: 64-thread full-block-slot variant.
+        let l5 = ImplicitGemm.launch(&ConvParams::incep3a_5x5(32));
+        assert_eq!(
+            (l5.threads_per_block, l5.regs_per_thread, l5.smem_per_block),
+            (64, 64, 2150)
+        );
+    }
+}

@@ -1,0 +1,221 @@
+//! cuDNN-like convolution algorithm library: for each of the seven forward
+//! algorithms the paper studies, an analytic model of
+//!
+//! - **launch configuration** (threads/block, registers/thread, shared
+//!   memory/block, grid size) — the SM *static resource* footprint that
+//!   gates concurrent execution (paper §2.1 "SM resources", Table 1),
+//! - **workspace memory** (paper §2.1 "Device Memory", Table 2),
+//! - **work volume** (FLOPs, DRAM traffic) and **issue profile** (ALU
+//!   utilization, memory-stall fraction) driving the simulator's timing,
+//!
+//! calibrated against the paper's Tesla K40 / cuDNN 7.6 measurements (see
+//! [`calibration`]). The *numerics* of each algorithm family live in the
+//! Python/Pallas layer (`python/compile/kernels/`) and are validated there;
+//! this module is the resource/cost side that the Rust coordinator and the
+//! GPU simulator consume.
+
+pub mod backward;
+mod algo;
+pub mod calibration;
+pub(crate) mod gemm_common;
+mod params;
+
+pub mod direct;
+pub mod fft;
+pub mod fft_tiling;
+pub mod gemm;
+pub mod implicit_gemm;
+pub mod precomp_gemm;
+pub mod winograd;
+
+pub use algo::{Algorithm, IssueProfile, KernelDesc, LaunchConfig, ALL_ALGORITHMS};
+pub use params::ConvParams;
+
+use crate::gpusim::DeviceSpec;
+
+/// The per-algorithm analytic model. One implementation per cuDNN
+/// algorithm, mirroring `cudnnConvolutionFwdAlgo_t`.
+pub trait AlgoModel: Send + Sync {
+    fn algorithm(&self) -> Algorithm;
+
+    /// cuDNN support matrix: `false` ⇒ CUDNN_STATUS_NOT_SUPPORTED for this
+    /// configuration (e.g. Winograd for 5x5, FFT for stride 2 — see the
+    /// paper's Table 2 caption).
+    fn supported(&self, p: &ConvParams) -> bool;
+
+    /// Kernel launch configuration (the static-resource footprint).
+    fn launch(&self, p: &ConvParams) -> LaunchConfig;
+
+    /// Device-memory workspace the algorithm allocates at launch time.
+    fn workspace_bytes(&self, p: &ConvParams) -> u64;
+
+    /// Useful floating-point work (algorithmic, not hardware-issued).
+    fn flops(&self, p: &ConvParams) -> f64;
+
+    /// DRAM traffic: tensor reads/writes plus workspace passes.
+    fn dram_bytes(&self, p: &ConvParams) -> f64;
+
+    /// Warp-issue characteristics when running alone at natural occupancy.
+    fn issue_profile(&self, p: &ConvParams) -> IssueProfile;
+
+    /// Fraction of device peak FLOP/s the kernel sustains when running
+    /// alone (time efficiency — distinct from ALU utilization, which also
+    /// counts address arithmetic etc.).
+    fn time_efficiency(&self, p: &ConvParams) -> f64;
+}
+
+/// Registry of all algorithm models, in cuDNN enum order.
+pub fn registry() -> Vec<Box<dyn AlgoModel>> {
+    vec![
+        Box::new(gemm::Gemm),
+        Box::new(implicit_gemm::ImplicitGemm),
+        Box::new(precomp_gemm::PrecompGemm),
+        Box::new(direct::Direct),
+        Box::new(winograd::WinogradNonfused),
+        Box::new(fft::Fft),
+        Box::new(fft_tiling::FftTiling),
+    ]
+}
+
+/// Look up the model for one algorithm.
+pub fn model_for(algo: Algorithm) -> Box<dyn AlgoModel> {
+    match algo {
+        Algorithm::Gemm => Box::new(gemm::Gemm),
+        Algorithm::ImplicitGemm => Box::new(implicit_gemm::ImplicitGemm),
+        Algorithm::ImplicitPrecompGemm => Box::new(precomp_gemm::PrecompGemm),
+        Algorithm::Direct => Box::new(direct::Direct),
+        Algorithm::WinogradNonfused => Box::new(winograd::WinogradNonfused),
+        Algorithm::Fft => Box::new(fft::Fft),
+        Algorithm::FftTiling => Box::new(fft_tiling::FftTiling),
+    }
+}
+
+/// Build the full kernel descriptor for (algorithm, conv) on a device, or
+/// `None` if the algorithm does not support the configuration.
+pub fn kernel_desc(
+    algo: Algorithm,
+    p: &ConvParams,
+    dev: &DeviceSpec,
+) -> Option<KernelDesc> {
+    let m = model_for(algo);
+    if !m.supported(p) {
+        return None;
+    }
+    let launch = m.launch(p);
+    let profile = m.issue_profile(p);
+    Some(KernelDesc {
+        name: format!("{}[{}]", algo.kernel_name(), p.short()),
+        algo,
+        params: p.clone(),
+        launch,
+        flops: m.flops(p),
+        dram_bytes: m.dram_bytes(p),
+        workspace_bytes: m.workspace_bytes(p),
+        alu_util: profile.alu_util,
+        mem_stall_frac: profile.mem_stall_frac,
+        time_efficiency: m.time_efficiency(p),
+        _device: dev.name.clone(),
+    })
+}
+
+/// All supported `(algorithm, descriptor)` pairs for a convolution.
+pub fn supported_descs(p: &ConvParams, dev: &DeviceSpec) -> Vec<KernelDesc> {
+    ALL_ALGORITHMS
+        .iter()
+        .filter_map(|&a| kernel_desc(a, p, dev))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::DeviceSpec;
+
+    fn incep3a_3x3() -> ConvParams {
+        ConvParams::new(32, 96, 28, 28, 128, 3, 3, (1, 1), (1, 1))
+    }
+
+    #[test]
+    fn registry_covers_all_algorithms() {
+        let algos: Vec<Algorithm> =
+            registry().iter().map(|m| m.algorithm()).collect();
+        assert_eq!(algos.len(), ALL_ALGORITHMS.len());
+        for a in ALL_ALGORITHMS {
+            assert!(algos.contains(a), "{a:?} missing from registry");
+        }
+    }
+
+    #[test]
+    fn gemm_family_always_supported() {
+        let p = incep3a_3x3();
+        for a in [
+            Algorithm::Gemm,
+            Algorithm::ImplicitGemm,
+            Algorithm::ImplicitPrecompGemm,
+        ] {
+            assert!(model_for(a).supported(&p), "{a:?}");
+        }
+    }
+
+    #[test]
+    fn winograd_support_envelope() {
+        // Table 2 lists WINOGRAD_NONFUSED for the 5x5 conv; 7x7 and strided
+        // filters are NOT_SUPPORTED.
+        let p5 = ConvParams::new(32, 16, 28, 28, 32, 5, 5, (1, 1), (2, 2));
+        assert!(model_for(Algorithm::WinogradNonfused).supported(&p5));
+        let p7 = ConvParams::new(32, 3, 224, 224, 64, 7, 7, (2, 2), (3, 3));
+        assert!(!model_for(Algorithm::WinogradNonfused).supported(&p7));
+        let ps = ConvParams::new(32, 16, 28, 28, 32, 3, 3, (2, 2), (1, 1));
+        assert!(!model_for(Algorithm::WinogradNonfused).supported(&ps));
+    }
+
+    #[test]
+    fn fft_rejects_stride2() {
+        let ps = ConvParams::new(32, 16, 28, 28, 32, 3, 3, (2, 2), (1, 1));
+        assert!(!model_for(Algorithm::Fft).supported(&ps));
+        assert!(!model_for(Algorithm::FftTiling).supported(&ps));
+    }
+
+    #[test]
+    fn kernel_desc_none_for_unsupported() {
+        let dev = DeviceSpec::k40();
+        let p7 = ConvParams::new(32, 3, 224, 224, 64, 7, 7, (2, 2), (3, 3));
+        assert!(kernel_desc(Algorithm::WinogradNonfused, &p7, &dev).is_none());
+        assert!(kernel_desc(Algorithm::Fft, &p7, &dev).is_none());
+        assert!(kernel_desc(Algorithm::Gemm, &p7, &dev).is_some());
+    }
+
+    #[test]
+    fn descs_have_positive_work() {
+        let dev = DeviceSpec::k40();
+        for d in supported_descs(&incep3a_3x3(), &dev) {
+            assert!(d.flops > 0.0, "{}", d.name);
+            assert!(d.dram_bytes > 0.0, "{}", d.name);
+            assert!(d.launch.grid_blocks > 0, "{}", d.name);
+            assert!(d.launch.threads_per_block > 0, "{}", d.name);
+            assert!(d.alu_util > 0.0 && d.alu_util <= 1.0, "{}", d.name);
+            assert!(
+                d.mem_stall_frac >= 0.0 && d.mem_stall_frac < 1.0,
+                "{}",
+                d.name
+            );
+            assert!(
+                d.time_efficiency > 0.0 && d.time_efficiency <= 1.0,
+                "{}",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn flops_reduction_ordering() {
+        // Winograd does asymptotically less arithmetic than direct/GEMM for
+        // 3x3; GEMM-family all do the naive count.
+        let p = incep3a_3x3();
+        let direct = model_for(Algorithm::Direct).flops(&p);
+        let gemm = model_for(Algorithm::Gemm).flops(&p);
+        let wino = model_for(Algorithm::WinogradNonfused).flops(&p);
+        assert_eq!(direct, gemm);
+        assert!(wino < direct);
+    }
+}

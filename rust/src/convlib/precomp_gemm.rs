@@ -1,0 +1,103 @@
+//! CUDNN_CONVOLUTION_FWD_ALGO_IMPLICIT_PRECOMP_GEMM ("PRECOMP_GEMM" in the
+//! paper's tables): implicit GEMM with precomputed index/staging buffers.
+//!
+//! The per-CTA staging is what makes this algorithm's workspace explode on
+//! big convolutions (Table 2: 4.8 GB, 126 ms — the *slowest* option there,
+//! even though TensorFlow's autotuner happily selects it elsewhere,
+//! cf. Table 1).
+
+use super::calibration::{efficiency as eff, workspace as ws};
+use super::gemm_common;
+use super::{AlgoModel, Algorithm, ConvParams, IssueProfile, LaunchConfig};
+
+pub struct PrecompGemm;
+
+impl AlgoModel for PrecompGemm {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::ImplicitPrecompGemm
+    }
+
+    fn supported(&self, _p: &ConvParams) -> bool {
+        true
+    }
+
+    fn launch(&self, p: &ConvParams) -> LaunchConfig {
+        // Same sgemm kernel bodies as IMPLICIT_GEMM (the paper's Table 1
+        // lists `implicit_convolve_sgemm` for PRECOMP_GEMM).
+        gemm_common::launch(p)
+    }
+
+    fn workspace_bytes(&self, p: &ConvParams) -> u64 {
+        // Per-CTA staging panels, double-buffered: each block stages its
+        // (tile_m + tile_n) x K_gemm operand panels in device memory.
+        let v = gemm_common::select_variant(p);
+        let l = gemm_common::launch(p);
+        let (_, _, kd) = p.gemm_dims();
+        let per_block = (v.tile_m + v.tile_n) as u64 * kd as u64 * 4;
+        (l.grid_blocks as f64 * per_block as f64 * ws::PRECOMP_STAGING_FACTOR)
+            as u64
+    }
+
+    fn flops(&self, p: &ConvParams) -> f64 {
+        p.naive_flops()
+    }
+
+    fn dram_bytes(&self, p: &ConvParams) -> f64 {
+        // Staging write + read dominates.
+        p.input_bytes() as f64
+            + p.filter_bytes() as f64
+            + p.output_bytes() as f64
+            + self.workspace_bytes(p) as f64
+    }
+
+    fn issue_profile(&self, p: &ConvParams) -> IssueProfile {
+        IssueProfile {
+            alu_util: gemm_common::alu_util(p),
+            mem_stall_frac: gemm_common::mem_stall(p),
+        }
+    }
+
+    fn time_efficiency(&self, p: &ConvParams) -> f64 {
+        gemm_common::efficiency(p, eff::PRECOMP_GEMM)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_workspace_near_4_8gb() {
+        let b = PrecompGemm.workspace_bytes(&ConvParams::table2_5x5());
+        let gb = b as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!((gb - 4.8).abs() < 0.5, "PRECOMP ws = {gb} GB");
+    }
+
+    #[test]
+    fn table2_runtime_near_126ms() {
+        let p = ConvParams::table2_5x5();
+        let a = PrecompGemm;
+        let t_ms = a.flops(&p) / (4.29e12 * a.time_efficiency(&p)) * 1e3;
+        assert!((t_ms - 126.0).abs() < 13.0, "PRECOMP t = {t_ms} ms");
+    }
+
+    #[test]
+    fn table1_issue_profiles() {
+        // 3x3: ALU 70%, stalls 0.47%; 5x5: ALU 60%, stalls 0.03%.
+        let p3 = ConvParams::incep3a_3x3(32);
+        let p5 = ConvParams::incep3a_5x5(32);
+        let i3 = PrecompGemm.issue_profile(&p3);
+        let i5 = PrecompGemm.issue_profile(&p5);
+        assert!((i3.alu_util - 0.70).abs() < 0.02, "{i3:?}");
+        assert!((i3.mem_stall_frac - 0.0047).abs() < 0.001, "{i3:?}");
+        assert!((i5.alu_util - 0.60).abs() < 0.02, "{i5:?}");
+        assert!((i5.mem_stall_frac - 0.0003).abs() < 0.0002, "{i5:?}");
+    }
+
+    #[test]
+    fn workspace_grows_with_batch() {
+        let small = PrecompGemm.workspace_bytes(&ConvParams::incep3a_3x3(8));
+        let big = PrecompGemm.workspace_bytes(&ConvParams::incep3a_3x3(64));
+        assert!(big > 4 * small);
+    }
+}

@@ -1,0 +1,133 @@
+//! CUDNN_CONVOLUTION_FWD_ALGO_WINOGRAD_NONFUSED: transform-stage Winograd.
+//!
+//! Table 2 pin: 691 MB workspace, 46 ms — only 21% slower than FFT at 31%
+//! of its memory, the paper's example of the runtime/workspace trade that
+//! fastest-only autotuning ignores.
+
+use super::calibration::{clamp, efficiency as eff, workspace as ws};
+use super::{AlgoModel, Algorithm, ConvParams, IssueProfile, LaunchConfig};
+
+/// Arithmetic reduction of the Winograd transform vs naive MACs:
+/// multiply count per output tile / (2 * r * s * outputs-per-tile).
+fn reduction(p: &ConvParams) -> f64 {
+    match (p.r, p.s) {
+        (3, 3) => 16.0 / 18.0, // F(2x2,3x3): 16 mults for 4 outputs vs 36 MACs
+        (5, 5) => 36.0 / 50.0, // F(2x2,5x5)-style 6x6 transforms
+        _ => 1.0,
+    }
+}
+
+/// Number of transform positions (frequency-domain points) staged by the
+/// nonfused pipeline.
+fn positions(p: &ConvParams) -> usize {
+    match (p.r, p.s) {
+        (3, 3) => 16,
+        _ => ws::WINOGRAD_POSITIONS,
+    }
+}
+
+pub struct WinogradNonfused;
+
+impl AlgoModel for WinogradNonfused {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::WinogradNonfused
+    }
+
+    fn supported(&self, p: &ConvParams) -> bool {
+        // cuDNN: square 3x3/5x5 filters, unit stride.
+        matches!((p.r, p.s), (3, 3) | (5, 5)) && p.stride == (1, 1)
+    }
+
+    fn launch(&self, p: &ConvParams) -> LaunchConfig {
+        // The batched-GEMM stage dominates; transform kernels are
+        // bandwidth-bound prologue/epilogue.
+        let (ho, wo) = p.out_dims();
+        let tiles = p.n * ho.div_ceil(2) * wo.div_ceil(2);
+        LaunchConfig {
+            grid_blocks: (positions(p) * p.k.div_ceil(32) * tiles.div_ceil(64))
+                .max(1) as u64,
+            threads_per_block: 256,
+            regs_per_thread: 96,
+            smem_per_block: 16384,
+        }
+    }
+
+    fn workspace_bytes(&self, p: &ConvParams) -> u64 {
+        // Nonfused staging: U (input transform), V (filter transform),
+        // M (products), times the staging factor.
+        let (ho, wo) = p.out_dims();
+        let tiles = p.n * ho.div_ceil(2) * wo.div_ceil(2);
+        let pos = positions(p) as u64;
+        let floats = pos
+            * (p.c as u64 * tiles as u64
+                + p.k as u64 * p.c as u64
+                + p.k as u64 * tiles as u64);
+        (floats as f64 * 4.0 * ws::WINOGRAD_STAGING_FACTOR) as u64
+    }
+
+    fn flops(&self, p: &ConvParams) -> f64 {
+        p.naive_flops() * reduction(p)
+    }
+
+    fn dram_bytes(&self, p: &ConvParams) -> f64 {
+        // Transform stages write then read the staged tensors.
+        p.input_bytes() as f64
+            + p.filter_bytes() as f64
+            + p.output_bytes() as f64
+            + 2.0 * self.workspace_bytes(p) as f64
+    }
+
+    fn issue_profile(&self, p: &ConvParams) -> IssueProfile {
+        // Batched GEMMs with small K (= C): decent ALU use, moderate
+        // stalls from the transform stages.
+        let depth = clamp((p.c as f64 / 128.0).powf(0.2), 0.6, 1.1);
+        IssueProfile {
+            alu_util: clamp(0.55 * depth, 0.2, 0.7),
+            mem_stall_frac: clamp(0.06 / depth, 0.02, 0.15),
+        }
+    }
+
+    fn time_efficiency(&self, p: &ConvParams) -> f64 {
+        let depth = clamp((p.c as f64 / 480.0).powf(0.15), 0.5, 1.1);
+        clamp(eff::WINOGRAD * depth, 0.01, 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_workspace_near_691mb() {
+        let b = WinogradNonfused.workspace_bytes(&ConvParams::table2_5x5());
+        let mb = b as f64 / (1024.0 * 1024.0);
+        assert!((mb - 691.0).abs() < 70.0, "WINOGRAD ws = {mb} MB");
+    }
+
+    #[test]
+    fn table2_runtime_near_46ms() {
+        let p = ConvParams::table2_5x5();
+        let a = WinogradNonfused;
+        let t_ms = a.flops(&p) / (4.29e12 * a.time_efficiency(&p)) * 1e3;
+        assert!((t_ms - 46.0).abs() < 5.0, "WINOGRAD t = {t_ms} ms");
+    }
+
+    #[test]
+    fn reduction_below_one_for_supported_filters() {
+        assert!(reduction(&ConvParams::incep3a_3x3(32)) < 1.0);
+        assert!(reduction(&ConvParams::table2_5x5()) < 1.0);
+    }
+
+    #[test]
+    fn support_envelope() {
+        let a = WinogradNonfused;
+        assert!(a.supported(&ConvParams::incep3a_3x3(32)));
+        assert!(a.supported(&ConvParams::table2_5x5()));
+        assert!(!a.supported(&ConvParams::new(
+            1, 3, 224, 224, 64, 7, 7, (2, 2), (3, 3)
+        )));
+        assert!(!a.supported(&ConvParams::new(
+            1, 3, 32, 32, 8, 1, 1, (1, 1), (0, 0)
+        )));
+    }
+}

@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the paper's system contribution.
+//!
+//! - [`selector`] — convolution-algorithm selection policies, from
+//!   TensorFlow's fastest-only autotuning to the paper's proposed
+//!   profile-guided multi-metric selection.
+//! - [`scheduler`] — ready-queue DAG execution over the GPU simulator with
+//!   workspace-aware admission.
+//! - [`pairing`] — discovery of complementary convolution pairs (the
+//!   paper's "27 similar cases" analysis).
+
+pub mod pairing;
+pub mod scheduler;
+pub mod selector;
+
+pub use pairing::{discover_pairs, PairFinding};
+pub use scheduler::{
+    non_conv_time_us, Coordinator, OpExec, ScheduleConfig, ScheduleResult,
+};
+pub use selector::{
+    estimate_pair_makespan_us, select_pair, select_solo, SelectionPolicy,
+};

@@ -1,0 +1,155 @@
+//! Complementary-pair discovery: the paper's "we discover 27 similar cases
+//! in this network [GoogleNet] and more instances in other popular
+//! non-linear CNNs such as ResNet" (§2.1).
+//!
+//! For every pair of *independent* convolutions in a network DAG, search
+//! the algorithm-assignment space for one whose intra-SM co-execution is
+//! estimated to beat the best serial execution, subject to the combined
+//! workspace fitting the budget.
+
+use crate::convlib::{Algorithm, ConvParams};
+use crate::graph::{Dag, OpKind};
+use crate::gpusim::{isolated_time_us, DeviceSpec};
+
+use super::selector::{select_pair, select_solo, SelectionPolicy};
+
+/// One discovered co-execution opportunity.
+#[derive(Clone, Debug)]
+pub struct PairFinding {
+    pub op_a: usize,
+    pub op_b: usize,
+    pub name_a: String,
+    pub name_b: String,
+    pub algo_a: Algorithm,
+    pub algo_b: Algorithm,
+    /// Best-serial baseline (fastest algorithm for each, run back-to-back).
+    pub serial_us: f64,
+    /// Estimated co-run makespan with the discovered assignment.
+    pub paired_us: f64,
+    pub combined_workspace: u64,
+}
+
+impl PairFinding {
+    pub fn speedup(&self) -> f64 {
+        self.serial_us / self.paired_us
+    }
+}
+
+/// Scan a network for complementary convolution pairs.
+///
+/// `min_speedup` filters findings (the paper counts cases where
+/// parallelization "can improve resource utilization and reduce latency").
+pub fn discover_pairs(
+    dag: &Dag,
+    dev: &DeviceSpec,
+    ws_budget: u64,
+    min_speedup: f64,
+) -> Vec<PairFinding> {
+    let mut findings = Vec::new();
+    for (a, b) in dag.independent_conv_pairs() {
+        let (pa, pb) = match (&dag.ops[a].kind, &dag.ops[b].kind) {
+            (OpKind::Conv(pa), OpKind::Conv(pb)) => (pa, pb),
+            _ => continue,
+        };
+        let serial = best_serial_us(pa, pb, dev, ws_budget);
+        let Some((da, db, paired)) = select_pair(pa, pb, dev, ws_budget)
+        else {
+            continue;
+        };
+        if serial / paired >= min_speedup {
+            findings.push(PairFinding {
+                op_a: a,
+                op_b: b,
+                name_a: dag.ops[a].name.clone(),
+                name_b: dag.ops[b].name.clone(),
+                algo_a: da.algo,
+                algo_b: db.algo,
+                serial_us: serial,
+                paired_us: paired,
+                combined_workspace: da.workspace_bytes + db.workspace_bytes,
+            });
+        }
+    }
+    findings.sort_by(|x, y| y.speedup().partial_cmp(&x.speedup()).unwrap());
+    findings
+}
+
+fn best_serial_us(
+    pa: &ConvParams,
+    pb: &ConvParams,
+    dev: &DeviceSpec,
+    ws_budget: u64,
+) -> f64 {
+    let ta = select_solo(SelectionPolicy::FastestOnly, pa, dev, ws_budget)
+        .map(|d| isolated_time_us(&d, dev))
+        .unwrap_or(f64::INFINITY);
+    let tb = select_solo(SelectionPolicy::FastestOnly, pb, dev, ws_budget)
+        .map(|d| isolated_time_us(&d, dev))
+        .unwrap_or(f64::INFINITY);
+    ta + tb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Network;
+
+    const GB4: u64 = 4 * 1024 * 1024 * 1024;
+
+    #[test]
+    fn googlenet_has_at_least_27_cases() {
+        // The paper's §2.1 count: "We discover 27 similar cases in this
+        // network".
+        let dag = Network::GoogleNet.build(32);
+        let findings =
+            discover_pairs(&dag, &DeviceSpec::k40(), GB4, 1.05);
+        assert!(
+            findings.len() >= 27,
+            "only {} complementary pairs found",
+            findings.len()
+        );
+    }
+
+    #[test]
+    fn resnet_has_instances_too() {
+        // "... and more instances in other popular non-linear CNNs such as
+        // ResNet."
+        let dag = Network::ResNet50.build(32);
+        let findings =
+            discover_pairs(&dag, &DeviceSpec::k40(), GB4, 1.05);
+        assert!(!findings.is_empty());
+    }
+
+    #[test]
+    fn alexnet_has_none() {
+        let dag = Network::AlexNet.build(32);
+        let findings =
+            discover_pairs(&dag, &DeviceSpec::k40(), GB4, 1.0);
+        assert!(findings.is_empty());
+    }
+
+    #[test]
+    fn findings_sorted_and_beneficial() {
+        let dag = Network::GoogleNet.build(32);
+        let findings =
+            discover_pairs(&dag, &DeviceSpec::k40(), GB4, 1.05);
+        for w in findings.windows(2) {
+            assert!(w[0].speedup() >= w[1].speedup());
+        }
+        for f in &findings {
+            assert!(f.speedup() >= 1.05);
+            assert!(f.combined_workspace <= GB4);
+            assert!(dag.independent(f.op_a, f.op_b));
+        }
+    }
+
+    #[test]
+    fn budget_shrinks_findings() {
+        let dag = Network::GoogleNet.build(32);
+        let dev = DeviceSpec::k40();
+        let loose = discover_pairs(&dag, &dev, GB4, 1.05).len();
+        let tight =
+            discover_pairs(&dag, &dev, 8 * 1024 * 1024, 1.05).len();
+        assert!(tight <= loose);
+    }
+}

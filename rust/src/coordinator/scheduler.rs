@@ -1,0 +1,568 @@
+//! The DAG scheduler: ready-queue execution of a network over the GPU
+//! simulator, with policy-driven algorithm selection and workspace-aware
+//! admission.
+//!
+//! "Selecting independent operations from the ready queue for concurrent
+//! execution is a challenging scheduling problem that highly depends on the
+//! network topology and resource utilization of operations" (paper §3) —
+//! this module is that scheduler.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+
+use crate::convlib::{Algorithm, ConvParams, KernelDesc};
+use crate::graph::{Dag, OpKind};
+use crate::gpusim::{
+    isolated_time_us, DeviceSpec, Engine, PartitionMode, SimResult,
+};
+use crate::memory::DeviceMemory;
+
+use super::selector::{select_pair, select_solo, SelectionPolicy};
+
+/// Scheduler configuration.
+#[derive(Clone, Debug)]
+pub struct ScheduleConfig {
+    pub policy: SelectionPolicy,
+    pub partition: PartitionMode,
+    /// Max concurrent streams (concurrent ops per round).
+    pub streams: usize,
+    /// Workspace budget in bytes.
+    pub workspace_limit: u64,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        Self {
+            policy: SelectionPolicy::ProfileGuided,
+            partition: PartitionMode::IntraSm,
+            streams: 4,
+            workspace_limit: 4 * 1024 * 1024 * 1024,
+        }
+    }
+}
+
+/// Execution record of one op.
+#[derive(Clone, Debug)]
+pub struct OpExec {
+    pub op_id: usize,
+    pub name: String,
+    pub kind: &'static str,
+    pub algo: Option<Algorithm>,
+    pub start_us: f64,
+    pub end_us: f64,
+    pub workspace_bytes: u64,
+}
+
+/// Result of scheduling a whole DAG.
+#[derive(Clone, Debug)]
+pub struct ScheduleResult {
+    pub makespan_us: f64,
+    pub ops: Vec<OpExec>,
+    /// Peak concurrent workspace use.
+    pub peak_workspace: u64,
+    /// Times an algorithm had to be downgraded because workspace would not
+    /// fit next to concurrently running ops.
+    pub ws_fallbacks: u64,
+    /// Number of scheduling rounds (engine invocations).
+    pub rounds: u64,
+    /// Wall time spent with >= 2 convs in flight.
+    pub conv_overlap_us: f64,
+}
+
+/// The coordinator: owns the device spec and config, executes DAGs.
+pub struct Coordinator {
+    spec: DeviceSpec,
+    cfg: ScheduleConfig,
+    /// Optional (rate, seed) for workspace-allocation failure injection.
+    failure_injection: Option<(f64, u64)>,
+    /// Memoized unconstrained solo selections: repeated convolutions (the
+    /// same shape appears dozens of times per network) probe the
+    /// seven-algorithm space once. Perf opt, see EXPERIMENTS.md §Perf.
+    solo_cache:
+        RefCell<HashMap<(ConvParams, SelectionPolicy), KernelDesc>>,
+}
+
+impl Coordinator {
+    pub fn new(spec: DeviceSpec, cfg: ScheduleConfig) -> Self {
+        Self {
+            spec,
+            cfg,
+            failure_injection: None,
+            solo_cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Coordinator whose workspace allocator spuriously refuses a `rate`
+    /// fraction of allocations (robustness testing: the scheduler must
+    /// degrade to workspace-free algorithms, never fail an op).
+    pub fn with_failure_injection(
+        spec: DeviceSpec,
+        cfg: ScheduleConfig,
+        rate: f64,
+        seed: u64,
+    ) -> Self {
+        let mut c = Self::new(spec, cfg);
+        c.failure_injection = Some((rate, seed));
+        c
+    }
+
+    /// Memoized `select_solo` with an unlimited budget.
+    fn solo_unconstrained(
+        &self,
+        policy: SelectionPolicy,
+        p: &ConvParams,
+    ) -> KernelDesc {
+        if let Some(d) =
+            self.solo_cache.borrow().get(&(p.clone(), policy))
+        {
+            return d.clone();
+        }
+        let d = select_solo(policy, p, &self.spec, u64::MAX)
+            .expect("some algorithm always supported");
+        self.solo_cache
+            .borrow_mut()
+            .insert((p.clone(), policy), d.clone());
+        d
+    }
+
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    pub fn config(&self) -> &ScheduleConfig {
+        &self.cfg
+    }
+
+    /// Execute the DAG: returns the simulated timeline.
+    pub fn execute_dag(&self, dag: &Dag) -> ScheduleResult {
+        let mut indeg: Vec<usize> =
+            (0..dag.len()).map(|i| dag.preds(i).len()).collect();
+        let mut ready: VecDeque<usize> = (0..dag.len())
+            .filter(|&i| indeg[i] == 0)
+            .collect();
+        let mut mem = match self.failure_injection {
+            Some((rate, seed)) => DeviceMemory::with_failure_injection(
+                self.cfg.workspace_limit,
+                rate,
+                seed,
+            ),
+            None => DeviceMemory::new(self.cfg.workspace_limit),
+        };
+        let mut clock = 0.0f64;
+        let mut ops: Vec<OpExec> = Vec::with_capacity(dag.len());
+        let mut ws_fallbacks = 0u64;
+        let mut rounds = 0u64;
+        let mut conv_overlap_us = 0.0f64;
+        let mut done = vec![false; dag.len()];
+
+        while !ready.is_empty() {
+            // Partition the ready set into convs and cheap ops.
+            let round: Vec<usize> = ready.drain(..).collect();
+            let mut convs: Vec<usize> = Vec::new();
+            for &id in &round {
+                match &dag.ops[id].kind {
+                    OpKind::Conv(_) => convs.push(id),
+                    kind => {
+                        // bandwidth-bound ops run back-to-back (negligible
+                        // concurrency value; cuDNN launches them serially)
+                        let dur = non_conv_time_us(kind, &self.spec);
+                        ops.push(OpExec {
+                            op_id: id,
+                            name: dag.ops[id].name.clone(),
+                            kind: kind.kind_name(),
+                            algo: None,
+                            start_us: clock,
+                            end_us: clock + dur,
+                            workspace_bytes: 0,
+                        });
+                        clock += dur;
+                    }
+                }
+            }
+
+            // Conv batches of at most `streams` ops.
+            for batch in convs.chunks(self.cfg.streams.max(1)) {
+                rounds += 1;
+                let (descs, mode) =
+                    self.choose_algorithms(dag, batch, &mut mem, &mut ws_fallbacks);
+                let (sim, allocs) = self.run_batch(&descs, mode, &mut mem);
+                for ((id, desc), rec) in
+                    batch.iter().zip(&descs).zip(&sim.kernels)
+                {
+                    ops.push(OpExec {
+                        op_id: *id,
+                        name: dag.ops[*id].name.clone(),
+                        kind: "conv",
+                        algo: Some(desc.algo),
+                        start_us: clock + rec.start_us,
+                        end_us: clock + rec.end_us,
+                        workspace_bytes: desc.workspace_bytes,
+                    });
+                }
+                conv_overlap_us += sim.overlap_us();
+                clock += sim.makespan_us;
+                for a in allocs {
+                    mem.free(a).expect("workspace free");
+                }
+            }
+
+            // Mark round done, release successors.
+            for &id in &round {
+                done[id] = true;
+            }
+            for &id in &round {
+                for &s in dag.succs(id) {
+                    indeg[s] -= 1;
+                    if indeg[s] == 0 && !done[s] {
+                        ready.push_back(s);
+                    }
+                }
+            }
+        }
+
+        debug_assert!(done.iter().all(|&d| d), "unscheduled ops (cycle?)");
+        ScheduleResult {
+            makespan_us: clock,
+            ops,
+            peak_workspace: mem.peak(),
+            ws_fallbacks,
+            rounds,
+            conv_overlap_us,
+        }
+    }
+
+    /// Pick algorithms (and the partition mode to run them under) for a
+    /// batch of ready convolutions.
+    ///
+    /// `ProfileGuided` only commits to concurrent execution when its
+    /// analytic estimate beats the fastest-solo serial assignment — the
+    /// paper's "profile-based algorithm selection has to evaluate multiple
+    /// metrics for optimal parallelism" (§3). Otherwise it degrades to the
+    /// fastest-only serial plan, so guided scheduling can never regress.
+    fn choose_algorithms(
+        &self,
+        dag: &Dag,
+        batch: &[usize],
+        mem: &mut DeviceMemory,
+        ws_fallbacks: &mut u64,
+    ) -> (Vec<KernelDesc>, PartitionMode) {
+        let params: Vec<&ConvParams> = batch
+            .iter()
+            .map(|&id| match &dag.ops[id].kind {
+                OpKind::Conv(p) => p,
+                _ => unreachable!("batch contains non-conv"),
+            })
+            .collect();
+        let budget = mem.available();
+        if self.cfg.policy != SelectionPolicy::ProfileGuided
+            || params.len() < 2
+        {
+            return (
+                self.solo_batch(&params, budget, ws_fallbacks),
+                self.cfg.partition,
+            );
+        }
+        // ProfileGuided with >= 2 ready convs: try pairing the two
+        // heaviest; everything else gets fastest-solo.
+        let n = params.len();
+        let solo_time = |p: &ConvParams| {
+            let d = self.solo_unconstrained(SelectionPolicy::FastestOnly, p);
+            if d.workspace_bytes <= budget {
+                isolated_time_us(&d, &self.spec)
+            } else {
+                select_solo(
+                    SelectionPolicy::FastestOnly,
+                    p,
+                    &self.spec,
+                    budget,
+                )
+                .map(|d| isolated_time_us(&d, &self.spec))
+                .unwrap_or(0.0)
+            }
+        };
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&i, &j| {
+            solo_time(params[j]).partial_cmp(&solo_time(params[i])).unwrap()
+        });
+        let (hi, lo) = (order[0], order[1]);
+        let serial_baseline = solo_time(params[hi]) + solo_time(params[lo]);
+        if let Some((a, b, est)) =
+            select_pair(params[hi], params[lo], &self.spec, budget)
+        {
+            if est < serial_baseline * 0.98 {
+                let mut descs: Vec<Option<KernelDesc>> = vec![None; n];
+                descs[hi] = Some(a);
+                descs[lo] = Some(b);
+                let mut rem_budget = budget
+                    .saturating_sub(descs[hi].as_ref().unwrap().workspace_bytes)
+                    .saturating_sub(descs[lo].as_ref().unwrap().workspace_bytes);
+                for i in 0..n {
+                    if descs[i].is_none() {
+                        let d = select_solo(
+                            SelectionPolicy::FastestOnly,
+                            params[i],
+                            &self.spec,
+                            rem_budget,
+                        )
+                        .expect("GEMM fallback always fits");
+                        rem_budget =
+                            rem_budget.saturating_sub(d.workspace_bytes);
+                        descs[i] = Some(d);
+                    }
+                }
+                return (
+                    descs.into_iter().map(Option::unwrap).collect(),
+                    self.cfg.partition,
+                );
+            }
+        }
+        // pairing does not pay: fastest-solo, serial
+        (
+            self.solo_batch(&params, budget, ws_fallbacks),
+            PartitionMode::Serial,
+        )
+    }
+
+    fn solo_batch(
+        &self,
+        params: &[&ConvParams],
+        mut budget: u64,
+        ws_fallbacks: &mut u64,
+    ) -> Vec<KernelDesc> {
+        // Sequential admission: each op's workspace shrinks the budget the
+        // next sees (launch-time memory check, paper §2 footnote 1).
+        // ProfileGuided ops running solo take the fastest fitting algorithm
+        // (complementarity is meaningless without a partner).
+        let policy = match self.cfg.policy {
+            SelectionPolicy::ProfileGuided => SelectionPolicy::FastestOnly,
+            p => p,
+        };
+        let mut out = Vec::with_capacity(params.len());
+        for p in params {
+            let unconstrained = self.solo_unconstrained(policy, p);
+            let fitted = if unconstrained.workspace_bytes <= budget {
+                unconstrained.clone()
+            } else {
+                select_solo(policy, p, &self.spec, budget)
+                    .expect("GEMM fallback always fits")
+            };
+            if fitted.algo != unconstrained.algo {
+                *ws_fallbacks += 1;
+            }
+            budget = budget.saturating_sub(fitted.workspace_bytes);
+            out.push(fitted);
+        }
+        out
+    }
+
+    /// Simulate one batch; workspace is held for the batch duration.
+    fn run_batch(
+        &self,
+        descs: &[KernelDesc],
+        mode: PartitionMode,
+        mem: &mut DeviceMemory,
+    ) -> (SimResult, Vec<u64>) {
+        // Graceful degradation: if an admission-checked allocation still
+        // fails (failure injection / fragmentation), downgrade that op to
+        // its workspace-free fallback rather than failing the schedule —
+        // mirroring frameworks falling back when cudaMalloc refuses.
+        let mut final_descs: Vec<KernelDesc> = Vec::with_capacity(descs.len());
+        let mut allocs = Vec::with_capacity(descs.len());
+        for d in descs {
+            match mem.alloc(d.workspace_bytes) {
+                Ok(id) => {
+                    allocs.push(id);
+                    final_descs.push(d.clone());
+                }
+                Err(_) => {
+                    let fallback = crate::convlib::kernel_desc(
+                        Algorithm::Gemm,
+                        &d.params,
+                        &self.spec,
+                    )
+                    .expect("GEMM supports every convolution");
+                    debug_assert_eq!(fallback.workspace_bytes, 0);
+                    final_descs.push(fallback);
+                }
+            }
+        }
+        let descs = final_descs;
+        let mode = if descs.len() <= 1 {
+            PartitionMode::Serial
+        } else {
+            mode
+        };
+        let mut engine = Engine::new(self.spec.clone(), mode);
+        for (i, d) in descs.iter().enumerate() {
+            let stream = match mode {
+                PartitionMode::Serial => 0,
+                _ => i,
+            };
+            engine.launch(d.clone(), stream);
+        }
+        (engine.run(), allocs)
+    }
+}
+
+/// Duration model for non-convolution ops: bandwidth-bound.
+pub fn non_conv_time_us(kind: &OpKind, spec: &DeviceSpec) -> f64 {
+    match kind {
+        OpKind::Input => 0.0,
+        OpKind::FullyConnected { .. } => {
+            // small GEMM: compute at modest efficiency + overhead
+            kind.flops() / (spec.peak_flops * 0.3) * 1e6
+                + kind.dram_bytes() / spec.effective_bw() * 1e6
+                + spec.launch_overhead_us
+        }
+        _ => {
+            kind.dram_bytes() / spec.effective_bw() * 1e6
+                + spec.launch_overhead_us
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Network;
+
+    fn coord(
+        policy: SelectionPolicy,
+        partition: PartitionMode,
+        streams: usize,
+    ) -> Coordinator {
+        Coordinator::new(
+            DeviceSpec::k40(),
+            ScheduleConfig {
+                policy,
+                partition,
+                streams,
+                workspace_limit: 4 * 1024 * 1024 * 1024,
+            },
+        )
+    }
+
+    #[test]
+    fn executes_every_op_exactly_once() {
+        let dag = Network::GoogleNet.build(8);
+        let r = coord(
+            SelectionPolicy::ProfileGuided,
+            PartitionMode::IntraSm,
+            4,
+        )
+        .execute_dag(&dag);
+        assert_eq!(r.ops.len(), dag.len());
+        let mut ids: Vec<usize> = r.ops.iter().map(|o| o.op_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), dag.len());
+    }
+
+    #[test]
+    fn dependencies_respected() {
+        let dag = Network::GoogleNet.build(4);
+        let r = coord(
+            SelectionPolicy::ProfileGuided,
+            PartitionMode::IntraSm,
+            4,
+        )
+        .execute_dag(&dag);
+        let mut end: Vec<f64> = vec![0.0; dag.len()];
+        let mut start: Vec<f64> = vec![0.0; dag.len()];
+        for o in &r.ops {
+            end[o.op_id] = o.end_us;
+            start[o.op_id] = o.start_us;
+        }
+        for i in 0..dag.len() {
+            for &p in dag.preds(i) {
+                assert!(
+                    end[p] <= start[i] + 1e-6,
+                    "op {i} started before pred {p} finished"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_beats_serial_on_googlenet() {
+        // E6 headline: profile-guided + intra-SM < TF-style serial.
+        let dag = Network::GoogleNet.build(32);
+        let serial = coord(
+            SelectionPolicy::FastestOnly,
+            PartitionMode::Serial,
+            1,
+        )
+        .execute_dag(&dag);
+        let conc = coord(
+            SelectionPolicy::ProfileGuided,
+            PartitionMode::IntraSm,
+            2,
+        )
+        .execute_dag(&dag);
+        assert!(
+            conc.makespan_us < serial.makespan_us,
+            "concurrent {} >= serial {}",
+            conc.makespan_us,
+            serial.makespan_us
+        );
+        assert!(conc.conv_overlap_us > 0.0);
+    }
+
+    #[test]
+    fn alexnet_gains_nothing() {
+        // Linear network: no independent convs, so policies tie (modulo
+        // algorithm choices) and overlap is zero.
+        let dag = Network::AlexNet.build(32);
+        let conc = coord(
+            SelectionPolicy::FastestOnly,
+            PartitionMode::IntraSm,
+            4,
+        )
+        .execute_dag(&dag);
+        assert_eq!(conc.conv_overlap_us, 0.0);
+    }
+
+    #[test]
+    fn workspace_budget_forces_fallbacks() {
+        let dag = Network::GoogleNet.build(32);
+        let tight = Coordinator::new(
+            DeviceSpec::k40(),
+            ScheduleConfig {
+                policy: SelectionPolicy::FastestOnly,
+                partition: PartitionMode::Serial,
+                streams: 1,
+                workspace_limit: 16 * 1024 * 1024, // 16 MB
+            },
+        )
+        .execute_dag(&dag);
+        assert!(tight.ws_fallbacks > 0);
+        assert!(tight.peak_workspace <= 16 * 1024 * 1024);
+        // loose budget: no fallbacks
+        let loose = coord(
+            SelectionPolicy::FastestOnly,
+            PartitionMode::Serial,
+            1,
+        )
+        .execute_dag(&dag);
+        assert!(loose.makespan_us <= tight.makespan_us * 1.01);
+    }
+
+    #[test]
+    fn peak_workspace_tracks_concurrency() {
+        let dag = Network::GoogleNet.build(32);
+        let serial = coord(
+            SelectionPolicy::FastestOnly,
+            PartitionMode::Serial,
+            1,
+        )
+        .execute_dag(&dag);
+        let conc = coord(
+            SelectionPolicy::FastestOnly,
+            PartitionMode::StreamsOnly,
+            4,
+        )
+        .execute_dag(&dag);
+        // running 4 convs at once cannot use less peak workspace
+        assert!(conc.peak_workspace >= serial.peak_workspace);
+    }
+}

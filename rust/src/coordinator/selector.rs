@@ -1,0 +1,306 @@
+//! Convolution-algorithm selection policies.
+//!
+//! `FastestOnly` reproduces TensorFlow r1.10's autotuner (paper §2.1: "in
+//! the first iteration, TensorFlow tests all algorithms for each
+//! convolution and chooses the fastest one"). `ProfileGuided` is the
+//! paper's proposal: a multi-metric selection that considers SM resource
+//! complementarity and workspace, enabling concurrent execution.
+
+use crate::convlib::{kernel_desc, ConvParams, KernelDesc, ALL_ALGORITHMS};
+use crate::gpusim::partition::plan_intra_sm;
+use crate::gpusim::{isolated_time_us, natural_residency, DeviceSpec};
+
+/// Algorithm-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SelectionPolicy {
+    /// TensorFlow r1.10: fastest algorithm, ignoring resources/workspace.
+    FastestOnly,
+    /// Smallest workspace, ties broken by speed (memory-constrained mode).
+    MemoryMin,
+    /// Scalarized time-memory trade-off.
+    Balanced,
+    /// The paper's proposal: complementarity-aware selection for
+    /// concurrent execution (falls back to Balanced for solo ops).
+    ProfileGuided,
+}
+
+impl SelectionPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fastest" | "fastest_only" | "tensorflow" => Some(Self::FastestOnly),
+            "memory" | "memory_min" => Some(Self::MemoryMin),
+            "balanced" => Some(Self::Balanced),
+            "profile" | "profile_guided" => Some(Self::ProfileGuided),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::FastestOnly => "fastest_only",
+            Self::MemoryMin => "memory_min",
+            Self::Balanced => "balanced",
+            Self::ProfileGuided => "profile_guided",
+        }
+    }
+}
+
+/// All candidate descriptors whose workspace fits the budget.
+fn candidates(
+    p: &ConvParams,
+    dev: &DeviceSpec,
+    ws_budget: u64,
+) -> Vec<KernelDesc> {
+    ALL_ALGORITHMS
+        .iter()
+        .filter_map(|&a| kernel_desc(a, p, dev))
+        .filter(|d| d.workspace_bytes <= ws_budget)
+        .collect()
+}
+
+/// Select an algorithm for a convolution executing alone.
+///
+/// Returns `None` only if no algorithm fits the workspace budget (the
+/// coordinator then treats this as an OOM scheduling failure).
+pub fn select_solo(
+    policy: SelectionPolicy,
+    p: &ConvParams,
+    dev: &DeviceSpec,
+    ws_budget: u64,
+) -> Option<KernelDesc> {
+    let mut cands = candidates(p, dev, ws_budget);
+    if cands.is_empty() {
+        return None;
+    }
+    match policy {
+        SelectionPolicy::FastestOnly => {
+            cands.sort_by(|a, b| {
+                isolated_time_us(a, dev)
+                    .partial_cmp(&isolated_time_us(b, dev))
+                    .unwrap()
+            });
+        }
+        SelectionPolicy::MemoryMin => {
+            cands.sort_by(|a, b| {
+                a.workspace_bytes.cmp(&b.workspace_bytes).then(
+                    isolated_time_us(a, dev)
+                        .partial_cmp(&isolated_time_us(b, dev))
+                        .unwrap(),
+                )
+            });
+        }
+        SelectionPolicy::Balanced | SelectionPolicy::ProfileGuided => {
+            // time x (1 + ws/budget): a 2x-memory algorithm must be
+            // correspondingly faster to win.
+            cands.sort_by(|a, b| {
+                let score = |d: &KernelDesc| {
+                    isolated_time_us(d, dev)
+                        * (1.0
+                            + d.workspace_bytes as f64
+                                / ws_budget.max(1) as f64)
+                };
+                score(a).partial_cmp(&score(b)).unwrap()
+            });
+        }
+    }
+    cands.into_iter().next()
+}
+
+/// Analytic co-run estimate for a kernel pair under intra-SM quotas:
+/// two-phase fluid model (both run at planned rates; when the first
+/// finishes, the survivor continues at full rate).
+pub fn estimate_pair_makespan_us(
+    a: &KernelDesc,
+    b: &KernelDesc,
+    dev: &DeviceSpec,
+) -> f64 {
+    let t_a = isolated_time_us(a, dev);
+    let t_b = isolated_time_us(b, dev);
+    let plan = plan_intra_sm(
+        &[&a.launch, &b.launch],
+        &[a.alu_util, b.alu_util],
+        dev,
+    );
+    let rn_a = natural_residency(&a.launch, dev).max(1) as f64;
+    let rn_b = natural_residency(&b.launch, dev).max(1) as f64;
+    let f_a = plan[0] as f64 / rn_a;
+    let f_b = plan[1] as f64 / rn_b;
+    if f_a <= 0.0 || f_b <= 0.0 {
+        return t_a + t_b; // no co-residency: serial
+    }
+    let demand = a.alu_util * f_a + b.alu_util * f_b;
+    let phi = if demand > 1.0 { 1.0 / demand } else { 1.0 };
+    // progress rates relative to isolated execution
+    let v_a = phi * f_a;
+    let v_b = phi * f_b;
+    // phase 1: until the shorter (in stretched time) kernel completes
+    let end_a = t_a / v_a;
+    let end_b = t_b / v_b;
+    if end_a <= end_b {
+        // b has done end_a * v_b worth of its t_b
+        let b_left = t_b - end_a * v_b;
+        end_a + b_left
+    } else {
+        let a_left = t_a - end_b * v_a;
+        end_b + a_left
+    }
+}
+
+/// The paper's concurrent selection: pick algorithms for two independent
+/// convolutions that minimize the estimated co-run makespan, subject to
+/// combined workspace fitting the budget. Returns the pair of descriptors
+/// and the estimate.
+pub fn select_pair(
+    pa: &ConvParams,
+    pb: &ConvParams,
+    dev: &DeviceSpec,
+    ws_budget: u64,
+) -> Option<(KernelDesc, KernelDesc, f64)> {
+    let cas = candidates(pa, dev, ws_budget);
+    let cbs = candidates(pb, dev, ws_budget);
+    let mut best: Option<(KernelDesc, KernelDesc, f64)> = None;
+    for a in &cas {
+        for b in &cbs {
+            if a.workspace_bytes + b.workspace_bytes > ws_budget {
+                continue;
+            }
+            let est = estimate_pair_makespan_us(a, b, dev);
+            if best.as_ref().map_or(true, |(_, _, t)| est < *t) {
+                best = Some((a.clone(), b.clone(), est));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convlib::Algorithm;
+
+    fn k40() -> DeviceSpec {
+        DeviceSpec::k40()
+    }
+
+    const GB4: u64 = 4 * 1024 * 1024 * 1024;
+
+    #[test]
+    fn fastest_only_picks_fft_on_table2_conv() {
+        // Paper: TensorFlow selects FFT (36 ms) for the Table 2 conv.
+        let d = select_solo(
+            SelectionPolicy::FastestOnly,
+            &ConvParams::table2_5x5(),
+            &k40(),
+            u64::MAX,
+        )
+        .unwrap();
+        assert_eq!(d.algo, Algorithm::Fft);
+    }
+
+    #[test]
+    fn memory_min_picks_gemm_on_table2_conv() {
+        let d = select_solo(
+            SelectionPolicy::MemoryMin,
+            &ConvParams::table2_5x5(),
+            &k40(),
+            u64::MAX,
+        )
+        .unwrap();
+        assert_eq!(d.algo, Algorithm::Gemm); // 0 workspace
+    }
+
+    #[test]
+    fn fastest_respects_budget() {
+        // With a 1 GB budget the 2.2 GB FFT is inadmissible; the picked
+        // algorithm must fit and be fastest among the fitting set.
+        let budget = 1024 * 1024 * 1024;
+        let d = select_solo(
+            SelectionPolicy::FastestOnly,
+            &ConvParams::table2_5x5(),
+            &k40(),
+            budget,
+        )
+        .unwrap();
+        assert!(d.workspace_bytes <= budget);
+        assert_eq!(d.algo, Algorithm::WinogradNonfused); // 691 MB, 46 ms
+    }
+
+    #[test]
+    fn balanced_trades_time_for_memory() {
+        let p = ConvParams::table2_5x5();
+        let d = select_solo(SelectionPolicy::Balanced, &p, &k40(), GB4)
+            .unwrap();
+        // with memory in the objective, the 2.2GB FFT loses to a leaner
+        // algorithm
+        assert_ne!(d.algo, Algorithm::Fft);
+    }
+
+    #[test]
+    fn pair_selection_finds_complementary_algos() {
+        // The Table-1 scenario: the two independent inception-3a convs.
+        // Profile-guided pairing must find an assignment whose estimated
+        // makespan beats the best serial assignment.
+        let dev = k40();
+        let pa = ConvParams::incep3a_3x3(32);
+        let pb = ConvParams::incep3a_5x5(32);
+        let (da, db, paired) =
+            select_pair(&pa, &pb, &dev, GB4).unwrap();
+        let best_serial = {
+            let fa = select_solo(SelectionPolicy::FastestOnly, &pa, &dev, GB4)
+                .unwrap();
+            let fb = select_solo(SelectionPolicy::FastestOnly, &pb, &dev, GB4)
+                .unwrap();
+            isolated_time_us(&fa, &dev) + isolated_time_us(&fb, &dev)
+        };
+        assert!(
+            paired < best_serial,
+            "paired {paired} vs serial {best_serial} ({} + {})",
+            da.algo,
+            db.algo
+        );
+        assert_ne!((da.algo, db.algo), (Algorithm::ImplicitPrecompGemm,
+                                        Algorithm::ImplicitPrecompGemm),
+                   "pairing should avoid TF's both-PRECOMP choice");
+    }
+
+    #[test]
+    fn pair_estimate_bounds() {
+        // paired estimate never beats max(t_a, t_b) nor exceeds t_a + t_b
+        let dev = k40();
+        let p = ConvParams::incep3a_3x3(32);
+        let a = kernel_desc(Algorithm::ImplicitPrecompGemm, &p, &dev).unwrap();
+        let b = kernel_desc(Algorithm::FftTiling, &p, &dev).unwrap();
+        let est = estimate_pair_makespan_us(&a, &b, &dev);
+        let ta = isolated_time_us(&a, &dev);
+        let tb = isolated_time_us(&b, &dev);
+        assert!(est <= ta + tb + 1e-6);
+        assert!(est >= ta.max(tb) - 1e-6);
+    }
+
+    #[test]
+    fn impossible_budget_returns_none() {
+        // even GEMM (0 ws) fits any budget, so use budget 0 and an op where
+        // all algorithms need workspace... GEMM always fits: so None never
+        // happens for convs. Verify the always-Some contract instead.
+        let d = select_solo(
+            SelectionPolicy::FastestOnly,
+            &ConvParams::incep3a_3x3(32),
+            &k40(),
+            0,
+        );
+        assert!(d.is_some()); // GEMM/DIRECT are workspace-free fallbacks
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(
+            SelectionPolicy::parse("tensorflow"),
+            Some(SelectionPolicy::FastestOnly)
+        );
+        assert_eq!(
+            SelectionPolicy::parse("profile_guided"),
+            Some(SelectionPolicy::ProfileGuided)
+        );
+        assert_eq!(SelectionPolicy::parse("?"), None);
+    }
+}

@@ -1,0 +1,802 @@
+//! Event-driven GPU simulation engine.
+//!
+//! Kernels are launched on streams (FIFO per stream, like CUDA). Blocks are
+//! served SM-by-SM in *waves*: an SM holding `r` resident blocks of a
+//! kernel retires them together after the kernel's natural wave service
+//! time, stretched by two contention factors —
+//!
+//! - **issue contention** `phi`: resident kernels on one SM share its unit
+//!   issue capacity; a compute-heavy kernel (high ALU utilization) and a
+//!   memory-heavy one (low ALU, high stalls) sum below capacity and run at
+//!   full speed — the paper's intra-SM stall-hiding argument. Two
+//!   compute-heavy kernels oversubscribe and slow each other down.
+//! - **bandwidth contention** `mu`: total DRAM demand beyond the device's
+//!   effective bandwidth scales every kernel back proportionally.
+//!
+//! Concurrency policy is pluggable via [`PartitionMode`]: with cuDNN's
+//! natural launch configurations `StreamsOnly` degenerates to serial
+//! execution because no second kernel's blocks fit (paper §2.1);
+//! `InterSm`/`IntraSm` implement the paper's proposed partitioning.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+use crate::convlib::KernelDesc;
+
+use super::partition::{greedy_fill, plan_intra_sm, split_sms, PartitionMode};
+use super::sm::{max_additional_blocks, natural_residency, SmUsage};
+use super::timing::{full_rate_bw_demand, natural_wave_time_us};
+use super::DeviceSpec;
+
+/// Identifier of a launched kernel within one simulation.
+pub type KernelId = usize;
+
+/// A chunk of consecutive waves of one kernel on one SM: `r` blocks are
+/// resident at a time; the chunk covers `n_waves` back-to-back waves
+/// (`chunk_blocks` total). Chunking bounds the event count: rate changes
+/// reprice a chunk lazily via `frac_left`, so correctness does not depend
+/// on chunk size — only tail quantization does.
+#[derive(Clone, Debug)]
+struct Wave {
+    r: u32,
+    n_waves: u64,
+    frac_left: f64, // fraction of the *chunk* remaining
+    rate: f64,      // chunk-fractions per microsecond
+    last_update: f64,
+    gen: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct SmState {
+    usage: SmUsage,
+    // Keyed by a stable unique wave id; several waves of the same kernel
+    // may coexist on one SM (residency top-up after a co-resident kernel
+    // frees resources). BTreeMap: deterministic iteration (event order
+    // must not depend on hasher state).
+    waves: BTreeMap<u64, (KernelId, Wave)>,
+}
+
+#[derive(Clone, Debug)]
+struct KState {
+    desc: KernelDesc,
+    stream: usize,
+    r_nat: u32,
+    tau_nat_us: f64,
+    bw_full: f64, // bytes per us at full rate
+    blocks_left: u64,
+    active_waves: u32,
+    eligible_at: Option<f64>,
+    started: Option<f64>,
+    finished: Option<f64>,
+}
+
+/// One simulated kernel execution, reported in [`SimResult`].
+#[derive(Clone, Debug)]
+pub struct KernelRecord {
+    pub name: String,
+    pub stream: usize,
+    pub start_us: f64,
+    pub end_us: f64,
+    /// What the kernel would take alone on the device.
+    pub isolated_us: f64,
+}
+
+impl KernelRecord {
+    pub fn duration_us(&self) -> f64 {
+        self.end_us - self.start_us
+    }
+}
+
+/// Result of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub makespan_us: f64,
+    pub kernels: Vec<KernelRecord>,
+}
+
+impl SimResult {
+    /// Total wall time during which two or more kernels were in flight.
+    pub fn overlap_us(&self) -> f64 {
+        // sweep over span endpoints
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for k in &self.kernels {
+            events.push((k.start_us, 1));
+            events.push((k.end_us, -1));
+        }
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut depth = 0;
+        let mut last = 0.0;
+        let mut overlap = 0.0;
+        for (t, d) in events {
+            if depth >= 2 {
+                overlap += t - last;
+            }
+            depth += d;
+            last = t;
+        }
+        overlap
+    }
+
+    /// Sum of isolated times: the serial-execution baseline.
+    pub fn serial_us(&self) -> f64 {
+        self.kernels.iter().map(|k| k.isolated_us).sum()
+    }
+
+    /// Throughput gain over serial execution — the paper-faithful
+    /// concurrency metric (a pair that "overlaps" at negligible residency
+    /// still counts as serialized here).
+    pub fn speedup_vs_serial(&self) -> f64 {
+        if self.makespan_us <= 0.0 {
+            return 1.0;
+        }
+        self.serial_us() / self.makespan_us
+    }
+}
+
+#[derive(Debug, PartialEq)]
+struct Ev {
+    time: f64,
+    seq: u64,
+    sm: usize, // usize::MAX => dispatch poke
+    wid: u64,  // wave id (unused for pokes)
+    gen: u64,
+}
+
+impl Eq for Ev {}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The simulator.
+pub struct Engine {
+    spec: DeviceSpec,
+    mode: PartitionMode,
+    time: f64,
+    kernels: Vec<KState>,
+    sms: Vec<SmState>,
+    streams: Vec<VecDeque<KernelId>>,
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+    /// Globally unique wave-generation counter: stale completion events
+    /// must never collide with a later chunk on the same (SM, kernel).
+    gen_counter: u64,
+    /// ROCm-style CU masks per stream (the paper's concluding remark
+    /// points to AMD ROCm's explicit compute-unit masking as the available
+    /// mechanism for SM partitioning). Bit i set = SM i usable. Default:
+    /// all SMs.
+    stream_masks: Vec<u64>,
+}
+
+impl Engine {
+    pub fn new(spec: DeviceSpec, mode: PartitionMode) -> Self {
+        let sms = (0..spec.num_sms).map(|_| SmState::default()).collect();
+        Self {
+            spec,
+            mode,
+            time: 0.0,
+            kernels: Vec::new(),
+            sms,
+            streams: Vec::new(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            gen_counter: 0,
+            stream_masks: Vec::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// Restrict a stream to a set of SMs (ROCm `cu_mask` analog). Bit i of
+    /// `mask` set means SM i may host the stream's kernels. Applies to
+    /// waves started after the call.
+    pub fn set_stream_cu_mask(&mut self, stream: usize, mask: u64) {
+        while self.stream_masks.len() <= stream {
+            self.stream_masks.push(u64::MAX);
+        }
+        self.stream_masks[stream] = mask;
+    }
+
+    fn stream_mask(&self, stream: usize) -> u64 {
+        self.stream_masks.get(stream).copied().unwrap_or(u64::MAX)
+    }
+
+    /// Enqueue a kernel on a stream. Returns its id.
+    pub fn launch(&mut self, desc: KernelDesc, stream: usize) -> KernelId {
+        while self.streams.len() <= stream {
+            self.streams.push(VecDeque::new());
+        }
+        let r_nat = natural_residency(&desc.launch, &self.spec);
+        assert!(
+            r_nat >= 1,
+            "kernel {} cannot fit a single block on an empty SM",
+            desc.name
+        );
+        let id = self.kernels.len();
+        self.kernels.push(KState {
+            r_nat,
+            tau_nat_us: natural_wave_time_us(&desc, &self.spec),
+            bw_full: full_rate_bw_demand(&desc, &self.spec),
+            blocks_left: desc.launch.grid_blocks,
+            active_waves: 0,
+            eligible_at: None,
+            started: None,
+            finished: None,
+            stream,
+            desc,
+        });
+        self.streams[stream].push_back(id);
+        id
+    }
+
+    /// Run until all launched kernels complete; returns the timeline.
+    pub fn run(&mut self) -> SimResult {
+        self.dispatch();
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            debug_assert!(ev.time >= self.time - 1e-9);
+            self.time = self.time.max(ev.time);
+            if ev.sm == usize::MAX {
+                // poke: launch-overhead elapsed
+                self.dispatch();
+                continue;
+            }
+            // wave completion — skip stale generations
+            let stale = match self.sms[ev.sm].waves.get(&ev.wid) {
+                Some((_, w)) => w.gen != ev.gen,
+                None => true,
+            };
+            if stale {
+                continue;
+            }
+            self.complete_wave(ev.sm, ev.wid);
+            self.dispatch();
+        }
+        let makespan = self.time;
+        let kernels = self
+            .kernels
+            .iter()
+            .map(|k| KernelRecord {
+                name: k.desc.name.clone(),
+                stream: k.stream,
+                start_us: k.started.unwrap_or(0.0),
+                end_us: k.finished.unwrap_or(makespan),
+                isolated_us: super::timing::isolated_time_us(
+                    &k.desc, &self.spec,
+                ),
+            })
+            .collect();
+        SimResult {
+            makespan_us: makespan,
+            kernels,
+        }
+    }
+
+    // ------------------------------------------------------------------
+
+    fn complete_wave(&mut self, sm: usize, wid: u64) {
+        let (kid, wave) =
+            self.sms[sm].waves.remove(&wid).expect("wave exists");
+        let usage = SmUsage::of(&self.kernels[kid].desc.launch, wave.r);
+        self.sms[sm].usage.sub(&usage);
+        let k = &mut self.kernels[kid];
+        k.active_waves -= 1;
+        if k.blocks_left == 0 && k.active_waves == 0 {
+            k.finished = Some(self.time);
+            // advance the stream queue
+            let s = k.stream;
+            if self.streams[s].front() == Some(&kid) {
+                self.streams[s].pop_front();
+            }
+        }
+    }
+
+    /// Kernels currently allowed to hold blocks, per the partition mode.
+    fn eligible(&self) -> Vec<KernelId> {
+        // stream heads that are unfinished
+        let heads: Vec<KernelId> = self
+            .streams
+            .iter()
+            .filter_map(|q| q.front().copied())
+            .filter(|&k| self.kernels[k].finished.is_none())
+            .collect();
+        match self.mode {
+            PartitionMode::Serial => {
+                // strict launch order, one at a time
+                heads.into_iter().min().into_iter().collect()
+            }
+            _ => {
+                let mut h = heads;
+                h.sort_unstable(); // launch order priority
+                h
+            }
+        }
+    }
+
+    fn dispatch(&mut self) {
+        let eligible = self.eligible();
+        // launch-overhead gating
+        let mut ready: Vec<KernelId> = Vec::new();
+        for &kid in &eligible {
+            let k = &mut self.kernels[kid];
+            let at = *k.eligible_at.get_or_insert(self.time);
+            let start_time = at + self.spec.launch_overhead_us;
+            if self.time + 1e-12 >= start_time {
+                ready.push(kid);
+            } else {
+                let seq = self.seq;
+                self.seq += 1;
+                self.heap.push(Reverse(Ev {
+                    time: start_time,
+                    seq,
+                    sm: usize::MAX,
+                    wid: kid as u64,
+                    gen: 0,
+                }));
+            }
+        }
+        self.start_waves(&ready);
+        self.recompute_rates();
+    }
+
+    /// Start new waves for ready kernels according to the partition plan.
+    fn start_waves(&mut self, ready: &[KernelId]) {
+        let with_blocks: Vec<KernelId> = ready
+            .iter()
+            .copied()
+            .filter(|&k| self.kernels[k].blocks_left > 0)
+            .collect();
+        if with_blocks.is_empty() {
+            return;
+        }
+        // Per-mode advisory residency plan.
+        let launches: Vec<&crate::convlib::LaunchConfig> = with_blocks
+            .iter()
+            .map(|&k| &self.kernels[k].desc.launch)
+            .collect();
+        let plan: Vec<u32> = match self.mode {
+            PartitionMode::Serial | PartitionMode::StreamsOnly => with_blocks
+                .iter()
+                .map(|&k| self.kernels[k].r_nat)
+                .collect(),
+            PartitionMode::InterSm => with_blocks
+                .iter()
+                .map(|&k| self.kernels[k].r_nat)
+                .collect(),
+            PartitionMode::IntraSm => {
+                let utils: Vec<f64> = with_blocks
+                    .iter()
+                    .map(|&k| self.kernels[k].desc.alu_util)
+                    .collect();
+                if with_blocks.len() <= 2 {
+                    plan_intra_sm(&launches, &utils, &self.spec)
+                } else {
+                    greedy_fill(&launches, &self.spec)
+                }
+            }
+        };
+        // Inter-SM ownership map (only used in InterSm mode).
+        let owner: Option<Vec<usize>> = if self.mode == PartitionMode::InterSm {
+            let remaining: Vec<u64> = with_blocks
+                .iter()
+                .map(|&k| {
+                    self.kernels[k].blocks_left
+                        + self.kernels[k].active_waves as u64
+                })
+                .collect();
+            Some(split_sms(self.spec.num_sms, &remaining))
+        } else {
+            None
+        };
+
+        for sm_idx in 0..self.sms.len() {
+            for (pos, &kid) in with_blocks.iter().enumerate() {
+                if let Some(own) = &owner {
+                    if own[sm_idx] != pos {
+                        continue;
+                    }
+                }
+                // ROCm-style CU mask: the stream may be pinned to a subset
+                // of SMs regardless of the partition mode.
+                let mask = self.stream_mask(self.kernels[kid].stream);
+                if sm_idx < 64 && mask & (1u64 << sm_idx) == 0 {
+                    continue;
+                }
+                if self.kernels[kid].blocks_left == 0 {
+                    continue;
+                }
+                // residency already held by in-flight waves of this kernel
+                let r_held: u32 = self.sms[sm_idx]
+                    .waves
+                    .values()
+                    .filter(|(k, _)| *k == kid)
+                    .map(|(_, w)| w.r)
+                    .sum();
+                if r_held >= plan[pos] {
+                    continue; // at (or above) planned residency
+                }
+                let launch = self.kernels[kid].desc.launch;
+                let fit = max_additional_blocks(
+                    &launch,
+                    &self.spec,
+                    &self.sms[sm_idx].usage,
+                );
+                let r = (plan[pos] - r_held)
+                    .min(fit)
+                    .min(self.kernels[kid].blocks_left.min(u32::MAX as u64)
+                        as u32);
+                if r == 0 {
+                    continue;
+                }
+                let k = &mut self.kernels[kid];
+                // Chunk several consecutive waves into one event: target
+                // ~4 chunks per SM over the kernel's remaining blocks so
+                // composition changes are still noticed promptly.
+                // Time-horizon chunking: size the chunk so its *duration*
+                // is ~1/4 of the kernel's remaining span at natural
+                // residency. A kernel quota'd below r_nat gets
+                // proportionally smaller chunks, so it can re-expand
+                // promptly when a co-resident kernel finishes (locking a
+                // low-residency slab for a long slab was a 2.7x regression
+                // on asymmetric pairs — see EXPERIMENTS.md §Perf).
+                let per_sm_share = ((k.blocks_left * r as u64)
+                    / (self.spec.num_sms as u64 * 4 * k.r_nat as u64).max(1))
+                .max(r as u64);
+                // round the chunk down to whole waves (a partial wave costs
+                // a full wave's latency — only the kernel tail pays that)
+                let whole = (per_sm_share / r as u64).max(1) * r as u64;
+                let chunk_blocks = whole.min(k.blocks_left);
+                let n_waves = chunk_blocks.div_ceil(r as u64);
+                k.blocks_left -= chunk_blocks;
+                k.active_waves += 1;
+                if k.started.is_none() {
+                    k.started = Some(self.time);
+                }
+                self.sms[sm_idx].usage.add(&SmUsage::of(&launch, r));
+                self.gen_counter += 1;
+                let wid = self.gen_counter;
+                self.sms[sm_idx].waves.insert(
+                    wid,
+                    (
+                        kid,
+                        Wave {
+                            r,
+                            n_waves,
+                            frac_left: 1.0,
+                            rate: 0.0, // set by recompute_rates
+                            last_update: self.time,
+                            gen: wid,
+                        },
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Recompute every active wave's rate (issue + bandwidth contention)
+    /// and reschedule completion events — but only for waves whose rate
+    /// actually changed (dirty-rate optimization: lazy `frac_left`
+    /// accounting stays exact as long as the rate is constant between
+    /// updates, so unchanged waves keep their scheduled events).
+    fn recompute_rates(&mut self) {
+        let now = self.time;
+        // Pass 1: per-SM issue factor (pure read).
+        let mut phi_per_sm = vec![1.0f64; self.sms.len()];
+        for (si, sm) in self.sms.iter().enumerate() {
+            let mut u_total = 0.0;
+            for (kid, wave) in sm.waves.values() {
+                let k = &self.kernels[*kid];
+                u_total +=
+                    k.desc.alu_util * (wave.r as f64 / k.r_nat as f64).min(1.0);
+            }
+            phi_per_sm[si] = if u_total > 1.0 { 1.0 / u_total } else { 1.0 };
+        }
+        // Pass 2: global bandwidth factor.
+        let mut demand = 0.0; // bytes per us
+        for (si, sm) in self.sms.iter().enumerate() {
+            for (kid, wave) in sm.waves.values() {
+                let k = &self.kernels[*kid];
+                demand += k.bw_full * phi_per_sm[si]
+                    * (wave.r as f64
+                        / (k.r_nat as f64 * self.spec.num_sms as f64));
+            }
+        }
+        let bw_limit = self.spec.effective_bw() / 1e6; // bytes per us
+        let mu = if demand > bw_limit { bw_limit / demand } else { 1.0 };
+        // Pass 3: reprice only dirty waves.
+        let mut pushes: Vec<Ev> = Vec::new();
+        let gen_counter = &mut self.gen_counter;
+        for (si, sm) in self.sms.iter_mut().enumerate() {
+            for (&wid, (kid, wave)) in sm.waves.iter_mut() {
+                let _ = wid;
+                let k = &self.kernels[*kid];
+                let new_rate =
+                    phi_per_sm[si] * mu / (k.tau_nat_us * wave.n_waves as f64);
+                // 0.1% repricing deadband: micro-changes in the global
+                // bandwidth factor otherwise reprice every wave on every
+                // event (O(waves^2) heap churn) for negligible accuracy.
+                let changed = wave.rate == 0.0
+                    || (new_rate - wave.rate).abs() > 1e-3 * wave.rate;
+                if !changed {
+                    continue;
+                }
+                // integrate progress at the old rate before switching
+                wave.frac_left -= (now - wave.last_update) * wave.rate;
+                wave.frac_left = wave.frac_left.max(0.0);
+                wave.last_update = now;
+                wave.rate = new_rate;
+                *gen_counter += 1;
+                wave.gen = *gen_counter;
+                let eta = if wave.rate > 0.0 {
+                    now + wave.frac_left / wave.rate
+                } else {
+                    f64::INFINITY
+                };
+                pushes.push(Ev {
+                    time: eta.max(now),
+                    seq: 0,
+                    sm: si,
+                    wid,
+                    gen: wave.gen,
+                });
+            }
+        }
+        for mut ev in pushes {
+            ev.seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Reverse(ev));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convlib::{kernel_desc, Algorithm, ConvParams};
+    use crate::gpusim::timing::isolated_time_us;
+
+    fn k40() -> DeviceSpec {
+        DeviceSpec::k40()
+    }
+
+    fn desc(algo: Algorithm, p: &ConvParams) -> KernelDesc {
+        kernel_desc(algo, p, &k40()).unwrap()
+    }
+
+    fn run_pair(
+        a: KernelDesc,
+        b: KernelDesc,
+        mode: PartitionMode,
+    ) -> SimResult {
+        let mut e = Engine::new(k40(), mode);
+        e.launch(a, 0);
+        e.launch(b, 1);
+        e.run()
+    }
+
+    #[test]
+    fn single_kernel_matches_isolated_time() {
+        let p = ConvParams::incep3a_3x3(32);
+        let d = desc(Algorithm::ImplicitPrecompGemm, &p);
+        let iso = isolated_time_us(&d, &k40());
+        let mut e = Engine::new(k40(), PartitionMode::StreamsOnly);
+        e.launch(d, 0);
+        let r = e.run();
+        assert!(
+            (r.makespan_us - iso).abs() / iso < 0.10,
+            "sim {} vs iso {}",
+            r.makespan_us,
+            iso
+        );
+    }
+
+    #[test]
+    fn cudnn_defaults_serialize_on_streams() {
+        // Paper §2.1: two convolutions on two streams with TF's algorithm
+        // picks (PRECOMP_GEMM for both) — execution is effectively
+        // sequential: whatever trickles into leftover resources yields a
+        // negligible throughput gain.
+        let p3 = ConvParams::incep3a_3x3(32);
+        let p5 = ConvParams::incep3a_5x5(32);
+        let r = run_pair(
+            desc(Algorithm::ImplicitPrecompGemm, &p3),
+            desc(Algorithm::ImplicitPrecompGemm, &p5),
+            PartitionMode::StreamsOnly,
+        );
+        let speedup = r.speedup_vs_serial();
+        // A trickle of the second kernel's blocks fits the 3x3 kernel's
+        // register leftovers, so a few percent slips through — still
+        // "effectively serialized" next to the 1.2-1.3x a real partitioning
+        // plan delivers (complementary_pair test below).
+        assert!(
+            speedup < 1.10,
+            "expected near-serial execution, speedup {speedup:.3}"
+        );
+    }
+
+    #[test]
+    fn complementary_pair_overlaps_under_intra_sm() {
+        // The paper's proposal: PRECOMP_GEMM (compute-bound) + FFT_TILING
+        // (memory-bound) on two comparable independent convolutions, with
+        // intra-SM quotas: co-run and beat serial execution.
+        let p3 = ConvParams::incep3a_3x3(32);
+        let a = desc(Algorithm::ImplicitPrecompGemm, &p3);
+        let b = desc(Algorithm::FftTiling, &p3);
+        let r = run_pair(a.clone(), b.clone(), PartitionMode::IntraSm);
+        let serial = run_pair(a, b, PartitionMode::Serial);
+        assert!(r.overlap_us() > 0.1 * r.makespan_us, "no overlap");
+        let speedup = serial.makespan_us / r.makespan_us;
+        assert!(
+            speedup > 1.10,
+            "intra {} vs serial {} (speedup {speedup:.3})",
+            r.makespan_us,
+            serial.makespan_us
+        );
+    }
+
+    #[test]
+    fn inter_sm_runs_concurrently() {
+        let p3 = ConvParams::incep3a_3x3(32);
+        let r = run_pair(
+            desc(Algorithm::ImplicitPrecompGemm, &p3),
+            desc(Algorithm::ImplicitPrecompGemm, &p3),
+            PartitionMode::InterSm,
+        );
+        assert!(r.overlap_us() > 0.5 * r.makespan_us, "no spatial overlap");
+    }
+
+    #[test]
+    fn serial_mode_is_sum_of_isolated() {
+        let p3 = ConvParams::incep3a_3x3(32);
+        let d = desc(Algorithm::ImplicitPrecompGemm, &p3);
+        let r = run_pair(d.clone(), d, PartitionMode::Serial);
+        let sum = r.serial_us();
+        assert!(
+            (r.makespan_us - sum).abs() / sum < 0.10,
+            "{} vs {}",
+            r.makespan_us,
+            sum
+        );
+        assert!(r.overlap_us() < 1e-6);
+    }
+
+    #[test]
+    fn stream_fifo_order_preserved() {
+        let p3 = ConvParams::incep3a_3x3(32);
+        let d = desc(Algorithm::ImplicitPrecompGemm, &p3);
+        let mut e = Engine::new(k40(), PartitionMode::StreamsOnly);
+        e.launch(d.clone(), 0);
+        e.launch(d.clone(), 0);
+        e.launch(d, 0);
+        let r = e.run();
+        // same-stream kernels must not overlap and must finish in order
+        for w in r.kernels.windows(2) {
+            assert!(w[0].end_us <= w[1].start_us + 1e-6);
+        }
+    }
+
+    #[test]
+    fn makespan_ordering_across_modes() {
+        // serial >= streams >= max(isolated): concurrency never hurts in
+        // the fluid model, and nothing beats a single kernel's floor.
+        let p3 = ConvParams::incep3a_3x3(32);
+        let p5 = ConvParams::incep3a_5x5(32);
+        let a = desc(Algorithm::ImplicitPrecompGemm, &p3);
+        let b = desc(Algorithm::FftTiling, &p5);
+        let serial =
+            run_pair(a.clone(), b.clone(), PartitionMode::Serial).makespan_us;
+        let streams = run_pair(a.clone(), b.clone(), PartitionMode::StreamsOnly)
+            .makespan_us;
+        let intra =
+            run_pair(a.clone(), b.clone(), PartitionMode::IntraSm).makespan_us;
+        let floor = isolated_time_us(&a, &k40())
+            .max(isolated_time_us(&b, &k40()));
+        assert!(serial + 1e-6 >= streams, "{serial} < {streams}");
+        assert!(intra + 1e-6 >= floor * 0.9, "{intra} < floor {floor}");
+        // intra-SM may pay a small quota overhead when the partner is tiny
+        // (kernel A capped below natural residency buys little overlap);
+        // it must never be more than a couple percent worse than serial.
+        assert!(intra <= serial * 1.02 + 1e-6, "{intra} > {serial}");
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let p3 = ConvParams::incep3a_3x3(32);
+        let a = desc(Algorithm::ImplicitPrecompGemm, &p3);
+        let b = desc(Algorithm::FftTiling, &p3);
+        let r1 = run_pair(a.clone(), b.clone(), PartitionMode::IntraSm);
+        let r2 = run_pair(a, b, PartitionMode::IntraSm);
+        assert_eq!(r1.makespan_us, r2.makespan_us);
+    }
+
+    #[test]
+    fn resource_safety_never_violated() {
+        // After any simulation, all SMs end empty (usage fully released).
+        let p3 = ConvParams::incep3a_3x3(32);
+        let p5 = ConvParams::incep3a_5x5(32);
+        let mut e = Engine::new(k40(), PartitionMode::IntraSm);
+        for i in 0..6 {
+            let algo = if i % 2 == 0 {
+                Algorithm::ImplicitPrecompGemm
+            } else {
+                Algorithm::FftTiling
+            };
+            let p = if i % 3 == 0 { &p3 } else { &p5 };
+            let d = kernel_desc(algo, p, &k40()).unwrap();
+            e.launch(d, i % 3);
+        }
+        e.run();
+        for sm in &e.sms {
+            assert_eq!(sm.usage, SmUsage::default());
+            assert!(sm.waves.is_empty());
+        }
+    }
+}
+
+#[cfg(test)]
+mod cu_mask_tests {
+    use super::*;
+    use crate::convlib::{kernel_desc, Algorithm, ConvParams};
+
+    #[test]
+    fn cu_mask_restricts_placement_and_slows_kernel() {
+        let spec = DeviceSpec::k40();
+        let p = ConvParams::incep3a_3x3(32);
+        let d = kernel_desc(Algorithm::ImplicitPrecompGemm, &p, &spec)
+            .unwrap();
+        let run_with_mask = |mask: u64| {
+            let mut e = Engine::new(spec.clone(), PartitionMode::StreamsOnly);
+            e.set_stream_cu_mask(0, mask);
+            e.launch(d.clone(), 0);
+            e.run().makespan_us
+        };
+        let full = run_with_mask(u64::MAX);
+        let half = run_with_mask(0x7F); // 7 of 15 SMs
+        let one = run_with_mask(0x1);
+        assert!(half > full * 1.5, "half {half} vs full {full}");
+        assert!(one > half * 1.5, "one {one} vs half {half}");
+    }
+
+    #[test]
+    fn cu_masked_pair_runs_spatially_isolated() {
+        // Manual inter-SM partitioning through the ROCm mask API: two
+        // streams pinned to disjoint SM sets overlap fully.
+        let spec = DeviceSpec::k40();
+        let p = ConvParams::incep3a_3x3(32);
+        let a = kernel_desc(Algorithm::ImplicitPrecompGemm, &p, &spec)
+            .unwrap();
+        let b = kernel_desc(Algorithm::FftTiling, &p, &spec).unwrap();
+        let mut e = Engine::new(spec, PartitionMode::StreamsOnly);
+        e.set_stream_cu_mask(0, 0x3FF); // SMs 0..9
+        e.set_stream_cu_mask(1, 0x7C00); // SMs 10..14
+        e.launch(a, 0);
+        e.launch(b, 1);
+        let r = e.run();
+        assert!(r.overlap_us() > 0.5 * r.makespan_us, "no overlap");
+        // spatial splitting trades latency for isolation: both kernels run
+        // the whole time on fewer SMs, so the makespan lands near serial
+        // (SM-seconds conservation) — the win is QoS, not throughput,
+        // unless bottlenecks are complementary (see ablation_partition).
+        assert!(r.makespan_us < 1.2 * r.serial_us());
+    }
+
+    #[test]
+    fn default_mask_is_all_sms() {
+        let spec = DeviceSpec::k40();
+        let mut e = Engine::new(spec.clone(), PartitionMode::StreamsOnly);
+        assert_eq!(e.stream_mask(3), u64::MAX);
+        e.set_stream_cu_mask(2, 0xF);
+        assert_eq!(e.stream_mask(2), 0xF);
+        assert_eq!(e.stream_mask(0), u64::MAX);
+    }
+}

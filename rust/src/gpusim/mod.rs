@@ -1,0 +1,21 @@
+//! SM-level GPU simulator: the substrate the paper says this line of work
+//! needs ("we are investigating ... GPU simulators for implementing intra-
+//! and inter-SM partitioning", §3).
+//!
+//! Granularity: kernels → block waves → SM co-residency, with a fluid
+//! issue/bandwidth contention model. This is exactly the level at which the
+//! paper's argument operates: *static resources* decide whether blocks of
+//! two convolutions can co-reside (Table 1's first four columns), and
+//! *issue profiles* decide whether co-residency helps (its last two).
+
+mod engine;
+pub mod partition;
+pub mod sm;
+mod spec;
+pub mod timing;
+
+pub use engine::{Engine, KernelId, KernelRecord, SimResult};
+pub use partition::PartitionMode;
+pub use sm::{natural_residency, static_utilization, StaticUtilization};
+pub use spec::DeviceSpec;
+pub use timing::{isolated_time_us, memory_bound};

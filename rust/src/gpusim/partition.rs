@@ -1,0 +1,272 @@
+//! GPU partitioning modes: how SM resources are divided among concurrently
+//! runnable kernels.
+//!
+//! - [`PartitionMode::Serial`] — one kernel at a time (single-stream
+//!   semantics; the framework default the paper starts from).
+//! - [`PartitionMode::StreamsOnly`] — CUDA's actual behaviour: later
+//!   kernels' blocks are placed only in *leftover* static resources. For
+//!   cuDNN's natural launch configs this degenerates to serial execution —
+//!   the paper's §2.1 observation.
+//! - [`PartitionMode::InterSm`] — spatial multitasking [Adriaens et al.,
+//!   HPCA'12]: SMs are split among runnable kernels.
+//! - [`PartitionMode::IntraSm`] — fine-grained sharing [Warped-Slicer,
+//!   ISCA'16; Dai et al., HPCA'18]: per-kernel block quotas are chosen so
+//!   blocks of complementary kernels co-reside on every SM.
+
+use crate::convlib::LaunchConfig;
+
+use super::sm::{max_additional_blocks, natural_residency, SmUsage};
+use super::DeviceSpec;
+
+/// Partitioning / sharing policy for concurrent kernel execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PartitionMode {
+    Serial,
+    StreamsOnly,
+    InterSm,
+    IntraSm,
+}
+
+impl PartitionMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" | "none" => Some(Self::Serial),
+            "streams" | "streams_only" => Some(Self::StreamsOnly),
+            "inter_sm" | "inter" | "spatial" => Some(Self::InterSm),
+            "intra_sm" | "intra" => Some(Self::IntraSm),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Serial => "serial",
+            Self::StreamsOnly => "streams_only",
+            Self::InterSm => "inter_sm",
+            Self::IntraSm => "intra_sm",
+        }
+    }
+}
+
+/// A per-SM residency plan: `quota[i]` blocks of runnable kernel `i`.
+pub type ResidencyPlan = Vec<u32>;
+
+/// Compute the per-SM residency split for the runnable kernels (in launch
+/// order) under a partitioning mode.
+///
+/// For `IntraSm` with exactly two kernels this searches all quota splits
+/// and keeps the one maximizing combined utilization (a small-scale
+/// Warped-Slicer); with more kernels it falls back to a greedy fill.
+/// `utils[i]` is kernel i's standalone ALU utilization (issue-slot
+/// demand) used by the objective.
+pub fn plan_intra_sm(
+    launches: &[&LaunchConfig],
+    utils: &[f64],
+    spec: &DeviceSpec,
+) -> ResidencyPlan {
+    assert_eq!(launches.len(), utils.len());
+    match launches.len() {
+        0 => Vec::new(),
+        1 => vec![natural_residency(launches[0], spec)],
+        2 => {
+            let r0_nat = natural_residency(launches[0], spec).max(1);
+            let r1_nat = natural_residency(launches[1], spec).max(1);
+            let mut best = (0.0f64, vec![r0_nat, 0]);
+            for r0 in 0..=r0_nat {
+                let used = SmUsage::of(launches[0], r0);
+                let r1 =
+                    max_additional_blocks(launches[1], spec, &used).min(r1_nat);
+                // Warped-Slicer-style objective: combined *normalized
+                // progress* (fraction of each kernel's standalone rate),
+                // scaled down when the issue capacity is oversubscribed.
+                let f0 = r0 as f64 / r0_nat as f64;
+                let f1 = r1 as f64 / r1_nat as f64;
+                let demand = utils[0] * f0 + utils[1] * f1;
+                let phi = if demand > 1.0 { 1.0 / demand } else { 1.0 };
+                let score = phi * (f0 + f1)
+                    // tie-break: prefer actually co-resident plans
+                    + 0.001 * ((r0 > 0) as u32 + (r1 > 0) as u32) as f64;
+                if score > best.0 {
+                    best = (score, vec![r0, r1]);
+                }
+            }
+            best.1
+        }
+        _ => greedy_fill(launches, spec),
+    }
+}
+
+/// CUDA leftover policy: fill in launch order.
+pub fn greedy_fill(launches: &[&LaunchConfig], spec: &DeviceSpec) -> ResidencyPlan {
+    let mut used = SmUsage::default();
+    let mut plan = Vec::with_capacity(launches.len());
+    for l in launches {
+        let r = max_additional_blocks(l, spec, &used)
+            .min(natural_residency(l, spec));
+        used.add(&SmUsage::of(l, r));
+        plan.push(r);
+    }
+    plan
+}
+
+/// Inter-SM split: assign each of `num_sms` SMs to one of `k` kernels,
+/// proportionally to their remaining block counts (at least one SM each
+/// while SMs last).
+pub fn split_sms(num_sms: u32, blocks_remaining: &[u64]) -> Vec<usize> {
+    let k = blocks_remaining.len();
+    let mut owner = vec![usize::MAX; num_sms as usize];
+    if k == 0 {
+        return owner;
+    }
+    let total: u64 = blocks_remaining.iter().sum::<u64>().max(1);
+    // Largest-remainder apportionment with a 1-SM floor for nonzero kernels.
+    let mut shares: Vec<(usize, f64)> = blocks_remaining
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| (i, b as f64 / total as f64 * num_sms as f64))
+        .collect();
+    let mut alloc: Vec<u32> = shares
+        .iter()
+        .map(|&(i, s)| {
+            if blocks_remaining[i] > 0 {
+                (s.floor() as u32).max(1)
+            } else {
+                0
+            }
+        })
+        .collect();
+    // Fix over/under-allocation.
+    let mut used: u32 = alloc.iter().sum();
+    while used > num_sms {
+        // take from the largest allocation
+        let i = (0..k).max_by_key(|&i| alloc[i]).unwrap();
+        if alloc[i] > 1 {
+            alloc[i] -= 1;
+            used -= 1;
+        } else {
+            break;
+        }
+    }
+    shares.sort_by(|a, b| {
+        (b.1 - b.1.floor())
+            .partial_cmp(&(a.1 - a.1.floor()))
+            .unwrap()
+    });
+    let mut si = 0;
+    while used < num_sms && !shares.is_empty() {
+        let (i, _) = shares[si % shares.len()];
+        if blocks_remaining[i] > 0 {
+            alloc[i] += 1;
+            used += 1;
+        }
+        si += 1;
+        if si > 4 * k {
+            break;
+        }
+    }
+    // Materialize contiguous ranges.
+    let mut sm = 0usize;
+    for (i, &a) in alloc.iter().enumerate() {
+        for _ in 0..a {
+            if sm < owner.len() {
+                owner[sm] = i;
+                sm += 1;
+            }
+        }
+    }
+    // Any remainder goes to the kernel with most blocks.
+    if sm < owner.len() {
+        let big = (0..k).max_by_key(|&i| blocks_remaining[i]).unwrap_or(0);
+        for slot in owner.iter_mut().skip(sm) {
+            *slot = big;
+        }
+    }
+    owner
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convlib::{model_for, Algorithm, AlgoModel, ConvParams};
+
+    fn k40() -> DeviceSpec {
+        DeviceSpec::k40()
+    }
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(PartitionMode::parse("none"), Some(PartitionMode::Serial));
+        assert_eq!(
+            PartitionMode::parse("intra_sm"),
+            Some(PartitionMode::IntraSm)
+        );
+        assert_eq!(PartitionMode::parse("spatial"), Some(PartitionMode::InterSm));
+        assert_eq!(PartitionMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn intra_sm_coruns_complementary_pair() {
+        // PRECOMP_GEMM (register-bound, compute-heavy) + FFT_TILING
+        // (smem-bound, memory-heavy): the quota search must find a plan
+        // where both kernels hold blocks on the SM.
+        let p = ConvParams::incep3a_3x3(32);
+        let lg = model_for(Algorithm::ImplicitPrecompGemm).launch(&p);
+        let lf = model_for(Algorithm::FftTiling).launch(&p);
+        let plan = plan_intra_sm(&[&lg, &lf], &[0.70, 0.30], &k40());
+        assert_eq!(plan.len(), 2);
+        assert!(plan[0] > 0 && plan[1] > 0, "no co-residency: {plan:?}");
+    }
+
+    #[test]
+    fn intra_sm_identical_kernels_gain_nothing() {
+        // Two copies of a register-exhausting kernel: any split is
+        // progress-neutral (combined normalized progress <= 1), so whatever
+        // the search picks must (a) fit and (b) not pretend a gain.
+        let p = ConvParams::incep3a_5x5(32);
+        let l = model_for(Algorithm::ImplicitPrecompGemm).launch(&p);
+        let plan = plan_intra_sm(&[&l, &l], &[0.6, 0.6], &k40());
+        let r_nat = natural_residency(&l, &k40());
+        // fits within the register file
+        assert!(
+            (plan[0] + plan[1]) * l.regs_per_block() as u32
+                <= k40().regs_per_sm as u32,
+            "{plan:?}"
+        );
+        // combined progress does not exceed a single kernel's
+        let progress =
+            plan[0] as f64 / r_nat as f64 + plan[1] as f64 / r_nat as f64;
+        assert!(progress <= 1.0 + 1e-9, "{plan:?} progress {progress}");
+    }
+
+    #[test]
+    fn greedy_fill_leftover_is_zero_for_cudnn_pair() {
+        let p = ConvParams::incep3a_5x5(32);
+        let l5 = model_for(Algorithm::ImplicitPrecompGemm).launch(&p);
+        let p3 = ConvParams::incep3a_3x3(32);
+        let l3 = model_for(Algorithm::ImplicitPrecompGemm).launch(&p3);
+        let plan = greedy_fill(&[&l5, &l3], &k40());
+        assert_eq!(plan[0], 16);
+        assert_eq!(plan[1], 0); // serialization emerges
+    }
+
+    #[test]
+    fn split_sms_proportional_with_floor() {
+        let owner = split_sms(15, &[750, 250]);
+        let c0 = owner.iter().filter(|&&o| o == 0).count();
+        let c1 = owner.iter().filter(|&&o| o == 1).count();
+        assert_eq!(c0 + c1, 15);
+        assert!(c0 >= 10 && c1 >= 1, "{owner:?}");
+    }
+
+    #[test]
+    fn split_sms_zero_blocks_gets_no_sm() {
+        let owner = split_sms(15, &[100, 0]);
+        assert!(owner.iter().all(|&o| o == 0));
+    }
+
+    #[test]
+    fn split_single_kernel_takes_all() {
+        let owner = split_sms(8, &[42]);
+        assert!(owner.iter().all(|&o| o == 0));
+    }
+}

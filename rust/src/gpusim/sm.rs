@@ -1,0 +1,232 @@
+//! Streaming-multiprocessor resource accounting: the static-resource
+//! co-residency check at the heart of the paper's argument.
+
+use crate::convlib::LaunchConfig;
+
+use super::DeviceSpec;
+
+/// Resources currently pinned on one SM.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SmUsage {
+    pub regs: u64,
+    pub smem: u64,
+    pub threads: u32,
+    pub blocks: u32,
+}
+
+impl SmUsage {
+    /// Usage of `r` resident blocks of a kernel.
+    pub fn of(launch: &LaunchConfig, r: u32) -> Self {
+        Self {
+            regs: launch.regs_per_block() * r as u64,
+            smem: launch.smem_per_block as u64 * r as u64,
+            threads: launch.threads_per_block * r,
+            blocks: r,
+        }
+    }
+
+    pub fn add(&mut self, other: &SmUsage) {
+        self.regs += other.regs;
+        self.smem += other.smem;
+        self.threads += other.threads;
+        self.blocks += other.blocks;
+    }
+
+    pub fn sub(&mut self, other: &SmUsage) {
+        self.regs -= other.regs;
+        self.smem -= other.smem;
+        self.threads -= other.threads;
+        self.blocks -= other.blocks;
+    }
+}
+
+/// How many more blocks of `launch` fit on an SM given current `used`
+/// resources — the GPU block scheduler's admission rule. Returns 0 when any
+/// static resource is exhausted: this is exactly the mechanism by which the
+/// paper observes cuDNN convolutions serializing across streams.
+pub fn max_additional_blocks(
+    launch: &LaunchConfig,
+    spec: &DeviceSpec,
+    used: &SmUsage,
+) -> u32 {
+    let by_regs = if launch.regs_per_block() == 0 {
+        u64::MAX
+    } else {
+        spec.regs_per_sm.saturating_sub(used.regs) / launch.regs_per_block()
+    };
+    let by_smem = if launch.smem_per_block == 0 {
+        u64::MAX
+    } else {
+        spec.smem_per_sm.saturating_sub(used.smem)
+            / launch.smem_per_block as u64
+    };
+    let by_threads = if launch.threads_per_block == 0 {
+        u32::MAX
+    } else {
+        spec.max_threads_per_sm.saturating_sub(used.threads)
+            / launch.threads_per_block
+    };
+    let by_blocks = spec.max_blocks_per_sm.saturating_sub(used.blocks);
+    let by_warps = {
+        let used_warps = used.threads.div_ceil(32);
+        spec.max_warps_per_sm.saturating_sub(used_warps)
+            / launch.warps_per_block().max(1)
+    };
+    by_regs
+        .min(by_smem)
+        .min(by_threads as u64)
+        .min(by_blocks as u64)
+        .min(by_warps as u64)
+        .min(u32::MAX as u64) as u32
+}
+
+/// Natural residency: blocks per empty SM (nvprof's "achieved occupancy"
+/// driver). Table 1's utilization columns all derive from this.
+pub fn natural_residency(launch: &LaunchConfig, spec: &DeviceSpec) -> u32 {
+    max_additional_blocks(launch, spec, &SmUsage::default())
+}
+
+/// Static-resource utilization percentages at natural residency —
+/// the first four metric columns of the paper's Table 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StaticUtilization {
+    pub registers: f64,
+    pub shared_memory: f64,
+    pub threads: f64,
+    pub blocks: f64,
+}
+
+pub fn static_utilization(
+    launch: &LaunchConfig,
+    spec: &DeviceSpec,
+) -> StaticUtilization {
+    let r = natural_residency(launch, spec) as f64;
+    StaticUtilization {
+        registers: 100.0 * r * launch.regs_per_block() as f64
+            / spec.regs_per_sm as f64,
+        shared_memory: 100.0 * r * launch.smem_per_block as f64
+            / spec.smem_per_sm as f64,
+        threads: 100.0 * r * launch.threads_per_block as f64
+            / spec.max_threads_per_sm as f64,
+        blocks: 100.0 * r / spec.max_blocks_per_sm as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convlib::{Algorithm, ConvParams, model_for, AlgoModel};
+
+    fn k40() -> DeviceSpec {
+        DeviceSpec::k40()
+    }
+
+    #[test]
+    fn empty_sm_natural_residency_precomp_3x3() {
+        // Table 1 row 1: implicit_convolve_sgemm on the 3x3 conv: 3 blocks
+        // resident (92% regs / 39% smem / 38% thr / 19% blk).
+        let p = ConvParams::incep3a_3x3(32);
+        let l = model_for(Algorithm::ImplicitPrecompGemm).launch(&p);
+        assert_eq!(natural_residency(&l, &k40()), 3);
+        let u = static_utilization(&l, &k40());
+        assert!((u.registers - 92.0).abs() < 1.0, "{u:?}");
+        assert!((u.shared_memory - 39.0).abs() < 1.6, "{u:?}");
+        assert!((u.threads - 38.0).abs() < 1.0, "{u:?}");
+        assert!((u.blocks - 19.0).abs() < 1.0, "{u:?}");
+    }
+
+    #[test]
+    fn empty_sm_natural_residency_precomp_5x5() {
+        // Table 1 row 3: 16 blocks resident (100% regs / 70% smem / 50% thr
+        // / 100% blk).
+        let p = ConvParams::incep3a_5x5(32);
+        let l = model_for(Algorithm::ImplicitPrecompGemm).launch(&p);
+        assert_eq!(natural_residency(&l, &k40()), 16);
+        let u = static_utilization(&l, &k40());
+        assert!((u.registers - 100.0).abs() < 1.0, "{u:?}");
+        assert!((u.shared_memory - 70.0).abs() < 1.5, "{u:?}");
+        assert!((u.threads - 50.0).abs() < 1.0, "{u:?}");
+        assert!((u.blocks - 100.0).abs() < 0.1, "{u:?}");
+    }
+
+    #[test]
+    fn empty_sm_natural_residency_fft_tiling() {
+        // Table 1 rows 2/4: fft2d_c2r_32x32: 1 block (38% regs / 75% smem /
+        // 25% thr / 6% blk).
+        let p = ConvParams::incep3a_3x3(32);
+        let l = model_for(Algorithm::FftTiling).launch(&p);
+        assert_eq!(natural_residency(&l, &k40()), 1);
+        let u = static_utilization(&l, &k40());
+        assert!((u.registers - 38.0).abs() < 1.0, "{u:?}");
+        assert!((u.shared_memory - 75.0).abs() < 0.5, "{u:?}");
+        assert!((u.threads - 25.0).abs() < 0.1, "{u:?}");
+        assert!((u.blocks - 6.25).abs() < 0.1, "{u:?}");
+    }
+
+    #[test]
+    fn cudnn_pairs_cannot_corun() {
+        // THE paper observation (§2.1): with TensorFlow's picks
+        // (PRECOMP_GEMM for both independent convolutions), the resident
+        // kernel exhausts a static resource and the second kernel's blocks
+        // do not fit.
+        let spec = k40();
+        let p3 = ConvParams::incep3a_3x3(32);
+        let p5 = ConvParams::incep3a_5x5(32);
+        let l3 = model_for(Algorithm::ImplicitPrecompGemm).launch(&p3);
+        let l5 = model_for(Algorithm::ImplicitPrecompGemm).launch(&p5);
+        // 5x5 resident first: 100% registers -> nothing else fits at all.
+        let used5 = SmUsage::of(&l5, natural_residency(&l5, &spec));
+        assert_eq!(max_additional_blocks(&l3, &spec, &used5), 0);
+        // 3x3 resident first (92% registers): a second 3x3-class kernel
+        // cannot place a single block.
+        let used3 = SmUsage::of(&l3, natural_residency(&l3, &spec));
+        assert_eq!(max_additional_blocks(&l3, &spec, &used3), 0);
+    }
+
+    #[test]
+    fn complementary_pair_can_corun() {
+        // The paper's proposed fix: PRECOMP_GEMM (register-bound) +
+        // FFT_TILING (smem-bound) have complementary footprints — one
+        // fft2d block still fits beside the sgemm blocks... on Kepler it
+        // does NOT at full natural residency (39+75 > 100% smem), but does
+        // if the sgemm kernel is capped at 2 blocks — which is exactly the
+        // intra-SM partitioning argument.
+        let spec = k40();
+        let p3 = ConvParams::incep3a_3x3(32);
+        let lg = model_for(Algorithm::ImplicitPrecompGemm).launch(&p3);
+        let lf = model_for(Algorithm::FftTiling).launch(&p3);
+        // Natural residency: no room.
+        let used_nat = SmUsage::of(&lg, 3);
+        assert_eq!(max_additional_blocks(&lf, &spec, &used_nat), 0);
+        // Capped at 2 blocks (intra-SM quota): one FFT block fits.
+        let used_capped = SmUsage::of(&lg, 2);
+        assert_eq!(max_additional_blocks(&lf, &spec, &used_capped), 1);
+    }
+
+    #[test]
+    fn usage_add_sub_roundtrip() {
+        let l = LaunchConfig {
+            grid_blocks: 10,
+            threads_per_block: 128,
+            regs_per_thread: 32,
+            smem_per_block: 1024,
+        };
+        let mut u = SmUsage::default();
+        let delta = SmUsage::of(&l, 3);
+        u.add(&delta);
+        u.sub(&delta);
+        assert_eq!(u, SmUsage::default());
+    }
+
+    #[test]
+    fn zero_smem_kernel_not_div_by_zero() {
+        let l = LaunchConfig {
+            grid_blocks: 1,
+            threads_per_block: 64,
+            regs_per_thread: 16,
+            smem_per_block: 0,
+        };
+        let r = natural_residency(&l, &k40());
+        assert!(r >= 16); // blocked by block slots, not smem
+    }
+}

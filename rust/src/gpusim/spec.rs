@@ -1,0 +1,135 @@
+//! Device specifications. Default: the paper's Tesla K40 (Kepler GK110B).
+
+/// Static description of a GPU: SM static resources (the quantities whose
+/// exhaustion the paper identifies as the concurrency blocker) plus the
+/// throughput envelope the timing model uses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub num_sms: u32,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: u64,
+    /// Shared memory per SM, bytes.
+    pub smem_per_sm: u64,
+    pub max_threads_per_sm: u32,
+    pub max_blocks_per_sm: u32,
+    pub max_warps_per_sm: u32,
+    /// Peak single-precision throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak DRAM bandwidth, bytes/s.
+    pub dram_bw: f64,
+    /// Achievable fraction of peak DRAM bandwidth.
+    pub dram_efficiency: f64,
+    /// Total device memory, bytes.
+    pub global_mem: u64,
+    /// Fixed kernel-launch overhead, microseconds.
+    pub launch_overhead_us: f64,
+}
+
+impl DeviceSpec {
+    /// Tesla K40: the paper's testbed (CUDA 10.0, cuDNN 7.6).
+    pub fn k40() -> Self {
+        Self {
+            name: "Tesla K40".into(),
+            num_sms: 15,
+            regs_per_sm: 65_536,
+            smem_per_sm: 48 * 1024,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 16,
+            max_warps_per_sm: 64,
+            peak_flops: 4.29e12,
+            dram_bw: 288.0e9,
+            dram_efficiency: 0.75,
+            global_mem: 12 * 1024 * 1024 * 1024,
+            launch_overhead_us: 5.0,
+        }
+    }
+
+    /// Tesla P100 (Pascal): for cross-device ablations.
+    pub fn p100() -> Self {
+        Self {
+            name: "Tesla P100".into(),
+            num_sms: 56,
+            regs_per_sm: 65_536,
+            smem_per_sm: 64 * 1024,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            max_warps_per_sm: 64,
+            peak_flops: 10.6e12,
+            dram_bw: 732.0e9,
+            dram_efficiency: 0.80,
+            global_mem: 16 * 1024 * 1024 * 1024,
+            launch_overhead_us: 4.0,
+        }
+    }
+
+    /// Tesla V100 (Volta): for cross-device ablations.
+    pub fn v100() -> Self {
+        Self {
+            name: "Tesla V100".into(),
+            num_sms: 80,
+            regs_per_sm: 65_536,
+            smem_per_sm: 96 * 1024,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            max_warps_per_sm: 64,
+            peak_flops: 15.7e12,
+            dram_bw: 900.0e9,
+            dram_efficiency: 0.80,
+            global_mem: 32 * 1024 * 1024 * 1024,
+            launch_overhead_us: 3.0,
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "k40" => Some(Self::k40()),
+            "p100" => Some(Self::p100()),
+            "v100" => Some(Self::v100()),
+            _ => None,
+        }
+    }
+
+    /// Effective DRAM bandwidth (bytes/s).
+    pub fn effective_bw(&self) -> f64 {
+        self.dram_bw * self.dram_efficiency
+    }
+
+    /// Peak FLOP/s available to a single SM.
+    pub fn peak_flops_per_sm(&self) -> f64 {
+        self.peak_flops / self.num_sms as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k40_matches_published_spec() {
+        let d = DeviceSpec::k40();
+        assert_eq!(d.num_sms, 15);
+        assert_eq!(d.regs_per_sm, 65_536);
+        assert_eq!(d.smem_per_sm, 49_152);
+        assert_eq!(d.max_threads_per_sm, 2048);
+        assert_eq!(d.max_blocks_per_sm, 16);
+        assert!((d.peak_flops - 4.29e12).abs() < 1e9);
+    }
+
+    #[test]
+    fn presets_resolve() {
+        assert!(DeviceSpec::preset("k40").is_some());
+        assert!(DeviceSpec::preset("K40").is_some());
+        assert!(DeviceSpec::preset("p100").is_some());
+        assert!(DeviceSpec::preset("v100").is_some());
+        assert!(DeviceSpec::preset("h100").is_none());
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let d = DeviceSpec::k40();
+        assert!((d.effective_bw() - 216.0e9).abs() < 1e6);
+        assert!((d.peak_flops_per_sm() - 2.86e11).abs() < 1e9);
+    }
+}

@@ -1,0 +1,337 @@
+//! The network DAG: fork/join structure, topological utilities, and the
+//! inter-op parallelism metrics behind the paper's Figure 1.
+
+use std::collections::VecDeque;
+
+use super::op::{Op, OpKind};
+
+/// A directed acyclic graph of network operations.
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    pub ops: Vec<Op>,
+    succs: Vec<Vec<usize>>,
+    preds: Vec<Vec<usize>>,
+}
+
+impl Dag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an op; returns its id.
+    pub fn add(&mut self, name: impl Into<String>, kind: OpKind) -> usize {
+        let id = self.ops.len();
+        self.ops.push(Op {
+            id,
+            name: name.into(),
+            kind,
+        });
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        id
+    }
+
+    /// Add op with explicit predecessors (convenience).
+    pub fn add_after(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        preds: &[usize],
+    ) -> usize {
+        let id = self.add(name, kind);
+        for &p in preds {
+            self.add_edge(p, id);
+        }
+        id
+    }
+
+    /// Add a dependency edge `from -> to`.
+    pub fn add_edge(&mut self, from: usize, to: usize) {
+        assert!(from < self.ops.len() && to < self.ops.len());
+        assert_ne!(from, to, "self edge");
+        if !self.succs[from].contains(&to) {
+            self.succs[from].push(to);
+            self.preds[to].push(from);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn preds(&self, id: usize) -> &[usize] {
+        &self.preds[id]
+    }
+
+    pub fn succs(&self, id: usize) -> &[usize] {
+        &self.succs[id]
+    }
+
+    /// Kahn topological order; `None` if a cycle exists.
+    pub fn topo_order(&self) -> Option<Vec<usize>> {
+        let mut indeg: Vec<usize> =
+            (0..self.len()).map(|i| self.preds[i].len()).collect();
+        let mut q: VecDeque<usize> = (0..self.len())
+            .filter(|&i| indeg[i] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(i) = q.pop_front() {
+            order.push(i);
+            for &s in &self.succs[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    q.push_back(s);
+                }
+            }
+        }
+        (order.len() == self.len()).then_some(order)
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// ASAP level of each op (longest path from a source, in hops).
+    pub fn levels(&self) -> Vec<usize> {
+        let order = self.topo_order().expect("cyclic graph");
+        let mut level = vec![0usize; self.len()];
+        for &i in &order {
+            for &p in &self.preds[i] {
+                level[i] = level[i].max(level[p] + 1);
+            }
+        }
+        level
+    }
+
+    /// Width profile: number of ops per ASAP level — the structural
+    /// parallelism visible in the paper's Figure 1 (AlexNet: all 1s;
+    /// GoogleNet: 4-wide plus pool chains inside inception modules).
+    pub fn width_profile(&self) -> Vec<usize> {
+        let levels = self.levels();
+        let max = levels.iter().copied().max().unwrap_or(0);
+        let mut widths = vec![0usize; max + 1];
+        for &l in &levels {
+            widths[l] += 1;
+        }
+        widths
+    }
+
+    /// Width profile restricted to convolutions.
+    pub fn conv_width_profile(&self) -> Vec<usize> {
+        let levels = self.levels();
+        let max = levels.iter().copied().max().unwrap_or(0);
+        let mut widths = vec![0usize; max + 1];
+        for (i, &l) in levels.iter().enumerate() {
+            if self.ops[i].kind.is_conv() {
+                widths[l] += 1;
+            }
+        }
+        widths
+    }
+
+    /// Maximum level width (a lower bound on the max antichain).
+    pub fn max_width(&self) -> usize {
+        self.width_profile().into_iter().max().unwrap_or(0)
+    }
+
+    /// Number of fork nodes (out-degree > 1) — the paper's "multiple
+    /// fork/joins resulting in independent paths".
+    pub fn fork_count(&self) -> usize {
+        self.succs.iter().filter(|s| s.len() > 1).count()
+    }
+
+    /// Number of join nodes (in-degree > 1).
+    pub fn join_count(&self) -> usize {
+        self.preds.iter().filter(|p| p.len() > 1).count()
+    }
+
+    /// Ids of all convolution ops.
+    pub fn conv_ids(&self) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&i| self.ops[i].kind.is_conv())
+            .collect()
+    }
+
+    /// Reachability: can `a` reach `b` along edges? (BFS)
+    pub fn reaches(&self, a: usize, b: usize) -> bool {
+        if a == b {
+            return true;
+        }
+        let mut seen = vec![false; self.len()];
+        let mut q = VecDeque::from([a]);
+        seen[a] = true;
+        while let Some(i) = q.pop_front() {
+            for &s in &self.succs[i] {
+                if s == b {
+                    return true;
+                }
+                if !seen[s] {
+                    seen[s] = true;
+                    q.push_back(s);
+                }
+            }
+        }
+        false
+    }
+
+    /// Are two ops independent (neither reaches the other)? Independent op
+    /// pairs are the concurrency candidates the paper's §2 studies.
+    pub fn independent(&self, a: usize, b: usize) -> bool {
+        a != b && !self.reaches(a, b) && !self.reaches(b, a)
+    }
+
+    /// All unordered pairs of independent convolutions.
+    pub fn independent_conv_pairs(&self) -> Vec<(usize, usize)> {
+        let convs = self.conv_ids();
+        let mut pairs = Vec::new();
+        for (i, &a) in convs.iter().enumerate() {
+            for &b in convs.iter().skip(i + 1) {
+                if self.independent(a, b) {
+                    pairs.push((a, b));
+                }
+            }
+        }
+        pairs
+    }
+
+    /// Longest path length in hops (critical path of the structure).
+    pub fn critical_path_len(&self) -> usize {
+        self.levels().into_iter().max().unwrap_or(0)
+    }
+
+    /// Figure-1 style structural summary.
+    pub fn stats(&self) -> DagStats {
+        DagStats {
+            ops: self.len(),
+            convs: self.conv_ids().len(),
+            forks: self.fork_count(),
+            joins: self.join_count(),
+            max_width: self.max_width(),
+            max_conv_width: self
+                .conv_width_profile()
+                .into_iter()
+                .max()
+                .unwrap_or(0),
+            critical_path: self.critical_path_len(),
+            independent_conv_pairs: self.independent_conv_pairs().len(),
+        }
+    }
+}
+
+/// Structural summary of a network (Figure 1 / E3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DagStats {
+    pub ops: usize,
+    pub convs: usize,
+    pub forks: usize,
+    pub joins: usize,
+    pub max_width: usize,
+    pub max_conv_width: usize,
+    pub critical_path: usize,
+    pub independent_conv_pairs: usize,
+}
+
+impl DagStats {
+    /// The paper's linear/non-linear distinction (§1): a linear network is
+    /// a pure chain of dependent layers — no forks, no joins. Non-linear
+    /// networks "contain multiple fork/joins resulting in independent
+    /// paths of chained operations".
+    pub fn is_linear(&self) -> bool {
+        self.forks == 0 && self.joins == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convlib::ConvParams;
+
+    fn conv() -> OpKind {
+        OpKind::Conv(ConvParams::new(1, 4, 8, 8, 4, 3, 3, (1, 1), (1, 1)))
+    }
+
+    fn diamond() -> Dag {
+        // in -> a, b (parallel convs) -> join
+        let mut g = Dag::new();
+        let i = g.add("in", OpKind::Input);
+        let a = g.add_after("a", conv(), &[i]);
+        let b = g.add_after("b", conv(), &[i]);
+        g.add_after("join", OpKind::Concat { bytes: 64 }, &[a, b]);
+        g
+    }
+
+    #[test]
+    fn topo_covers_all_nodes() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0], 0);
+        assert_eq!(*order.last().unwrap(), 3);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = diamond();
+        g.add_edge(3, 1); // join -> a: cycle
+        assert!(!g.is_acyclic());
+    }
+
+    #[test]
+    fn width_and_forks() {
+        let g = diamond();
+        assert_eq!(g.max_width(), 2);
+        assert_eq!(g.fork_count(), 1);
+        assert_eq!(g.join_count(), 1);
+        assert_eq!(g.critical_path_len(), 2);
+    }
+
+    #[test]
+    fn independence() {
+        let g = diamond();
+        assert!(g.independent(1, 2));
+        assert!(!g.independent(0, 1));
+        assert!(!g.independent(1, 3));
+        assert_eq!(g.independent_conv_pairs(), vec![(1, 2)]);
+    }
+
+    #[test]
+    fn linear_chain_stats() {
+        let mut g = Dag::new();
+        let i = g.add("in", OpKind::Input);
+        let c1 = g.add_after("c1", conv(), &[i]);
+        let c2 = g.add_after("c2", conv(), &[c1]);
+        g.add_after("c3", conv(), &[c2]);
+        let s = g.stats();
+        assert!(s.is_linear());
+        assert_eq!(s.independent_conv_pairs, 0);
+        assert_eq!(s.max_width, 1);
+    }
+
+    #[test]
+    fn diamond_stats_nonlinear() {
+        let s = diamond().stats();
+        assert!(!s.is_linear());
+        assert_eq!(s.max_conv_width, 2);
+        assert_eq!(s.forks, 1);
+        assert_eq!(s.joins, 1);
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = diamond();
+        let before = g.succs(0).len();
+        g.add_edge(0, 1);
+        assert_eq!(g.succs(0).len(), before);
+    }
+
+    #[test]
+    #[should_panic(expected = "self edge")]
+    fn self_edge_panics() {
+        let mut g = diamond();
+        g.add_edge(1, 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! Network DAGs: operations, graph structure, parallelism analysis, and
+//! builders for the six architectures the paper references (AlexNet and
+//! VGG as *linear*; GoogleNet, ResNet, DenseNet, PathNet as *non-linear*).
+
+mod dag;
+pub mod networks;
+mod op;
+pub mod training;
+
+pub use dag::{Dag, DagStats};
+pub use networks::Network;
+pub use op::{Op, OpKind};
+pub use training::training_dag;

@@ -1,0 +1,107 @@
+//! AlexNet (Krizhevsky et al., 2012): the paper's example of a *linear*
+//! network — a single chain of dependent layers (Figure 1, left).
+
+use crate::convlib::ConvParams;
+use crate::graph::dag::Dag;
+use crate::graph::op::OpKind;
+
+use super::{conv_relu, pool, tensor_bytes};
+
+/// Build AlexNet at a batch size (single-column variant, 227x227 input).
+pub fn alexnet(batch: usize) -> Dag {
+    let n = batch;
+    let mut g = Dag::new();
+    let input = g.add("input", OpKind::Input);
+
+    // conv1: 227 -> 55, 96 ch, 11x11/4
+    let c1 = conv_relu(
+        &mut g,
+        "conv1",
+        input,
+        ConvParams::new(n, 3, 227, 227, 96, 11, 11, (4, 4), (0, 0)),
+    );
+    let l1 = g.add_after(
+        "lrn1",
+        OpKind::Lrn { bytes: tensor_bytes(n, 96, 55, 55) },
+        &[c1],
+    );
+    let p1 = pool(&mut g, "pool1", l1, n, 96, 55, 55, 27, 27);
+
+    // conv2: 27x27, 256 ch, 5x5 pad 2
+    let c2 = conv_relu(
+        &mut g,
+        "conv2",
+        p1,
+        ConvParams::new(n, 96, 27, 27, 256, 5, 5, (1, 1), (2, 2)),
+    );
+    let l2 = g.add_after(
+        "lrn2",
+        OpKind::Lrn { bytes: tensor_bytes(n, 256, 27, 27) },
+        &[c2],
+    );
+    let p2 = pool(&mut g, "pool2", l2, n, 256, 27, 27, 13, 13);
+
+    // conv3..5: 13x13 3x3 chain
+    let c3 = conv_relu(
+        &mut g,
+        "conv3",
+        p2,
+        ConvParams::new(n, 256, 13, 13, 384, 3, 3, (1, 1), (1, 1)),
+    );
+    let c4 = conv_relu(
+        &mut g,
+        "conv4",
+        c3,
+        ConvParams::new(n, 384, 13, 13, 384, 3, 3, (1, 1), (1, 1)),
+    );
+    let c5 = conv_relu(
+        &mut g,
+        "conv5",
+        c4,
+        ConvParams::new(n, 384, 13, 13, 256, 3, 3, (1, 1), (1, 1)),
+    );
+    let p5 = pool(&mut g, "pool5", c5, n, 256, 13, 13, 6, 6);
+
+    // fc6..8
+    let f6 = g.add_after(
+        "fc6",
+        OpKind::FullyConnected { m: n, k: 256 * 6 * 6, n: 4096 },
+        &[p5],
+    );
+    let f7 = g.add_after(
+        "fc7",
+        OpKind::FullyConnected { m: n, k: 4096, n: 4096 },
+        &[f6],
+    );
+    g.add_after(
+        "fc8",
+        OpKind::FullyConnected { m: n, k: 4096, n: 1000 },
+        &[f7],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_convs_three_fcs() {
+        let g = alexnet(4);
+        assert_eq!(g.conv_ids().len(), 5);
+        let fcs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::FullyConnected { .. }))
+            .count();
+        assert_eq!(fcs, 3);
+    }
+
+    #[test]
+    fn strictly_linear() {
+        let g = alexnet(4);
+        assert_eq!(g.max_width(), 1);
+        assert_eq!(g.fork_count(), 0);
+        assert_eq!(g.join_count(), 0);
+    }
+}

@@ -1,0 +1,136 @@
+//! DenseNet-style network (Huang et al., 2017), reduced depth. Dense
+//! connectivity produces many concat joins; parallel conv opportunities
+//! arise across dense blocks' bottleneck pairs and transition layers.
+
+use crate::convlib::ConvParams;
+use crate::graph::dag::Dag;
+use crate::graph::op::OpKind;
+
+use super::{conv_relu, pool, tensor_bytes};
+
+const GROWTH: usize = 32;
+
+/// One dense layer: BN -> 1x1 bottleneck -> 3x3, output concatenated with
+/// the input features.
+fn dense_layer(
+    g: &mut Dag,
+    name: &str,
+    pred: usize,
+    n: usize,
+    c_in: usize,
+    hw: usize,
+) -> usize {
+    let bn = g.add_after(
+        format!("{name}_bn"),
+        OpKind::BatchNorm { bytes: tensor_bytes(n, c_in, hw, hw) },
+        &[pred],
+    );
+    let b = conv_relu(
+        g,
+        &format!("{name}_1x1"),
+        bn,
+        ConvParams::new(n, c_in, hw, hw, 4 * GROWTH, 1, 1, (1, 1), (0, 0)),
+    );
+    let c = conv_relu(
+        g,
+        &format!("{name}_3x3"),
+        b,
+        ConvParams::new(n, 4 * GROWTH, hw, hw, GROWTH, 3, 3, (1, 1), (1, 1)),
+    );
+    g.add_after(
+        format!("{name}_concat"),
+        OpKind::Concat { bytes: tensor_bytes(n, c_in + GROWTH, hw, hw) },
+        &[pred, c],
+    )
+}
+
+/// DenseNet-lite: 3 dense blocks of 4 layers with transitions.
+pub fn densenet_lite(batch: usize) -> Dag {
+    let n = batch;
+    let mut g = Dag::new();
+    let input = g.add("input", OpKind::Input);
+
+    let c1 = conv_relu(
+        &mut g,
+        "conv1",
+        input,
+        ConvParams::new(n, 3, 112, 112, 64, 7, 7, (2, 2), (3, 3)),
+    );
+    let mut cur = pool(&mut g, "pool1", c1, n, 64, 56, 56, 28, 28);
+    let mut c_in = 64usize;
+    let mut hw = 28usize;
+
+    for block in 0..3 {
+        for layer in 0..4 {
+            cur = dense_layer(
+                &mut g,
+                &format!("d{block}l{layer}"),
+                cur,
+                n,
+                c_in,
+                hw,
+            );
+            c_in += GROWTH;
+        }
+        if block < 2 {
+            // transition: 1x1 halve channels + 2x2 avgpool
+            let t = conv_relu(
+                &mut g,
+                &format!("trans{block}"),
+                cur,
+                ConvParams::new(n, c_in, hw, hw, c_in / 2, 1, 1, (1, 1), (0, 0)),
+            );
+            c_in /= 2;
+            cur = pool(
+                &mut g,
+                &format!("trans{block}_pool"),
+                t,
+                n,
+                c_in,
+                hw,
+                hw,
+                hw / 2,
+                hw / 2,
+            );
+            hw /= 2;
+        }
+    }
+
+    let gap = pool(&mut g, "avgpool", cur, n, c_in, hw, hw, 1, 1);
+    g.add_after(
+        "fc",
+        OpKind::FullyConnected { m: n, k: c_in, n: 1000 },
+        &[gap],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_with_concats() {
+        let g = densenet_lite(2);
+        let concats = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Concat { .. }))
+            .count();
+        assert_eq!(concats, 12); // 3 blocks x 4 layers
+        assert!(g.join_count() >= 12);
+    }
+
+    #[test]
+    fn channel_growth_arithmetic() {
+        // after block0: 64 + 4*32 = 192 -> transition 96
+        // after block1: 96 + 128 = 224 -> 112
+        // after block2: 112 + 128 = 240
+        let g = densenet_lite(1);
+        let fc = g.ops.iter().find(|o| o.name == "fc").unwrap();
+        match fc.kind {
+            OpKind::FullyConnected { k, .. } => assert_eq!(k, 240),
+            _ => panic!(),
+        }
+    }
+}

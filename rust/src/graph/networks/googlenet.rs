@@ -1,0 +1,219 @@
+//! GoogLeNet / Inception-v1 (Szegedy et al., 2015): the paper's flagship
+//! *non-linear* network (Figure 1, right). Each inception module forks into
+//! four independent branches — 1x1, 1x1→3x3, 1x1→5x5, pool→1x1 — whose
+//! convolutions are exactly the co-execution candidates of Tables 1-2.
+
+use crate::convlib::ConvParams;
+use crate::graph::dag::Dag;
+use crate::graph::op::OpKind;
+
+use super::{conv_relu, pool, tensor_bytes};
+
+/// Channel plan of one inception module.
+#[derive(Clone, Copy, Debug)]
+pub struct InceptionPlan {
+    pub b1: usize,   // 1x1 branch
+    pub b3r: usize,  // 3x3 reduce
+    pub b3: usize,   // 3x3
+    pub b5r: usize,  // 5x5 reduce
+    pub b5: usize,   // 5x5
+    pub bp: usize,   // pool projection
+}
+
+impl InceptionPlan {
+    pub fn out_channels(&self) -> usize {
+        self.b1 + self.b3 + self.b5 + self.bp
+    }
+}
+
+/// The nine standard GoogLeNet inception plans (3a..5b).
+pub const INCEPTION_PLANS: &[(&str, InceptionPlan)] = &[
+    ("3a", InceptionPlan { b1: 64, b3r: 96, b3: 128, b5r: 16, b5: 32, bp: 32 }),
+    ("3b", InceptionPlan { b1: 128, b3r: 128, b3: 192, b5r: 32, b5: 96, bp: 64 }),
+    ("4a", InceptionPlan { b1: 192, b3r: 96, b3: 208, b5r: 16, b5: 48, bp: 64 }),
+    ("4b", InceptionPlan { b1: 160, b3r: 112, b3: 224, b5r: 24, b5: 64, bp: 64 }),
+    ("4c", InceptionPlan { b1: 128, b3r: 128, b3: 256, b5r: 24, b5: 64, bp: 64 }),
+    ("4d", InceptionPlan { b1: 112, b3r: 144, b3: 288, b5r: 32, b5: 64, bp: 64 }),
+    ("4e", InceptionPlan { b1: 256, b3r: 160, b3: 320, b5r: 32, b5: 128, bp: 128 }),
+    ("5a", InceptionPlan { b1: 256, b3r: 160, b3: 320, b5r: 32, b5: 128, bp: 128 }),
+    ("5b", InceptionPlan { b1: 384, b3r: 192, b3: 384, b5r: 48, b5: 128, bp: 128 }),
+];
+
+/// Emit one inception module; returns the concat op id.
+pub fn inception(
+    g: &mut Dag,
+    tag: &str,
+    pred: usize,
+    n: usize,
+    c_in: usize,
+    hw: usize,
+    plan: &InceptionPlan,
+) -> usize {
+    let conv1 =
+        |c_out| ConvParams::new(n, c_in, hw, hw, c_out, 1, 1, (1, 1), (0, 0));
+    // branch 1: 1x1
+    let b1 = conv_relu(g, &format!("incep{tag}_b1"), pred, conv1(plan.b1));
+    // branch 2: 1x1 reduce -> 3x3
+    let b3r = conv_relu(g, &format!("incep{tag}_b3r"), pred, conv1(plan.b3r));
+    let b3 = conv_relu(
+        g,
+        &format!("incep{tag}_b3"),
+        b3r,
+        ConvParams::new(n, plan.b3r, hw, hw, plan.b3, 3, 3, (1, 1), (1, 1)),
+    );
+    // branch 3: 1x1 reduce -> 5x5
+    let b5r = conv_relu(g, &format!("incep{tag}_b5r"), pred, conv1(plan.b5r));
+    let b5 = conv_relu(
+        g,
+        &format!("incep{tag}_b5"),
+        b5r,
+        ConvParams::new(n, plan.b5r, hw, hw, plan.b5, 5, 5, (1, 1), (2, 2)),
+    );
+    // branch 4: 3x3 maxpool -> 1x1 projection
+    let mp = pool(
+        g,
+        &format!("incep{tag}_pool"),
+        pred,
+        n,
+        c_in,
+        hw,
+        hw,
+        hw,
+        hw,
+    );
+    let bp = conv_relu(g, &format!("incep{tag}_bp"), mp, conv1(plan.bp));
+
+    g.add_after(
+        format!("incep{tag}_concat"),
+        OpKind::Concat {
+            bytes: tensor_bytes(n, plan.out_channels(), hw, hw),
+        },
+        &[b1, b3, b5, bp],
+    )
+}
+
+/// Full GoogLeNet (inference path; aux classifiers omitted).
+pub fn googlenet(batch: usize) -> Dag {
+    let n = batch;
+    let mut g = Dag::new();
+    let input = g.add("input", OpKind::Input);
+
+    // stem: conv7x7/2 -> pool -> conv1x1 -> conv3x3 -> pool
+    let c1 = conv_relu(
+        &mut g,
+        "conv1",
+        input,
+        ConvParams::new(n, 3, 224, 224, 64, 7, 7, (2, 2), (3, 3)),
+    );
+    let p1 = pool(&mut g, "pool1", c1, n, 64, 112, 112, 56, 56);
+    let l1 = g.add_after(
+        "lrn1",
+        OpKind::Lrn { bytes: tensor_bytes(n, 64, 56, 56) },
+        &[p1],
+    );
+    let c2r = conv_relu(
+        &mut g,
+        "conv2_reduce",
+        l1,
+        ConvParams::new(n, 64, 56, 56, 64, 1, 1, (1, 1), (0, 0)),
+    );
+    let c2 = conv_relu(
+        &mut g,
+        "conv2",
+        c2r,
+        ConvParams::new(n, 64, 56, 56, 192, 3, 3, (1, 1), (1, 1)),
+    );
+    let l2 = g.add_after(
+        "lrn2",
+        OpKind::Lrn { bytes: tensor_bytes(n, 192, 56, 56) },
+        &[c2],
+    );
+    let p2 = pool(&mut g, "pool2", l2, n, 192, 56, 56, 28, 28);
+
+    // inception stacks
+    let mut cur = p2;
+    let mut c_in = 192usize;
+    let mut hw = 28usize;
+    for (tag, plan) in INCEPTION_PLANS {
+        cur = inception(&mut g, tag, cur, n, c_in, hw, plan);
+        c_in = plan.out_channels();
+        match *tag {
+            "3b" => {
+                cur = pool(&mut g, "pool3", cur, n, c_in, hw, hw, hw / 2, hw / 2);
+                hw /= 2; // 28 -> 14
+            }
+            "4e" => {
+                cur = pool(&mut g, "pool4", cur, n, c_in, hw, hw, hw / 2, hw / 2);
+                hw /= 2; // 14 -> 7
+            }
+            _ => {}
+        }
+    }
+
+    // head: global average pool + fc
+    let gap = pool(&mut g, "avgpool", cur, n, c_in, hw, hw, 1, 1);
+    g.add_after(
+        "fc",
+        OpKind::FullyConnected { m: n, k: c_in, n: 1000 },
+        &[gap],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_plan_sums() {
+        // canonical output widths
+        let expect = [256, 480, 512, 512, 512, 528, 832, 832, 1024];
+        for ((_, plan), want) in INCEPTION_PLANS.iter().zip(expect) {
+            assert_eq!(plan.out_channels(), want);
+        }
+    }
+
+    #[test]
+    fn conv_count() {
+        // stem 3 + 9 modules x 6 convs = 57
+        assert_eq!(googlenet(2).conv_ids().len(), 57);
+    }
+
+    #[test]
+    fn four_wide_modules() {
+        let g = googlenet(2);
+        // Each inception level runs 1x1 / 3x3-reduce / 5x5-reduce / (pool)
+        // in parallel: conv width >= 3 somewhere.
+        let w = g.conv_width_profile();
+        assert!(w.iter().copied().max().unwrap() >= 3, "{w:?}");
+        assert_eq!(g.fork_count() >= 9, true);
+    }
+
+    #[test]
+    fn table1_convs_present() {
+        // The 3a module contains the exact Table 1 convolutions.
+        let g = googlenet(32);
+        let b3 = g.ops.iter().find(|o| o.name == "incep3a_b3").unwrap();
+        let b5 = g.ops.iter().find(|o| o.name == "incep3a_b5").unwrap();
+        match (&b3.kind, &b5.kind) {
+            (OpKind::Conv(p3), OpKind::Conv(p5)) => {
+                assert_eq!(p3, &ConvParams::incep3a_3x3(32));
+                assert_eq!(p5, &ConvParams::incep3a_5x5(32));
+            }
+            _ => panic!("not convs"),
+        }
+    }
+
+    #[test]
+    fn independent_pairs_within_module() {
+        let g = googlenet(4);
+        let b3 = g.ops.iter().position(|o| o.name == "incep3a_b3").unwrap();
+        let b5 = g.ops.iter().position(|o| o.name == "incep3a_b5").unwrap();
+        let b1 = g.ops.iter().position(|o| o.name == "incep3a_b1").unwrap();
+        assert!(g.independent(b3, b5));
+        assert!(g.independent(b1, b3));
+        // but 3x3 depends on its own reduce
+        let b3r = g.ops.iter().position(|o| o.name == "incep3a_b3r").unwrap();
+        assert!(!g.independent(b3r, b3));
+    }
+}

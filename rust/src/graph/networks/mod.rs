@@ -1,0 +1,179 @@
+//! Network builders: the linear and non-linear CNN topologies the paper
+//! contrasts (Figure 1 and §1).
+
+mod alexnet;
+mod densenet;
+mod googlenet;
+mod pathnet;
+mod resnet;
+mod vgg;
+
+pub use alexnet::alexnet;
+pub use densenet::densenet_lite;
+pub use googlenet::googlenet;
+pub use pathnet::pathnet;
+pub use resnet::resnet50;
+pub use vgg::vgg16;
+
+use crate::convlib::ConvParams;
+
+use super::dag::Dag;
+use super::op::OpKind;
+
+/// Named network selector used by the launcher and benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Network {
+    AlexNet,
+    Vgg16,
+    GoogleNet,
+    ResNet50,
+    DenseNetLite,
+    PathNet,
+}
+
+impl Network {
+    pub const ALL: &'static [Network] = &[
+        Network::AlexNet,
+        Network::Vgg16,
+        Network::GoogleNet,
+        Network::ResNet50,
+        Network::DenseNetLite,
+        Network::PathNet,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "alexnet" => Some(Self::AlexNet),
+            "vgg16" | "vgg" => Some(Self::Vgg16),
+            "googlenet" | "inception" => Some(Self::GoogleNet),
+            "resnet50" | "resnet" => Some(Self::ResNet50),
+            "densenet" | "densenet_lite" => Some(Self::DenseNetLite),
+            "pathnet" => Some(Self::PathNet),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::AlexNet => "alexnet",
+            Self::Vgg16 => "vgg16",
+            Self::GoogleNet => "googlenet",
+            Self::ResNet50 => "resnet50",
+            Self::DenseNetLite => "densenet_lite",
+            Self::PathNet => "pathnet",
+        }
+    }
+
+    /// Build the DAG at a batch size.
+    pub fn build(&self, batch: usize) -> Dag {
+        match self {
+            Self::AlexNet => alexnet(batch),
+            Self::Vgg16 => vgg16(batch),
+            Self::GoogleNet => googlenet(batch),
+            Self::ResNet50 => resnet50(batch),
+            Self::DenseNetLite => densenet_lite(batch),
+            Self::PathNet => pathnet(batch, 4, 5),
+        }
+    }
+
+    /// The paper's linear / non-linear classification (§1, Figure 1).
+    pub fn is_linear(&self) -> bool {
+        matches!(self, Self::AlexNet | Self::Vgg16)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared builder helpers
+// ---------------------------------------------------------------------------
+
+pub(crate) fn tensor_bytes(n: usize, c: usize, h: usize, w: usize) -> u64 {
+    (n * c * h * w * 4) as u64
+}
+
+/// conv -> relu pair; returns the relu id (what downstream ops consume).
+pub(crate) fn conv_relu(
+    g: &mut Dag,
+    name: &str,
+    pred: usize,
+    p: ConvParams,
+) -> usize {
+    let (ho, wo) = p.out_dims();
+    let bytes = tensor_bytes(p.n, p.k, ho, wo);
+    let c = g.add_after(format!("{name}"), OpKind::Conv(p), &[pred]);
+    g.add_after(format!("{name}_relu"), OpKind::Relu { bytes }, &[c])
+}
+
+/// Max/avg pool node.
+pub(crate) fn pool(
+    g: &mut Dag,
+    name: &str,
+    pred: usize,
+    n: usize,
+    c: usize,
+    h_in: usize,
+    w_in: usize,
+    h_out: usize,
+    w_out: usize,
+) -> usize {
+    g.add_after(
+        name,
+        OpKind::Pool {
+            bytes_in: tensor_bytes(n, c, h_in, w_in),
+            bytes_out: tensor_bytes(n, c, h_out, w_out),
+        },
+        &[pred],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_networks_build_and_are_acyclic() {
+        for net in Network::ALL {
+            let g = net.build(8);
+            assert!(g.is_acyclic(), "{net:?}");
+            assert!(g.len() > 5, "{net:?} suspiciously small");
+            assert!(!g.conv_ids().is_empty(), "{net:?} has no convs");
+        }
+    }
+
+    #[test]
+    fn linear_classification_matches_structure() {
+        // Figure 1: AlexNet/VGG linear; GoogleNet/ResNet/DenseNet/PathNet
+        // non-linear.
+        for net in Network::ALL {
+            let stats = net.build(4).stats();
+            assert_eq!(
+                stats.is_linear(),
+                net.is_linear(),
+                "{net:?}: {stats:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Network::parse("googlenet"), Some(Network::GoogleNet));
+        assert_eq!(Network::parse("VGG"), Some(Network::Vgg16));
+        assert_eq!(Network::parse("unknown"), None);
+        for n in Network::ALL {
+            assert_eq!(Network::parse(n.name()), Some(*n));
+        }
+    }
+
+    #[test]
+    fn googlenet_has_rich_parallelism() {
+        let stats = Network::GoogleNet.build(32).stats();
+        assert!(stats.max_conv_width >= 3, "{stats:?}");
+        assert!(stats.independent_conv_pairs >= 27, "{stats:?}");
+        assert!(stats.forks >= 9, "{stats:?}");
+    }
+
+    #[test]
+    fn alexnet_has_no_conv_parallelism() {
+        let stats = Network::AlexNet.build(32).stats();
+        assert_eq!(stats.independent_conv_pairs, 0, "{stats:?}");
+    }
+}

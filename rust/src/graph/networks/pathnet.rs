@@ -1,0 +1,79 @@
+//! PathNet-style network (Fernando et al., 2017): the paper lists PathNet
+//! among the non-linear architectures. L layers, each holding P parallel
+//! conv modules whose outputs are summed — maximal, regular inter-op
+//! parallelism (an upper-bound stress test for the scheduler).
+
+use crate::convlib::ConvParams;
+use crate::graph::dag::Dag;
+use crate::graph::op::OpKind;
+
+use super::{conv_relu, tensor_bytes};
+
+/// Build a PathNet-like trellis: `paths` parallel conv modules per layer,
+/// `layers` layers deep, summed between layers. 32x32x64 feature maps.
+pub fn pathnet(batch: usize, paths: usize, layers: usize) -> Dag {
+    assert!(paths >= 1 && layers >= 1);
+    let n = batch;
+    let c = 64usize;
+    let hw = 32usize;
+    let mut g = Dag::new();
+    let mut cur = g.add("input", OpKind::Input);
+
+    for l in 0..layers {
+        let mut outs = Vec::with_capacity(paths);
+        for p in 0..paths {
+            // alternate 3x3 / 5x5 modules across paths for heterogeneity
+            let (r, pad) = if p % 2 == 0 { (3, 1) } else { (5, 2) };
+            let conv = conv_relu(
+                &mut g,
+                &format!("l{l}p{p}"),
+                cur,
+                ConvParams::new(n, c, hw, hw, c, r, r, (1, 1), (pad, pad)),
+            );
+            outs.push(conv);
+        }
+        cur = g.add_after(
+            format!("l{l}_sum"),
+            OpKind::Add { bytes: tensor_bytes(n, c, hw, hw) },
+            &outs,
+        );
+    }
+
+    g.add_after(
+        "fc",
+        OpKind::FullyConnected { m: n, k: c * hw * hw, n: 10 },
+        &[cur],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trellis_shape() {
+        let g = pathnet(2, 4, 5);
+        assert_eq!(g.conv_ids().len(), 20);
+        assert!(g.max_width() >= 4);
+        assert_eq!(g.fork_count(), 5); // input + 4 sums fork into paths
+    }
+
+    #[test]
+    fn paths_within_layer_independent() {
+        let g = pathnet(2, 3, 2);
+        let a = g.ops.iter().position(|o| o.name == "l0p0").unwrap();
+        let b = g.ops.iter().position(|o| o.name == "l0p2").unwrap();
+        assert!(g.independent(a, b));
+        // across layers: dependent
+        let c = g.ops.iter().position(|o| o.name == "l1p0").unwrap();
+        assert!(!g.independent(a, c));
+    }
+
+    #[test]
+    fn independent_pairs_quadratic_in_paths() {
+        let g = pathnet(1, 4, 3);
+        // per layer: C(4,2)=6 pairs, 3 layers => 18
+        assert_eq!(g.independent_conv_pairs().len(), 18);
+    }
+}

@@ -1,0 +1,138 @@
+//! ResNet-50 (He et al., 2016): non-linear via residual skip connections;
+//! downsampling blocks additionally run a projection convolution *in
+//! parallel with* the bottleneck path — real inter-op conv parallelism.
+
+use crate::convlib::ConvParams;
+use crate::graph::dag::Dag;
+use crate::graph::op::OpKind;
+
+use super::{conv_relu, pool, tensor_bytes};
+
+/// One bottleneck block: 1x1 -> 3x3 -> 1x1 (+ parallel 1x1 projection when
+/// downsampling or widening). Returns the output op id.
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    g: &mut Dag,
+    name: &str,
+    pred: usize,
+    n: usize,
+    c_in: usize,
+    hw_in: usize,
+    width: usize, // bottleneck width
+    stride: usize,
+    project: bool,
+) -> usize {
+    let c_out = width * 4;
+    let hw_out = hw_in / stride;
+    let a = conv_relu(
+        g,
+        &format!("{name}_1x1a"),
+        pred,
+        ConvParams::new(n, c_in, hw_in, hw_in, width, 1, 1, (stride, stride), (0, 0)),
+    );
+    let b = conv_relu(
+        g,
+        &format!("{name}_3x3"),
+        a,
+        ConvParams::new(n, width, hw_out, hw_out, width, 3, 3, (1, 1), (1, 1)),
+    );
+    let c = conv_relu(
+        g,
+        &format!("{name}_1x1b"),
+        b,
+        ConvParams::new(n, width, hw_out, hw_out, c_out, 1, 1, (1, 1), (0, 0)),
+    );
+    let skip = if project {
+        // the parallel projection conv (independent of the a->b->c chain)
+        conv_relu(
+            g,
+            &format!("{name}_proj"),
+            pred,
+            ConvParams::new(
+                n, c_in, hw_in, hw_in, c_out, 1, 1, (stride, stride), (0, 0),
+            ),
+        )
+    } else {
+        pred
+    };
+    g.add_after(
+        format!("{name}_add"),
+        OpKind::Add { bytes: tensor_bytes(n, c_out, hw_out, hw_out) },
+        &[c, skip],
+    )
+}
+
+/// ResNet-50 at 224x224.
+pub fn resnet50(batch: usize) -> Dag {
+    let n = batch;
+    let mut g = Dag::new();
+    let input = g.add("input", OpKind::Input);
+
+    let c1 = conv_relu(
+        &mut g,
+        "conv1",
+        input,
+        ConvParams::new(n, 3, 224, 224, 64, 7, 7, (2, 2), (3, 3)),
+    );
+    let mut cur = pool(&mut g, "pool1", c1, n, 64, 112, 112, 56, 56);
+
+    // (stage, blocks, width, first-stride)
+    let stages = [(2usize, 3usize, 64usize, 1usize), (3, 4, 128, 2), (4, 6, 256, 2), (5, 3, 512, 2)];
+    let mut c_in = 64usize;
+    let mut hw = 56usize;
+    for (stage, blocks, width, stride0) in stages {
+        for b in 0..blocks {
+            let stride = if b == 0 { stride0 } else { 1 };
+            let project = b == 0;
+            cur = bottleneck(
+                &mut g,
+                &format!("res{stage}{}", (b'a' + b as u8) as char),
+                cur,
+                n,
+                c_in,
+                hw,
+                width,
+                stride,
+                project,
+            );
+            if b == 0 {
+                hw /= stride0;
+            }
+            c_in = width * 4;
+        }
+    }
+
+    let gap = pool(&mut g, "avgpool", cur, n, 2048, 7, 7, 1, 1);
+    g.add_after(
+        "fc",
+        OpKind::FullyConnected { m: n, k: 2048, n: 1000 },
+        &[gap],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_count_is_53() {
+        // 49 bottleneck convs + 4 projections + stem = 1 + 16*3 + 4 = 53
+        assert_eq!(resnet50(2).conv_ids().len(), 53);
+    }
+
+    #[test]
+    fn nonlinear_with_parallel_projections() {
+        let g = resnet50(2);
+        assert!(g.fork_count() > 10);
+        assert!(!g.independent_conv_pairs().is_empty());
+    }
+
+    #[test]
+    fn projection_parallel_to_bottleneck_path() {
+        let g = resnet50(2);
+        let a = g.ops.iter().position(|o| o.name == "res2a_1x1a").unwrap();
+        let p = g.ops.iter().position(|o| o.name == "res2a_proj").unwrap();
+        assert!(g.independent(a, p));
+    }
+}

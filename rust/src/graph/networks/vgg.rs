@@ -1,0 +1,91 @@
+//! VGG-16 (Simonyan & Zisserman, 2014): the other canonical linear network.
+
+use crate::convlib::ConvParams;
+use crate::graph::dag::Dag;
+use crate::graph::op::OpKind;
+
+use super::{conv_relu, pool};
+
+/// VGG-16, 224x224 input.
+pub fn vgg16(batch: usize) -> Dag {
+    let n = batch;
+    let mut g = Dag::new();
+    let mut cur = g.add("input", OpKind::Input);
+    let mut h = 224usize;
+    let mut c_in = 3usize;
+
+    // (out_channels, convs_in_block)
+    let blocks = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    for (bi, (c_out, reps)) in blocks.iter().enumerate() {
+        for ri in 0..*reps {
+            cur = conv_relu(
+                &mut g,
+                &format!("conv{}_{}", bi + 1, ri + 1),
+                cur,
+                ConvParams::new(n, c_in, h, h, *c_out, 3, 3, (1, 1), (1, 1)),
+            );
+            c_in = *c_out;
+        }
+        cur = pool(
+            &mut g,
+            &format!("pool{}", bi + 1),
+            cur,
+            n,
+            c_in,
+            h,
+            h,
+            h / 2,
+            h / 2,
+        );
+        h /= 2;
+    }
+
+    let f1 = g.add_after(
+        "fc1",
+        OpKind::FullyConnected { m: n, k: 512 * 7 * 7, n: 4096 },
+        &[cur],
+    );
+    let f2 = g.add_after(
+        "fc2",
+        OpKind::FullyConnected { m: n, k: 4096, n: 4096 },
+        &[f1],
+    );
+    g.add_after(
+        "fc3",
+        OpKind::FullyConnected { m: n, k: 4096, n: 1000 },
+        &[f2],
+    );
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_convs() {
+        assert_eq!(vgg16(2).conv_ids().len(), 13);
+    }
+
+    #[test]
+    fn linear_structure() {
+        let g = vgg16(2);
+        assert_eq!(g.max_width(), 1);
+        assert_eq!(g.independent_conv_pairs().len(), 0);
+    }
+
+    #[test]
+    fn final_spatial_is_7() {
+        // 224 / 2^5 = 7: the fc1 K dim must match
+        let g = vgg16(1);
+        let fc = g
+            .ops
+            .iter()
+            .find(|o| o.name == "fc1")
+            .unwrap();
+        match fc.kind {
+            OpKind::FullyConnected { k, .. } => assert_eq!(k, 512 * 49),
+            _ => panic!(),
+        }
+    }
+}

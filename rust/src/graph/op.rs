@@ -1,0 +1,114 @@
+//! Network operations: the node payload of a model DAG.
+
+use crate::convlib::ConvParams;
+
+/// One network operation, at the granularity DL-framework GPU backends
+/// schedule (paper §2: "convolution, batch normalization, pooling ...").
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// Graph input placeholder (no work).
+    Input,
+    /// Convolution — the paper's subject; carries full parameters so the
+    /// coordinator can pick among the seven algorithms.
+    Conv(ConvParams),
+    /// Pooling (max or average): bandwidth-bound.
+    Pool {
+        bytes_in: u64,
+        bytes_out: u64,
+    },
+    /// Elementwise ReLU (in-place-ish).
+    Relu { bytes: u64 },
+    /// Channel concatenation (inception joins).
+    Concat { bytes: u64 },
+    /// Elementwise addition (residual joins).
+    Add { bytes: u64 },
+    /// Local response normalization (AlexNet/GoogleNet stem).
+    Lrn { bytes: u64 },
+    /// Batch normalization.
+    BatchNorm { bytes: u64 },
+    /// Fully connected layer: M x K x N GEMM.
+    FullyConnected { m: usize, k: usize, n: usize },
+}
+
+impl OpKind {
+    /// Is this a convolution (the ops the paper's analysis targets)?
+    pub fn is_conv(&self) -> bool {
+        matches!(self, OpKind::Conv(_))
+    }
+
+    /// FLOPs of the op (0 for pure data movement).
+    pub fn flops(&self) -> f64 {
+        match self {
+            OpKind::Conv(p) => p.naive_flops(),
+            OpKind::FullyConnected { m, k, n } => 2.0 * (*m * *k * *n) as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Bytes moved through DRAM (first-order).
+    pub fn dram_bytes(&self) -> f64 {
+        match self {
+            OpKind::Input => 0.0,
+            OpKind::Conv(p) => p.min_dram_bytes(),
+            OpKind::Pool {
+                bytes_in,
+                bytes_out,
+            } => (*bytes_in + *bytes_out) as f64,
+            OpKind::Relu { bytes }
+            | OpKind::Concat { bytes }
+            | OpKind::Lrn { bytes }
+            | OpKind::BatchNorm { bytes } => 2.0 * *bytes as f64,
+            OpKind::Add { bytes } => 3.0 * *bytes as f64,
+            OpKind::FullyConnected { m, k, n } => {
+                4.0 * ((*m * *k) + (*k * *n) + (*m * *n)) as f64
+            }
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Conv(_) => "conv",
+            OpKind::Pool { .. } => "pool",
+            OpKind::Relu { .. } => "relu",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Add { .. } => "add",
+            OpKind::Lrn { .. } => "lrn",
+            OpKind::BatchNorm { .. } => "batchnorm",
+            OpKind::FullyConnected { .. } => "fc",
+        }
+    }
+}
+
+/// A node in the network DAG.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub id: usize,
+    pub name: String,
+    pub kind: OpKind,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_detection() {
+        let c = OpKind::Conv(ConvParams::incep3a_3x3(1));
+        assert!(c.is_conv());
+        assert!(!OpKind::Relu { bytes: 8 }.is_conv());
+    }
+
+    #[test]
+    fn fc_flops() {
+        let fc = OpKind::FullyConnected { m: 2, k: 3, n: 4 };
+        assert_eq!(fc.flops(), 48.0);
+    }
+
+    #[test]
+    fn data_movement_ops_have_zero_flops() {
+        assert_eq!(OpKind::Concat { bytes: 100 }.flops(), 0.0);
+        assert_eq!(OpKind::Pool { bytes_in: 8, bytes_out: 4 }.flops(), 0.0);
+        assert!(OpKind::Concat { bytes: 100 }.dram_bytes() > 0.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Training-graph construction: append the backward pass to a forward DAG.
+//!
+//! The paper frames its problem as *training* time ("Training large-scale
+//! CNNs is extremely time-consuming..."), and the backward pass multiplies
+//! the inter-op parallelism it studies:
+//!
+//! - every convolution's **dgrad and wgrad are mutually independent** —
+//!   so even a *linear* network (AlexNet) exposes 2-wide convolution
+//!   parallelism during backprop, and
+//! - inception modules' four branch gradients are independent, exactly
+//!   mirroring the forward fork/join.
+//!
+//! Backward convolutions are emitted as `OpKind::Conv` with the
+//! FLOP-equivalent parameters from `convlib::backward`, so the scheduler
+//! applies the full seven-algorithm selection to them too (as cuDNN does
+//! with its separate bwd algorithm enums).
+
+use crate::convlib::backward::{dgrad_params, wgrad_params};
+
+use super::dag::Dag;
+use super::op::OpKind;
+
+/// Build the forward+backward DAG for one training iteration.
+///
+/// For every forward op `i` a grad node `g(i)` (gradient w.r.t. `i`'s
+/// input) is added, depending on the grad nodes of all of `i`'s
+/// successors; convolutions additionally emit an independent wgrad node.
+/// Forward activations are assumed resident (no rematerialization), so
+/// grad nodes depend only on the backward frontier — matching how DL
+/// frameworks schedule backprop.
+pub fn training_dag(fwd: &Dag) -> Dag {
+    let mut g = fwd.clone();
+    let order = fwd.topo_order().expect("forward graph is a DAG");
+    // loss node closes the forward graph
+    let sinks: Vec<usize> = (0..fwd.len())
+        .filter(|&i| fwd.succs(i).is_empty())
+        .collect();
+    let loss = g.add_after("loss", OpKind::Relu { bytes: 4 }, &sinks);
+
+    // reverse topological emission of grad nodes
+    let mut grad_of = vec![usize::MAX; fwd.len()];
+    for &i in order.iter().rev() {
+        // the grad of i's output is produced by the grad nodes of its
+        // successors (or the loss for sinks)
+        let deps: Vec<usize> = if fwd.succs(i).is_empty() {
+            vec![loss]
+        } else {
+            fwd.succs(i).iter().map(|&s| grad_of[s]).collect()
+        };
+        let name = format!("{}_bwd", fwd.ops[i].name);
+        let node = match &fwd.ops[i].kind {
+            OpKind::Conv(p) => {
+                // wgrad: independent leaf (parameter gradient)
+                g.add_after(
+                    format!("{}_wgrad", fwd.ops[i].name),
+                    OpKind::Conv(wgrad_params(p)),
+                    &deps,
+                );
+                // dgrad: continues the backward chain
+                g.add_after(name, OpKind::Conv(dgrad_params(p)), &deps)
+            }
+            OpKind::Input => {
+                // no gradient needed past the input; emit a no-op marker
+                g.add_after(name, OpKind::Relu { bytes: 4 }, &deps)
+            }
+            OpKind::FullyConnected { m, k, n } => {
+                // dX = dY W^T and dW = X^T dY: emit as one fused GEMM op
+                // of twice the forward work
+                g.add_after(
+                    name,
+                    OpKind::FullyConnected { m: *m, k: *n, n: 2 * *k },
+                    &deps,
+                )
+            }
+            // bandwidth ops: backward moves the same bytes again
+            other => g.add_after(name, other.clone(), &deps),
+        };
+        grad_of[i] = node;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Network;
+
+    #[test]
+    fn training_dag_is_acyclic_and_doubles_convs() {
+        for net in Network::ALL {
+            let fwd = net.build(8);
+            let tr = training_dag(&fwd);
+            assert!(tr.is_acyclic(), "{net:?}");
+            // each fwd conv contributes dgrad + wgrad
+            assert_eq!(
+                tr.conv_ids().len(),
+                3 * fwd.conv_ids().len(),
+                "{net:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_network_gains_bwd_parallelism() {
+        // THE training-specific finding: AlexNet has zero independent conv
+        // pairs forward, but dgrad/wgrad pairs are independent in backward.
+        let fwd = Network::AlexNet.build(8);
+        assert_eq!(fwd.independent_conv_pairs().len(), 0);
+        let tr = training_dag(&fwd);
+        assert!(
+            tr.independent_conv_pairs().len() >= 5,
+            "got {}",
+            tr.independent_conv_pairs().len()
+        );
+    }
+
+    #[test]
+    fn dgrad_wgrad_of_same_conv_are_independent() {
+        let fwd = Network::GoogleNet.build(4);
+        let tr = training_dag(&fwd);
+        let d = tr
+            .ops
+            .iter()
+            .position(|o| o.name == "incep3a_b3_bwd")
+            .unwrap();
+        let w = tr
+            .ops
+            .iter()
+            .position(|o| o.name == "incep3a_b3_wgrad")
+            .unwrap();
+        assert!(tr.independent(d, w));
+    }
+
+    #[test]
+    fn backward_preserves_branch_independence() {
+        let fwd = Network::GoogleNet.build(4);
+        let tr = training_dag(&fwd);
+        let b3 = tr
+            .ops
+            .iter()
+            .position(|o| o.name == "incep3a_b3_bwd")
+            .unwrap();
+        let b5 = tr
+            .ops
+            .iter()
+            .position(|o| o.name == "incep3a_b5_bwd")
+            .unwrap();
+        assert!(tr.independent(b3, b5));
+    }
+
+    #[test]
+    fn grad_flows_from_loss_to_stem() {
+        let fwd = Network::AlexNet.build(2);
+        let tr = training_dag(&fwd);
+        let loss = tr.ops.iter().position(|o| o.name == "loss").unwrap();
+        let stem_wgrad = tr
+            .ops
+            .iter()
+            .position(|o| o.name == "conv1_wgrad")
+            .unwrap();
+        assert!(tr.reaches(loss, stem_wgrad));
+    }
+}

@@ -1,0 +1,49 @@
+//! # parconv — concurrent CNN operations on a (simulated) GPU
+//!
+//! Reproduction of *"Brief Announcement: On the Limits of Parallelizing
+//! Convolutional Neural Networks on GPUs"* (Pourghassemi et al., SPAA '20).
+//!
+//! The paper observes that modern non-linear CNNs (GoogleNet, ResNet, …)
+//! expose inter-operation parallelism that DL frameworks leave on the
+//! table, because cuDNN convolution kernels exhaust SM static resources
+//! and therefore serialize even across CUDA streams. It proposes
+//! profile-guided convolution-algorithm selection plus inter-/intra-SM
+//! partitioning, and concludes that GPU simulators are the vehicle for
+//! evaluating the idea. This crate **is** that vehicle:
+//!
+//! - [`gpusim`] — an event-driven SM-level GPU simulator (default device:
+//!   Tesla K40) with streams, block-level co-residency, and the paper's
+//!   proposed inter-SM / intra-SM partitioning.
+//! - [`convlib`] — a cuDNN-like library of the seven forward-convolution
+//!   algorithms: launch configuration, SM resource footprint, workspace
+//!   and time models, calibrated against the paper's Tables 1–2.
+//! - [`graph`] — linear and non-linear network DAGs (AlexNet, VGG-16,
+//!   GoogleNet, ResNet-50, DenseNet, PathNet).
+//! - [`coordinator`] — the scheduler: ready-queue execution over streams,
+//!   workspace-aware admission, and algorithm-selection policies
+//!   (TensorFlow-style fastest-only vs the paper's profile-guided
+//!   multi-metric selection), plus complementary-pair discovery.
+//! - [`runtime`] — PJRT CPU client running the AOT-compiled JAX/Pallas
+//!   artifacts, so every scheduled convolution's *numerics* are real.
+//! - [`trainer`] — an SGD loop over the AOT `train_step` artifact.
+//! - [`profiler`] — nvprof-equivalent metric reports (Table 1 format) and
+//!   chrome-trace export of simulated timelines.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod convlib;
+pub mod coordinator;
+pub mod gpusim;
+pub mod graph;
+pub mod memory;
+pub mod profiler;
+pub mod runtime;
+pub mod trainer;
+pub mod util;
+
+pub use convlib::{Algorithm, ConvParams};
+pub use coordinator::{Coordinator, SelectionPolicy};
+pub use gpusim::{DeviceSpec, PartitionMode};
+pub use graph::Network;

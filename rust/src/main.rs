@@ -1,0 +1,542 @@
+//! `parconv` — launcher CLI.
+//!
+//! Subcommands map one-to-one onto the experiment index in DESIGN.md:
+//!
+//! ```text
+//! parconv table1                       # E1: Table 1 resource profiles
+//! parconv table2                       # E2: Table 2 workspace/runtime
+//! parconv networks                     # E3: Figure 1 structure stats
+//! parconv serialization                # E4: streams serialize w/ cuDNN picks
+//! parconv discover   [--network N]     # E5: complementary pairs ("27 cases")
+//! parconv end2end    [--network N]     # E6: policy x partition matrix
+//! parconv validate                     # E7: artifact numerics cross-check
+//! parconv train      [--steps N]       # E8: e2e training loop (loss curve)
+//! parconv trace      [--out F]         # chrome-trace of one iteration
+//! ```
+//!
+//! Global flags: `--config FILE`, `--device k40|p100|v100`, `--batch N`,
+//! `--policy P`, `--partition M`, `--streams N`, `--workspace-mb N`,
+//! `--artifacts DIR`.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use parconv::config::RunConfig;
+use parconv::convlib::{kernel_desc, Algorithm, ConvParams, ALL_ALGORITHMS};
+use parconv::coordinator::{
+    discover_pairs, Coordinator, ScheduleConfig, SelectionPolicy,
+};
+use parconv::gpusim::{isolated_time_us, DeviceSpec, Engine, PartitionMode};
+use parconv::graph::Network;
+use parconv::profiler::{chrome_trace_json, table1_report, table1_row};
+use parconv::trainer::Trainer;
+use parconv::util::{fmt_bytes, fmt_us, Table};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Minimal flag parser: subcommand + `--key value` pairs.
+struct Cli {
+    cmd: String,
+    cfg: RunConfig,
+    min_speedup: f64,
+    steps: usize,
+    out: Option<String>,
+}
+
+fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
+    let mut cmd = String::from("help");
+    let mut it = args.into_iter().peekable();
+    if let Some(first) = it.peek() {
+        if !first.starts_with("--") {
+            cmd = it.next().unwrap();
+        }
+    }
+    let mut cfg = RunConfig::default();
+    let mut min_speedup = 1.05;
+    let mut steps = 300usize;
+    let mut out = None;
+    while let Some(flag) = it.next() {
+        let mut val = || -> anyhow::Result<String> {
+            it.next()
+                .ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+        };
+        match flag.as_str() {
+            "--config" => cfg = RunConfig::from_file(Path::new(&val()?))?,
+            "--device" => cfg.device = val()?,
+            "--network" => cfg.network = val()?,
+            "--batch" => cfg.batch = val()?.parse()?,
+            "--policy" => cfg.scheduler.policy = val()?,
+            "--partition" => cfg.scheduler.partition = val()?,
+            "--streams" => cfg.scheduler.streams = val()?.parse()?,
+            "--workspace-mb" => {
+                cfg.scheduler.workspace_limit =
+                    val()?.parse::<u64>()? * 1024 * 1024
+            }
+            "--artifacts" => cfg.artifacts_dir = val()?,
+            "--min-speedup" => min_speedup = val()?.parse()?,
+            "--steps" => steps = val()?.parse()?,
+            "--out" => out = Some(val()?),
+            other => anyhow::bail!("unknown flag {other}"),
+        }
+    }
+    Ok(Cli {
+        cmd,
+        cfg,
+        min_speedup,
+        steps,
+        out,
+    })
+}
+
+fn device(cfg: &RunConfig) -> anyhow::Result<DeviceSpec> {
+    DeviceSpec::preset(&cfg.device)
+        .ok_or_else(|| anyhow::anyhow!("unknown device {:?}", cfg.device))
+}
+
+fn network(cfg: &RunConfig) -> anyhow::Result<Network> {
+    Network::parse(&cfg.network)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", cfg.network))
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let cli = parse_cli(args)?;
+    match cli.cmd.as_str() {
+        "table1" => cmd_table1(&cli),
+        "table2" => cmd_table2(&cli),
+        "networks" => cmd_networks(&cli),
+        "serialization" => cmd_serialization(&cli),
+        "discover" => cmd_discover(&cli),
+        "end2end" => cmd_end2end(&cli),
+        "training" => cmd_training(&cli),
+        "validate" => cmd_validate(&cli),
+        "train" => cmd_train(&cli),
+        "trace" => cmd_trace(&cli),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "parconv — concurrent CNN ops on a simulated GPU (SPAA'20 reproduction)
+commands: table1 table2 networks serialization discover end2end training validate train trace help";
+
+// --------------------------------------------------------------------------
+
+fn cmd_table1(cli: &Cli) -> anyhow::Result<()> {
+    let dev = device(&cli.cfg)?;
+    let b = cli.cfg.batch;
+    println!(
+        "Table 1 — resource utilization of two independent convolutions\n\
+         (first inception module of GoogleNet, {} batch {b})\n",
+        dev.name
+    );
+    let mut rows = Vec::new();
+    for (label, p) in [
+        ("Incep. 1 (3*3)", ConvParams::incep3a_3x3(b)),
+        ("Incep. 1 (5*5)", ConvParams::incep3a_5x5(b)),
+    ] {
+        for algo in [Algorithm::ImplicitPrecompGemm, Algorithm::FftTiling] {
+            if let Some(r) = table1_row(label, algo, &p, &dev) {
+                rows.push(r);
+            }
+        }
+    }
+    println!("{}", table1_report(&rows));
+    Ok(())
+}
+
+fn cmd_table2(cli: &Cli) -> anyhow::Result<()> {
+    let dev = device(&cli.cfg)?;
+    let p = ConvParams::table2_5x5();
+    println!(
+        "Table 2 — workspace vs runtime, 5x5 convolution of the third\n\
+         inception module of GoogleNet on {} ({})\n",
+        dev.name,
+        p.short()
+    );
+    let mut t = Table::new(vec![
+        "Convolution Algorithm",
+        "Workspace Memory",
+        "Runtime",
+    ]);
+    for &algo in ALL_ALGORITHMS {
+        match kernel_desc(algo, &p, &dev) {
+            Some(d) => {
+                t.row(vec![
+                    algo.name().to_string(),
+                    fmt_bytes(d.workspace_bytes),
+                    fmt_us(isolated_time_us(&d, &dev)),
+                ]);
+            }
+            None => t.row(vec![
+                algo.name().to_string(),
+                "-".into(),
+                "not supported".into(),
+            ]),
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_networks(cli: &Cli) -> anyhow::Result<()> {
+    let b = cli.cfg.batch;
+    println!("Figure 1 — linear vs non-linear network structure (batch {b})\n");
+    let mut t = Table::new(vec![
+        "Network",
+        "Class",
+        "Ops",
+        "Convs",
+        "Forks",
+        "Joins",
+        "MaxWidth",
+        "ConvWidth",
+        "IndepConvPairs",
+    ]);
+    for net in Network::ALL {
+        let s = net.build(b).stats();
+        t.row(vec![
+            net.name().to_string(),
+            if s.is_linear() { "linear" } else { "non-linear" }.to_string(),
+            s.ops.to_string(),
+            s.convs.to_string(),
+            s.forks.to_string(),
+            s.joins.to_string(),
+            s.max_width.to_string(),
+            s.max_conv_width.to_string(),
+            s.independent_conv_pairs.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serialization(cli: &Cli) -> anyhow::Result<()> {
+    let dev = device(&cli.cfg)?;
+    let b = cli.cfg.batch;
+    let p3 = ConvParams::incep3a_3x3(b);
+    let p5 = ConvParams::incep3a_5x5(b);
+    println!(
+        "E4 — do two independent convolutions actually run concurrently?\n\
+         (inception-3a 3x3 + 5x5, batch {b}, {})\n",
+        dev.name
+    );
+    let mut t = Table::new(vec![
+        "Scenario",
+        "Algo A",
+        "Algo B",
+        "Makespan",
+        "Speedup vs serial",
+    ]);
+    let scenarios: Vec<(&str, Algorithm, Algorithm, PartitionMode)> = vec![
+        (
+            "TF picks, 2 streams",
+            Algorithm::ImplicitPrecompGemm,
+            Algorithm::ImplicitPrecompGemm,
+            PartitionMode::StreamsOnly,
+        ),
+        (
+            "TF picks, intra-SM",
+            Algorithm::ImplicitPrecompGemm,
+            Algorithm::ImplicitPrecompGemm,
+            PartitionMode::IntraSm,
+        ),
+        (
+            "complementary, 2 streams",
+            Algorithm::ImplicitPrecompGemm,
+            Algorithm::FftTiling,
+            PartitionMode::StreamsOnly,
+        ),
+        (
+            "complementary, inter-SM",
+            Algorithm::ImplicitPrecompGemm,
+            Algorithm::FftTiling,
+            PartitionMode::InterSm,
+        ),
+        (
+            "complementary, intra-SM",
+            Algorithm::ImplicitPrecompGemm,
+            Algorithm::FftTiling,
+            PartitionMode::IntraSm,
+        ),
+    ];
+    for (label, aa, ab, mode) in scenarios {
+        let da = kernel_desc(aa, &p3, &dev).unwrap();
+        let db = kernel_desc(ab, &p5, &dev).unwrap();
+        let mut e = Engine::new(dev.clone(), mode);
+        e.launch(da, 0);
+        e.launch(db, 1);
+        let r = e.run();
+        t.row(vec![
+            label.to_string(),
+            aa.name().to_string(),
+            ab.name().to_string(),
+            fmt_us(r.makespan_us),
+            format!("{:.2}x", r.speedup_vs_serial()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_discover(cli: &Cli) -> anyhow::Result<()> {
+    let dev = device(&cli.cfg)?;
+    let net = network(&cli.cfg)?;
+    let dag = net.build(cli.cfg.batch);
+    let budget = cli.cfg.scheduler.workspace_limit;
+    let findings = discover_pairs(&dag, &dev, budget, cli.min_speedup);
+    println!(
+        "E5 — complementary conv pairs in {} (batch {}, budget {}, \
+         min speedup {:.2}x): {} cases\n",
+        net.name(),
+        cli.cfg.batch,
+        fmt_bytes(budget),
+        cli.min_speedup,
+        findings.len()
+    );
+    let mut t = Table::new(vec![
+        "Conv A", "Conv B", "Algo A", "Algo B", "Serial", "Paired",
+        "Speedup", "Workspace",
+    ]);
+    for f in findings.iter().take(15) {
+        t.row(vec![
+            f.name_a.clone(),
+            f.name_b.clone(),
+            f.algo_a.name().to_string(),
+            f.algo_b.name().to_string(),
+            fmt_us(f.serial_us),
+            fmt_us(f.paired_us),
+            format!("{:.2}x", f.speedup()),
+            fmt_bytes(f.combined_workspace),
+        ]);
+    }
+    println!("{}", t.render());
+    if findings.len() > 15 {
+        println!("... and {} more", findings.len() - 15);
+    }
+    Ok(())
+}
+
+fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
+    let dev = device(&cli.cfg)?;
+    let net = network(&cli.cfg)?;
+    let dag = net.build(cli.cfg.batch);
+    println!(
+        "E6 — one {} iteration (batch {}) under policy x partition\n",
+        net.name(),
+        cli.cfg.batch
+    );
+    let mut t = Table::new(vec![
+        "Policy",
+        "Partition",
+        "Makespan",
+        "Conv overlap",
+        "Peak workspace",
+        "Fallbacks",
+    ]);
+    let combos: Vec<(SelectionPolicy, PartitionMode, usize)> = vec![
+        (SelectionPolicy::FastestOnly, PartitionMode::Serial, 1),
+        (SelectionPolicy::FastestOnly, PartitionMode::StreamsOnly, 4),
+        (SelectionPolicy::ProfileGuided, PartitionMode::InterSm, 2),
+        (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 2),
+        (SelectionPolicy::MemoryMin, PartitionMode::Serial, 1),
+    ];
+    for (policy, partition, streams) in combos {
+        let coord = Coordinator::new(
+            dev.clone(),
+            ScheduleConfig {
+                policy,
+                partition,
+                streams,
+                workspace_limit: cli.cfg.scheduler.workspace_limit,
+            },
+        );
+        let r = coord.execute_dag(&dag);
+        t.row(vec![
+            policy.name().to_string(),
+            partition.name().to_string(),
+            fmt_us(r.makespan_us),
+            fmt_us(r.conv_overlap_us),
+            fmt_bytes(r.peak_workspace),
+            r.ws_fallbacks.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
+    use parconv::graph::training_dag;
+    let dev = device(&cli.cfg)?;
+    let net = network(&cli.cfg)?;
+    let fwd = net.build(cli.cfg.batch);
+    let train = training_dag(&fwd);
+    println!(
+        "E9 — {} training iteration (fwd+bwd), batch {}: {} ops, {} convs, \
+         {} independent conv pairs (fwd alone: {})\n",
+        net.name(),
+        cli.cfg.batch,
+        train.len(),
+        train.conv_ids().len(),
+        train.independent_conv_pairs().len(),
+        fwd.independent_conv_pairs().len(),
+    );
+    let mut t = Table::new(vec![
+        "Policy",
+        "Partition",
+        "Makespan",
+        "Conv overlap",
+        "Peak workspace",
+    ]);
+    for (policy, partition, streams) in [
+        (SelectionPolicy::FastestOnly, PartitionMode::Serial, 1),
+        (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 2),
+        (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 4),
+    ] {
+        let r = Coordinator::new(
+            dev.clone(),
+            ScheduleConfig {
+                policy,
+                partition,
+                streams,
+                workspace_limit: cli.cfg.scheduler.workspace_limit,
+            },
+        )
+        .execute_dag(&train);
+        t.row(vec![
+            policy.name().to_string(),
+            partition.name().to_string(),
+            fmt_us(r.makespan_us),
+            fmt_us(r.conv_overlap_us),
+            fmt_bytes(r.peak_workspace),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_validate(cli: &Cli) -> anyhow::Result<()> {
+    use parconv::runtime::{Runtime, Tensor};
+    let dir = Path::new(&cli.cfg.artifacts_dir);
+    let mut rt = Runtime::new(dir)?;
+    println!(
+        "E7 — numerics: all algorithm artifacts agree (platform: {})\n",
+        rt.platform()
+    );
+    let mut prng = parconv::util::Prng::new(cli.cfg.seed);
+    for case in ["c3", "c5"] {
+        let names: Vec<String> = rt
+            .manifest()
+            .names()
+            .into_iter()
+            .filter(|n| n.starts_with("conv_") && n.ends_with(case))
+            .map(String::from)
+            .collect();
+        anyhow::ensure!(!names.is_empty(), "no conv artifacts for {case}");
+        let spec = rt.manifest().get(&names[0]).unwrap();
+        let xin: Vec<f32> = (0..spec.inputs[0].element_count())
+            .map(|_| prng.next_normal() as f32)
+            .collect();
+        let win: Vec<f32> = (0..spec.inputs[1].element_count())
+            .map(|_| prng.next_normal() as f32 * 0.2)
+            .collect();
+        let inputs = vec![Tensor::F32(xin.clone()), Tensor::F32(win.clone())];
+        let mut reference: Option<(String, Vec<f32>)> = None;
+        for name in &names {
+            let out = rt.run(name, &inputs)?;
+            let y = out[0].as_f32()?.to_vec();
+            match &reference {
+                None => {
+                    println!(
+                        "  {case}: reference = {name} ({} elems)",
+                        y.len()
+                    );
+                    reference = Some((name.clone(), y));
+                }
+                Some((rname, ry)) => {
+                    let max_err = y
+                        .iter()
+                        .zip(ry)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    anyhow::ensure!(
+                        max_err < 2e-3,
+                        "{name} disagrees with {rname}: max err {max_err}"
+                    );
+                    println!(
+                        "  {case}: {name:38} max|err| = {max_err:.2e}  OK"
+                    );
+                }
+            }
+        }
+    }
+    println!("\nall conv algorithms produce identical outputs ✓");
+    Ok(())
+}
+
+fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
+    let dir = Path::new(&cli.cfg.artifacts_dir);
+    println!(
+        "E8 — training mini-GoogleNet via AOT train_step ({} steps)\n",
+        cli.steps
+    );
+    let mut trainer = Trainer::new(dir)?;
+    println!(
+        "loaded {} params, {} batches",
+        trainer.num_params(),
+        trainer.num_batches()
+    );
+    let log_every = (cli.steps / 20).max(1);
+    let logs = trainer.train(cli.steps, log_every, |l| {
+        println!(
+            "step {:4}  loss {:.4}  ({:.1} ms/step)",
+            l.step, l.loss, l.wall_ms
+        );
+    })?;
+    let first = logs.first().unwrap().loss;
+    let last = logs.last().unwrap().loss;
+    println!("\nloss: {first:.4} -> {last:.4}");
+    anyhow::ensure!(last < first, "loss did not decrease");
+    if let Some(out) = &cli.out {
+        let mut csv = String::from("step,loss,wall_ms\n");
+        for l in &logs {
+            csv.push_str(&format!("{},{},{}\n", l.step, l.loss, l.wall_ms));
+        }
+        std::fs::write(out, csv)?;
+        println!("wrote loss curve to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(cli: &Cli) -> anyhow::Result<()> {
+    let dev = device(&cli.cfg)?;
+    let b = cli.cfg.batch;
+    // trace one complementary-pair co-execution
+    let p3 = ConvParams::incep3a_3x3(b);
+    let da = kernel_desc(Algorithm::ImplicitPrecompGemm, &p3, &dev).unwrap();
+    let db = kernel_desc(Algorithm::FftTiling, &p3, &dev).unwrap();
+    let mut e = Engine::new(dev, PartitionMode::IntraSm);
+    e.launch(da, 0);
+    e.launch(db, 1);
+    let r = e.run();
+    let json = chrome_trace_json(&r);
+    let out = cli.out.clone().unwrap_or_else(|| "trace.json".into());
+    std::fs::write(&out, json)?;
+    println!(
+        "wrote chrome trace ({} kernels, makespan {}) to {out}",
+        r.kernels.len(),
+        fmt_us(r.makespan_us)
+    );
+    Ok(())
+}

@@ -1,0 +1,218 @@
+//! Device-memory manager: workspace accounting and admission.
+//!
+//! The paper (§2, footnote 1): "to accommodate two or more convolutions on
+//! a GPU, DL frameworks need to ensure there is enough device memory
+//! available at launch time" — input/output/filter allocations are fixed at
+//! model construction, and *workspace* is the only degree of freedom. This
+//! module is that launch-time gate.
+
+use std::collections::HashMap;
+
+use crate::util::Prng;
+
+/// Why an allocation was refused.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum MemError {
+    #[error("out of device memory: requested {requested} bytes, {available} available of {capacity}")]
+    OutOfMemory {
+        requested: u64,
+        available: u64,
+        capacity: u64,
+    },
+    #[error("unknown allocation id {0}")]
+    UnknownAllocation(u64),
+}
+
+/// A workspace-budget allocator with per-allocation tracking and
+/// high-watermark accounting.
+#[derive(Clone, Debug)]
+pub struct DeviceMemory {
+    capacity: u64,
+    used: u64,
+    peak: u64,
+    next_id: u64,
+    live: HashMap<u64, u64>, // id -> bytes
+    failed_allocs: u64,
+    /// Failure injection: probability of spuriously refusing an allocation
+    /// (models fragmentation / transient cudaMalloc failures that real
+    /// frameworks must survive). None = disabled.
+    inject: Option<(f64, Prng)>,
+}
+
+impl DeviceMemory {
+    /// A manager over `capacity` bytes (the workspace budget: device memory
+    /// minus tensors/weights, set by the coordinator's config).
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            capacity,
+            used: 0,
+            peak: 0,
+            next_id: 1,
+            live: HashMap::new(),
+            failed_allocs: 0,
+            inject: None,
+        }
+    }
+
+    /// Manager that additionally refuses a random `rate` fraction of
+    /// allocations (failure injection for robustness tests).
+    pub fn with_failure_injection(capacity: u64, rate: f64, seed: u64) -> Self {
+        let mut m = Self::new(capacity);
+        m.inject = Some((rate.clamp(0.0, 1.0), Prng::new(seed)));
+        m
+    }
+
+    /// Try to allocate; returns an allocation id.
+    pub fn alloc(&mut self, bytes: u64) -> Result<u64, MemError> {
+        if bytes > 0 {
+            if let Some((rate, prng)) = &mut self.inject {
+                if prng.next_f64() < *rate {
+                    self.failed_allocs += 1;
+                    return Err(MemError::OutOfMemory {
+                        requested: bytes,
+                        available: self.capacity - self.used,
+                        capacity: self.capacity,
+                    });
+                }
+            }
+        }
+        if self.used + bytes > self.capacity {
+            self.failed_allocs += 1;
+            return Err(MemError::OutOfMemory {
+                requested: bytes,
+                available: self.capacity - self.used,
+                capacity: self.capacity,
+            });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.live.insert(id, bytes);
+        Ok(id)
+    }
+
+    /// Would an allocation of `bytes` succeed right now?
+    pub fn can_alloc(&self, bytes: u64) -> bool {
+        self.used + bytes <= self.capacity
+    }
+
+    /// Release an allocation.
+    pub fn free(&mut self, id: u64) -> Result<(), MemError> {
+        let bytes = self
+            .live
+            .remove(&id)
+            .ok_or(MemError::UnknownAllocation(id))?;
+        self.used -= bytes;
+        Ok(())
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn available(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// High-watermark of concurrent workspace use.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Number of refused allocations (OOM events).
+    pub fn failed_allocs(&self) -> u64 {
+        self.failed_allocs
+    }
+
+    pub fn live_allocations(&self) -> usize {
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut m = DeviceMemory::new(1000);
+        let a = m.alloc(400).unwrap();
+        let b = m.alloc(600).unwrap();
+        assert_eq!(m.used(), 1000);
+        assert_eq!(m.available(), 0);
+        m.free(a).unwrap();
+        assert_eq!(m.used(), 600);
+        m.free(b).unwrap();
+        assert_eq!(m.used(), 0);
+        assert_eq!(m.peak(), 1000);
+    }
+
+    #[test]
+    fn oom_refused_and_counted() {
+        let mut m = DeviceMemory::new(100);
+        let _a = m.alloc(80).unwrap();
+        let err = m.alloc(30).unwrap_err();
+        assert!(matches!(err, MemError::OutOfMemory { requested: 30, .. }));
+        assert_eq!(m.failed_allocs(), 1);
+        // state unchanged after refusal
+        assert_eq!(m.used(), 80);
+    }
+
+    #[test]
+    fn zero_byte_alloc_fine() {
+        let mut m = DeviceMemory::new(10);
+        let id = m.alloc(0).unwrap();
+        m.free(id).unwrap();
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut m = DeviceMemory::new(10);
+        let id = m.alloc(5).unwrap();
+        m.free(id).unwrap();
+        assert_eq!(m.free(id), Err(MemError::UnknownAllocation(id)));
+    }
+
+    #[test]
+    fn failure_injection_refuses_some_allocs() {
+        let mut m = DeviceMemory::with_failure_injection(1 << 30, 0.5, 7);
+        let mut ok = 0;
+        let mut fail = 0;
+        for _ in 0..200 {
+            match m.alloc(64) {
+                Ok(id) => {
+                    ok += 1;
+                    m.free(id).unwrap();
+                }
+                Err(_) => fail += 1,
+            }
+        }
+        assert!(ok > 50 && fail > 50, "ok {ok} fail {fail}");
+        assert_eq!(m.failed_allocs(), fail);
+        // state stays consistent after refusals
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    fn injection_rate_zero_is_noop() {
+        let mut m = DeviceMemory::with_failure_injection(100, 0.0, 1);
+        for _ in 0..50 {
+            let id = m.alloc(10).unwrap();
+            m.free(id).unwrap();
+        }
+    }
+
+    #[test]
+    fn can_alloc_matches_alloc() {
+        let mut m = DeviceMemory::new(64);
+        assert!(m.can_alloc(64));
+        let _ = m.alloc(60).unwrap();
+        assert!(m.can_alloc(4));
+        assert!(!m.can_alloc(5));
+    }
+}

@@ -1,0 +1,8 @@
+//! The nvprof equivalent: per-kernel metric reports (paper Table 1 format)
+//! and chrome-trace export of simulated timelines.
+
+mod report;
+mod trace;
+
+pub use report::{table1_report, table1_row, Table1Row};
+pub use trace::chrome_trace_json;

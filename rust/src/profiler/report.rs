@@ -1,0 +1,122 @@
+//! Table-1-style resource-utilization reports.
+
+use crate::convlib::{kernel_desc, Algorithm, ConvParams};
+use crate::gpusim::{static_utilization, DeviceSpec};
+use crate::util::Table;
+
+/// One profiled row: the paper's Table 1 columns.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub layer: String,
+    pub algorithm: String,
+    pub kernel_name: String,
+    pub registers_pct: f64,
+    pub shared_memory_pct: f64,
+    pub threads_pct: f64,
+    pub blocks_pct: f64,
+    pub alu_pct: f64,
+    pub mem_stall_pct: f64,
+}
+
+/// Profile one (conv, algorithm) pair on a device. `None` if the algorithm
+/// does not support the convolution.
+pub fn table1_row(
+    layer: &str,
+    algo: Algorithm,
+    p: &ConvParams,
+    dev: &DeviceSpec,
+) -> Option<Table1Row> {
+    let desc = kernel_desc(algo, p, dev)?;
+    let u = static_utilization(&desc.launch, dev);
+    Some(Table1Row {
+        layer: layer.to_string(),
+        algorithm: algo.name().to_string(),
+        kernel_name: algo.kernel_name().to_string(),
+        registers_pct: u.registers,
+        shared_memory_pct: u.shared_memory,
+        threads_pct: u.threads,
+        blocks_pct: u.blocks,
+        alu_pct: desc.alu_util * 100.0,
+        mem_stall_pct: desc.mem_stall_frac * 100.0,
+    })
+}
+
+/// Render rows in the paper's Table 1 layout.
+pub fn table1_report(rows: &[Table1Row]) -> String {
+    let mut t = Table::new(vec![
+        "Layer",
+        "Algorithm",
+        "Kernel name",
+        "Registers",
+        "Shared Memory",
+        "Threads",
+        "Blocks",
+        "ALUs",
+        "Memory stalls",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.layer.clone(),
+            r.algorithm.clone(),
+            r.kernel_name.clone(),
+            format!("{:.0}%", r.registers_pct),
+            format!("{:.0}%", r.shared_memory_pct),
+            format!("{:.0}%", r.threads_pct),
+            format!("{:.0}%", r.blocks_pct),
+            format!("{:.0}%", r.alu_pct),
+            format!("{:.2}%", r.mem_stall_pct),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table1_first_row() {
+        // Incep.1 (3x3) PRECOMP_GEMM: 92/39/38/19/70/0.47
+        let r = table1_row(
+            "Incep. 1 (3*3)",
+            Algorithm::ImplicitPrecompGemm,
+            &ConvParams::incep3a_3x3(32),
+            &DeviceSpec::k40(),
+        )
+        .unwrap();
+        assert_eq!(r.kernel_name, "implicit_convolve_sgemm");
+        assert!((r.registers_pct - 92.0).abs() < 1.0, "{r:?}");
+        assert!((r.threads_pct - 38.0).abs() < 1.0, "{r:?}");
+        assert!((r.blocks_pct - 19.0).abs() < 1.0, "{r:?}");
+        assert!((r.alu_pct - 70.0).abs() < 2.0, "{r:?}");
+        assert!((r.mem_stall_pct - 0.47).abs() < 0.1, "{r:?}");
+    }
+
+    #[test]
+    fn unsupported_returns_none() {
+        let p7 = ConvParams::new(32, 3, 224, 224, 64, 7, 7, (2, 2), (3, 3));
+        assert!(table1_row(
+            "stem",
+            Algorithm::Fft,
+            &p7,
+            &DeviceSpec::k40()
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn report_renders_all_rows() {
+        let dev = DeviceSpec::k40();
+        let rows: Vec<Table1Row> = [
+            (Algorithm::ImplicitPrecompGemm, ConvParams::incep3a_3x3(32)),
+            (Algorithm::FftTiling, ConvParams::incep3a_3x3(32)),
+        ]
+        .iter()
+        .filter_map(|(a, p)| table1_row("Incep. 1", *a, p, &dev))
+        .collect();
+        let text = table1_report(&rows);
+        assert!(text.contains("implicit_convolve_sgemm"));
+        assert!(text.contains("fft2d_c2r_32x32"));
+        assert_eq!(text.lines().count(), 4);
+    }
+}

@@ -1,0 +1,76 @@
+//! Chrome-trace (about://tracing / Perfetto) export of simulated timelines.
+
+use crate::gpusim::SimResult;
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => {
+                format!("\\u{:04x}", c as u32).chars().collect()
+            }
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Serialize a simulation timeline as a Chrome trace-event JSON document.
+/// One row ("tid") per stream; complete events ("ph":"X") per kernel.
+pub fn chrome_trace_json(result: &SimResult) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for k in &result.kernels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"kernel\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":0,\"tid\":{}}}",
+            json_escape(&k.name),
+            k.start_us,
+            k.duration_us(),
+            k.stream
+        ));
+    }
+    out.push_str(&format!(
+        "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"makespan_us\":{:.3}}}}}",
+        result.makespan_us
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convlib::{kernel_desc, Algorithm, ConvParams};
+    use crate::gpusim::{DeviceSpec, Engine, PartitionMode};
+
+    #[test]
+    fn emits_valid_structure() {
+        let spec = DeviceSpec::k40();
+        let mut e = Engine::new(spec.clone(), PartitionMode::StreamsOnly);
+        let p = ConvParams::incep3a_3x3(8);
+        e.launch(
+            kernel_desc(Algorithm::ImplicitGemm, &p, &spec).unwrap(),
+            0,
+        );
+        e.launch(kernel_desc(Algorithm::FftTiling, &p, &spec).unwrap(), 1);
+        let r = e.run();
+        let json = chrome_trace_json(&r);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("implicit_convolve_sgemm"));
+        assert!(json.contains("makespan_us"));
+        // braces balanced
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn escapes_quotes() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\u000ay");
+    }
+}

@@ -1,0 +1,241 @@
+//! Artifact manifest: the positional ABI contract between `aot.py` and the
+//! Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact input/output (the subset the project uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one tensor in the ABI.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn parse(dtype: &str, shape: &str) -> Result<Self> {
+        let dtype = DType::parse(dtype)?;
+        let dims = if shape == "scalar" {
+            Vec::new()
+        } else {
+            shape
+                .split('x')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self { dtype, dims })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed `manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (lines: `artifact NAME`, `  file F`,
+    /// `  input DTYPE SHAPE`, `  output DTYPE SHAPE`).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut m = Manifest {
+            dir: dir.to_path_buf(),
+            ..Default::default()
+        };
+        let mut cur: Option<ArtifactSpec> = None;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            match tag {
+                "artifact" => {
+                    if let Some(a) = cur.take() {
+                        m.artifacts.insert(a.name.clone(), a);
+                    }
+                    let name =
+                        parts.next().context("artifact without name")?;
+                    cur = Some(ArtifactSpec {
+                        name: name.to_string(),
+                        hlo_path: PathBuf::new(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                "file" => {
+                    let f = parts.next().context("file without path")?;
+                    cur.as_mut()
+                        .with_context(|| format!("line {}: file outside artifact", ln + 1))?
+                        .hlo_path = dir.join(f);
+                }
+                "input" | "output" => {
+                    let dtype = parts.next().context("missing dtype")?;
+                    let shape = parts.next().context("missing shape")?;
+                    let spec = TensorSpec::parse(dtype, shape)?;
+                    let a = cur.as_mut().with_context(|| {
+                        format!("line {}: io outside artifact", ln + 1)
+                    })?;
+                    if tag == "input" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                other => bail!("line {}: unknown tag {other:?}", ln + 1),
+            }
+        }
+        if let Some(a) = cur.take() {
+            m.artifacts.insert(a.name.clone(), a);
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+/// Read a flat little-endian f32 blob (e.g. `init_params.bin`).
+pub fn read_f32_blob(path: &Path, expect_elems: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect_elems * 4 {
+        bail!(
+            "{}: expected {} f32 elems ({} bytes), got {} bytes",
+            path.display(),
+            expect_elems,
+            expect_elems * 4,
+            bytes.len()
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = "\
+# comment
+artifact conv_GEMM_c3
+  file conv_GEMM_c3.hlo.txt
+  input float32 4x16x16x16
+  input float32 32x16x3x3
+  output float32 4x32x16x16
+
+artifact train_step
+  file train_step.hlo.txt
+  input float32 16x3x32x32
+  input int32 16
+  output float32 scalar
+";
+
+    #[test]
+    fn parses_artifacts() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        let a = m.get("conv_GEMM_c3").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].dims, vec![4, 16, 16, 16]);
+        assert_eq!(a.outputs[0].element_count(), 4 * 32 * 16 * 16);
+        assert_eq!(
+            a.hlo_path,
+            PathBuf::from("/tmp/a/conv_GEMM_c3.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn scalar_and_int_shapes() {
+        let m = Manifest::parse(DOC, Path::new("/x")).unwrap();
+        let t = m.get("train_step").unwrap();
+        assert_eq!(t.inputs[1].dtype, DType::I32);
+        assert_eq!(t.inputs[1].dims, vec![16]);
+        assert_eq!(t.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(t.outputs[0].element_count(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line", Path::new("/x")).is_err());
+        assert!(
+            Manifest::parse("  input float32 2x2", Path::new("/x")).is_err()
+        );
+        assert!(Manifest::parse(
+            "artifact a\n  input float64 2",
+            Path::new("/x")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("train_step").is_some());
+            assert!(m.get("model_fwd").is_some());
+            assert_eq!(m.get("train_step").unwrap().inputs.len(), 30);
+            assert_eq!(m.get("train_step").unwrap().outputs.len(), 29);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! This is the request-path compute engine: the Rust coordinator calls
+//! these executables for every convolution / training step; Python is
+//! never involved after `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactSpec, DType, Manifest};
+
+/// A tensor crossing the runtime ABI.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+/// A compiled executable plus its ABI spec.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with ABI checking; returns one Tensor per declared output.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.len() != s.element_count() {
+                bail!(
+                    "{} input {i}: expected {} elements, got {}",
+                    self.spec.name,
+                    s.element_count(),
+                    t.len()
+                );
+            }
+            let dims: Vec<i64> = s.dims.iter().map(|&d| d as i64).collect();
+            let lit = match (t, s.dtype) {
+                (Tensor::F32(v), DType::F32) => {
+                    xla::Literal::vec1(v.as_slice())
+                }
+                (Tensor::I32(v), DType::I32) => {
+                    xla::Literal::vec1(v.as_slice())
+                }
+                _ => bail!("{} input {i}: dtype mismatch", self.spec.name),
+            };
+            let lit = if dims.is_empty() {
+                lit.reshape(&[])
+                    .with_context(|| format!("reshape input {i} to scalar"))?
+            } else {
+                lit.reshape(&dims)
+                    .with_context(|| format!("reshape input {i}"))?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.into_iter().zip(&self.spec.outputs) {
+            let t = match s.dtype {
+                DType::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+                DType::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+            };
+            if t.len() != s.element_count() {
+                bail!(
+                    "{} output: expected {} elements, got {}",
+                    self.spec.name,
+                    s.element_count(),
+                    t.len()
+                );
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+}
+
+/// The PJRT CPU runtime: manifest + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and return the executable for an artifact.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .with_context(|| format!("unknown artifact {name:?}"))?
+                .clone();
+            let proto =
+                xla::HloModuleProto::from_text_file(
+                    spec.hlo_path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| {
+                    format!("parsing {}", spec.hlo_path.display())
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache
+                .insert(name.to_string(), Executable { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load + run.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        self.cache[name].run(inputs)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime integration tests (which need built artifacts) live in
+    // rust/tests/runtime_numerics.rs; here we cover the Tensor ABI type.
+
+    #[test]
+    fn tensor_accessors() {
+        let f = Tensor::F32(vec![1.0, 2.0]);
+        assert_eq!(f.len(), 2);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        let i = Tensor::I32(vec![3]);
+        assert!(i.as_i32().is_ok());
+        assert!(i.as_f32().is_err());
+    }
+}

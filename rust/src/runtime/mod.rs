@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT CPU client executing the AOT-compiled JAX/Pallas
+//! artifacts (`artifacts/*.hlo.txt`) from the Rust request path.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and aot.py).
+
+pub mod artifact;
+mod client;
+
+pub use artifact::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use client::{Executable, Runtime, Tensor};

@@ -1,0 +1,162 @@
+//! Training loop over the AOT `train_step` artifact: the end-to-end driver
+//! proving the three layers compose (E8). The Rust side owns the loop,
+//! parameter state, and data; XLA executes the Pallas-backed fwd/bwd.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Runtime, Tensor};
+
+/// SGD trainer state.
+pub struct Trainer {
+    runtime: Runtime,
+    params: Vec<Tensor>,
+    batches: Vec<(Tensor, Tensor)>, // (x f32, y i32)
+    steps_done: usize,
+}
+
+/// One logged training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub wall_ms: f64,
+}
+
+impl Trainer {
+    /// Load artifacts, initial parameters, and the deterministic training
+    /// batches emitted by `aot.py`.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let runtime = Runtime::new(artifacts_dir)?;
+        let spec = runtime
+            .manifest()
+            .get("train_step")
+            .context("train_step artifact missing — run `make artifacts`")?
+            .clone();
+        if spec.inputs.len() < 3 {
+            bail!("train_step has unexpected ABI: {} inputs", spec.inputs.len());
+        }
+        // ABI: inputs = [x, y, params...]; outputs = [params..., loss]
+        let x_spec = &spec.inputs[0];
+        let y_spec = &spec.inputs[1];
+        let param_specs = &spec.inputs[2..];
+
+        // init_params.bin: concatenated f32 blobs in param order
+        let total: usize =
+            param_specs.iter().map(|s| s.element_count()).sum();
+        let blob = crate::runtime::artifact::read_f32_blob(
+            &artifacts_dir.join("init_params.bin"),
+            total,
+        )?;
+        let mut params = Vec::with_capacity(param_specs.len());
+        let mut off = 0usize;
+        for s in param_specs {
+            let n = s.element_count();
+            params.push(Tensor::F32(blob[off..off + n].to_vec()));
+            off += n;
+        }
+
+        // train_data.bin: 8 batches of x (f32) then y (i32)
+        let xn = x_spec.element_count();
+        let yn = y_spec.element_count();
+        let bytes = std::fs::read(artifacts_dir.join("train_data.bin"))
+            .context("reading train_data.bin")?;
+        let per_batch = xn * 4 + yn * 4;
+        if bytes.len() % per_batch != 0 {
+            bail!(
+                "train_data.bin size {} not a multiple of batch record {}",
+                bytes.len(),
+                per_batch
+            );
+        }
+        let mut batches = Vec::new();
+        for chunk in bytes.chunks_exact(per_batch) {
+            let x: Vec<f32> = chunk[..xn * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let y: Vec<i32> = chunk[xn * 4..]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            batches.push((Tensor::F32(x), Tensor::I32(y)));
+        }
+        if batches.is_empty() {
+            bail!("no training batches found");
+        }
+        Ok(Self {
+            runtime,
+            params,
+            batches,
+            steps_done: 0,
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Run one SGD step on the next batch (round-robin); returns the loss.
+    pub fn step(&mut self) -> Result<StepLog> {
+        let b = self.steps_done % self.batches.len();
+        let (x, y) = self.batches[b].clone();
+        let mut inputs = Vec::with_capacity(2 + self.params.len());
+        inputs.push(x);
+        inputs.push(y);
+        inputs.extend(self.params.iter().cloned());
+        let t0 = std::time::Instant::now();
+        let mut outputs = self.runtime.run("train_step", &inputs)?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let loss_t = outputs.pop().context("missing loss output")?;
+        let loss = loss_t.as_f32()?[0];
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {}: {loss}", self.steps_done);
+        }
+        self.params = outputs;
+        self.steps_done += 1;
+        Ok(StepLog {
+            step: self.steps_done,
+            loss,
+            wall_ms,
+        })
+    }
+
+    /// Train for `steps` steps, logging every `log_every`.
+    pub fn train(
+        &mut self,
+        steps: usize,
+        log_every: usize,
+        mut sink: impl FnMut(&StepLog),
+    ) -> Result<Vec<StepLog>> {
+        let mut logs = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let log = self.step()?;
+            if log_every > 0 && (i % log_every == 0 || i + 1 == steps) {
+                sink(&log);
+            }
+            logs.push(log);
+        }
+        Ok(logs)
+    }
+
+    /// Evaluate current logits on a batch via `model_fwd` (for examples).
+    pub fn forward_loss_proxy(&mut self) -> Result<f32> {
+        // re-run train_step on batch 0 and report its loss without keeping
+        // the updated parameters (cheap eval proxy)
+        let (x, y) = self.batches[0].clone();
+        let mut inputs = Vec::with_capacity(2 + self.params.len());
+        inputs.push(x);
+        inputs.push(y);
+        inputs.extend(self.params.iter().cloned());
+        let outputs = self.runtime.run("train_step", &inputs)?;
+        Ok(outputs.last().context("loss")?.as_f32()?[0])
+    }
+}
+
+// Integration tests that require built artifacts live in
+// rust/tests/train_loop.rs.

@@ -1,0 +1,63 @@
+//! Small self-contained utilities: PRNG, statistics, and table formatting.
+//!
+//! The offline vendored registry carries no `rand`/`criterion`/`serde`, so
+//! these are hand-rolled (and unit-tested) here.
+
+pub mod prng;
+pub mod stats;
+pub mod table;
+
+pub use prng::Prng;
+pub use stats::Summary;
+pub use table::Table;
+
+/// Format a byte count the way the paper's Table 2 does (KB/MB/GB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KB: f64 = 1024.0;
+    const MB: f64 = 1024.0 * 1024.0;
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let b = bytes as f64;
+    if bytes == 0 {
+        "0".to_string()
+    } else if b >= GB {
+        format!("{:.1} GB", b / GB)
+    } else if b >= MB {
+        format!("{:.0} MB", b / MB)
+    } else if b >= KB {
+        format!("{:.0} KB", b / KB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a duration in microseconds as the most natural unit.
+pub fn fmt_us(us: f64) -> String {
+    if us >= 1_000_000.0 {
+        format!("{:.2} s", us / 1_000_000.0)
+    } else if us >= 1_000.0 {
+        format!("{:.2} ms", us / 1_000.0)
+    } else {
+        format!("{us:.1} us")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting_matches_paper_units() {
+        assert_eq!(fmt_bytes(0), "0");
+        assert_eq!(fmt_bytes(48 * 1024), "48 KB");
+        assert_eq!(fmt_bytes(691 * 1024 * 1024), "691 MB");
+        assert_eq!(fmt_bytes((2.2 * 1024.0 * 1024.0 * 1024.0) as u64), "2.2 GB");
+        assert_eq!(fmt_bytes(500), "500 B");
+    }
+
+    #[test]
+    fn us_formatting() {
+        assert_eq!(fmt_us(36_000.0), "36.00 ms");
+        assert_eq!(fmt_us(1_500_000.0), "1.50 s");
+        assert_eq!(fmt_us(42.0), "42.0 us");
+    }
+}

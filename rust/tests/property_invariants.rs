@@ -1,0 +1,235 @@
+//! Property-based tests (hand-rolled generators — the offline registry has
+//! no proptest): randomized convolutions, kernel sets, and DAGs must
+//! satisfy the simulator's and convlib's invariants for every sample.
+
+use parconv::convlib::{
+    kernel_desc, supported_descs, Algorithm, ConvParams, ALL_ALGORITHMS,
+};
+use parconv::coordinator::estimate_pair_makespan_us;
+use parconv::gpusim::{
+    isolated_time_us, natural_residency, DeviceSpec, Engine, PartitionMode,
+};
+use parconv::util::Prng;
+
+fn random_conv(prng: &mut Prng) -> ConvParams {
+    let n = prng.range_u64(1, 64) as usize;
+    let c = prng.range_u64(1, 512) as usize;
+    let hw = *prng.choose(&[7usize, 14, 28, 56]);
+    let k = prng.range_u64(1, 512) as usize;
+    let (r, pad) = *prng.choose(&[(1usize, 0usize), (3, 1), (5, 2), (7, 3)]);
+    let stride = *prng.choose(&[1usize, 1, 1, 2]); // mostly stride 1
+    if hw < r {
+        return ConvParams::new(n, c, 28, 28, k, r, r, (1, 1), (pad, pad));
+    }
+    ConvParams::new(n, c, hw, hw, k, r, r, (stride, stride), (pad, pad))
+}
+
+#[test]
+fn convlib_descriptor_invariants_hold_for_random_convs() {
+    let dev = DeviceSpec::k40();
+    let mut prng = Prng::new(0xC0FFEE);
+    for i in 0..300 {
+        let p = random_conv(&mut prng);
+        let descs = supported_descs(&p, &dev);
+        assert!(
+            !descs.is_empty(),
+            "sample {i}: no supported algorithm for {}",
+            p.short()
+        );
+        // GEMM is the universal fallback
+        assert!(descs.iter().any(|d| d.algo == Algorithm::Gemm));
+        for d in &descs {
+            assert!(d.flops > 0.0, "{}", d.name);
+            assert!(d.dram_bytes >= p.min_dram_bytes() * 0.49, "{}", d.name);
+            assert!(d.alu_util > 0.0 && d.alu_util <= 1.0);
+            assert!((0.0..1.0).contains(&d.mem_stall_frac));
+            assert!(d.time_efficiency > 0.0 && d.time_efficiency <= 1.0);
+            assert!(d.launch.grid_blocks >= 1);
+            // every kernel must fit an empty SM
+            assert!(
+                natural_residency(&d.launch, &dev) >= 1,
+                "{} does not fit an SM",
+                d.name
+            );
+            let t = isolated_time_us(d, &dev);
+            assert!(t.is_finite() && t > 0.0);
+        }
+    }
+}
+
+#[test]
+fn stride2_excludes_fft_and_winograd_everywhere() {
+    let dev = DeviceSpec::k40();
+    let mut prng = Prng::new(77);
+    for _ in 0..100 {
+        let mut p = random_conv(&mut prng);
+        p.stride = (2, 2);
+        if p.h < p.r {
+            continue;
+        }
+        for algo in [
+            Algorithm::Fft,
+            Algorithm::FftTiling,
+            Algorithm::WinogradNonfused,
+        ] {
+            assert!(
+                kernel_desc(algo, &p, &dev).is_none(),
+                "{algo} accepted stride-2 {}",
+                p.short()
+            );
+        }
+    }
+}
+
+#[test]
+fn pair_estimate_always_between_max_and_sum() {
+    let dev = DeviceSpec::k40();
+    let mut prng = Prng::new(12345);
+    for _ in 0..150 {
+        let pa = random_conv(&mut prng);
+        let pb = random_conv(&mut prng);
+        let da = supported_descs(&pa, &dev);
+        let db = supported_descs(&pb, &dev);
+        let a = &da[prng.below(da.len() as u64) as usize];
+        let b = &db[prng.below(db.len() as u64) as usize];
+        let est = estimate_pair_makespan_us(a, b, &dev);
+        let ta = isolated_time_us(a, &dev);
+        let tb = isolated_time_us(b, &dev);
+        assert!(
+            est <= ta + tb + 1e-6,
+            "paired estimate worse than serial: {est} > {ta}+{tb}"
+        );
+        assert!(
+            est >= ta.max(tb) - 1e-6,
+            "paired estimate beats single-kernel floor"
+        );
+    }
+}
+
+#[test]
+fn engine_never_loses_kernels_and_is_deterministic() {
+    let dev = DeviceSpec::k40();
+    let mut prng = Prng::new(999);
+    for round in 0..20 {
+        let n_kernels = prng.range_u64(1, 6) as usize;
+        let n_streams = prng.range_u64(1, 3) as usize;
+        let mode = *prng.choose(&[
+            PartitionMode::Serial,
+            PartitionMode::StreamsOnly,
+            PartitionMode::InterSm,
+            PartitionMode::IntraSm,
+        ]);
+        let mut descs = Vec::new();
+        for _ in 0..n_kernels {
+            let p = random_conv(&mut prng);
+            let cands = supported_descs(&p, &dev);
+            descs.push(cands[prng.below(cands.len() as u64) as usize].clone());
+        }
+        let simulate = || {
+            let mut e = Engine::new(dev.clone(), mode);
+            for (i, d) in descs.iter().enumerate() {
+                e.launch(d.clone(), i % n_streams);
+            }
+            e.run()
+        };
+        let r1 = simulate();
+        let r2 = simulate();
+        assert_eq!(r1.makespan_us, r2.makespan_us, "round {round} nondet");
+        assert_eq!(r1.kernels.len(), n_kernels);
+        // every kernel has a valid span inside the makespan
+        for k in &r1.kernels {
+            assert!(k.end_us > k.start_us, "round {round}: empty span");
+            assert!(k.end_us <= r1.makespan_us + 1e-6);
+        }
+        // makespan bounded by [max isolated, sum isolated + overheads]
+        let iso: Vec<f64> =
+            r1.kernels.iter().map(|k| k.isolated_us).collect();
+        let max = iso.iter().cloned().fold(0.0, f64::max);
+        let sum: f64 = iso.iter().sum();
+        assert!(r1.makespan_us >= max * 0.9, "round {round}");
+        assert!(
+            r1.makespan_us <= sum * 1.3 + 100.0,
+            "round {round}: makespan {} way above serial {}",
+            r1.makespan_us,
+            sum
+        );
+    }
+}
+
+#[test]
+fn serial_mode_is_never_faster_than_concurrent_modes() {
+    let dev = DeviceSpec::k40();
+    let mut prng = Prng::new(31337);
+    for _ in 0..15 {
+        let pa = random_conv(&mut prng);
+        let pb = random_conv(&mut prng);
+        let da = supported_descs(&pa, &dev);
+        let db = supported_descs(&pb, &dev);
+        let a = da[prng.below(da.len() as u64) as usize].clone();
+        let b = db[prng.below(db.len() as u64) as usize].clone();
+        let t = |mode: PartitionMode| {
+            let mut e = Engine::new(dev.clone(), mode);
+            e.launch(a.clone(), 0);
+            e.launch(b.clone(), 1);
+            e.run().makespan_us
+        };
+        let serial = t(PartitionMode::Serial);
+        // Hardware leftover placement (streams) can never hurt much; the
+        // *partitioning* modes may pay a bounded overhead on pairs where
+        // splitting is a bad idea — exactly why the paper insists the
+        // decision must be profile-guided (the coordinator's ProfileGuided
+        // policy gates on an estimate and falls back to serial).
+        let tolerance = |mode: PartitionMode| match mode {
+            PartitionMode::StreamsOnly => 1.05,
+            _ => 1.15,
+        };
+        for mode in [
+            PartitionMode::StreamsOnly,
+            PartitionMode::InterSm,
+            PartitionMode::IntraSm,
+        ] {
+            let conc = t(mode);
+            assert!(
+                conc <= serial * tolerance(mode) + 10.0,
+                "{:?} ({conc}) much worse than serial ({serial}) for {} + {}",
+                mode,
+                pa.short(),
+                pb.short()
+            );
+        }
+    }
+}
+
+#[test]
+fn workspace_table2_orderings_hold_across_batches() {
+    // The Table 2 *shape* must be batch-stable: GEMM=0 <= IMPLICIT <=
+    // WINOGRAD <= FFT_TILING <= FFT <= PRECOMP on the 5x5 inception conv.
+    // Workspace models have batch-independent terms (e.g. FFT's K*C filter
+    // transforms), so the full Table-2 ordering is asserted at
+    // profiling-scale batches (it provably inverts for tiny batches, where
+    // PRECOMP's per-CTA staging shrinks below FFT's filter state).
+    let dev = DeviceSpec::k40();
+    for batch in [64usize, 128, 256] {
+        let p = ConvParams::new(batch, 480, 14, 14, 48, 5, 5, (1, 1), (2, 2));
+        let ws = |a: Algorithm| {
+            kernel_desc(a, &p, &dev).map(|d| d.workspace_bytes).unwrap()
+        };
+        assert_eq!(ws(Algorithm::Gemm), 0);
+        assert!(ws(Algorithm::ImplicitGemm) <= ws(Algorithm::WinogradNonfused));
+        assert!(
+            ws(Algorithm::WinogradNonfused) <= ws(Algorithm::FftTiling),
+            "batch {batch}"
+        );
+        assert!(ws(Algorithm::FftTiling) <= ws(Algorithm::Fft));
+        assert!(ws(Algorithm::Fft) <= ws(Algorithm::ImplicitPrecompGemm));
+    }
+}
+
+#[test]
+fn all_algorithms_parse_and_roundtrip() {
+    let mut prng = Prng::new(5);
+    for _ in 0..50 {
+        let a = *prng.choose(ALL_ALGORITHMS);
+        assert_eq!(Algorithm::parse(a.name()), Some(a));
+    }
+}

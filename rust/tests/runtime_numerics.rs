@@ -1,0 +1,168 @@
+//! E7 integration: the AOT conv artifacts execute on the PJRT CPU client
+//! and all algorithm families produce identical numerics.
+//!
+//! Requires `make artifacts` (skipped with a note otherwise).
+
+use std::path::{Path, PathBuf};
+
+use parconv::runtime::{Runtime, Tensor};
+use parconv::util::Prng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn random_inputs(rt: &Runtime, name: &str, seed: u64) -> Vec<Tensor> {
+    let spec = rt.manifest().get(name).unwrap();
+    let mut prng = Prng::new(seed);
+    spec.inputs
+        .iter()
+        .map(|s| {
+            Tensor::F32(
+                (0..s.element_count())
+                    .map(|_| prng.next_normal() as f32 * 0.5)
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn all_conv_algorithms_agree_case_c3() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let names: Vec<String> = rt
+        .manifest()
+        .names()
+        .into_iter()
+        .filter(|n| n.starts_with("conv_") && n.ends_with("c3"))
+        .map(String::from)
+        .collect();
+    assert_eq!(names.len(), 7, "expected all 7 algorithms for 3x3: {names:?}");
+    let inputs = random_inputs(&rt, &names[0], 42);
+    let mut reference: Option<Vec<f32>> = None;
+    for name in &names {
+        let out = rt.run(name, &inputs).unwrap();
+        let y = out[0].as_f32().unwrap().to_vec();
+        assert!(y.iter().all(|v| v.is_finite()), "{name}: non-finite output");
+        match &reference {
+            None => reference = Some(y),
+            Some(r) => {
+                let max_err = y
+                    .iter()
+                    .zip(r)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_err < 2e-3, "{name}: max err {max_err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_conv_algorithms_agree_case_c5() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let names: Vec<String> = rt
+        .manifest()
+        .names()
+        .into_iter()
+        .filter(|n| n.starts_with("conv_") && n.ends_with("c5"))
+        .map(String::from)
+        .collect();
+    // Winograd is NOT_SUPPORTED for 5x5 in the artifact set (cuDNN parity)
+    assert_eq!(names.len(), 6, "{names:?}");
+    assert!(!names.iter().any(|n| n.contains("WINOGRAD")));
+    let inputs = random_inputs(&rt, &names[0], 7);
+    let mut reference: Option<Vec<f32>> = None;
+    for name in &names {
+        let out = rt.run(name, &inputs).unwrap();
+        let y = out[0].as_f32().unwrap().to_vec();
+        match &reference {
+            None => reference = Some(y),
+            Some(r) => {
+                let max_err = y
+                    .iter()
+                    .zip(r)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_err < 2e-3, "{name}: max err {max_err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn inception_module_forward_runs() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let inputs = random_inputs(&rt, "incep_fwd", 3);
+    let out = rt.run("incep_fwd", &inputs).unwrap();
+    let spec = rt.manifest().get("incep_fwd").unwrap();
+    assert_eq!(out[0].len(), spec.outputs[0].element_count());
+    // inception concat: 4 branches on 16x16 feature maps, 40 channels
+    assert_eq!(spec.outputs[0].dims, vec![4, 40, 16, 16]);
+    assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    // relu'd concat output must be non-negative
+    assert!(out[0].as_f32().unwrap().iter().all(|&v| v >= 0.0));
+}
+
+#[test]
+fn model_forward_produces_logits() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let spec = rt.manifest().get("model_fwd").unwrap().clone();
+    // inputs: x then 28 params; build x random, params from init blob
+    let total: usize =
+        spec.inputs[1..].iter().map(|s| s.element_count()).sum();
+    let blob = parconv::runtime::artifact::read_f32_blob(
+        &dir.join("init_params.bin"),
+        total,
+    )
+    .unwrap();
+    let mut prng = Prng::new(11);
+    let mut inputs = vec![Tensor::F32(
+        (0..spec.inputs[0].element_count())
+            .map(|_| prng.next_normal() as f32)
+            .collect(),
+    )];
+    let mut off = 0;
+    for s in &spec.inputs[1..] {
+        let n = s.element_count();
+        inputs.push(Tensor::F32(blob[off..off + n].to_vec()));
+        off += n;
+    }
+    let out = rt.run("model_fwd", &inputs).unwrap();
+    assert_eq!(spec.outputs[0].dims, vec![16, 8]); // batch x classes
+    let logits = out[0].as_f32().unwrap();
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // logits must differ across classes (model not degenerate)
+    let first_row = &logits[..8];
+    assert!(first_row.iter().any(|&v| (v - first_row[0]).abs() > 1e-7));
+}
+
+#[test]
+fn abi_errors_are_caught() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    // wrong arity
+    assert!(rt.run("incep_fwd", &[]).is_err());
+    // wrong element count
+    let bad = vec![Tensor::F32(vec![0.0; 3]), Tensor::F32(vec![0.0; 3])];
+    assert!(rt.run("conv_GEMM_c3", &bad).is_err());
+    // unknown artifact
+    assert!(rt.run("no_such_artifact", &[]).is_err());
+}

@@ -1,0 +1,265 @@
+//! Coordinator integration: full networks through the scheduler under every
+//! policy x partition combination, checking the paper's qualitative claims
+//! and the scheduler's safety invariants.
+
+use parconv::coordinator::{
+    Coordinator, ScheduleConfig, ScheduleResult, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, PartitionMode};
+use parconv::graph::Network;
+
+const GB4: u64 = 4 * 1024 * 1024 * 1024;
+
+fn run(
+    net: Network,
+    batch: usize,
+    policy: SelectionPolicy,
+    partition: PartitionMode,
+    streams: usize,
+    ws: u64,
+) -> ScheduleResult {
+    Coordinator::new(
+        DeviceSpec::k40(),
+        ScheduleConfig {
+            policy,
+            partition,
+            streams,
+            workspace_limit: ws,
+        },
+    )
+    .execute_dag(&net.build(batch))
+}
+
+fn check_invariants(net: Network, batch: usize, r: &ScheduleResult) {
+    let dag = net.build(batch);
+    assert_eq!(r.ops.len(), dag.len(), "every op exactly once");
+    let mut start = vec![0.0f64; dag.len()];
+    let mut end = vec![0.0f64; dag.len()];
+    for o in &r.ops {
+        start[o.op_id] = o.start_us;
+        end[o.op_id] = o.end_us;
+        assert!(o.end_us >= o.start_us);
+        assert!(o.end_us <= r.makespan_us + 1e-6);
+    }
+    for i in 0..dag.len() {
+        for &p in dag.preds(i) {
+            assert!(end[p] <= start[i] + 1e-6, "{}: dep violated", net.name());
+        }
+    }
+}
+
+#[test]
+fn invariants_hold_across_policy_matrix() {
+    let policies = [
+        SelectionPolicy::FastestOnly,
+        SelectionPolicy::MemoryMin,
+        SelectionPolicy::Balanced,
+        SelectionPolicy::ProfileGuided,
+    ];
+    let partitions = [
+        PartitionMode::Serial,
+        PartitionMode::StreamsOnly,
+        PartitionMode::InterSm,
+        PartitionMode::IntraSm,
+    ];
+    for &policy in &policies {
+        for &partition in &partitions {
+            let r = run(Network::GoogleNet, 8, policy, partition, 2, GB4);
+            check_invariants(Network::GoogleNet, 8, &r);
+            assert!(r.makespan_us > 0.0);
+        }
+    }
+}
+
+#[test]
+fn invariants_hold_across_networks() {
+    for &net in Network::ALL {
+        let r = run(
+            net,
+            8,
+            SelectionPolicy::ProfileGuided,
+            PartitionMode::IntraSm,
+            4,
+            GB4,
+        );
+        check_invariants(net, 8, &r);
+    }
+}
+
+#[test]
+fn nonlinear_networks_gain_linear_do_not() {
+    // E6's core contrast at batch 32.
+    for &net in &[Network::GoogleNet, Network::PathNet] {
+        let serial = run(
+            net,
+            32,
+            SelectionPolicy::FastestOnly,
+            PartitionMode::Serial,
+            1,
+            GB4,
+        );
+        let conc = run(
+            net,
+            32,
+            SelectionPolicy::ProfileGuided,
+            PartitionMode::IntraSm,
+            2,
+            GB4,
+        );
+        assert!(
+            conc.makespan_us < serial.makespan_us,
+            "{}: {} vs {}",
+            net.name(),
+            conc.makespan_us,
+            serial.makespan_us
+        );
+    }
+    for &net in &[Network::AlexNet, Network::Vgg16] {
+        let conc = run(
+            net,
+            32,
+            SelectionPolicy::ProfileGuided,
+            PartitionMode::IntraSm,
+            4,
+            GB4,
+        );
+        assert_eq!(
+            conc.conv_overlap_us,
+            0.0,
+            "{}: linear net showed conv overlap",
+            net.name()
+        );
+    }
+}
+
+#[test]
+fn workspace_cap_respected_under_pressure() {
+    for cap_mb in [8u64, 64, 512] {
+        let cap = cap_mb * 1024 * 1024;
+        let r = run(
+            Network::GoogleNet,
+            32,
+            SelectionPolicy::FastestOnly,
+            PartitionMode::StreamsOnly,
+            4,
+            cap,
+        );
+        assert!(
+            r.peak_workspace <= cap,
+            "cap {cap_mb} MB exceeded: {}",
+            r.peak_workspace
+        );
+        check_invariants(Network::GoogleNet, 32, &r);
+    }
+}
+
+#[test]
+fn memory_min_never_uses_more_peak_than_fastest() {
+    let fast = run(
+        Network::GoogleNet,
+        32,
+        SelectionPolicy::FastestOnly,
+        PartitionMode::Serial,
+        1,
+        GB4,
+    );
+    let lean = run(
+        Network::GoogleNet,
+        32,
+        SelectionPolicy::MemoryMin,
+        PartitionMode::Serial,
+        1,
+        GB4,
+    );
+    assert!(lean.peak_workspace <= fast.peak_workspace);
+}
+
+#[test]
+fn deterministic_schedules() {
+    let a = run(
+        Network::ResNet50,
+        8,
+        SelectionPolicy::ProfileGuided,
+        PartitionMode::IntraSm,
+        2,
+        GB4,
+    );
+    let b = run(
+        Network::ResNet50,
+        8,
+        SelectionPolicy::ProfileGuided,
+        PartitionMode::IntraSm,
+        2,
+        GB4,
+    );
+    assert_eq!(a.makespan_us, b.makespan_us);
+    assert_eq!(a.rounds, b.rounds);
+}
+
+#[test]
+fn survives_workspace_allocation_failures() {
+    // Failure injection: 30% of workspace allocations spuriously refused.
+    // The scheduler must complete every op (degrading to workspace-free
+    // algorithms) and still respect dependencies.
+    let dag = Network::GoogleNet.build(16);
+    let coord = Coordinator::with_failure_injection(
+        DeviceSpec::k40(),
+        ScheduleConfig {
+            policy: SelectionPolicy::FastestOnly,
+            partition: PartitionMode::StreamsOnly,
+            streams: 4,
+            workspace_limit: GB4,
+        },
+        0.3,
+        42,
+    );
+    let r = coord.execute_dag(&dag);
+    check_invariants(Network::GoogleNet, 16, &r);
+    // injected refusals must not inflate the makespan unboundedly: the
+    // GEMM fallback costs time but finishes
+    let clean = run(
+        Network::GoogleNet,
+        16,
+        SelectionPolicy::FastestOnly,
+        PartitionMode::StreamsOnly,
+        4,
+        GB4,
+    );
+    assert!(r.makespan_us <= clean.makespan_us * 2.5);
+}
+
+#[test]
+fn training_graph_schedules_and_every_net_gains() {
+    use parconv::graph::training_dag;
+    for &net in &[Network::AlexNet, Network::GoogleNet] {
+        let train = training_dag(&net.build(16));
+        let serial = Coordinator::new(
+            DeviceSpec::k40(),
+            ScheduleConfig {
+                policy: SelectionPolicy::FastestOnly,
+                partition: PartitionMode::Serial,
+                streams: 1,
+                workspace_limit: GB4,
+            },
+        )
+        .execute_dag(&train);
+        let conc = Coordinator::new(
+            DeviceSpec::k40(),
+            ScheduleConfig {
+                policy: SelectionPolicy::ProfileGuided,
+                partition: PartitionMode::IntraSm,
+                streams: 2,
+                workspace_limit: GB4,
+            },
+        )
+        .execute_dag(&train);
+        assert_eq!(conc.ops.len(), train.len());
+        assert!(
+            conc.makespan_us < serial.makespan_us,
+            "{}: training shows no gain ({} vs {})",
+            net.name(),
+            conc.makespan_us,
+            serial.makespan_us
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! E8 integration: the Rust trainer drives the AOT `train_step` artifact
+//! and the loss actually descends.
+
+use std::path::{Path, PathBuf};
+
+use parconv::trainer::Trainer;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn loss_descends_over_40_steps() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut t = Trainer::new(&dir).unwrap();
+    assert_eq!(t.num_params(), 28);
+    assert_eq!(t.num_batches(), 8);
+    let logs = t.train(40, 0, |_| {}).unwrap();
+    assert_eq!(logs.len(), 40);
+    let first = logs[0].loss;
+    let last = logs.last().unwrap().loss;
+    assert!(
+        last < first * 0.7,
+        "loss did not descend: {first} -> {last}"
+    );
+    // steps are numbered and monotone
+    for (i, l) in logs.iter().enumerate() {
+        assert_eq!(l.step, i + 1);
+        assert!(l.loss.is_finite());
+        assert!(l.wall_ms > 0.0);
+    }
+}
+
+#[test]
+fn training_is_deterministic() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let run = |steps: usize| -> Vec<f32> {
+        let mut t = Trainer::new(&dir).unwrap();
+        t.train(steps, 0, |_| {})
+            .unwrap()
+            .iter()
+            .map(|l| l.loss)
+            .collect()
+    };
+    let a = run(10);
+    let b = run(10);
+    assert_eq!(a, b, "same data + params must give identical losses");
+}
