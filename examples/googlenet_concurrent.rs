@@ -7,7 +7,9 @@
 //! ```
 
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams};
-use parconv::coordinator::{Coordinator, ScheduleConfig, SelectionPolicy};
+use parconv::coordinator::{
+    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
 use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
 use parconv::profiler::chrome_trace_json;
@@ -54,6 +56,7 @@ fn main() -> anyhow::Result<()> {
                 partition,
                 streams,
                 workspace_limit: 4 * 1024 * 1024 * 1024,
+                priority: PriorityPolicy::CriticalPath,
             },
         )
         .execute_dag(&dag);

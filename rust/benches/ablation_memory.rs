@@ -5,7 +5,9 @@
 
 use std::time::Instant;
 
-use parconv::coordinator::{Coordinator, ScheduleConfig, SelectionPolicy};
+use parconv::coordinator::{
+    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::Network;
 use parconv::util::{fmt_bytes, fmt_us, Table};
@@ -36,6 +38,7 @@ fn main() {
                 partition: PartitionMode::Serial,
                 streams: 1,
                 workspace_limit: mb * 1024 * 1024,
+                priority: PriorityPolicy::CriticalPath,
             },
         )
         .execute_dag(&dag);

@@ -5,7 +5,9 @@
 
 use std::time::Instant;
 
-use parconv::coordinator::{Coordinator, ScheduleConfig, SelectionPolicy};
+use parconv::coordinator::{
+    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::Network;
 use parconv::util::{fmt_us, Table};
@@ -35,6 +37,7 @@ fn main() {
                     partition,
                     streams,
                     workspace_limit: 4 * 1024 * 1024 * 1024,
+                    priority: PriorityPolicy::CriticalPath,
                 },
             )
             .execute_dag(&dag)

@@ -6,7 +6,8 @@ use std::time::Instant;
 
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams};
 use parconv::coordinator::{
-    discover_pairs, Coordinator, ScheduleConfig, SelectionPolicy,
+    discover_pairs, Coordinator, PriorityPolicy, ScheduleConfig,
+    SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
@@ -44,6 +45,7 @@ fn main() {
                 partition: PartitionMode::IntraSm,
                 streams: 2,
                 workspace_limit: 4 * 1024 * 1024 * 1024,
+                priority: PriorityPolicy::CriticalPath,
             },
         );
         let t0 = Instant::now();

@@ -8,7 +8,9 @@
 
 use std::time::Instant;
 
-use parconv::coordinator::{Coordinator, ScheduleConfig, SelectionPolicy};
+use parconv::coordinator::{
+    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::{training_dag, Network};
 use parconv::util::{fmt_us, Table};
@@ -39,6 +41,7 @@ fn main() {
                     partition,
                     streams,
                     workspace_limit: 4 * 1024 * 1024 * 1024,
+                    priority: PriorityPolicy::CriticalPath,
                 },
             )
             .execute_dag(&train)

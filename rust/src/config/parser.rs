@@ -146,6 +146,16 @@ impl ParsedConfig {
             .and_then(Value::as_bool)
             .unwrap_or(default)
     }
+
+    /// Unsigned helper for count-like knobs (`streams`,
+    /// `workspace_limit_mb`, ...): negative values fall back to the
+    /// default instead of wrapping.
+    pub fn uint_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        match self.get(section, key).and_then(Value::as_int) {
+            Some(i) if i >= 0 => i as u64,
+            _ => default,
+        }
+    }
 }
 
 impl fmt::Display for ParsedConfig {
@@ -261,6 +271,14 @@ policies = ["fastest_only", "profile_guided"]
         let c = ParsedConfig::parse("").unwrap();
         assert_eq!(c.int_or("x", "y", 7), 7);
         assert_eq!(c.str_or("x", "y", "d"), "d");
+    }
+
+    #[test]
+    fn uint_rejects_negative_values() {
+        let c = ParsedConfig::parse("streams = -3\nok = 7").unwrap();
+        assert_eq!(c.uint_or("", "streams", 4), 4);
+        assert_eq!(c.uint_or("", "ok", 4), 7);
+        assert_eq!(c.uint_or("", "missing", 2), 2);
     }
 
     #[test]

@@ -12,10 +12,14 @@ pub struct SchedulerConfig {
     pub policy: String,
     /// Partitioning mode: `none`, `streams`, `inter_sm`, `intra_sm`.
     pub partition: String,
-    /// Number of CUDA-style streams available to the scheduler.
+    /// Number of CUDA-style streams available to the scheduler — the
+    /// width `k` of one co-execution group.
     pub streams: usize,
     /// Device-memory budget for workspaces, in bytes.
     pub workspace_limit: u64,
+    /// Ready-queue ordering: `critical_path` (bottom-level priority) or
+    /// `fifo` (legacy arrival order).
+    pub priority: String,
 }
 
 impl Default for SchedulerConfig {
@@ -25,6 +29,7 @@ impl Default for SchedulerConfig {
             partition: "intra_sm".into(),
             streams: 4,
             workspace_limit: 4 * 1024 * 1024 * 1024, // leave room beside tensors
+            priority: "critical_path".into(),
         }
     }
 }
@@ -32,7 +37,8 @@ impl Default for SchedulerConfig {
 /// Full run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
-    /// Device preset name (`k40`, `p100`, `v100`) — see `gpusim::spec`.
+    /// Device preset name (`k40`, `p100`, `v100`, `a100`) — see
+    /// `gpusim::spec`.
     pub device: String,
     /// Network name (`alexnet`, `vgg16`, `googlenet`, `resnet50`,
     /// `densenet`, `pathnet`).
@@ -75,17 +81,15 @@ impl RunConfig {
                 policy: p.str_or("scheduler", "policy", &sd.policy),
                 partition: p.str_or("scheduler", "partition", &sd.partition),
                 streams: p
-                    .int_or("scheduler", "streams", sd.streams as i64)
+                    .uint_or("scheduler", "streams", sd.streams as u64)
                     .max(1) as usize,
-                workspace_limit: p
-                    .int_or(
-                        "scheduler",
-                        "workspace_limit_mb",
-                        (sd.workspace_limit / (1024 * 1024)) as i64,
-                    )
-                    .max(0) as u64
-                    * 1024
+                workspace_limit: p.uint_or(
+                    "scheduler",
+                    "workspace_limit_mb",
+                    sd.workspace_limit / (1024 * 1024),
+                ) * 1024
                     * 1024,
+                priority: p.str_or("scheduler", "priority", &sd.priority),
             },
         })
     }
@@ -121,6 +125,7 @@ policy = "fastest_only"
 partition = "none"
 streams = 1
 workspace_limit_mb = 512
+priority = "fifo"
 "#,
         )
         .unwrap();
@@ -131,6 +136,13 @@ workspace_limit_mb = 512
         assert_eq!(c.scheduler.partition, "none");
         assert_eq!(c.scheduler.streams, 1);
         assert_eq!(c.scheduler.workspace_limit, 512 * 1024 * 1024);
+        assert_eq!(c.scheduler.priority, "fifo");
+    }
+
+    #[test]
+    fn priority_defaults_to_critical_path() {
+        let c = RunConfig::from_text("").unwrap();
+        assert_eq!(c.scheduler.priority, "critical_path");
     }
 
     #[test]

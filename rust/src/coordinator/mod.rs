@@ -2,20 +2,24 @@
 //!
 //! - [`selector`] — convolution-algorithm selection policies, from
 //!   TensorFlow's fastest-only autotuning to the paper's proposed
-//!   profile-guided multi-metric selection.
-//! - [`scheduler`] — ready-queue DAG execution over the GPU simulator with
-//!   workspace-aware admission.
-//! - [`pairing`] — discovery of complementary convolution pairs (the
-//!   paper's "27 similar cases" analysis).
+//!   profile-guided multi-metric selection, including the k-wide
+//!   [`selector::select_group`] packing.
+//! - [`scheduler`] — ready-queue DAG execution over the GPU simulator
+//!   with critical-path (bottom-level) priorities, k-wide co-execution
+//!   groups, and workspace-aware admission.
+//! - [`pairing`] — discovery of complementary convolution pairs and
+//!   k-wide groups (the paper's "27 similar cases" analysis).
 
 pub mod pairing;
 pub mod scheduler;
 pub mod selector;
 
-pub use pairing::{discover_pairs, PairFinding};
+pub use pairing::{discover_groups, discover_pairs, GroupFinding, PairFinding};
 pub use scheduler::{
-    non_conv_time_us, Coordinator, OpExec, ScheduleConfig, ScheduleResult,
+    non_conv_time_us, Coordinator, OpExec, PriorityPolicy, ScheduleConfig,
+    ScheduleResult,
 };
 pub use selector::{
-    estimate_pair_makespan_us, select_pair, select_solo, SelectionPolicy,
+    estimate_group_makespan_us, estimate_pair_makespan_us, select_group,
+    select_pair, select_solo, GroupSelection, SelectionPolicy,
 };

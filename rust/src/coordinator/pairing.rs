@@ -1,17 +1,21 @@
-//! Complementary-pair discovery: the paper's "we discover 27 similar cases
-//! in this network [GoogleNet] and more instances in other popular
-//! non-linear CNNs such as ResNet" (§2.1).
+//! Complementary-pair (and k-wide group) discovery: the paper's "we
+//! discover 27 similar cases in this network [GoogleNet] and more
+//! instances in other popular non-linear CNNs such as ResNet" (§2.1).
 //!
 //! For every pair of *independent* convolutions in a network DAG, search
 //! the algorithm-assignment space for one whose intra-SM co-execution is
 //! estimated to beat the best serial execution, subject to the combined
-//! workspace fitting the budget.
+//! workspace fitting the budget. [`discover_groups`] generalizes the
+//! census to `k`-wide co-execution groups over each antichain of
+//! same-level convolutions (the inception-style branch sets).
 
 use crate::convlib::{Algorithm, ConvParams};
 use crate::graph::{Dag, OpKind};
 use crate::gpusim::{isolated_time_us, DeviceSpec};
 
-use super::selector::{select_pair, select_solo, SelectionPolicy};
+use super::selector::{
+    select_group, select_pair, select_solo, SelectionPolicy,
+};
 
 /// One discovered co-execution opportunity.
 #[derive(Clone, Debug)]
@@ -67,6 +71,125 @@ pub fn discover_pairs(
                 serial_us: serial,
                 paired_us: paired,
                 combined_workspace: da.workspace_bytes + db.workspace_bytes,
+            });
+        }
+    }
+    findings.sort_by(|x, y| y.speedup().partial_cmp(&x.speedup()).unwrap());
+    findings
+}
+
+/// One discovered k-wide co-execution opportunity.
+#[derive(Clone, Debug)]
+pub struct GroupFinding {
+    /// Op ids of the group members (pairwise independent).
+    pub ops: Vec<usize>,
+    pub names: Vec<String>,
+    pub algos: Vec<Algorithm>,
+    /// Best-serial baseline (fastest algorithm each, back-to-back).
+    pub serial_us: f64,
+    /// Estimated co-run makespan with the discovered assignment.
+    pub group_us: f64,
+    pub combined_workspace: u64,
+}
+
+impl GroupFinding {
+    pub fn speedup(&self) -> f64 {
+        self.serial_us / self.group_us
+    }
+
+    pub fn width(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+/// Scan a network for k-wide complementary convolution groups.
+///
+/// Candidate groups are the conv sets sharing one ASAP level — equal
+/// levels guarantee pairwise independence (a dependency path strictly
+/// increases the level), and they are exactly the fork branches
+/// (inception modules, residual splits) whose co-execution the paper
+/// studies. Each level set is handed to [`select_group`], heaviest conv
+/// seeding, repeatedly: admitted members are removed and the remainder
+/// re-scanned, so a wide level can yield several disjoint groups. Only
+/// groups whose fluid-model speedup reaches `min_speedup` are kept.
+/// (Cross-level independent combinations — which [`discover_pairs`]
+/// does count pairwise — are out of scope here by construction.)
+pub fn discover_groups(
+    dag: &Dag,
+    dev: &DeviceSpec,
+    ws_budget: u64,
+    k: usize,
+    min_speedup: f64,
+) -> Vec<GroupFinding> {
+    let levels = dag.levels();
+    let max_level = levels.iter().copied().max().unwrap_or(0);
+    let mut findings = Vec::new();
+    for level in 0..=max_level {
+        let mut keyed: Vec<(usize, f64)> = dag
+            .conv_ids()
+            .into_iter()
+            .filter(|&i| levels[i] == level)
+            .map(|id| {
+                let t = match &dag.ops[id].kind {
+                    OpKind::Conv(p) => select_solo(
+                        SelectionPolicy::FastestOnly,
+                        p,
+                        dev,
+                        ws_budget,
+                    )
+                    .map(|d| isolated_time_us(&d, dev))
+                    .unwrap_or(f64::INFINITY),
+                    _ => unreachable!("conv_ids returned a non-conv"),
+                };
+                (id, t)
+            })
+            .collect();
+        if keyed.len() < 2 {
+            continue;
+        }
+        // heaviest first: the seed drives the group search
+        keyed.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+        let mut convs: Vec<usize> =
+            keyed.into_iter().map(|(id, _)| id).collect();
+        // peel groups off the level until nothing beneficial remains
+        while convs.len() >= 2 {
+            let params: Vec<&ConvParams> = convs
+                .iter()
+                .map(|&id| match &dag.ops[id].kind {
+                    OpKind::Conv(p) => p,
+                    _ => unreachable!(),
+                })
+                .collect();
+            let Some(g) = select_group(&params, k, dev, ws_budget) else {
+                break;
+            };
+            // the seed is always members[0] == 0 (select_group seeds
+            // with candidates[0]); when its best group is too small or
+            // too marginal, retire only the seed so its would-be
+            // partners stay available for other combinations
+            if g.members.len() < 2 || g.speedup() < min_speedup {
+                convs.remove(0);
+                continue;
+            }
+            let ops: Vec<usize> =
+                g.members.iter().map(|&m| convs[m]).collect();
+            let mut members = g.members.clone();
+            members.sort_unstable();
+            for &m in members.iter().rev() {
+                convs.remove(m);
+            }
+            findings.push(GroupFinding {
+                names: ops
+                    .iter()
+                    .map(|&i| dag.ops[i].name.clone())
+                    .collect(),
+                algos: g.descs.iter().map(|d| d.algo).collect(),
+                serial_us: g.serial_us,
+                group_us: g.est_us,
+                combined_workspace: g.combined_workspace(),
+                ops,
             });
         }
     }
@@ -141,6 +264,43 @@ mod tests {
             assert!(f.combined_workspace <= GB4);
             assert!(dag.independent(f.op_a, f.op_b));
         }
+    }
+
+    #[test]
+    fn googlenet_has_group_opportunities() {
+        // k-wide census: the inception branch sets must yield at least
+        // one beneficial group, and every finding must be sound.
+        let dag = Network::GoogleNet.build(32);
+        let dev = DeviceSpec::k40();
+        let findings = discover_groups(&dag, &dev, GB4, 4, 1.05);
+        assert!(!findings.is_empty(), "no groups found in GoogleNet");
+        for f in &findings {
+            assert!(f.width() >= 2 && f.width() <= 4);
+            assert!(f.speedup() >= 1.05);
+            assert!(f.combined_workspace <= GB4);
+            assert_eq!(f.names.len(), f.width());
+            assert_eq!(f.algos.len(), f.width());
+            for (i, &a) in f.ops.iter().enumerate() {
+                for &b in f.ops.iter().skip(i + 1) {
+                    assert!(
+                        dag.independent(a, b),
+                        "group members {a},{b} are dependent"
+                    );
+                }
+            }
+        }
+        // sorted by speedup, like the pair census
+        for w in findings.windows(2) {
+            assert!(w[0].speedup() >= w[1].speedup());
+        }
+    }
+
+    #[test]
+    fn alexnet_has_no_groups() {
+        let dag = Network::AlexNet.build(32);
+        let findings =
+            discover_groups(&dag, &DeviceSpec::k40(), GB4, 4, 1.0);
+        assert!(findings.is_empty());
     }
 
     #[test]

@@ -17,17 +17,50 @@ use crate::gpusim::{
 };
 use crate::memory::DeviceMemory;
 
-use super::selector::{select_pair, select_solo, SelectionPolicy};
+use super::selector::{select_group, select_solo, SelectionPolicy};
+
+/// Ready-queue ordering policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PriorityPolicy {
+    /// Arrival (BFS) order — the legacy behaviour.
+    Fifo,
+    /// Critical-path priority: order ready ops by *bottom level* (the
+    /// cost-weighted longest path to a sink, computed once per DAG), so
+    /// the chain that bounds the makespan is dispatched and grouped
+    /// first and short fork branches cannot starve it.
+    CriticalPath,
+}
+
+impl PriorityPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" | "arrival" => Some(Self::Fifo),
+            "critical_path" | "critical-path" | "bottom_level" => {
+                Some(Self::CriticalPath)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Fifo => "fifo",
+            Self::CriticalPath => "critical_path",
+        }
+    }
+}
 
 /// Scheduler configuration.
 #[derive(Clone, Debug)]
 pub struct ScheduleConfig {
     pub policy: SelectionPolicy,
     pub partition: PartitionMode,
-    /// Max concurrent streams (concurrent ops per round).
+    /// Max concurrent streams (width of one co-execution group).
     pub streams: usize,
     /// Workspace budget in bytes.
     pub workspace_limit: u64,
+    /// Ready-queue ordering.
+    pub priority: PriorityPolicy,
 }
 
 impl Default for ScheduleConfig {
@@ -37,6 +70,7 @@ impl Default for ScheduleConfig {
             partition: PartitionMode::IntraSm,
             streams: 4,
             workspace_limit: 4 * 1024 * 1024 * 1024,
+            priority: PriorityPolicy::CriticalPath,
         }
     }
 }
@@ -148,6 +182,14 @@ impl Coordinator {
             ),
             None => DeviceMemory::new(self.cfg.workspace_limit),
         };
+        // Critical-path (bottom-level) priorities, computed once per DAG
+        // from the fastest-solo cost model (Fifo never reads them, so it
+        // skips the cost-model sweep).
+        let bl = if self.cfg.priority == PriorityPolicy::CriticalPath {
+            self.bottom_levels(dag)
+        } else {
+            Vec::new()
+        };
         let mut clock = 0.0f64;
         let mut ops: Vec<OpExec> = Vec::with_capacity(dag.len());
         let mut ws_fallbacks = 0u64;
@@ -180,14 +222,29 @@ impl Coordinator {
                 }
             }
 
-            // Conv batches of at most `streams` ops.
-            for batch in convs.chunks(self.cfg.streams.max(1)) {
+            // Order ready convs by the configured priority, then pack
+            // them into co-execution groups of at most `streams` ops.
+            if self.cfg.priority == PriorityPolicy::CriticalPath {
+                convs.sort_by(|&a, &b| {
+                    bl[b]
+                        .partial_cmp(&bl[a])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+            }
+            let mut pending: VecDeque<usize> = convs.into();
+            while !pending.is_empty() {
                 rounds += 1;
-                let (descs, mode) =
-                    self.choose_algorithms(dag, batch, &mut mem, &mut ws_fallbacks);
-                let (sim, allocs) = self.run_batch(&descs, mode, &mut mem);
+                let (batch, descs, mode) = self.plan_batch(
+                    dag,
+                    &mut pending,
+                    &mem,
+                    &mut ws_fallbacks,
+                );
+                let (sim, allocs, ran) =
+                    self.run_batch(&descs, mode, &mut mem, &mut ws_fallbacks);
                 for ((id, desc), rec) in
-                    batch.iter().zip(&descs).zip(&sim.kernels)
+                    batch.iter().zip(&ran).zip(&sim.kernels)
                 {
                     ops.push(OpExec {
                         op_id: *id,
@@ -231,96 +288,77 @@ impl Coordinator {
         }
     }
 
-    /// Pick algorithms (and the partition mode to run them under) for a
-    /// batch of ready convolutions.
-    ///
-    /// `ProfileGuided` only commits to concurrent execution when its
-    /// analytic estimate beats the fastest-solo serial assignment — the
-    /// paper's "profile-based algorithm selection has to evaluate multiple
-    /// metrics for optimal parallelism" (§3). Otherwise it degrades to the
-    /// fastest-only serial plan, so guided scheduling can never regress.
-    fn choose_algorithms(
-        &self,
-        dag: &Dag,
-        batch: &[usize],
-        mem: &mut DeviceMemory,
-        ws_fallbacks: &mut u64,
-    ) -> (Vec<KernelDesc>, PartitionMode) {
-        let params: Vec<&ConvParams> = batch
-            .iter()
-            .map(|&id| match &dag.ops[id].kind {
-                OpKind::Conv(p) => p,
-                _ => unreachable!("batch contains non-conv"),
+    /// Bottom-level priority of every op: longest cost-weighted path to a
+    /// sink under the fastest-solo cost model (convs) / bandwidth model
+    /// (everything else). One reverse topological sweep per DAG.
+    fn bottom_levels(&self, dag: &Dag) -> Vec<f64> {
+        let cost: Vec<f64> = (0..dag.len())
+            .map(|i| match &dag.ops[i].kind {
+                OpKind::Conv(p) => {
+                    let d = self
+                        .solo_unconstrained(SelectionPolicy::FastestOnly, p);
+                    isolated_time_us(&d, &self.spec)
+                }
+                kind => non_conv_time_us(kind, &self.spec),
             })
             .collect();
-        let budget = mem.available();
-        if self.cfg.policy != SelectionPolicy::ProfileGuided
-            || params.len() < 2
-        {
-            return (
-                self.solo_batch(&params, budget, ws_fallbacks),
-                self.cfg.partition,
-            );
-        }
-        // ProfileGuided with >= 2 ready convs: try pairing the two
-        // heaviest; everything else gets fastest-solo.
-        let n = params.len();
-        let solo_time = |p: &ConvParams| {
-            let d = self.solo_unconstrained(SelectionPolicy::FastestOnly, p);
-            if d.workspace_bytes <= budget {
-                isolated_time_us(&d, &self.spec)
-            } else {
-                select_solo(
-                    SelectionPolicy::FastestOnly,
-                    p,
-                    &self.spec,
-                    budget,
-                )
-                .map(|d| isolated_time_us(&d, &self.spec))
-                .unwrap_or(0.0)
-            }
+        dag.bottom_levels(&cost)
+    }
+
+    /// Take the next co-execution batch off the priority-ordered pending
+    /// conv queue: the ops to run, their algorithms, and the partition
+    /// mode to run them under.
+    ///
+    /// `ProfileGuided` packs a k-wide group via [`select_group`]: the
+    /// highest-priority conv seeds the group and partners join only when
+    /// the fluid-model estimate beats serializing them — the paper's
+    /// "profile-based algorithm selection has to evaluate multiple
+    /// metrics for optimal parallelism" (§3), generalized from pairs to
+    /// `streams`-wide groups. When no partner pays, the seed runs solo on
+    /// its fastest fitting algorithm, so guided scheduling can never
+    /// regress. Other policies chunk up to `streams` convs in priority
+    /// order and let the partition mode decide the concurrency (the
+    /// TensorFlow-style baseline).
+    fn plan_batch(
+        &self,
+        dag: &Dag,
+        pending: &mut VecDeque<usize>,
+        mem: &DeviceMemory,
+        ws_fallbacks: &mut u64,
+    ) -> (Vec<usize>, Vec<KernelDesc>, PartitionMode) {
+        let conv_params = |id: usize| match &dag.ops[id].kind {
+            OpKind::Conv(p) => p,
+            _ => unreachable!("pending contains non-conv"),
         };
-        let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&i, &j| {
-            solo_time(params[j]).partial_cmp(&solo_time(params[i])).unwrap()
-        });
-        let (hi, lo) = (order[0], order[1]);
-        let serial_baseline = solo_time(params[hi]) + solo_time(params[lo]);
-        if let Some((a, b, est)) =
-            select_pair(params[hi], params[lo], &self.spec, budget)
+        let budget = mem.available();
+        let k = self.cfg.streams.max(1);
+        if self.cfg.policy == SelectionPolicy::ProfileGuided
+            && k >= 2
+            && pending.len() >= 2
         {
-            if est < serial_baseline * 0.98 {
-                let mut descs: Vec<Option<KernelDesc>> = vec![None; n];
-                descs[hi] = Some(a);
-                descs[lo] = Some(b);
-                let mut rem_budget = budget
-                    .saturating_sub(descs[hi].as_ref().unwrap().workspace_bytes)
-                    .saturating_sub(descs[lo].as_ref().unwrap().workspace_bytes);
-                for i in 0..n {
-                    if descs[i].is_none() {
-                        let d = select_solo(
-                            SelectionPolicy::FastestOnly,
-                            params[i],
-                            &self.spec,
-                            rem_budget,
-                        )
-                        .expect("GEMM fallback always fits");
-                        rem_budget =
-                            rem_budget.saturating_sub(d.workspace_bytes);
-                        descs[i] = Some(d);
-                    }
+            let ids: Vec<usize> = pending.iter().copied().collect();
+            let params: Vec<&ConvParams> =
+                ids.iter().map(|&id| conv_params(id)).collect();
+            if let Some(g) = select_group(&params, k, &self.spec, budget) {
+                if g.members.len() >= 2 {
+                    let batch: Vec<usize> =
+                        g.members.iter().map(|&m| ids[m]).collect();
+                    pending.retain(|id| !batch.contains(id));
+                    return (batch, g.descs, self.cfg.partition);
                 }
-                return (
-                    descs.into_iter().map(Option::unwrap).collect(),
-                    self.cfg.partition,
-                );
             }
+            // no partner pays off: the seed runs alone, serially
+            let id = pending.pop_front().expect("pending non-empty");
+            let descs =
+                self.solo_batch(&[conv_params(id)], budget, ws_fallbacks);
+            return (vec![id], descs, PartitionMode::Serial);
         }
-        // pairing does not pay: fastest-solo, serial
-        (
-            self.solo_batch(&params, budget, ws_fallbacks),
-            PartitionMode::Serial,
-        )
+        let take = k.min(pending.len());
+        let batch: Vec<usize> = pending.drain(..take).collect();
+        let params: Vec<&ConvParams> =
+            batch.iter().map(|&id| conv_params(id)).collect();
+        let descs = self.solo_batch(&params, budget, ws_fallbacks);
+        (batch, descs, self.cfg.partition)
     }
 
     fn solo_batch(
@@ -356,12 +394,16 @@ impl Coordinator {
     }
 
     /// Simulate one batch; workspace is held for the batch duration.
+    /// Returns the timeline, the live allocation ids, and the descriptors
+    /// that actually ran (fallback downgrades included), so the caller's
+    /// execution records never misattribute algorithm or workspace.
     fn run_batch(
         &self,
         descs: &[KernelDesc],
         mode: PartitionMode,
         mem: &mut DeviceMemory,
-    ) -> (SimResult, Vec<u64>) {
+        ws_fallbacks: &mut u64,
+    ) -> (SimResult, Vec<u64>, Vec<KernelDesc>) {
         // Graceful degradation: if an admission-checked allocation still
         // fails (failure injection / fragmentation), downgrade that op to
         // its workspace-free fallback rather than failing the schedule —
@@ -382,25 +424,27 @@ impl Coordinator {
                     )
                     .expect("GEMM supports every convolution");
                     debug_assert_eq!(fallback.workspace_bytes, 0);
+                    if fallback.algo != d.algo {
+                        *ws_fallbacks += 1;
+                    }
                     final_descs.push(fallback);
                 }
             }
         }
-        let descs = final_descs;
-        let mode = if descs.len() <= 1 {
+        let mode = if final_descs.len() <= 1 {
             PartitionMode::Serial
         } else {
             mode
         };
         let mut engine = Engine::new(self.spec.clone(), mode);
-        for (i, d) in descs.iter().enumerate() {
+        for (i, d) in final_descs.iter().enumerate() {
             let stream = match mode {
                 PartitionMode::Serial => 0,
                 _ => i,
             };
             engine.launch(d.clone(), stream);
         }
-        (engine.run(), allocs)
+        (engine.run(), allocs, final_descs)
     }
 }
 
@@ -438,6 +482,7 @@ mod tests {
                 partition,
                 streams,
                 workspace_limit: 4 * 1024 * 1024 * 1024,
+                priority: PriorityPolicy::CriticalPath,
             },
         )
     }
@@ -532,6 +577,7 @@ mod tests {
                 partition: PartitionMode::Serial,
                 streams: 1,
                 workspace_limit: 16 * 1024 * 1024, // 16 MB
+                priority: PriorityPolicy::CriticalPath,
             },
         )
         .execute_dag(&dag);
@@ -545,6 +591,68 @@ mod tests {
         )
         .execute_dag(&dag);
         assert!(loose.makespan_us <= tight.makespan_us * 1.01);
+    }
+
+    #[test]
+    fn priority_policy_parses() {
+        assert_eq!(
+            PriorityPolicy::parse("critical_path"),
+            Some(PriorityPolicy::CriticalPath)
+        );
+        assert_eq!(
+            PriorityPolicy::parse("bottom_level"),
+            Some(PriorityPolicy::CriticalPath)
+        );
+        assert_eq!(PriorityPolicy::parse("fifo"), Some(PriorityPolicy::Fifo));
+        assert_eq!(PriorityPolicy::parse("?"), None);
+        assert_eq!(PriorityPolicy::CriticalPath.name(), "critical_path");
+    }
+
+    #[test]
+    fn fifo_and_critical_path_both_schedule_correctly() {
+        // Priority changes the order, never the correctness: both
+        // policies execute every op once and respect dependencies.
+        let dag = Network::GoogleNet.build(8);
+        for priority in [PriorityPolicy::Fifo, PriorityPolicy::CriticalPath] {
+            let r = Coordinator::new(
+                DeviceSpec::k40(),
+                ScheduleConfig {
+                    policy: SelectionPolicy::ProfileGuided,
+                    partition: PartitionMode::IntraSm,
+                    streams: 4,
+                    workspace_limit: 4 * 1024 * 1024 * 1024,
+                    priority,
+                },
+            )
+            .execute_dag(&dag);
+            assert_eq!(r.ops.len(), dag.len(), "{priority:?}");
+        }
+    }
+
+    #[test]
+    fn wide_streams_schedule_googlenet_with_overlap() {
+        // k-wide rounds: 4 streams on a 4-branch-wide network must still
+        // produce overlap and beat the serial baseline.
+        let dag = Network::GoogleNet.build(32);
+        let serial = coord(
+            SelectionPolicy::FastestOnly,
+            PartitionMode::Serial,
+            1,
+        )
+        .execute_dag(&dag);
+        let wide = coord(
+            SelectionPolicy::ProfileGuided,
+            PartitionMode::IntraSm,
+            4,
+        )
+        .execute_dag(&dag);
+        assert!(wide.conv_overlap_us > 0.0);
+        assert!(
+            wide.makespan_us < serial.makespan_us,
+            "wide {} >= serial {}",
+            wide.makespan_us,
+            serial.makespan_us
+        );
     }
 
     #[test]

@@ -16,6 +16,8 @@ pub mod timing;
 
 pub use engine::{Engine, KernelId, KernelRecord, SimResult};
 pub use partition::PartitionMode;
-pub use sm::{natural_residency, static_utilization, StaticUtilization};
-pub use spec::DeviceSpec;
+pub use sm::{
+    can_host, natural_residency, static_utilization, StaticUtilization,
+};
+pub use spec::{DeviceSpec, UnknownDevice};
 pub use timing::{isolated_time_us, memory_bound};

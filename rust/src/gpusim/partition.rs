@@ -15,7 +15,7 @@
 
 use crate::convlib::LaunchConfig;
 
-use super::sm::{max_additional_blocks, natural_residency, SmUsage};
+use super::sm::{can_host, max_additional_blocks, natural_residency, SmUsage};
 use super::DeviceSpec;
 
 /// Partitioning / sharing policy for concurrent kernel execution.
@@ -56,9 +56,10 @@ pub type ResidencyPlan = Vec<u32>;
 ///
 /// For `IntraSm` with exactly two kernels this searches all quota splits
 /// and keeps the one maximizing combined utilization (a small-scale
-/// Warped-Slicer); with more kernels it falls back to a greedy fill.
-/// `utils[i]` is kernel i's standalone ALU utilization (issue-slot
-/// demand) used by the objective.
+/// Warped-Slicer); with three or more it switches to normalized
+/// water-filling ([`water_fill`]) — the k-wide generalization that keeps
+/// every group member co-resident. `utils[i]` is kernel i's standalone
+/// ALU utilization (issue-slot demand) used by the pairwise objective.
 pub fn plan_intra_sm(
     launches: &[&LaunchConfig],
     utils: &[f64],
@@ -92,8 +93,56 @@ pub fn plan_intra_sm(
             }
             best.1
         }
-        _ => greedy_fill(launches, spec),
+        _ => water_fill(launches, spec),
     }
+}
+
+/// Normalized water-filling: the k-way intra-SM quota rule.
+///
+/// Repeatedly grant one block to the kernel with the lowest *normalized
+/// progress* (current quota over natural residency) that still fits the
+/// SM's static resources, until nothing fits. Complementary kernels
+/// (register-bound beside smem-bound) converge to near-equal progress
+/// fractions; a kernel whose blocks no longer fit simply stops growing.
+/// Unlike [`greedy_fill`] (CUDA's leftover policy), later kernels are not
+/// starved by earlier ones, so a k-wide group keeps all members resident.
+pub fn water_fill(
+    launches: &[&LaunchConfig],
+    spec: &DeviceSpec,
+) -> ResidencyPlan {
+    let rnat: Vec<u32> = launches
+        .iter()
+        .map(|l| natural_residency(l, spec).max(1))
+        .collect();
+    let mut quota = vec![0u32; launches.len()];
+    let mut used = SmUsage::default();
+    loop {
+        let mut pick: Option<usize> = None;
+        for i in 0..launches.len() {
+            if quota[i] >= rnat[i] {
+                continue;
+            }
+            if !can_host(launches[i], spec, &used) {
+                continue;
+            }
+            let frac = quota[i] as f64 / rnat[i] as f64;
+            let better = match pick {
+                None => true,
+                Some(p) => frac < quota[p] as f64 / rnat[p] as f64,
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        match pick {
+            Some(i) => {
+                quota[i] += 1;
+                used.add(&SmUsage::of(launches[i], 1));
+            }
+            None => break,
+        }
+    }
+    quota
 }
 
 /// CUDA leftover policy: fill in launch order.
@@ -247,6 +296,53 @@ mod tests {
         let plan = greedy_fill(&[&l5, &l3], &k40());
         assert_eq!(plan[0], 16);
         assert_eq!(plan[1], 0); // serialization emerges
+    }
+
+    #[test]
+    fn water_fill_keeps_three_kernels_resident() {
+        // k-wide admission: an smem-bound FFT kernel beside two lean GEMM
+        // kernels — water-filling must leave at least two members with
+        // blocks where resources allow, instead of greedy-starving the
+        // tail like the CUDA leftover policy.
+        let p3 = ConvParams::incep3a_3x3(32);
+        let lf = model_for(Algorithm::FftTiling).launch(&p3);
+        let ld = model_for(Algorithm::Gemm).launch(&p3);
+        let plan = water_fill(&[&ld, &lf, &ld], &k40());
+        assert_eq!(plan.len(), 3);
+        assert!(
+            plan.iter().filter(|&&q| q > 0).count() >= 2,
+            "water-fill starved the group: {plan:?}"
+        );
+        // and the plan must respect every static resource
+        let mut used = SmUsage::default();
+        for (l, &q) in [&ld, &lf, &ld].iter().zip(&plan) {
+            used.add(&SmUsage::of(l, q));
+        }
+        let spec = k40();
+        assert!(used.regs <= spec.regs_per_sm, "{used:?}");
+        assert!(used.smem <= spec.smem_per_sm, "{used:?}");
+        assert!(used.threads <= spec.max_threads_per_sm, "{used:?}");
+        assert!(used.blocks <= spec.max_blocks_per_sm, "{used:?}");
+    }
+
+    #[test]
+    fn water_fill_never_exceeds_natural_residency() {
+        let p = ConvParams::incep3a_5x5(32);
+        let l = model_for(Algorithm::ImplicitPrecompGemm).launch(&p);
+        let r_nat = natural_residency(&l, &k40());
+        let plan = water_fill(&[&l], &k40());
+        assert_eq!(plan, vec![r_nat]);
+    }
+
+    #[test]
+    fn water_fill_splits_identical_kernels_evenly() {
+        let p = ConvParams::incep3a_5x5(32);
+        let l = model_for(Algorithm::ImplicitPrecompGemm).launch(&p);
+        let plan = water_fill(&[&l, &l, &l, &l], &k40());
+        let max = *plan.iter().max().unwrap();
+        let min = *plan.iter().min().unwrap();
+        assert!(max - min <= 1, "uneven split {plan:?}");
+        assert!(min >= 1, "a member was starved: {plan:?}");
     }
 
     #[test]

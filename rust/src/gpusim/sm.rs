@@ -80,6 +80,18 @@ pub fn max_additional_blocks(
         .min(u32::MAX as u64) as u32
 }
 
+/// Can at least one block of `launch` still be placed beside `used`?
+/// The k-wide admission primitive the water-filling quota planner grows
+/// groups with: a kernel whose blocks cannot co-reside with the
+/// already-granted members would only serialize.
+pub fn can_host(
+    launch: &LaunchConfig,
+    spec: &DeviceSpec,
+    used: &SmUsage,
+) -> bool {
+    max_additional_blocks(launch, spec, used) > 0
+}
+
 /// Natural residency: blocks per empty SM (nvprof's "achieved occupancy"
 /// driver). Table 1's utilization columns all derive from this.
 pub fn natural_residency(launch: &LaunchConfig, spec: &DeviceSpec) -> u32 {

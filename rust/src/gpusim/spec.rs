@@ -1,5 +1,13 @@
 //! Device specifications. Default: the paper's Tesla K40 (Kepler GK110B).
 
+/// Error returned by [`DeviceSpec::preset`] for unrecognized names; its
+/// message lists the valid presets so CLI typos are self-diagnosing.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("unknown device {name:?}; valid presets: k40, p100, v100, a100")]
+pub struct UnknownDevice {
+    pub name: String,
+}
+
 /// Static description of a GPU: SM static resources (the quantities whose
 /// exhaustion the paper identifies as the concurrency blocker) plus the
 /// throughput envelope the timing model uses.
@@ -81,13 +89,42 @@ impl DeviceSpec {
         }
     }
 
-    /// Look up a preset by name.
-    pub fn preset(name: &str) -> Option<Self> {
+    /// NVIDIA A100 (Ampere, SXM 40 GB): the modern end of the
+    /// stream-scaling sweep — many more SMs and far more bandwidth than
+    /// the paper's K40, which is exactly where k-wide co-execution stops
+    /// paying (the paper's titular "limit").
+    pub fn a100() -> Self {
+        Self {
+            name: "NVIDIA A100".into(),
+            num_sms: 108,
+            regs_per_sm: 65_536,
+            smem_per_sm: 164 * 1024,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            max_warps_per_sm: 64,
+            peak_flops: 19.5e12,
+            dram_bw: 1555.0e9,
+            dram_efficiency: 0.85,
+            global_mem: 40 * 1024 * 1024 * 1024,
+            launch_overhead_us: 2.5,
+        }
+    }
+
+    /// Names accepted by [`DeviceSpec::preset`].
+    pub const PRESET_NAMES: &'static [&'static str] =
+        &["k40", "p100", "v100", "a100"];
+
+    /// Look up a preset by (case-insensitive) name. Unknown names return
+    /// an error that lists the valid presets instead of a silent `None`.
+    pub fn preset(name: &str) -> Result<Self, UnknownDevice> {
         match name.to_ascii_lowercase().as_str() {
-            "k40" => Some(Self::k40()),
-            "p100" => Some(Self::p100()),
-            "v100" => Some(Self::v100()),
-            _ => None,
+            "k40" => Ok(Self::k40()),
+            "p100" => Ok(Self::p100()),
+            "v100" => Ok(Self::v100()),
+            "a100" => Ok(Self::a100()),
+            _ => Err(UnknownDevice {
+                name: name.to_string(),
+            }),
         }
     }
 
@@ -119,11 +156,34 @@ mod tests {
 
     #[test]
     fn presets_resolve() {
-        assert!(DeviceSpec::preset("k40").is_some());
-        assert!(DeviceSpec::preset("K40").is_some());
-        assert!(DeviceSpec::preset("p100").is_some());
-        assert!(DeviceSpec::preset("v100").is_some());
-        assert!(DeviceSpec::preset("h100").is_none());
+        for name in DeviceSpec::PRESET_NAMES {
+            assert!(
+                DeviceSpec::preset(name).is_ok(),
+                "preset {name} must resolve"
+            );
+        }
+        assert!(DeviceSpec::preset("K40").is_ok());
+        assert!(DeviceSpec::preset("A100").is_ok());
+    }
+
+    #[test]
+    fn unknown_preset_error_lists_valid_names() {
+        let err = DeviceSpec::preset("h100").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("h100"), "{msg}");
+        for name in DeviceSpec::PRESET_NAMES {
+            assert!(msg.contains(name), "missing {name} in {msg:?}");
+        }
+    }
+
+    #[test]
+    fn a100_matches_published_spec() {
+        let d = DeviceSpec::a100();
+        assert_eq!(d.num_sms, 108);
+        assert_eq!(d.smem_per_sm, 164 * 1024);
+        assert_eq!(d.max_blocks_per_sm, 32);
+        assert!((d.peak_flops - 19.5e12).abs() < 1e9);
+        assert!((d.dram_bw - 1555.0e9).abs() < 1e6);
     }
 
     #[test]

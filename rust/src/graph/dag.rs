@@ -203,6 +203,29 @@ impl Dag {
         self.levels().into_iter().max().unwrap_or(0)
     }
 
+    /// Bottom level of every op under a per-op cost: the length of the
+    /// longest cost-weighted path from the op to any sink, *including* the
+    /// op's own cost (`bl[i] = cost[i] + max over successors bl[s]`).
+    ///
+    /// One reverse topological sweep, computed once per DAG — this is the
+    /// classic HEFT/list-scheduling critical-path priority the coordinator
+    /// uses to order its ready queue: ops whose remaining downstream chain
+    /// is longest are dispatched (and grouped) first, so the critical path
+    /// is never starved by short fork branches.
+    pub fn bottom_levels(&self, cost: &[f64]) -> Vec<f64> {
+        assert_eq!(cost.len(), self.len(), "one cost per op");
+        let order = self.topo_order().expect("cyclic graph");
+        let mut bl = vec![0.0f64; self.len()];
+        for &i in order.iter().rev() {
+            let down = self.succs[i]
+                .iter()
+                .map(|&s| bl[s])
+                .fold(0.0f64, f64::max);
+            bl[i] = cost[i] + down;
+        }
+        bl
+    }
+
     /// Figure-1 style structural summary.
     pub fn stats(&self) -> DagStats {
         DagStats {
@@ -333,5 +356,31 @@ mod tests {
     fn self_edge_panics() {
         let mut g = diamond();
         g.add_edge(1, 1);
+    }
+
+    #[test]
+    fn bottom_levels_weighted_diamond() {
+        // in(1) -> {a(10), b(3)} -> join(2): the heavy branch dominates.
+        let g = diamond();
+        let bl = g.bottom_levels(&[1.0, 10.0, 3.0, 2.0]);
+        assert_eq!(bl[3], 2.0); // sink: own cost
+        assert_eq!(bl[1], 12.0); // a + join
+        assert_eq!(bl[2], 5.0); // b + join
+        assert_eq!(bl[0], 13.0); // in + heavy branch
+        // the ready-queue ordering this feeds: a before b
+        assert!(bl[1] > bl[2]);
+    }
+
+    #[test]
+    fn bottom_levels_unit_cost_counts_hops() {
+        let g = diamond();
+        let unit = g.bottom_levels(&vec![1.0; g.len()]);
+        assert_eq!(unit, vec![3.0, 2.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "one cost per op")]
+    fn bottom_levels_cost_length_checked() {
+        diamond().bottom_levels(&[1.0]);
     }
 }

@@ -29,6 +29,37 @@
 //! - [`profiler`] — nvprof-equivalent metric reports (Table 1 format) and
 //!   chrome-trace export of simulated timelines.
 //!
+//! ## Scheduling
+//!
+//! The coordinator executes a network DAG as a sequence of *co-execution
+//! groups* of up to `streams` convolutions (`ScheduleConfig::streams`,
+//! CLI `--streams`):
+//!
+//! 1. **Critical-path priority.** Each op's *bottom level* — the longest
+//!    cost-weighted path from the op to a sink under the fastest-solo
+//!    cost model — is computed once per DAG
+//!    ([`graph::Dag::bottom_levels`]). Ready convolutions are dispatched
+//!    in descending bottom-level order (`--priority critical_path`;
+//!    `fifo` restores arrival order), so the chain that bounds the
+//!    makespan seeds every group and short fork branches cannot starve
+//!    it.
+//! 2. **k-wide admission.** [`coordinator::select_group`] greedily packs
+//!    the group: the seed's partner is chosen by the exact legacy
+//!    pairwise algorithm search (so `streams = 2` reproduces
+//!    `select_pair`), and further members join only while the
+//!    multi-phase fluid estimate
+//!    ([`coordinator::estimate_group_makespan_us`]) beats serializing
+//!    them by ≥ 2%, the joint workspace fits the budget, and their
+//!    blocks can still co-reside under the per-SM quota plan
+//!    (water-filling for k > 2, exhaustive quota search for pairs).
+//! 3. **Saturation.** Because admission is profit-gated, widening
+//!    `streams` cannot regress beyond the admission margin (~1–2%; the
+//!    greedy packer may occasionally trade a pair for a wider group) —
+//!    and the `stream_scaling` bench measures
+//!    where the gain flattens (the paper's titular limit): linear
+//!    networks at k = 1, inception-style networks once DAG width or SM
+//!    resources are exhausted.
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 

@@ -14,8 +14,9 @@
 //! parconv trace      [--out F]         # chrome-trace of one iteration
 //! ```
 //!
-//! Global flags: `--config FILE`, `--device k40|p100|v100`, `--batch N`,
-//! `--policy P`, `--partition M`, `--streams N`, `--workspace-mb N`,
+//! Global flags: `--config FILE`, `--device k40|p100|v100|a100`,
+//! `--batch N`, `--policy P`, `--partition M`, `--streams N`,
+//! `--priority critical_path|fifo`, `--workspace-mb N`,
 //! `--artifacts DIR`.
 
 use std::path::Path;
@@ -24,7 +25,8 @@ use std::process::ExitCode;
 use parconv::config::RunConfig;
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams, ALL_ALGORITHMS};
 use parconv::coordinator::{
-    discover_pairs, Coordinator, ScheduleConfig, SelectionPolicy,
+    discover_pairs, Coordinator, PriorityPolicy, ScheduleConfig,
+    SelectionPolicy,
 };
 use parconv::gpusim::{isolated_time_us, DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
@@ -77,6 +79,7 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
             "--policy" => cfg.scheduler.policy = val()?,
             "--partition" => cfg.scheduler.partition = val()?,
             "--streams" => cfg.scheduler.streams = val()?.parse()?,
+            "--priority" => cfg.scheduler.priority = val()?,
             "--workspace-mb" => {
                 cfg.scheduler.workspace_limit =
                     val()?.parse::<u64>()? * 1024 * 1024
@@ -98,13 +101,34 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
 }
 
 fn device(cfg: &RunConfig) -> anyhow::Result<DeviceSpec> {
-    DeviceSpec::preset(&cfg.device)
-        .ok_or_else(|| anyhow::anyhow!("unknown device {:?}", cfg.device))
+    // the preset error already lists the valid names
+    Ok(DeviceSpec::preset(&cfg.device)?)
 }
 
 fn network(cfg: &RunConfig) -> anyhow::Result<Network> {
     Network::parse(&cfg.network)
         .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", cfg.network))
+}
+
+fn priority(cfg: &RunConfig) -> anyhow::Result<PriorityPolicy> {
+    PriorityPolicy::parse(&cfg.scheduler.priority).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown priority {:?}; valid: critical_path, fifo",
+            cfg.scheduler.priority
+        )
+    })
+}
+
+fn sched_policy(cfg: &RunConfig) -> anyhow::Result<SelectionPolicy> {
+    SelectionPolicy::parse(&cfg.scheduler.policy).ok_or_else(|| {
+        anyhow::anyhow!("unknown policy {:?}", cfg.scheduler.policy)
+    })
+}
+
+fn sched_partition(cfg: &RunConfig) -> anyhow::Result<PartitionMode> {
+    PartitionMode::parse(&cfg.scheduler.partition).ok_or_else(|| {
+        anyhow::anyhow!("unknown partition {:?}", cfg.scheduler.partition)
+    })
 }
 
 fn run(args: Vec<String>) -> anyhow::Result<()> {
@@ -340,18 +364,29 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
     let mut t = Table::new(vec![
         "Policy",
         "Partition",
+        "Streams",
         "Makespan",
         "Conv overlap",
         "Peak workspace",
         "Fallbacks",
     ]);
-    let combos: Vec<(SelectionPolicy, PartitionMode, usize)> = vec![
+    let mut combos: Vec<(SelectionPolicy, PartitionMode, usize)> = vec![
         (SelectionPolicy::FastestOnly, PartitionMode::Serial, 1),
         (SelectionPolicy::FastestOnly, PartitionMode::StreamsOnly, 4),
         (SelectionPolicy::ProfileGuided, PartitionMode::InterSm, 2),
         (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 2),
         (SelectionPolicy::MemoryMin, PartitionMode::Serial, 1),
     ];
+    // the scheduler exactly as configured, so --policy / --partition /
+    // --streams are honoured alongside the fixed comparison matrix
+    let configured = (
+        sched_policy(&cli.cfg)?,
+        sched_partition(&cli.cfg)?,
+        cli.cfg.scheduler.streams,
+    );
+    if !combos.contains(&configured) {
+        combos.push(configured);
+    }
     for (policy, partition, streams) in combos {
         let coord = Coordinator::new(
             dev.clone(),
@@ -360,12 +395,14 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
                 partition,
                 streams,
                 workspace_limit: cli.cfg.scheduler.workspace_limit,
+                priority: priority(&cli.cfg)?,
             },
         );
         let r = coord.execute_dag(&dag);
         t.row(vec![
             policy.name().to_string(),
             partition.name().to_string(),
+            streams.to_string(),
             fmt_us(r.makespan_us),
             fmt_us(r.conv_overlap_us),
             fmt_bytes(r.peak_workspace),
@@ -395,15 +432,26 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
     let mut t = Table::new(vec![
         "Policy",
         "Partition",
+        "Streams",
         "Makespan",
         "Conv overlap",
         "Peak workspace",
     ]);
-    for (policy, partition, streams) in [
+    let mut combos: Vec<(SelectionPolicy, PartitionMode, usize)> = vec![
         (SelectionPolicy::FastestOnly, PartitionMode::Serial, 1),
         (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 2),
         (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 4),
-    ] {
+    ];
+    // the configured scheduler, so --streams and friends are live
+    let configured = (
+        sched_policy(&cli.cfg)?,
+        sched_partition(&cli.cfg)?,
+        cli.cfg.scheduler.streams,
+    );
+    if !combos.contains(&configured) {
+        combos.push(configured);
+    }
+    for (policy, partition, streams) in combos {
         let r = Coordinator::new(
             dev.clone(),
             ScheduleConfig {
@@ -411,12 +459,14 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
                 partition,
                 streams,
                 workspace_limit: cli.cfg.scheduler.workspace_limit,
+                priority: priority(&cli.cfg)?,
             },
         )
         .execute_dag(&train);
         t.row(vec![
             policy.name().to_string(),
             partition.name().to_string(),
+            streams.to_string(),
             fmt_us(r.makespan_us),
             fmt_us(r.conv_overlap_us),
             fmt_bytes(r.peak_workspace),
