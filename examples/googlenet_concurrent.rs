@@ -8,10 +8,11 @@
 
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams};
 use parconv::coordinator::{
-    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
+use parconv::plan::Session;
 use parconv::profiler::chrome_trace_json;
 use parconv::util::{fmt_bytes, fmt_us, Table};
 
@@ -49,7 +50,7 @@ fn main() -> anyhow::Result<()> {
         (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 2),
         (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 4),
     ] {
-        let r = Coordinator::new(
+        let r = Session::new(
             dev.clone(),
             ScheduleConfig {
                 policy,
@@ -59,7 +60,7 @@ fn main() -> anyhow::Result<()> {
                 priority: PriorityPolicy::CriticalPath,
             },
         )
-        .execute_dag(&dag);
+        .run(&dag);
         let base = *baseline.get_or_insert(r.makespan_us);
         table.row(vec![
             policy.name().to_string(),

@@ -11,10 +11,11 @@
 
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams};
 use parconv::coordinator::{
-    discover_pairs, Coordinator, ScheduleConfig, SelectionPolicy,
+    discover_pairs, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
+use parconv::plan::Session;
 use parconv::profiler::{table1_report, table1_row};
 use parconv::util::fmt_us;
 
@@ -84,8 +85,10 @@ fn main() {
         findings.len()
     );
 
-    // 5. Whole-network iteration under both regimes.
-    let serial = Coordinator::new(
+    // 5. Whole-network iteration under both regimes. A Session plans
+    //    once (selection, grouping, quotas) and replays the cached plan
+    //    on every subsequent run of the same network/batch.
+    let serial = Session::new(
         dev.clone(),
         ScheduleConfig {
             policy: SelectionPolicy::FastestOnly,
@@ -94,8 +97,8 @@ fn main() {
             ..Default::default()
         },
     )
-    .execute_dag(&dag);
-    let conc = Coordinator::new(
+    .run(&dag);
+    let guided = Session::new(
         dev.clone(),
         ScheduleConfig {
             policy: SelectionPolicy::ProfileGuided,
@@ -103,8 +106,8 @@ fn main() {
             streams: 2,
             ..Default::default()
         },
-    )
-    .execute_dag(&dag);
+    );
+    let conc = guided.run(&dag);
     println!(
         "GoogleNet iteration, serial fastest-only:      {}",
         fmt_us(serial.makespan_us)
@@ -113,5 +116,19 @@ fn main() {
         "GoogleNet iteration, profile-guided intra-SM:  {}  ({:.2}x)",
         fmt_us(conc.makespan_us),
         serial.makespan_us / conc.makespan_us
+    );
+
+    // 6. The serving loop: repeated runs hit the plan cache and skip
+    //    selection entirely (the paper's offline-profiles point).
+    for _ in 0..3 {
+        guided.run(&dag);
+    }
+    let stats = guided.stats();
+    println!(
+        "\nplan cache after 4 runs: {} plan built, {} hits \
+         ({:.0}% hit rate)",
+        stats.plans_built,
+        stats.cache_hits,
+        stats.hit_rate() * 100.0
     );
 }

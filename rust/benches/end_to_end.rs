@@ -6,10 +6,11 @@
 use std::time::Instant;
 
 use parconv::coordinator::{
-    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::Network;
+use parconv::plan::Session;
 use parconv::util::{fmt_us, Table};
 
 fn main() {
@@ -30,7 +31,7 @@ fn main() {
     for net in Network::ALL {
         let dag = net.build(batch);
         let run = |policy, partition, streams| {
-            Coordinator::new(
+            Session::new(
                 dev.clone(),
                 ScheduleConfig {
                     policy,
@@ -40,7 +41,7 @@ fn main() {
                     priority: PriorityPolicy::CriticalPath,
                 },
             )
-            .execute_dag(&dag)
+            .run(&dag)
             .makespan_us
         };
         let serial =

@@ -1,6 +1,9 @@
 //! Perf bench (L3) — simulator and coordinator throughput. Targets from
 //! DESIGN.md §Perf: >= 1M block-events/s through the engine; a full
-//! GoogleNet iteration scheduled in < 50 ms wall.
+//! GoogleNet iteration scheduled in < 50 ms wall. The plan/replay section
+//! measures what the Plan/Execute split buys: replay latency with
+//! selection amortized away, and the session cache hit rate under
+//! repeated traffic.
 
 use std::time::Instant;
 
@@ -11,6 +14,7 @@ use parconv::coordinator::{
 };
 use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
+use parconv::plan::Session;
 
 fn main() {
     let dev = DeviceSpec::k40();
@@ -71,5 +75,66 @@ fn main() {
          ({:.0} pair-evals/s, {} findings)",
         pairs as f64 * 49.0 / (wall / 1e3),
         f.len()
+    );
+
+    // 4. plan/replay split: planning cost vs replay latency. Replay skips
+    //    selection entirely (pinned by rust/tests/session_cache.rs), so
+    //    the delta is what the Session cache saves per served request.
+    let session = Session::new(
+        dev.clone(),
+        ScheduleConfig {
+            policy: SelectionPolicy::ProfileGuided,
+            partition: PartitionMode::IntraSm,
+            streams: 2,
+            workspace_limit: 4 * 1024 * 1024 * 1024,
+            priority: PriorityPolicy::CriticalPath,
+        },
+    );
+    let dag = Network::GoogleNet.build(32);
+    let t0 = Instant::now();
+    let plan = session.plan_labeled(&dag, "googlenet");
+    let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let reps = 20u32;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = session.run(&dag); // all cache hits: replay only
+    }
+    let replay_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    println!(
+        "plan/replay: googlenet planned once in {plan_ms:.1} ms \
+         ({} steps, {} groups, {} selector calls); replay {replay_ms:.2} \
+         ms/iter ({:.1}x faster than plan+execute)",
+        plan.steps.len(),
+        plan.group_count(),
+        plan.meta.selector_calls,
+        (plan_ms + replay_ms) / replay_ms
+    );
+
+    // 5. session cache hit rate under repeated mixed traffic: 4 networks
+    //    x 16 requests each, one shared serving session
+    let serving = Session::new(dev.clone(), ScheduleConfig::default());
+    let nets = [
+        Network::AlexNet,
+        Network::GoogleNet,
+        Network::ResNet50,
+        Network::PathNet,
+    ];
+    let t0 = Instant::now();
+    for _ in 0..16 {
+        for net in nets {
+            let _ = serving.run(&net.build(32));
+        }
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = serving.stats();
+    println!(
+        "session cache: {} requests over {} networks -> {} plans built, \
+         {} hits ({:.1}% hit rate), {:.2} ms/request amortized",
+        stats.plans_built + stats.cache_hits,
+        nets.len(),
+        stats.plans_built,
+        stats.cache_hits,
+        stats.hit_rate() * 100.0,
+        total_ms / (stats.plans_built + stats.cache_hits) as f64
     );
 }

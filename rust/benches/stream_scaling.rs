@@ -15,10 +15,11 @@
 use std::time::Instant;
 
 use parconv::coordinator::{
-    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::Network;
+use parconv::plan::Session;
 use parconv::util::{fmt_us, Table};
 
 const KS: [usize; 4] = [1, 2, 4, 8];
@@ -29,7 +30,7 @@ fn makespan(dev: &DeviceSpec, net: Network, k: usize, batch: usize) -> f64 {
     } else {
         (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm)
     };
-    Coordinator::new(
+    Session::new(
         dev.clone(),
         ScheduleConfig {
             policy,
@@ -39,7 +40,7 @@ fn makespan(dev: &DeviceSpec, net: Network, k: usize, batch: usize) -> f64 {
             priority: PriorityPolicy::CriticalPath,
         },
     )
-    .execute_dag(&net.build(batch))
+    .run(&net.build(batch))
     .makespan_us
 }
 

@@ -65,10 +65,23 @@ impl Default for RunConfig {
     }
 }
 
+/// Keys accepted at the top level of a run-config document.
+const TOP_LEVEL_KEYS: &[&str] =
+    &["device", "network", "batch", "seed", "artifacts_dir"];
+
+/// Keys accepted inside `[scheduler]`.
+const SCHEDULER_KEYS: &[&str] =
+    &["policy", "partition", "streams", "workspace_limit_mb", "priority"];
+
 impl RunConfig {
     /// Parse from config text (TOML subset; see `config::parser`).
+    ///
+    /// Unknown sections and keys are rejected rather than silently
+    /// ignored: a typo like `worspace_limit_mb` must fail loudly instead
+    /// of quietly running with the default budget.
     pub fn from_text(text: &str) -> Result<Self, ConfigError> {
         let p = ParsedConfig::parse(text)?;
+        Self::reject_unknown_keys(&p, text)?;
         let d = RunConfig::default();
         let sd = SchedulerConfig::default();
         Ok(RunConfig {
@@ -99,6 +112,68 @@ impl RunConfig {
         let text = std::fs::read_to_string(path)?;
         Ok(Self::from_text(&text)?)
     }
+
+    fn reject_unknown_keys(
+        p: &ParsedConfig,
+        text: &str,
+    ) -> Result<(), ConfigError> {
+        for section in p.sections() {
+            let (valid, place) = match section {
+                "" => (TOP_LEVEL_KEYS, "top level".to_string()),
+                "scheduler" => (SCHEDULER_KEYS, "[scheduler]".to_string()),
+                other => {
+                    return Err(ConfigError {
+                        line: locate_line(text, other, None),
+                        msg: format!(
+                            "unknown section [{other}]; valid sections: \
+                             [scheduler]"
+                        ),
+                    })
+                }
+            };
+            for key in p.keys(section) {
+                if !valid.contains(&key) {
+                    return Err(ConfigError {
+                        line: locate_line(text, section, Some(key)),
+                        msg: format!(
+                            "unknown key {key:?} at {place}; valid keys: {}",
+                            valid.join(", ")
+                        ),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Best-effort 1-based source line of `key` inside `section` (or of the
+/// `[section]` header itself when `key` is `None`). The parser does not
+/// retain per-key line numbers, so validation errors re-scan the source;
+/// the prefix match is conservative enough that a key the parser recorded
+/// is always found on its defining line.
+fn locate_line(text: &str, section: &str, key: Option<&str>) -> usize {
+    let mut current = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let trimmed = raw.split('#').next().unwrap_or("").trim();
+        if trimmed.starts_with('[') && trimmed.ends_with(']') {
+            current = trimmed[1..trimmed.len() - 1].trim().to_string();
+            if key.is_none() && current == section {
+                return idx + 1;
+            }
+            continue;
+        }
+        if let Some(key) = key {
+            if current == section {
+                if let Some(rest) = trimmed.strip_prefix(key) {
+                    if rest.trim_start().starts_with('=') {
+                        return idx + 1;
+                    }
+                }
+            }
+        }
+    }
+    0
 }
 
 #[cfg(test)]
@@ -149,5 +224,78 @@ priority = "fifo"
     fn batch_clamped_to_one() {
         let c = RunConfig::from_text("batch = 0").unwrap();
         assert_eq!(c.batch, 1);
+    }
+
+    #[test]
+    fn unknown_top_level_key_rejected() {
+        let err =
+            RunConfig::from_text("batch = 4\ndevise = \"k40\"").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("devise"), "{msg}");
+        assert!(msg.contains("device"), "error must list valid keys: {msg}");
+        assert_eq!(err.line, 2, "points at the offending line");
+    }
+
+    #[test]
+    fn unknown_scheduler_key_rejected() {
+        let err = RunConfig::from_text(
+            "[scheduler]\nstreams = 2\nworspace_limit_mb = 512",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("worspace_limit_mb"), "{msg}");
+        assert!(msg.contains("workspace_limit_mb"), "{msg}");
+        assert_eq!(err.line, 3);
+    }
+
+    #[test]
+    fn unknown_section_rejected() {
+        let err =
+            RunConfig::from_text("seed = 1\n\n[sheduler]\nstreams = 2")
+                .unwrap_err();
+        assert!(err.to_string().contains("sheduler"), "{err}");
+        assert_eq!(err.line, 3);
+    }
+
+    #[test]
+    fn workspace_mb_converts_to_bytes() {
+        let c = RunConfig::from_text(
+            "[scheduler]\nworkspace_limit_mb = 768",
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.workspace_limit, 768 * 1024 * 1024);
+        // zero is representable (the scheduler then falls back to
+        // workspace-free algorithms)
+        let z = RunConfig::from_text("[scheduler]\nworkspace_limit_mb = 0")
+            .unwrap();
+        assert_eq!(z.scheduler.workspace_limit, 0);
+    }
+
+    #[test]
+    fn file_and_text_parse_identically() {
+        let text = "device = \"p100\"\nbatch = 16\n\
+                    [scheduler]\nstreams = 2\n";
+        let path = std::env::temp_dir().join(format!(
+            "parconv_runconfig_roundtrip_{}.toml",
+            std::process::id()
+        ));
+        std::fs::write(&path, text).unwrap();
+        let from_file = RunConfig::from_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(from_file, RunConfig::from_text(text).unwrap());
+        assert_eq!(from_file.device, "p100");
+        assert_eq!(from_file.scheduler.streams, 2);
+    }
+
+    #[test]
+    fn from_file_surfaces_unknown_key_errors() {
+        let path = std::env::temp_dir().join(format!(
+            "parconv_runconfig_badkey_{}.toml",
+            std::process::id()
+        ));
+        std::fs::write(&path, "batchh = 4\n").unwrap();
+        let err = RunConfig::from_file(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("batchh"), "{err}");
     }
 }

@@ -4,9 +4,11 @@
 //!   TensorFlow's fastest-only autotuning to the paper's proposed
 //!   profile-guided multi-metric selection, including the k-wide
 //!   [`selector::select_group`] packing.
-//! - [`scheduler`] — ready-queue DAG execution over the GPU simulator
-//!   with critical-path (bottom-level) priorities, k-wide co-execution
-//!   groups, and workspace-aware admission.
+//! - [`scheduler`] — the scheduler vocabulary ([`ScheduleConfig`],
+//!   [`ScheduleResult`], priorities, the non-conv duration model) and the
+//!   legacy [`Coordinator`] facade, now a thin shim over
+//!   [`crate::plan::Session`]. Planning itself lives in
+//!   [`crate::plan::Planner`]; replay in [`crate::plan::Plan`].
 //! - [`pairing`] — discovery of complementary convolution pairs and
 //!   k-wide groups (the paper's "27 similar cases" analysis).
 
@@ -21,5 +23,6 @@ pub use scheduler::{
 };
 pub use selector::{
     estimate_group_makespan_us, estimate_pair_makespan_us, select_group,
-    select_pair, select_solo, GroupSelection, SelectionPolicy,
+    select_pair, select_solo, selector_invocations, GroupSelection,
+    SelectionPolicy,
 };

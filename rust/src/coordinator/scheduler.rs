@@ -1,23 +1,24 @@
-//! The DAG scheduler: ready-queue execution of a network over the GPU
-//! simulator, with policy-driven algorithm selection and workspace-aware
-//! admission.
+//! Scheduler types and the legacy [`Coordinator`] compatibility shim.
 //!
 //! "Selecting independent operations from the ready queue for concurrent
 //! execution is a challenging scheduling problem that highly depends on the
-//! network topology and resource utilization of operations" (paper §3) —
-//! this module is that scheduler.
+//! network topology and resource utilization of operations" (paper §3).
+//! Since the plan/execute split, that scheduling problem is solved *once*
+//! per (DAG, device, config) by [`crate::plan::Planner`] and the resulting
+//! [`crate::plan::Plan`] is replayed per request by
+//! [`crate::plan::Session`]. This module keeps the shared vocabulary —
+//! [`ScheduleConfig`], [`PriorityPolicy`], [`OpExec`], [`ScheduleResult`],
+//! the non-convolution duration model — plus `Coordinator`, now a thin
+//! shim over a private `Session` so every pre-split caller (and the
+//! pair-equivalence / monotonicity regressions that pin its behavior)
+//! keeps working unchanged. New code should use `Session` directly.
 
-use std::cell::RefCell;
-use std::collections::{HashMap, VecDeque};
-
-use crate::convlib::{Algorithm, ConvParams, KernelDesc};
+use crate::convlib::Algorithm;
+use crate::gpusim::{DeviceSpec, PartitionMode};
 use crate::graph::{Dag, OpKind};
-use crate::gpusim::{
-    isolated_time_us, DeviceSpec, Engine, PartitionMode, SimResult,
-};
-use crate::memory::DeviceMemory;
+use crate::plan::Session;
 
-use super::selector::{select_group, select_solo, SelectionPolicy};
+use super::selector::SelectionPolicy;
 
 /// Ready-queue ordering policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -97,32 +98,28 @@ pub struct ScheduleResult {
     /// Times an algorithm had to be downgraded because workspace would not
     /// fit next to concurrently running ops.
     pub ws_fallbacks: u64,
-    /// Number of scheduling rounds (engine invocations).
+    /// Number of scheduling rounds (co-execution groups executed).
     pub rounds: u64,
     /// Wall time spent with >= 2 convs in flight.
     pub conv_overlap_us: f64,
 }
 
-/// The coordinator: owns the device spec and config, executes DAGs.
+/// Legacy facade: owns the device spec and config, executes DAGs.
+///
+/// Since the plan/execute split this is a compatibility shim over
+/// [`Session`]: `execute_dag` is exactly `Session::run` (plan on cache
+/// miss, replay on hit), so results are bit-identical to the pre-split
+/// inline scheduler while repeated calls on the same network skip
+/// selection entirely. Prefer [`Session`] in new code — it exposes the
+/// plan cache, `plan()`, and serialization.
 pub struct Coordinator {
-    spec: DeviceSpec,
-    cfg: ScheduleConfig,
-    /// Optional (rate, seed) for workspace-allocation failure injection.
-    failure_injection: Option<(f64, u64)>,
-    /// Memoized unconstrained solo selections: repeated convolutions (the
-    /// same shape appears dozens of times per network) probe the
-    /// seven-algorithm space once. Perf opt, see EXPERIMENTS.md §Perf.
-    solo_cache:
-        RefCell<HashMap<(ConvParams, SelectionPolicy), KernelDesc>>,
+    session: Session,
 }
 
 impl Coordinator {
     pub fn new(spec: DeviceSpec, cfg: ScheduleConfig) -> Self {
         Self {
-            spec,
-            cfg,
-            failure_injection: None,
-            solo_cache: RefCell::new(HashMap::new()),
+            session: Session::new(spec, cfg),
         }
     }
 
@@ -135,316 +132,29 @@ impl Coordinator {
         rate: f64,
         seed: u64,
     ) -> Self {
-        let mut c = Self::new(spec, cfg);
-        c.failure_injection = Some((rate, seed));
-        c
-    }
-
-    /// Memoized `select_solo` with an unlimited budget.
-    fn solo_unconstrained(
-        &self,
-        policy: SelectionPolicy,
-        p: &ConvParams,
-    ) -> KernelDesc {
-        if let Some(d) =
-            self.solo_cache.borrow().get(&(p.clone(), policy))
-        {
-            return d.clone();
+        Self {
+            session: Session::with_failure_injection(spec, cfg, rate, seed),
         }
-        let d = select_solo(policy, p, &self.spec, u64::MAX)
-            .expect("some algorithm always supported");
-        self.solo_cache
-            .borrow_mut()
-            .insert((p.clone(), policy), d.clone());
-        d
     }
 
     pub fn spec(&self) -> &DeviceSpec {
-        &self.spec
+        self.session.spec()
     }
 
     pub fn config(&self) -> &ScheduleConfig {
-        &self.cfg
+        self.session.config()
     }
 
-    /// Execute the DAG: returns the simulated timeline.
+    /// The session backing this shim (plan cache, stats, serialization).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// Execute the DAG: returns the simulated timeline. Equivalent to
+    /// [`Session::run`] — plan-then-execute, with the plan cached for
+    /// subsequent calls.
     pub fn execute_dag(&self, dag: &Dag) -> ScheduleResult {
-        let mut indeg: Vec<usize> =
-            (0..dag.len()).map(|i| dag.preds(i).len()).collect();
-        let mut ready: VecDeque<usize> = (0..dag.len())
-            .filter(|&i| indeg[i] == 0)
-            .collect();
-        let mut mem = match self.failure_injection {
-            Some((rate, seed)) => DeviceMemory::with_failure_injection(
-                self.cfg.workspace_limit,
-                rate,
-                seed,
-            ),
-            None => DeviceMemory::new(self.cfg.workspace_limit),
-        };
-        // Critical-path (bottom-level) priorities, computed once per DAG
-        // from the fastest-solo cost model (Fifo never reads them, so it
-        // skips the cost-model sweep).
-        let bl = if self.cfg.priority == PriorityPolicy::CriticalPath {
-            self.bottom_levels(dag)
-        } else {
-            Vec::new()
-        };
-        let mut clock = 0.0f64;
-        let mut ops: Vec<OpExec> = Vec::with_capacity(dag.len());
-        let mut ws_fallbacks = 0u64;
-        let mut rounds = 0u64;
-        let mut conv_overlap_us = 0.0f64;
-        let mut done = vec![false; dag.len()];
-
-        while !ready.is_empty() {
-            // Partition the ready set into convs and cheap ops.
-            let round: Vec<usize> = ready.drain(..).collect();
-            let mut convs: Vec<usize> = Vec::new();
-            for &id in &round {
-                match &dag.ops[id].kind {
-                    OpKind::Conv(_) => convs.push(id),
-                    kind => {
-                        // bandwidth-bound ops run back-to-back (negligible
-                        // concurrency value; cuDNN launches them serially)
-                        let dur = non_conv_time_us(kind, &self.spec);
-                        ops.push(OpExec {
-                            op_id: id,
-                            name: dag.ops[id].name.clone(),
-                            kind: kind.kind_name(),
-                            algo: None,
-                            start_us: clock,
-                            end_us: clock + dur,
-                            workspace_bytes: 0,
-                        });
-                        clock += dur;
-                    }
-                }
-            }
-
-            // Order ready convs by the configured priority, then pack
-            // them into co-execution groups of at most `streams` ops.
-            if self.cfg.priority == PriorityPolicy::CriticalPath {
-                convs.sort_by(|&a, &b| {
-                    bl[b]
-                        .partial_cmp(&bl[a])
-                        .unwrap()
-                        .then(a.cmp(&b))
-                });
-            }
-            let mut pending: VecDeque<usize> = convs.into();
-            while !pending.is_empty() {
-                rounds += 1;
-                let (batch, descs, mode) = self.plan_batch(
-                    dag,
-                    &mut pending,
-                    &mem,
-                    &mut ws_fallbacks,
-                );
-                let (sim, allocs, ran) =
-                    self.run_batch(&descs, mode, &mut mem, &mut ws_fallbacks);
-                for ((id, desc), rec) in
-                    batch.iter().zip(&ran).zip(&sim.kernels)
-                {
-                    ops.push(OpExec {
-                        op_id: *id,
-                        name: dag.ops[*id].name.clone(),
-                        kind: "conv",
-                        algo: Some(desc.algo),
-                        start_us: clock + rec.start_us,
-                        end_us: clock + rec.end_us,
-                        workspace_bytes: desc.workspace_bytes,
-                    });
-                }
-                conv_overlap_us += sim.overlap_us();
-                clock += sim.makespan_us;
-                for a in allocs {
-                    mem.free(a).expect("workspace free");
-                }
-            }
-
-            // Mark round done, release successors.
-            for &id in &round {
-                done[id] = true;
-            }
-            for &id in &round {
-                for &s in dag.succs(id) {
-                    indeg[s] -= 1;
-                    if indeg[s] == 0 && !done[s] {
-                        ready.push_back(s);
-                    }
-                }
-            }
-        }
-
-        debug_assert!(done.iter().all(|&d| d), "unscheduled ops (cycle?)");
-        ScheduleResult {
-            makespan_us: clock,
-            ops,
-            peak_workspace: mem.peak(),
-            ws_fallbacks,
-            rounds,
-            conv_overlap_us,
-        }
-    }
-
-    /// Bottom-level priority of every op: longest cost-weighted path to a
-    /// sink under the fastest-solo cost model (convs) / bandwidth model
-    /// (everything else). One reverse topological sweep per DAG.
-    fn bottom_levels(&self, dag: &Dag) -> Vec<f64> {
-        let cost: Vec<f64> = (0..dag.len())
-            .map(|i| match &dag.ops[i].kind {
-                OpKind::Conv(p) => {
-                    let d = self
-                        .solo_unconstrained(SelectionPolicy::FastestOnly, p);
-                    isolated_time_us(&d, &self.spec)
-                }
-                kind => non_conv_time_us(kind, &self.spec),
-            })
-            .collect();
-        dag.bottom_levels(&cost)
-    }
-
-    /// Take the next co-execution batch off the priority-ordered pending
-    /// conv queue: the ops to run, their algorithms, and the partition
-    /// mode to run them under.
-    ///
-    /// `ProfileGuided` packs a k-wide group via [`select_group`]: the
-    /// highest-priority conv seeds the group and partners join only when
-    /// the fluid-model estimate beats serializing them — the paper's
-    /// "profile-based algorithm selection has to evaluate multiple
-    /// metrics for optimal parallelism" (§3), generalized from pairs to
-    /// `streams`-wide groups. When no partner pays, the seed runs solo on
-    /// its fastest fitting algorithm, so guided scheduling can never
-    /// regress. Other policies chunk up to `streams` convs in priority
-    /// order and let the partition mode decide the concurrency (the
-    /// TensorFlow-style baseline).
-    fn plan_batch(
-        &self,
-        dag: &Dag,
-        pending: &mut VecDeque<usize>,
-        mem: &DeviceMemory,
-        ws_fallbacks: &mut u64,
-    ) -> (Vec<usize>, Vec<KernelDesc>, PartitionMode) {
-        let conv_params = |id: usize| match &dag.ops[id].kind {
-            OpKind::Conv(p) => p,
-            _ => unreachable!("pending contains non-conv"),
-        };
-        let budget = mem.available();
-        let k = self.cfg.streams.max(1);
-        if self.cfg.policy == SelectionPolicy::ProfileGuided
-            && k >= 2
-            && pending.len() >= 2
-        {
-            let ids: Vec<usize> = pending.iter().copied().collect();
-            let params: Vec<&ConvParams> =
-                ids.iter().map(|&id| conv_params(id)).collect();
-            if let Some(g) = select_group(&params, k, &self.spec, budget) {
-                if g.members.len() >= 2 {
-                    let batch: Vec<usize> =
-                        g.members.iter().map(|&m| ids[m]).collect();
-                    pending.retain(|id| !batch.contains(id));
-                    return (batch, g.descs, self.cfg.partition);
-                }
-            }
-            // no partner pays off: the seed runs alone, serially
-            let id = pending.pop_front().expect("pending non-empty");
-            let descs =
-                self.solo_batch(&[conv_params(id)], budget, ws_fallbacks);
-            return (vec![id], descs, PartitionMode::Serial);
-        }
-        let take = k.min(pending.len());
-        let batch: Vec<usize> = pending.drain(..take).collect();
-        let params: Vec<&ConvParams> =
-            batch.iter().map(|&id| conv_params(id)).collect();
-        let descs = self.solo_batch(&params, budget, ws_fallbacks);
-        (batch, descs, self.cfg.partition)
-    }
-
-    fn solo_batch(
-        &self,
-        params: &[&ConvParams],
-        mut budget: u64,
-        ws_fallbacks: &mut u64,
-    ) -> Vec<KernelDesc> {
-        // Sequential admission: each op's workspace shrinks the budget the
-        // next sees (launch-time memory check, paper §2 footnote 1).
-        // ProfileGuided ops running solo take the fastest fitting algorithm
-        // (complementarity is meaningless without a partner).
-        let policy = match self.cfg.policy {
-            SelectionPolicy::ProfileGuided => SelectionPolicy::FastestOnly,
-            p => p,
-        };
-        let mut out = Vec::with_capacity(params.len());
-        for p in params {
-            let unconstrained = self.solo_unconstrained(policy, p);
-            let fitted = if unconstrained.workspace_bytes <= budget {
-                unconstrained.clone()
-            } else {
-                select_solo(policy, p, &self.spec, budget)
-                    .expect("GEMM fallback always fits")
-            };
-            if fitted.algo != unconstrained.algo {
-                *ws_fallbacks += 1;
-            }
-            budget = budget.saturating_sub(fitted.workspace_bytes);
-            out.push(fitted);
-        }
-        out
-    }
-
-    /// Simulate one batch; workspace is held for the batch duration.
-    /// Returns the timeline, the live allocation ids, and the descriptors
-    /// that actually ran (fallback downgrades included), so the caller's
-    /// execution records never misattribute algorithm or workspace.
-    fn run_batch(
-        &self,
-        descs: &[KernelDesc],
-        mode: PartitionMode,
-        mem: &mut DeviceMemory,
-        ws_fallbacks: &mut u64,
-    ) -> (SimResult, Vec<u64>, Vec<KernelDesc>) {
-        // Graceful degradation: if an admission-checked allocation still
-        // fails (failure injection / fragmentation), downgrade that op to
-        // its workspace-free fallback rather than failing the schedule —
-        // mirroring frameworks falling back when cudaMalloc refuses.
-        let mut final_descs: Vec<KernelDesc> = Vec::with_capacity(descs.len());
-        let mut allocs = Vec::with_capacity(descs.len());
-        for d in descs {
-            match mem.alloc(d.workspace_bytes) {
-                Ok(id) => {
-                    allocs.push(id);
-                    final_descs.push(d.clone());
-                }
-                Err(_) => {
-                    let fallback = crate::convlib::kernel_desc(
-                        Algorithm::Gemm,
-                        &d.params,
-                        &self.spec,
-                    )
-                    .expect("GEMM supports every convolution");
-                    debug_assert_eq!(fallback.workspace_bytes, 0);
-                    if fallback.algo != d.algo {
-                        *ws_fallbacks += 1;
-                    }
-                    final_descs.push(fallback);
-                }
-            }
-        }
-        let mode = if final_descs.len() <= 1 {
-            PartitionMode::Serial
-        } else {
-            mode
-        };
-        let mut engine = Engine::new(self.spec.clone(), mode);
-        for (i, d) in final_descs.iter().enumerate() {
-            let stream = match mode {
-                PartitionMode::Serial => 0,
-                _ => i,
-            };
-            engine.launch(d.clone(), stream);
-        }
-        (engine.run(), allocs, final_descs)
+        self.session.run(dag)
     }
 }
 
@@ -672,5 +382,22 @@ mod tests {
         .execute_dag(&dag);
         // running 4 convs at once cannot use less peak workspace
         assert!(conc.peak_workspace >= serial.peak_workspace);
+    }
+
+    #[test]
+    fn shim_exposes_its_session() {
+        let c = coord(
+            SelectionPolicy::ProfileGuided,
+            PartitionMode::IntraSm,
+            2,
+        );
+        let dag = Network::GoogleNet.build(8);
+        c.execute_dag(&dag);
+        c.execute_dag(&dag);
+        let stats = c.session().stats();
+        assert_eq!(stats.plans_built, 1);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(c.spec().name, "Tesla K40");
+        assert_eq!(c.config().streams, 2);
     }
 }

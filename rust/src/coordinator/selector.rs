@@ -6,12 +6,31 @@
 //! paper's proposal: a multi-metric selection that considers SM resource
 //! complementarity and workspace, enabling concurrent execution.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::convlib::{
     kernel_desc, ConvParams, KernelDesc, LaunchConfig, ALL_ALGORITHMS,
 };
 use crate::gpusim::partition::plan_intra_sm;
 use crate::gpusim::timing::full_rate_bw_demand;
 use crate::gpusim::{isolated_time_us, natural_residency, DeviceSpec};
+
+/// Process-wide count of selector entry-point invocations ([`select_solo`],
+/// [`select_pair`], [`select_group`]). This is the plan/execute split's
+/// observable contract: building a `plan::Plan` spends selector calls,
+/// replaying one spends none — `rust/tests/session_cache.rs` pins a
+/// `Session` cache hit to a zero delta on this counter.
+static SELECTOR_INVOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Monotonic count of selector invocations in this process. Read a delta
+/// around a region to measure how much selection work it performed.
+pub fn selector_invocations() -> u64 {
+    SELECTOR_INVOCATIONS.load(Ordering::Relaxed)
+}
+
+fn count_invocation() {
+    SELECTOR_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Algorithm-selection policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -71,6 +90,7 @@ pub fn select_solo(
     dev: &DeviceSpec,
     ws_budget: u64,
 ) -> Option<KernelDesc> {
+    count_invocation();
     let mut cands = candidates_for(p, dev, ws_budget);
     if cands.is_empty() {
         return None;
@@ -286,6 +306,7 @@ pub fn select_group(
     dev: &DeviceSpec,
     ws_budget: u64,
 ) -> Option<GroupSelection> {
+    count_invocation();
     if candidates.is_empty() || k == 0 {
         return None;
     }
@@ -393,6 +414,7 @@ pub fn select_pair(
     dev: &DeviceSpec,
     ws_budget: u64,
 ) -> Option<(KernelDesc, KernelDesc, f64)> {
+    count_invocation();
     let cas = candidates_for(pa, dev, ws_budget);
     let cbs = candidates_for(pb, dev, ws_budget);
     let mut best: Option<(KernelDesc, KernelDesc, f64)> = None;

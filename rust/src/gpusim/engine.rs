@@ -558,6 +558,37 @@ impl Engine {
     }
 }
 
+/// Execute one prebuilt co-execution group to completion: a fresh engine,
+/// each descriptor launched on its own stream (stream 0 when the group
+/// runs serially), run until idle. This is the execution half of the
+/// plan/execute split — `plan::Plan` replays its recorded groups through
+/// here, and the `Session`'s inline path uses the exact same function, so
+/// a deserialized plan cannot diverge from a freshly planned one.
+///
+/// Singleton (and empty) groups always run serially: concurrency modes
+/// are meaningless below two kernels, and collapsing them here keeps the
+/// rule in one place.
+pub fn run_group(
+    spec: &DeviceSpec,
+    mode: PartitionMode,
+    descs: &[KernelDesc],
+) -> SimResult {
+    let mode = if descs.len() <= 1 {
+        PartitionMode::Serial
+    } else {
+        mode
+    };
+    let mut engine = Engine::new(spec.clone(), mode);
+    for (i, d) in descs.iter().enumerate() {
+        let stream = match mode {
+            PartitionMode::Serial => 0,
+            _ => i,
+        };
+        engine.launch(d.clone(), stream);
+    }
+    engine.run()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -744,6 +775,24 @@ mod tests {
         let r1 = run_pair(a.clone(), b.clone(), PartitionMode::IntraSm);
         let r2 = run_pair(a, b, PartitionMode::IntraSm);
         assert_eq!(r1.makespan_us, r2.makespan_us);
+    }
+
+    #[test]
+    fn run_group_matches_manual_launch_sequence() {
+        let p3 = ConvParams::incep3a_3x3(32);
+        let a = desc(Algorithm::ImplicitPrecompGemm, &p3);
+        let b = desc(Algorithm::FftTiling, &p3);
+        let manual = run_pair(a.clone(), b.clone(), PartitionMode::IntraSm);
+        let grouped =
+            run_group(&k40(), PartitionMode::IntraSm, &[a.clone(), b]);
+        assert_eq!(manual.makespan_us, grouped.makespan_us);
+        // singleton groups collapse to serial execution
+        let solo = run_group(&k40(), PartitionMode::IntraSm, &[a.clone()]);
+        let iso = isolated_time_us(&a, &k40());
+        assert!((solo.makespan_us - iso).abs() / iso < 0.10);
+        // empty group is a no-op
+        let empty = run_group(&k40(), PartitionMode::IntraSm, &[]);
+        assert_eq!(empty.makespan_us, 0.0);
     }
 
     #[test]

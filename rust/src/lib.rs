@@ -23,6 +23,12 @@
 //!   workspace-aware admission, and algorithm-selection policies
 //!   (TensorFlow-style fastest-only vs the paper's profile-guided
 //!   multi-metric selection), plus complementary-pair discovery.
+//! - [`plan`] — the Plan/Execute split: [`Planner`] runs the selection
+//!   sweep once and emits an immutable, JSON-serializable [`Plan`];
+//!   [`Session`] caches plans keyed by DAG digest and replays them per
+//!   request with zero selector calls (profile-guided selection is an
+//!   *offline* activity — paper §2). `Coordinator::execute_dag` is now a
+//!   compatibility shim over `Session::run`.
 //! - [`runtime`] — PJRT CPU client running the AOT-compiled JAX/Pallas
 //!   artifacts, so every scheduled convolution's *numerics* are real.
 //! - [`trainer`] — an SGD loop over the AOT `train_step` artifact.
@@ -69,6 +75,7 @@ pub mod coordinator;
 pub mod gpusim;
 pub mod graph;
 pub mod memory;
+pub mod plan;
 pub mod profiler;
 pub mod runtime;
 pub mod trainer;
@@ -78,3 +85,4 @@ pub use convlib::{Algorithm, ConvParams};
 pub use coordinator::{Coordinator, SelectionPolicy};
 pub use gpusim::{DeviceSpec, PartitionMode};
 pub use graph::Network;
+pub use plan::{Plan, Planner, Session};

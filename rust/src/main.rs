@@ -11,13 +11,20 @@
 //! parconv end2end    [--network N]     # E6: policy x partition matrix
 //! parconv validate                     # E7: artifact numerics cross-check
 //! parconv train      [--steps N]       # E8: e2e training loop (loss curve)
+//! parconv training   [--network N]     # E9: fwd+bwd training-DAG matrix
+//! parconv plan       [--out F]         # build + save a Plan (JSON), verify
+//!                                      #   it reloads and replays identically
 //! parconv trace      [--out F]         # chrome-trace of one iteration
 //! ```
 //!
 //! Global flags: `--config FILE`, `--device k40|p100|v100|a100`,
 //! `--batch N`, `--policy P`, `--partition M`, `--streams N`,
 //! `--priority critical_path|fifo`, `--workspace-mb N`,
-//! `--artifacts DIR`.
+//! `--artifacts DIR`, `--min-speedup X` (discovery admission threshold,
+//! default 1.05).
+//!
+//! Every scheduling command goes through a [`Session`]: plans are built
+//! once per (network, batch, config) and replayed from the cache.
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -25,11 +32,11 @@ use std::process::ExitCode;
 use parconv::config::RunConfig;
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams, ALL_ALGORITHMS};
 use parconv::coordinator::{
-    discover_pairs, Coordinator, PriorityPolicy, ScheduleConfig,
-    SelectionPolicy,
+    discover_pairs, PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{isolated_time_us, DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
+use parconv::plan::{Plan, Session};
 use parconv::profiler::{chrome_trace_json, table1_report, table1_row};
 use parconv::trainer::Trainer;
 use parconv::util::{fmt_bytes, fmt_us, Table};
@@ -131,6 +138,17 @@ fn sched_partition(cfg: &RunConfig) -> anyhow::Result<PartitionMode> {
     })
 }
 
+/// The fully resolved scheduler configuration the CLI flags describe.
+fn schedule_config(cfg: &RunConfig) -> anyhow::Result<ScheduleConfig> {
+    Ok(ScheduleConfig {
+        policy: sched_policy(cfg)?,
+        partition: sched_partition(cfg)?,
+        streams: cfg.scheduler.streams,
+        workspace_limit: cfg.scheduler.workspace_limit,
+        priority: priority(cfg)?,
+    })
+}
+
 fn run(args: Vec<String>) -> anyhow::Result<()> {
     let cli = parse_cli(args)?;
     match cli.cmd.as_str() {
@@ -143,6 +161,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "training" => cmd_training(&cli),
         "validate" => cmd_validate(&cli),
         "train" => cmd_train(&cli),
+        "plan" => cmd_plan(&cli),
         "trace" => cmd_trace(&cli),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
@@ -153,7 +172,10 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "parconv — concurrent CNN ops on a simulated GPU (SPAA'20 reproduction)
-commands: table1 table2 networks serialization discover end2end training validate train trace help";
+commands: table1 table2 networks serialization discover end2end training validate train plan trace help
+global flags: --config FILE --device D --network N --batch B --policy P
+              --partition M --streams K --priority Q --workspace-mb MB
+              --artifacts DIR --min-speedup X";
 
 // --------------------------------------------------------------------------
 
@@ -388,7 +410,7 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
         combos.push(configured);
     }
     for (policy, partition, streams) in combos {
-        let coord = Coordinator::new(
+        let session = Session::new(
             dev.clone(),
             ScheduleConfig {
                 policy,
@@ -398,7 +420,7 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
                 priority: priority(&cli.cfg)?,
             },
         );
-        let r = coord.execute_dag(&dag);
+        let r = session.run(&dag);
         t.row(vec![
             policy.name().to_string(),
             partition.name().to_string(),
@@ -452,7 +474,7 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
         combos.push(configured);
     }
     for (policy, partition, streams) in combos {
-        let r = Coordinator::new(
+        let r = Session::new(
             dev.clone(),
             ScheduleConfig {
                 policy,
@@ -462,7 +484,7 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
                 priority: priority(&cli.cfg)?,
             },
         )
-        .execute_dag(&train);
+        .run(&train);
         t.row(vec![
             policy.name().to_string(),
             partition.name().to_string(),
@@ -566,6 +588,64 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
         std::fs::write(out, csv)?;
         println!("wrote loss curve to {out}");
     }
+    Ok(())
+}
+
+fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
+    let dev = device(&cli.cfg)?;
+    let net = network(&cli.cfg)?;
+    let dag = net.build(cli.cfg.batch);
+    let cfg = schedule_config(&cli.cfg)?;
+    let session = Session::new(dev.clone(), cfg);
+    let plan = session.plan_labeled(&dag, net.name());
+    let out = cli.out.clone().unwrap_or_else(|| "plan.json".into());
+    std::fs::write(&out, plan.to_json())?;
+
+    // Round-trip guard (the CI `plan-roundtrip` step relies on this):
+    // reload from disk and require the digest and the replayed makespan to
+    // match bit-for-bit, so serialization drift fails loudly.
+    let reloaded = Plan::from_json(&std::fs::read_to_string(&out)?)?;
+    anyhow::ensure!(
+        reloaded.digest() == plan.digest(),
+        "plan digest drifted across serialize/deserialize: \
+         {:016x} -> {:016x}",
+        plan.digest(),
+        reloaded.digest()
+    );
+    let direct = plan.execute(&dag, &dev)?;
+    let replayed = reloaded.execute(&dag, &dev)?;
+    anyhow::ensure!(
+        direct.makespan_us == replayed.makespan_us,
+        "reloaded plan executes differently: {} vs {} us",
+        direct.makespan_us,
+        replayed.makespan_us
+    );
+
+    println!(
+        "plan — {} batch {} on {} ({}/{}/k={})\n",
+        net.name(),
+        cli.cfg.batch,
+        dev.name,
+        plan.meta.policy.name(),
+        plan.meta.partition.name(),
+        plan.meta.streams,
+    );
+    println!(
+        "  steps:              {} ({} co-execution groups)",
+        plan.steps.len(),
+        plan.group_count()
+    );
+    println!(
+        "  selector calls:     {} (replay: 0)",
+        plan.meta.selector_calls
+    );
+    println!(
+        "  predicted makespan: {}",
+        fmt_us(plan.predicted_makespan_us)
+    );
+    println!("  executed makespan:  {}", fmt_us(direct.makespan_us));
+    println!("  digest:             {:016x}", plan.digest());
+    println!("\nwrote {out}; reload + replay verified identical ✓");
     Ok(())
 }
 

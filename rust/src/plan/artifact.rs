@@ -1,0 +1,720 @@
+//! The immutable [`Plan`] artifact: everything the offline planner decided,
+//! in execution order, plus the provenance needed to refuse replay against
+//! inputs it was not built for.
+//!
+//! A plan deliberately stores *decisions*, not derived state: convolution
+//! members carry only `(op, algorithm)` and the executor rebuilds each
+//! [`KernelDesc`] from the DAG's parameters with [`kernel_desc`] — the same
+//! pure function the planner used — so a JSON round-trip cannot drift from
+//! the in-memory plan. Workspace sizes, per-SM quotas, and fluid estimates
+//! are recorded as provenance/diagnostics only.
+
+use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
+use crate::coordinator::{
+    non_conv_time_us, OpExec, PriorityPolicy, ScheduleConfig, ScheduleResult,
+    SelectionPolicy,
+};
+use crate::gpusim::{run_group, DeviceSpec, PartitionMode};
+use crate::graph::{Dag, OpKind};
+use crate::memory::DeviceMemory;
+use crate::util::digest::{hex16, parse_hex16, Fnv64};
+
+use super::json::{escape, JsonValue};
+
+/// Version tag of the plan JSON layout.
+pub const PLAN_FORMAT_VERSION: u32 = 1;
+
+/// Errors from plan execution or deserialization.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum PlanError {
+    #[error(
+        "plan was built for a different DAG \
+         (expected digest {expected:016x}, got {got:016x})"
+    )]
+    DagMismatch { expected: u64, got: u64 },
+    #[error("plan was built for device {expected:?}, got {got:?}")]
+    SpecMismatch { expected: String, got: String },
+    #[error("plan member op {op} is not a convolution in this DAG")]
+    NotAConv { op: usize },
+    #[error("plan step references op {op}, but the DAG has {ops} ops")]
+    OpOutOfRange { op: usize, ops: usize },
+    #[error("plan schedules op {op} more than once")]
+    DuplicateOp { op: usize },
+    #[error("plan covers {executed} of the DAG's {ops} ops")]
+    IncompleteCoverage { executed: usize, ops: usize },
+    #[error("algorithm {algo} is unsupported for op {op} on this device")]
+    Unsupported { algo: Algorithm, op: usize },
+    #[error("malformed plan JSON: {0}")]
+    Parse(String),
+}
+
+/// Provenance of a plan: where it came from and what it assumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanMeta {
+    /// Plan JSON layout version ([`PLAN_FORMAT_VERSION`]).
+    pub version: u32,
+    /// Human label, usually the network name ("" when planned from a raw
+    /// DAG).
+    pub label: String,
+    /// Device the plan was built for (display name; `spec_digest` is the
+    /// binding check).
+    pub device: String,
+    /// Batch size, read off the first convolution (0 if the DAG has none).
+    pub batch: usize,
+    /// Op count of the source DAG.
+    pub ops: usize,
+    /// Structural digest of the source DAG (see [`dag_digest`]).
+    pub dag_digest: u64,
+    /// Digest of the [`DeviceSpec`] (see [`spec_digest`]).
+    pub spec_digest: u64,
+    /// Digest of the [`ScheduleConfig`] (see [`config_digest`]).
+    pub config_digest: u64,
+    pub policy: SelectionPolicy,
+    pub partition: PartitionMode,
+    pub streams: usize,
+    pub workspace_limit: u64,
+    pub priority: PriorityPolicy,
+    /// Workspace fallbacks already taken at plan time (budget fitting).
+    pub planned_ws_fallbacks: u64,
+    /// Selector invocations spent building the plan (diagnostics: replay
+    /// spends zero). Depends on the planner's memo-cache warmth — and,
+    /// being a delta on a process-wide counter, is approximate under
+    /// concurrent planning — so it is excluded from [`Plan::digest`].
+    pub selector_calls: u64,
+}
+
+/// One planned convolution: the decision, plus informational footprint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpPlan {
+    /// Op id in the source DAG.
+    pub op: usize,
+    /// The chosen algorithm (the decision; everything else re-derives).
+    pub algo: Algorithm,
+    /// Workspace the chosen kernel allocates (informational).
+    pub workspace_bytes: u64,
+}
+
+/// One ordered co-execution group: members launch on streams 0..k under
+/// `partition` and run to completion before the next step starts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupPlan {
+    /// Members in admission order (seed first); member `i` launches on
+    /// stream `i` (stream 0 when the group runs serially).
+    pub members: Vec<OpPlan>,
+    pub partition: PartitionMode,
+    /// Per-SM residency quota planned for each member (informational; the
+    /// engine re-derives the same plan from the same inputs).
+    pub quotas: Vec<u32>,
+    /// Fluid-model estimate of the group makespan (informational).
+    pub est_us: f64,
+}
+
+/// One step of a plan, in execution order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanStep {
+    /// A bandwidth-bound non-convolution op, run back-to-back.
+    Host { op: usize },
+    /// A co-execution group of convolutions.
+    Group(GroupPlan),
+}
+
+/// An immutable, replayable schedule for one DAG on one device under one
+/// configuration. Built by [`super::Planner`], cached by
+/// [`super::Session`], serialized with [`Plan::to_json`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub meta: PlanMeta,
+    pub steps: Vec<PlanStep>,
+    /// Analytic makespan estimate (fluid model; the executed makespan is
+    /// the ground truth).
+    pub predicted_makespan_us: f64,
+}
+
+// -------------------------------------------------------------------------
+// digests
+// -------------------------------------------------------------------------
+
+/// Structural digest of a DAG, covering exactly the scheduling-relevant
+/// view: op names, kinds (full parameters for convolutions, the cost-model
+/// inputs for everything else), and the edge lists.
+pub fn dag_digest(dag: &Dag) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_usize(dag.len());
+    for op in &dag.ops {
+        h.write_str(&op.name);
+        h.write_str(op.kind.kind_name());
+        match &op.kind {
+            OpKind::Conv(p) => {
+                for v in [
+                    p.n, p.c, p.h, p.w, p.k, p.r, p.s, p.stride.0,
+                    p.stride.1, p.padding.0, p.padding.1,
+                ] {
+                    h.write_usize(v);
+                }
+            }
+            kind => {
+                h.write_f64(kind.flops());
+                h.write_f64(kind.dram_bytes());
+            }
+        }
+    }
+    for i in 0..dag.len() {
+        h.write_usize(dag.succs(i).len());
+        for &s in dag.succs(i) {
+            h.write_usize(s);
+        }
+    }
+    h.finish()
+}
+
+/// Digest of a device spec (all fields, floats bit-exact).
+pub fn spec_digest(spec: &DeviceSpec) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str(&spec.name);
+    h.write_u32(spec.num_sms);
+    h.write_u64(spec.regs_per_sm);
+    h.write_u64(spec.smem_per_sm);
+    h.write_u32(spec.max_threads_per_sm);
+    h.write_u32(spec.max_blocks_per_sm);
+    h.write_u32(spec.max_warps_per_sm);
+    h.write_f64(spec.peak_flops);
+    h.write_f64(spec.dram_bw);
+    h.write_f64(spec.dram_efficiency);
+    h.write_u64(spec.global_mem);
+    h.write_f64(spec.launch_overhead_us);
+    h.finish()
+}
+
+/// Digest of a scheduler configuration.
+pub fn config_digest(cfg: &ScheduleConfig) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str(cfg.policy.name());
+    h.write_str(cfg.partition.name());
+    h.write_usize(cfg.streams);
+    h.write_u64(cfg.workspace_limit);
+    h.write_str(cfg.priority.name());
+    h.finish()
+}
+
+// -------------------------------------------------------------------------
+// execution
+// -------------------------------------------------------------------------
+
+impl Plan {
+    /// Content digest of the whole plan (meta + steps). Two plans with
+    /// equal digests execute identically; the CI round-trip guard compares
+    /// this across serialize → deserialize.
+    ///
+    /// `selector_calls` is deliberately excluded: it records how much
+    /// selection work *this particular build* performed, which shrinks as
+    /// the planner's memo cache warms — two plans that differ only in that
+    /// provenance counter are the same plan.
+    pub fn digest(&self) -> u64 {
+        let m = &self.meta;
+        let mut h = Fnv64::new();
+        h.write_u32(m.version);
+        h.write_str(&m.label);
+        h.write_str(&m.device);
+        h.write_usize(m.batch);
+        h.write_usize(m.ops);
+        h.write_u64(m.dag_digest);
+        h.write_u64(m.spec_digest);
+        h.write_u64(m.config_digest);
+        h.write_str(m.policy.name());
+        h.write_str(m.partition.name());
+        h.write_usize(m.streams);
+        h.write_u64(m.workspace_limit);
+        h.write_str(m.priority.name());
+        h.write_u64(m.planned_ws_fallbacks);
+        h.write_f64(self.predicted_makespan_us);
+        for step in &self.steps {
+            match step {
+                PlanStep::Host { op } => {
+                    h.write_u32(0);
+                    h.write_usize(*op);
+                }
+                PlanStep::Group(g) => {
+                    h.write_u32(1);
+                    h.write_str(g.partition.name());
+                    h.write_f64(g.est_us);
+                    h.write_usize(g.quotas.len());
+                    for &q in &g.quotas {
+                        h.write_u32(q);
+                    }
+                    h.write_usize(g.members.len());
+                    for m in &g.members {
+                        h.write_usize(m.op);
+                        h.write_str(m.algo.name());
+                        h.write_u64(m.workspace_bytes);
+                    }
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Number of co-execution groups (selector-driven steps).
+    pub fn group_count(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s, PlanStep::Group(_)))
+            .count()
+    }
+
+    /// Replay the plan: drive the simulator through the prerecorded step
+    /// sequence. No selection happens here — algorithm choices are read
+    /// off the plan and kernel descriptors are rebuilt from the DAG's
+    /// parameters, so replay is bit-identical to the run that would have
+    /// planned inline.
+    ///
+    /// Fails if `dag` or `spec` differ from what the plan was built for.
+    pub fn execute(
+        &self,
+        dag: &Dag,
+        spec: &DeviceSpec,
+    ) -> Result<ScheduleResult, PlanError> {
+        self.execute_with_memory(
+            dag,
+            spec,
+            DeviceMemory::new(self.meta.workspace_limit),
+        )
+    }
+
+    /// Replay with a caller-provided workspace allocator (the session uses
+    /// this to thread failure injection through).
+    pub(crate) fn execute_with_memory(
+        &self,
+        dag: &Dag,
+        spec: &DeviceSpec,
+        mut mem: DeviceMemory,
+    ) -> Result<ScheduleResult, PlanError> {
+        let got = dag_digest(dag);
+        if got != self.meta.dag_digest {
+            return Err(PlanError::DagMismatch {
+                expected: self.meta.dag_digest,
+                got,
+            });
+        }
+        let got_spec = spec_digest(spec);
+        if got_spec != self.meta.spec_digest {
+            return Err(PlanError::SpecMismatch {
+                expected: self.meta.device.clone(),
+                got: spec.name.clone(),
+            });
+        }
+
+        let mut clock = 0.0f64;
+        let mut ops: Vec<OpExec> = Vec::with_capacity(dag.len());
+        let mut ws_fallbacks = self.meta.planned_ws_fallbacks;
+        let mut rounds = 0u64;
+        let mut conv_overlap_us = 0.0f64;
+        // Integrity: every step's op must exist and be scheduled exactly
+        // once — a hand-edited plan whose digests still match must fail
+        // loudly here, not return a silently truncated timeline.
+        let mut seen = vec![false; dag.len()];
+        let mut check_op = |op: usize| {
+            if op >= dag.len() {
+                return Err(PlanError::OpOutOfRange {
+                    op,
+                    ops: dag.len(),
+                });
+            }
+            if seen[op] {
+                return Err(PlanError::DuplicateOp { op });
+            }
+            seen[op] = true;
+            Ok(())
+        };
+        for step in &self.steps {
+            match step {
+                PlanStep::Host { op } => {
+                    check_op(*op)?;
+                    let kind = &dag.ops[*op].kind;
+                    let dur = non_conv_time_us(kind, spec);
+                    ops.push(OpExec {
+                        op_id: *op,
+                        name: dag.ops[*op].name.clone(),
+                        kind: kind.kind_name(),
+                        algo: None,
+                        start_us: clock,
+                        end_us: clock + dur,
+                        workspace_bytes: 0,
+                    });
+                    clock += dur;
+                }
+                PlanStep::Group(g) => {
+                    rounds += 1;
+                    let mut descs: Vec<KernelDesc> =
+                        Vec::with_capacity(g.members.len());
+                    for m in &g.members {
+                        check_op(m.op)?;
+                        let OpKind::Conv(p) = &dag.ops[m.op].kind else {
+                            return Err(PlanError::NotAConv { op: m.op });
+                        };
+                        let d = kernel_desc(m.algo, p, spec).ok_or(
+                            PlanError::Unsupported {
+                                algo: m.algo,
+                                op: m.op,
+                            },
+                        )?;
+                        descs.push(d);
+                    }
+                    // Launch-time admission: an allocation the planner
+                    // fitted can still be refused (failure injection /
+                    // fragmentation) — degrade that op to its
+                    // workspace-free fallback rather than failing, exactly
+                    // like frameworks surviving a cudaMalloc refusal.
+                    let mut final_descs: Vec<KernelDesc> =
+                        Vec::with_capacity(descs.len());
+                    let mut allocs = Vec::with_capacity(descs.len());
+                    for d in &descs {
+                        match mem.alloc(d.workspace_bytes) {
+                            Ok(id) => {
+                                allocs.push(id);
+                                final_descs.push(d.clone());
+                            }
+                            Err(_) => {
+                                let fallback = kernel_desc(
+                                    Algorithm::Gemm,
+                                    &d.params,
+                                    spec,
+                                )
+                                .expect("GEMM supports every convolution");
+                                debug_assert_eq!(fallback.workspace_bytes, 0);
+                                if fallback.algo != d.algo {
+                                    ws_fallbacks += 1;
+                                }
+                                final_descs.push(fallback);
+                            }
+                        }
+                    }
+                    let sim = run_group(spec, g.partition, &final_descs);
+                    for ((m, desc), rec) in
+                        g.members.iter().zip(&final_descs).zip(&sim.kernels)
+                    {
+                        ops.push(OpExec {
+                            op_id: m.op,
+                            name: dag.ops[m.op].name.clone(),
+                            kind: "conv",
+                            algo: Some(desc.algo),
+                            start_us: clock + rec.start_us,
+                            end_us: clock + rec.end_us,
+                            workspace_bytes: desc.workspace_bytes,
+                        });
+                    }
+                    conv_overlap_us += sim.overlap_us();
+                    clock += sim.makespan_us;
+                    for a in allocs {
+                        mem.free(a).expect("workspace free");
+                    }
+                }
+            }
+        }
+        if ops.len() != dag.len() {
+            return Err(PlanError::IncompleteCoverage {
+                executed: ops.len(),
+                ops: dag.len(),
+            });
+        }
+        Ok(ScheduleResult {
+            makespan_us: clock,
+            ops,
+            peak_workspace: mem.peak(),
+            ws_fallbacks,
+            rounds,
+            conv_overlap_us,
+        })
+    }
+
+    // ---------------------------------------------------------------------
+    // JSON serialization
+    // ---------------------------------------------------------------------
+
+    /// Serialize to the plan JSON layout (see DESIGN.md for the schema).
+    pub fn to_json(&self) -> String {
+        let m = &self.meta;
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"version\": {},\n", m.version));
+        s.push_str(&format!("  \"label\": \"{}\",\n", escape(&m.label)));
+        s.push_str(&format!("  \"device\": \"{}\",\n", escape(&m.device)));
+        s.push_str(&format!("  \"batch\": {},\n", m.batch));
+        s.push_str(&format!("  \"ops\": {},\n", m.ops));
+        s.push_str(&format!(
+            "  \"dag_digest\": \"{}\",\n",
+            hex16(m.dag_digest)
+        ));
+        s.push_str(&format!(
+            "  \"spec_digest\": \"{}\",\n",
+            hex16(m.spec_digest)
+        ));
+        s.push_str(&format!(
+            "  \"config_digest\": \"{}\",\n",
+            hex16(m.config_digest)
+        ));
+        s.push_str(&format!("  \"policy\": \"{}\",\n", m.policy.name()));
+        s.push_str(&format!(
+            "  \"partition\": \"{}\",\n",
+            m.partition.name()
+        ));
+        s.push_str(&format!("  \"streams\": {},\n", m.streams));
+        s.push_str(&format!(
+            "  \"workspace_limit\": {},\n",
+            m.workspace_limit
+        ));
+        s.push_str(&format!("  \"priority\": \"{}\",\n", m.priority.name()));
+        s.push_str(&format!(
+            "  \"planned_ws_fallbacks\": {},\n",
+            m.planned_ws_fallbacks
+        ));
+        s.push_str(&format!(
+            "  \"selector_calls\": {},\n",
+            m.selector_calls
+        ));
+        s.push_str(&format!(
+            "  \"predicted_makespan_us\": {},\n",
+            fmt_f64(self.predicted_makespan_us)
+        ));
+        s.push_str("  \"steps\": [\n");
+        for (i, step) in self.steps.iter().enumerate() {
+            let sep = if i + 1 == self.steps.len() { "" } else { "," };
+            match step {
+                PlanStep::Host { op } => {
+                    s.push_str(&format!("    {{\"host\": {op}}}{sep}\n"));
+                }
+                PlanStep::Group(g) => {
+                    let quotas: Vec<String> =
+                        g.quotas.iter().map(|q| q.to_string()).collect();
+                    let members: Vec<String> = g
+                        .members
+                        .iter()
+                        .map(|p| {
+                            format!(
+                                "{{\"op\": {}, \"algo\": \"{}\", \
+                                 \"workspace\": {}}}",
+                                p.op,
+                                p.algo.name(),
+                                p.workspace_bytes
+                            )
+                        })
+                        .collect();
+                    s.push_str(&format!(
+                        "    {{\"group\": {{\"partition\": \"{}\", \
+                         \"est_us\": {}, \"quotas\": [{}], \
+                         \"members\": [{}]}}}}{sep}\n",
+                        g.partition.name(),
+                        fmt_f64(g.est_us),
+                        quotas.join(", "),
+                        members.join(", ")
+                    ));
+                }
+            }
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Deserialize a plan written by [`Plan::to_json`].
+    pub fn from_json(text: &str) -> Result<Plan, PlanError> {
+        let v = JsonValue::parse(text).map_err(PlanError::Parse)?;
+        let field = |key: &str| {
+            v.get(key).ok_or_else(|| {
+                PlanError::Parse(format!("missing field {key:?}"))
+            })
+        };
+        let bad =
+            |key: &str| PlanError::Parse(format!("malformed field {key:?}"));
+        let str_field = |key: &str| -> Result<String, PlanError> {
+            Ok(field(key)?.as_str().ok_or_else(|| bad(key))?.to_string())
+        };
+        let u64_field = |key: &str| -> Result<u64, PlanError> {
+            field(key)?.as_u64().ok_or_else(|| bad(key))
+        };
+        let digest_field = |key: &str| -> Result<u64, PlanError> {
+            parse_hex16(field(key)?.as_str().ok_or_else(|| bad(key))?)
+                .ok_or_else(|| bad(key))
+        };
+
+        let version = u64_field("version")? as u32;
+        if version != PLAN_FORMAT_VERSION {
+            return Err(PlanError::Parse(format!(
+                "unsupported plan version {version} \
+                 (this build reads {PLAN_FORMAT_VERSION})"
+            )));
+        }
+        let policy = SelectionPolicy::parse(&str_field("policy")?)
+            .ok_or_else(|| bad("policy"))?;
+        let partition = PartitionMode::parse(&str_field("partition")?)
+            .ok_or_else(|| bad("partition"))?;
+        let priority = PriorityPolicy::parse(&str_field("priority")?)
+            .ok_or_else(|| bad("priority"))?;
+        let meta = PlanMeta {
+            version,
+            label: str_field("label")?,
+            device: str_field("device")?,
+            batch: u64_field("batch")? as usize,
+            ops: u64_field("ops")? as usize,
+            dag_digest: digest_field("dag_digest")?,
+            spec_digest: digest_field("spec_digest")?,
+            config_digest: digest_field("config_digest")?,
+            policy,
+            partition,
+            streams: u64_field("streams")? as usize,
+            workspace_limit: u64_field("workspace_limit")?,
+            priority,
+            planned_ws_fallbacks: u64_field("planned_ws_fallbacks")?,
+            selector_calls: u64_field("selector_calls")?,
+        };
+        let predicted_makespan_us = field("predicted_makespan_us")?
+            .as_f64()
+            .ok_or_else(|| bad("predicted_makespan_us"))?;
+        let mut steps = Vec::new();
+        for step in
+            field("steps")?.as_arr().ok_or_else(|| bad("steps"))?
+        {
+            if let Some(op) = step.get("host") {
+                steps.push(PlanStep::Host {
+                    op: op.as_usize().ok_or_else(|| bad("host"))?,
+                });
+            } else if let Some(g) = step.get("group") {
+                steps.push(PlanStep::Group(parse_group(g)?));
+            } else {
+                return Err(PlanError::Parse(
+                    "step is neither \"host\" nor \"group\"".into(),
+                ));
+            }
+        }
+        Ok(Plan {
+            meta,
+            steps,
+            predicted_makespan_us,
+        })
+    }
+}
+
+fn parse_group(g: &JsonValue) -> Result<GroupPlan, PlanError> {
+    let bad = |key: &str| {
+        PlanError::Parse(format!("malformed group field {key:?}"))
+    };
+    let partition = PartitionMode::parse(
+        g.get("partition")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| bad("partition"))?,
+    )
+    .ok_or_else(|| bad("partition"))?;
+    let est_us = g
+        .get("est_us")
+        .and_then(JsonValue::as_f64)
+        .ok_or_else(|| bad("est_us"))?;
+    let mut quotas = Vec::new();
+    for q in g
+        .get("quotas")
+        .and_then(JsonValue::as_arr)
+        .ok_or_else(|| bad("quotas"))?
+    {
+        quotas.push(q.as_u32().ok_or_else(|| bad("quotas"))?);
+    }
+    let mut members = Vec::new();
+    for m in g
+        .get("members")
+        .and_then(JsonValue::as_arr)
+        .ok_or_else(|| bad("members"))?
+    {
+        let algo = Algorithm::parse(
+            m.get("algo")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| bad("algo"))?,
+        )
+        .ok_or_else(|| bad("algo"))?;
+        members.push(OpPlan {
+            op: m
+                .get("op")
+                .and_then(JsonValue::as_usize)
+                .ok_or_else(|| bad("op"))?,
+            algo,
+            workspace_bytes: m
+                .get("workspace")
+                .and_then(JsonValue::as_u64)
+                .ok_or_else(|| bad("workspace"))?,
+        });
+    }
+    Ok(GroupPlan {
+        members,
+        partition,
+        quotas,
+        est_us,
+    })
+}
+
+/// Format an f64 for JSON: Rust's shortest-roundtrip rendering, which
+/// reparses to the identical bit pattern (pinned by a test in `json.rs`).
+fn fmt_f64(v: f64) -> String {
+    debug_assert!(v.is_finite(), "non-finite value in plan JSON");
+    format!("{v}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Network;
+
+    #[test]
+    fn dag_digest_distinguishes_networks_and_batches() {
+        let a = dag_digest(&Network::GoogleNet.build(8));
+        let b = dag_digest(&Network::GoogleNet.build(16));
+        let c = dag_digest(&Network::ResNet50.build(8));
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        // and is stable across rebuilds
+        assert_eq!(a, dag_digest(&Network::GoogleNet.build(8)));
+    }
+
+    #[test]
+    fn spec_digest_distinguishes_devices() {
+        assert_ne!(
+            spec_digest(&DeviceSpec::k40()),
+            spec_digest(&DeviceSpec::a100())
+        );
+        assert_eq!(
+            spec_digest(&DeviceSpec::k40()),
+            spec_digest(&DeviceSpec::k40())
+        );
+    }
+
+    #[test]
+    fn config_digest_covers_every_knob() {
+        let base = ScheduleConfig::default();
+        let d0 = config_digest(&base);
+        let mut c = base.clone();
+        c.streams = 8;
+        assert_ne!(config_digest(&c), d0);
+        let mut c = base.clone();
+        c.policy = SelectionPolicy::FastestOnly;
+        assert_ne!(config_digest(&c), d0);
+        let mut c = base.clone();
+        c.partition = PartitionMode::Serial;
+        assert_ne!(config_digest(&c), d0);
+        let mut c = base.clone();
+        c.workspace_limit = 1;
+        assert_ne!(config_digest(&c), d0);
+        let mut c = base;
+        c.priority = PriorityPolicy::Fifo;
+        assert_ne!(config_digest(&c), d0);
+    }
+
+    #[test]
+    fn malformed_json_is_rejected() {
+        assert!(matches!(
+            Plan::from_json("not json"),
+            Err(PlanError::Parse(_))
+        ));
+        assert!(matches!(
+            Plan::from_json("{}"),
+            Err(PlanError::Parse(_))
+        ));
+        assert!(matches!(
+            Plan::from_json("{\"version\": 99}"),
+            Err(PlanError::Parse(_))
+        ));
+    }
+}

@@ -1,0 +1,50 @@
+//! Plan/Execute split: offline planning artifacts and the serving facade.
+//!
+//! The paper's profile-guided algorithm selection is explicitly an
+//! *offline* activity — profiles are gathered once, then reused — yet the
+//! original `Coordinator::execute_dag` re-ran the full k-wide selection,
+//! quota water-filling, and bottom-level computation on every call. This
+//! module redesigns the public API around a two-phase lifecycle (the same
+//! plan-vs-execute distinction as cuDNN's `Find`/`Get` split):
+//!
+//! - [`Planner`] runs selection + grouping + partition-quota planning once
+//!   and emits an immutable, JSON-serializable [`Plan`]: per-op algorithm
+//!   choices, ordered co-execution groups with per-SM quota plans,
+//!   workspace reservations, and provenance (device, batch, config
+//!   digest).
+//! - [`Plan::execute`] replays the cheap launch sequence against the
+//!   simulator — zero selector calls, bit-identical results to inline
+//!   scheduling.
+//! - [`Session`] owns a device + config + keyed plan cache and exposes
+//!   `run` (plan-on-miss then replay) and `plan`; `Coordinator` is now a
+//!   thin compatibility shim over it.
+//!
+//! ```no_run
+//! use parconv::coordinator::ScheduleConfig;
+//! use parconv::gpusim::DeviceSpec;
+//! use parconv::graph::Network;
+//! use parconv::plan::Session;
+//!
+//! let session = Session::new(DeviceSpec::k40(), ScheduleConfig::default());
+//! let dag = Network::GoogleNet.build(32);
+//! let first = session.run(&dag);   // plans, caches, executes
+//! let second = session.run(&dag);  // cache hit: replay only
+//! assert_eq!(first.makespan_us, second.makespan_us);
+//!
+//! // offline: persist the plan, reload it elsewhere
+//! let json = session.plan(&dag).to_json();
+//! let reloaded = parconv::plan::Plan::from_json(&json).unwrap();
+//! reloaded.execute(&dag, session.spec()).unwrap();
+//! ```
+
+mod artifact;
+pub mod json;
+mod planner;
+mod session;
+
+pub use artifact::{
+    config_digest, dag_digest, spec_digest, GroupPlan, OpPlan, Plan,
+    PlanError, PlanMeta, PlanStep, PLAN_FORMAT_VERSION,
+};
+pub use planner::Planner;
+pub use session::{Session, SessionStats};

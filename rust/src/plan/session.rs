@@ -1,0 +1,269 @@
+//! The [`Session`] facade: plan once, replay per request.
+//!
+//! A session owns a device spec + scheduler config and a keyed plan cache
+//! (DAG structural digest → [`Plan`]; the digest subsumes network and
+//! batch, and the config is fixed per session). `run` plans on miss and
+//! replays on hit — a hit performs **zero** selector invocations, which is
+//! the whole point for serving repeated traffic: profile-guided selection
+//! is an offline activity (paper §2), so the request path should only pay
+//! for the simulator.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::{ScheduleConfig, ScheduleResult};
+use crate::gpusim::DeviceSpec;
+use crate::graph::Dag;
+use crate::memory::DeviceMemory;
+
+use super::artifact::{dag_digest, Plan, PlanError};
+use super::planner::Planner;
+
+/// Cache counters of one session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Plans built from scratch (cache misses).
+    pub plans_built: u64,
+    /// Lookups served from the cache.
+    pub cache_hits: u64,
+    /// Plans currently cached.
+    pub cached_plans: usize,
+}
+
+impl SessionStats {
+    /// Fraction of lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.plans_built + self.cache_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Plan-once / replay-many execution facade over one device + config.
+pub struct Session {
+    planner: Planner,
+    cache: RefCell<HashMap<u64, Arc<Plan>>>,
+    plans_built: Cell<u64>,
+    cache_hits: Cell<u64>,
+    /// Optional (rate, seed) workspace-allocation failure injection,
+    /// applied per `run` (each run re-seeds, like the legacy coordinator).
+    failure_injection: Option<(f64, u64)>,
+}
+
+impl Session {
+    pub fn new(spec: DeviceSpec, cfg: ScheduleConfig) -> Self {
+        Self {
+            planner: Planner::new(spec, cfg),
+            cache: RefCell::new(HashMap::new()),
+            plans_built: Cell::new(0),
+            cache_hits: Cell::new(0),
+            failure_injection: None,
+        }
+    }
+
+    /// Session whose workspace allocator spuriously refuses a `rate`
+    /// fraction of allocations (robustness testing: replay must degrade to
+    /// workspace-free algorithms, never fail an op).
+    pub fn with_failure_injection(
+        spec: DeviceSpec,
+        cfg: ScheduleConfig,
+        rate: f64,
+        seed: u64,
+    ) -> Self {
+        let mut s = Self::new(spec, cfg);
+        s.failure_injection = Some((rate, seed));
+        s
+    }
+
+    pub fn spec(&self) -> &DeviceSpec {
+        self.planner.spec()
+    }
+
+    pub fn config(&self) -> &ScheduleConfig {
+        self.planner.config()
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            plans_built: self.plans_built.get(),
+            cache_hits: self.cache_hits.get(),
+            cached_plans: self.cache.borrow().len(),
+        }
+    }
+
+    /// The plan for a DAG: cached when this session has seen the same
+    /// structure before, built (and cached) otherwise.
+    pub fn plan(&self, dag: &Dag) -> Arc<Plan> {
+        self.plan_labeled(dag, "")
+    }
+
+    /// Like [`Session::plan`], recording `label` as provenance when the
+    /// plan has to be built (a cached plan keeps its original label).
+    pub fn plan_labeled(&self, dag: &Dag, label: &str) -> Arc<Plan> {
+        let key = dag_digest(dag);
+        let cached = self.cache.borrow().get(&key).cloned();
+        if let Some(plan) = cached {
+            self.cache_hits.set(self.cache_hits.get() + 1);
+            return plan;
+        }
+        let plan = Arc::new(self.planner.plan(dag, label));
+        self.plans_built.set(self.plans_built.get() + 1);
+        self.cache.borrow_mut().insert(key, plan.clone());
+        plan
+    }
+
+    /// Seed the cache with an externally built plan (e.g. deserialized
+    /// from JSON). Returns `false` — without inserting — when the plan was
+    /// built for a different device or configuration than this session's.
+    pub fn adopt(&self, plan: Plan) -> bool {
+        if plan.meta.spec_digest
+            != super::artifact::spec_digest(self.planner.spec())
+            || plan.meta.config_digest
+                != super::artifact::config_digest(self.planner.config())
+        {
+            return false;
+        }
+        self.cache
+            .borrow_mut()
+            .insert(plan.meta.dag_digest, Arc::new(plan));
+        true
+    }
+
+    /// Execute a DAG: plan on miss, then replay. The replay path performs
+    /// no algorithm selection (see `rust/tests/session_cache.rs`).
+    ///
+    /// A cached plan that fails to replay — reachable only through
+    /// [`Session::adopt`] of a plan whose steps were corrupted after
+    /// serialization — is evicted and rebuilt rather than panicking.
+    pub fn run(&self, dag: &Dag) -> ScheduleResult {
+        let plan = self.plan(dag);
+        match self.execute_plan(&plan, dag) {
+            Ok(r) => r,
+            Err(_) => {
+                self.cache.borrow_mut().remove(&dag_digest(dag));
+                let fresh = self.plan(dag);
+                self.execute_plan(&fresh, dag)
+                    .expect("freshly built plan replays against its DAG")
+            }
+        }
+    }
+
+    fn execute_plan(
+        &self,
+        plan: &Plan,
+        dag: &Dag,
+    ) -> Result<ScheduleResult, PlanError> {
+        let limit = self.planner.config().workspace_limit;
+        let mem = match self.failure_injection {
+            Some((rate, seed)) => {
+                DeviceMemory::with_failure_injection(limit, rate, seed)
+            }
+            None => DeviceMemory::new(limit),
+        };
+        plan.execute_with_memory(dag, self.planner.spec(), mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Network;
+
+    fn session() -> Session {
+        Session::new(DeviceSpec::k40(), ScheduleConfig::default())
+    }
+
+    #[test]
+    fn run_executes_every_op() {
+        let dag = Network::GoogleNet.build(8);
+        let s = session();
+        let r = s.run(&dag);
+        assert_eq!(r.ops.len(), dag.len());
+    }
+
+    #[test]
+    fn cache_hits_on_identical_structure() {
+        let s = session();
+        let r1 = s.run(&Network::GoogleNet.build(8));
+        // a *fresh* Dag instance with the same structure must hit
+        let r2 = s.run(&Network::GoogleNet.build(8));
+        let stats = s.stats();
+        assert_eq!(stats.plans_built, 1);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.cached_plans, 1);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(r1.makespan_us, r2.makespan_us);
+        assert_eq!(r1.rounds, r2.rounds);
+    }
+
+    #[test]
+    fn different_batch_misses() {
+        let s = session();
+        s.run(&Network::GoogleNet.build(8));
+        s.run(&Network::GoogleNet.build(16));
+        assert_eq!(s.stats().plans_built, 2);
+        assert_eq!(s.stats().cache_hits, 0);
+    }
+
+    #[test]
+    fn adopt_rejects_foreign_plans() {
+        let dag = Network::GoogleNet.build(8);
+        let a100 = Session::new(
+            DeviceSpec::a100(),
+            ScheduleConfig::default(),
+        );
+        let foreign = (*a100.plan(&dag)).clone();
+        let s = session();
+        assert!(!s.adopt(foreign), "adopted a plan for another device");
+        let native = (*s.plan(&dag)).clone();
+        assert!(s.adopt(native));
+    }
+
+    #[test]
+    fn run_recovers_from_corrupt_adopted_plan() {
+        use super::super::artifact::PlanStep;
+        // Build a valid plan, then corrupt its steps after the fact (as a
+        // hand-edited plan.json could) and adopt it into a fresh session:
+        // run() must evict + rebuild, not panic.
+        let donor = session();
+        let dag = Network::GoogleNet.build(8);
+        let mut corrupt = (*donor.plan(&dag)).clone();
+        corrupt.steps.push(PlanStep::Host { op: 9_999 });
+
+        let serving = session();
+        assert!(serving.adopt(corrupt), "digests still match");
+        let r = serving.run(&dag);
+        assert_eq!(r.ops.len(), dag.len());
+        let stats = serving.stats();
+        assert_eq!(stats.plans_built, 1, "bad plan evicted and rebuilt");
+        // and the rebuilt plan serves subsequent runs normally
+        serving.run(&dag);
+        assert_eq!(serving.stats().plans_built, 1);
+
+        // A *truncated* plan (a step deleted) must not silently return a
+        // shorter timeline either: coverage checking turns it into an
+        // execute error, and run() recovers the same way.
+        let mut truncated = (*donor.plan(&dag)).clone();
+        truncated.steps.pop();
+        let serving2 = session();
+        assert!(serving2.adopt(truncated));
+        let r2 = serving2.run(&dag);
+        assert_eq!(r2.ops.len(), dag.len());
+        assert_eq!(serving2.stats().plans_built, 1);
+    }
+
+    #[test]
+    fn label_recorded_on_build() {
+        let s = session();
+        let dag = Network::PathNet.build(4);
+        let p = s.plan_labeled(&dag, "pathnet");
+        assert_eq!(p.meta.label, "pathnet");
+        // hit keeps the original label
+        let again = s.plan_labeled(&dag, "other");
+        assert_eq!(again.meta.label, "pathnet");
+    }
+}

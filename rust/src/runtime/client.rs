@@ -154,35 +154,42 @@ impl Runtime {
     }
 
     /// Compile (once) and return the executable for an artifact.
+    ///
+    /// One cache lookup on the hot path: the entry API probes the map a
+    /// single time and inserts through the reserved slot on a miss (the
+    /// old shape was contains_key + insert + index — three hashes per
+    /// call).
     pub fn load(&mut self, name: &str) -> Result<&Executable> {
-        if !self.cache.contains_key(name) {
-            let spec = self
-                .manifest
-                .get(name)
-                .with_context(|| format!("unknown artifact {name:?}"))?
-                .clone();
-            let proto =
-                xla::HloModuleProto::from_text_file(
-                    spec.hlo_path.to_str().context("non-utf8 path")?,
-                )
-                .with_context(|| {
-                    format!("parsing {}", spec.hlo_path.display())
-                })?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            self.cache
-                .insert(name.to_string(), Executable { spec, exe });
+        use std::collections::hash_map::Entry;
+        match self.cache.entry(name.to_string()) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(slot) => {
+                let spec = self
+                    .manifest
+                    .get(name)
+                    .with_context(|| format!("unknown artifact {name:?}"))?
+                    .clone();
+                let proto =
+                    xla::HloModuleProto::from_text_file(
+                        spec.hlo_path.to_str().context("non-utf8 path")?,
+                    )
+                    .with_context(|| {
+                        format!("parsing {}", spec.hlo_path.display())
+                    })?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {name}"))?;
+                Ok(slot.insert(Executable { spec, exe }))
+            }
         }
-        Ok(&self.cache[name])
     }
 
-    /// Convenience: load + run.
+    /// Convenience: load + run, reusing the reference `load` returns
+    /// (no second cache lookup).
     pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.load(name)?;
-        self.cache[name].run(inputs)
+        self.load(name)?.run(inputs)
     }
 
     pub fn platform(&self) -> String {

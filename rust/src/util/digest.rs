@@ -1,0 +1,140 @@
+//! 64-bit FNV-1a digests for plan provenance.
+//!
+//! The plan subsystem fingerprints DAGs, device specs, and scheduler
+//! configurations so a serialized [`crate::plan::Plan`] can refuse to
+//! execute against inputs it was not built for. The vendored registry
+//! carries no hashing crate, so the hasher is hand-rolled; FNV-1a is
+//! deterministic across platforms and runs (unlike `DefaultHasher`,
+//! whose seed is randomized), which is what makes the digests storable.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental 64-bit FNV-1a hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Self { state: FNV_OFFSET }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Bit-exact float hashing (`-0.0` and `0.0` hash differently; that is
+    /// fine for fingerprinting — the inputs come from deterministic code).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Length-prefixed, so `("ab","c")` and `("a","bc")` differ.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// Render a digest the way plan JSON stores it: 16 lowercase hex chars.
+pub fn hex16(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Parse a digest stored by [`hex16`].
+pub fn parse_hex16(s: &str) -> Option<u64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_fnv1a_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        let mut h = Fnv64::new();
+        h.write(b"");
+        assert_eq!(h.finish(), 0xcbf29ce484222325);
+        let mut h = Fnv64::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        let mut h = Fnv64::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let digest = |parts: &[&str]| {
+            let mut h = Fnv64::new();
+            for p in parts {
+                h.write_str(p);
+            }
+            h.finish()
+        };
+        assert_eq!(digest(&["ab", "c"]), digest(&["ab", "c"]));
+        // length prefix keeps concatenation ambiguity out
+        assert_ne!(digest(&["ab", "c"]), digest(&["a", "bc"]));
+    }
+
+    #[test]
+    fn typed_writes_distinguish_values() {
+        let one = {
+            let mut h = Fnv64::new();
+            h.write_u64(1);
+            h.finish()
+        };
+        let two = {
+            let mut h = Fnv64::new();
+            h.write_u64(2);
+            h.finish()
+        };
+        assert_ne!(one, two);
+        let f = {
+            let mut h = Fnv64::new();
+            h.write_f64(1.5);
+            h.finish()
+        };
+        assert_ne!(f, one);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for v in [0u64, 1, 0xdead_beef, u64::MAX] {
+            assert_eq!(parse_hex16(&hex16(v)), Some(v));
+        }
+        assert_eq!(parse_hex16("xyz"), None);
+        assert_eq!(parse_hex16("123"), None); // wrong length
+    }
+}

@@ -3,10 +3,12 @@
 //! The offline vendored registry carries no `rand`/`criterion`/`serde`, so
 //! these are hand-rolled (and unit-tested) here.
 
+pub mod digest;
 pub mod prng;
 pub mod stats;
 pub mod table;
 
+pub use digest::Fnv64;
 pub use prng::Prng;
 pub use stats::Summary;
 pub use table::Table;

@@ -1,0 +1,211 @@
+//! Plan/Execute split contracts: JSON round-trips are lossless, `Session`
+//! results are bit-identical to the legacy `Coordinator::execute_dag`
+//! path, and plans refuse to execute against inputs they were not built
+//! for.
+
+use parconv::coordinator::{
+    Coordinator, PriorityPolicy, ScheduleConfig, ScheduleResult,
+    SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, PartitionMode};
+use parconv::graph::Network;
+use parconv::plan::{Plan, PlanError, Session};
+
+const GB4: u64 = 4 * 1024 * 1024 * 1024;
+
+fn config(streams: usize) -> ScheduleConfig {
+    ScheduleConfig {
+        policy: SelectionPolicy::ProfileGuided,
+        partition: PartitionMode::IntraSm,
+        streams,
+        workspace_limit: GB4,
+        priority: PriorityPolicy::CriticalPath,
+    }
+}
+
+/// Bit-exact ScheduleResult comparison: every counter and every per-op
+/// timestamp.
+fn assert_identical(a: &ScheduleResult, b: &ScheduleResult, what: &str) {
+    assert_eq!(a.makespan_us, b.makespan_us, "{what}: makespan");
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.ws_fallbacks, b.ws_fallbacks, "{what}: ws_fallbacks");
+    assert_eq!(a.peak_workspace, b.peak_workspace, "{what}: peak");
+    assert_eq!(
+        a.conv_overlap_us, b.conv_overlap_us,
+        "{what}: conv overlap"
+    );
+    assert_eq!(a.ops.len(), b.ops.len(), "{what}: op count");
+    for (x, y) in a.ops.iter().zip(&b.ops) {
+        assert_eq!(x.op_id, y.op_id, "{what}: op order");
+        assert_eq!(x.algo, y.algo, "{what}: op {} algo", x.op_id);
+        assert_eq!(x.start_us, y.start_us, "{what}: op {} start", x.op_id);
+        assert_eq!(x.end_us, y.end_us, "{what}: op {} end", x.op_id);
+        assert_eq!(
+            x.workspace_bytes, y.workspace_bytes,
+            "{what}: op {} workspace",
+            x.op_id
+        );
+    }
+}
+
+#[test]
+fn session_matches_legacy_coordinator_across_networks_and_streams() {
+    // Coordinator is now a shim over Session, so this is not an
+    // independent check against the pre-split scheduler (that behavior is
+    // pinned by the absolute assertions in scheduler_integration.rs —
+    // monotonicity, pair equivalence, overlap, fallback counts — which
+    // predate the split and now run through the plan/execute path). What
+    // this test pins: the shim and the facade must never drift apart, and
+    // a cache-hit replay must be bit-identical to a fresh plan+execute on
+    // the four headline networks at k in {1, 2, 4}.
+    let nets = [
+        Network::AlexNet,
+        Network::GoogleNet,
+        Network::ResNet50,
+        Network::PathNet,
+    ];
+    for net in nets {
+        for streams in [1usize, 2, 4] {
+            let dag = net.build(8);
+            let legacy =
+                Coordinator::new(DeviceSpec::k40(), config(streams))
+                    .execute_dag(&dag);
+            let session = Session::new(DeviceSpec::k40(), config(streams));
+            let fresh = session.run(&dag); // cache miss: plan + execute
+            let replay = session.run(&dag); // cache hit: replay only
+            assert_identical(
+                &legacy,
+                &fresh,
+                &format!("{} k={streams} (shim vs facade)", net.name()),
+            );
+            assert_identical(
+                &fresh,
+                &replay,
+                &format!("{} k={streams} (fresh vs replay)", net.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn plan_json_roundtrip_is_lossless() {
+    let dag = Network::GoogleNet.build(8);
+    let session = Session::new(DeviceSpec::k40(), config(4));
+    let plan = session.plan_labeled(&dag, "googlenet");
+
+    let json = plan.to_json();
+    let reloaded = Plan::from_json(&json).expect("round-trip parse");
+    assert_eq!(*plan, reloaded, "structural equality");
+    assert_eq!(plan.digest(), reloaded.digest(), "digest equality");
+    // serialize again: byte-stable output
+    assert_eq!(json, reloaded.to_json(), "byte-stable re-serialization");
+
+    // and, the real contract: identical execution
+    let direct = plan.execute(&dag, session.spec()).unwrap();
+    let replayed = reloaded.execute(&dag, session.spec()).unwrap();
+    assert_identical(&direct, &replayed, "json round-trip");
+}
+
+#[test]
+fn plan_roundtrip_holds_for_every_policy() {
+    let dag = Network::GoogleNet.build(4);
+    for policy in [
+        SelectionPolicy::FastestOnly,
+        SelectionPolicy::MemoryMin,
+        SelectionPolicy::Balanced,
+        SelectionPolicy::ProfileGuided,
+    ] {
+        let cfg = ScheduleConfig {
+            policy,
+            ..config(2)
+        };
+        let session = Session::new(DeviceSpec::k40(), cfg);
+        let plan = session.plan(&dag);
+        let reloaded = Plan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan.digest(), reloaded.digest(), "{}", policy.name());
+        let a = plan.execute(&dag, session.spec()).unwrap();
+        let b = reloaded.execute(&dag, session.spec()).unwrap();
+        assert_identical(&a, &b, policy.name());
+    }
+}
+
+#[test]
+fn replaying_a_plan_matches_session_run() {
+    let dag = Network::PathNet.build(8);
+    let session = Session::new(DeviceSpec::k40(), config(2));
+    let via_session = session.run(&dag);
+    let via_plan = session
+        .plan(&dag)
+        .execute(&dag, session.spec())
+        .expect("plan matches its own dag");
+    assert_identical(&via_session, &via_plan, "session vs explicit replay");
+}
+
+#[test]
+fn plan_refuses_foreign_dag_and_device() {
+    let dag = Network::GoogleNet.build(8);
+    let session = Session::new(DeviceSpec::k40(), config(2));
+    let plan = session.plan(&dag);
+
+    let other_net = Network::ResNet50.build(8);
+    assert!(matches!(
+        plan.execute(&other_net, session.spec()),
+        Err(PlanError::DagMismatch { .. })
+    ));
+    let other_batch = Network::GoogleNet.build(16);
+    assert!(matches!(
+        plan.execute(&other_batch, session.spec()),
+        Err(PlanError::DagMismatch { .. })
+    ));
+    assert!(matches!(
+        plan.execute(&dag, &DeviceSpec::a100()),
+        Err(PlanError::SpecMismatch { .. })
+    ));
+    // the happy path still works after all those refusals
+    assert!(plan.execute(&dag, session.spec()).is_ok());
+}
+
+#[test]
+fn adopted_plan_serves_the_session_cache() {
+    // The offline workflow: plan elsewhere, ship JSON, adopt, serve.
+    let dag = Network::GoogleNet.build(8);
+    let offline = Session::new(DeviceSpec::k40(), config(2));
+    let shipped = offline.plan_labeled(&dag, "googlenet").to_json();
+
+    let serving = Session::new(DeviceSpec::k40(), config(2));
+    assert!(serving.adopt(Plan::from_json(&shipped).unwrap()));
+    let r = serving.run(&dag);
+    assert_eq!(r.ops.len(), dag.len());
+    let stats = serving.stats();
+    assert_eq!(stats.plans_built, 0, "adopted plan must serve the run");
+    assert_eq!(stats.cache_hits, 1);
+}
+
+#[test]
+fn corrupted_json_is_rejected() {
+    let dag = Network::GoogleNet.build(4);
+    let session = Session::new(DeviceSpec::k40(), config(2));
+    let json = session.plan(&dag).to_json();
+    // truncation
+    assert!(Plan::from_json(&json[..json.len() / 2]).is_err());
+    // an unknown algorithm name
+    let bad = json.replace("\"algo\": \"", "\"algo\": \"NOT_AN_ALGO_");
+    assert!(Plan::from_json(&bad).is_err());
+}
+
+#[test]
+fn predicted_makespan_is_a_sane_estimate() {
+    // The fluid-model prediction is advisory, but it must be in the right
+    // ballpark of the simulated result (it shares the cost models).
+    let dag = Network::GoogleNet.build(8);
+    let session = Session::new(DeviceSpec::k40(), config(2));
+    let plan = session.plan(&dag);
+    let executed = session.run(&dag).makespan_us;
+    assert!(plan.predicted_makespan_us > 0.0);
+    let ratio = plan.predicted_makespan_us / executed;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "prediction {} vs executed {executed} (ratio {ratio:.2})",
+        plan.predicted_makespan_us
+    );
+}

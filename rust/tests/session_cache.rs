@@ -1,0 +1,68 @@
+//! The plan cache's observable contract: a `Session::run` cache hit (and
+//! an explicit `Plan::execute` replay) performs **zero** selector
+//! invocations — selection is an offline activity, the request path only
+//! pays for the simulator.
+//!
+//! Deliberately a single `#[test]`: the selector counter is process-wide,
+//! and this integration binary must not run other selector-using tests
+//! concurrently while deltas are being measured.
+
+use parconv::coordinator::{
+    selector_invocations, ScheduleConfig,
+};
+use parconv::gpusim::DeviceSpec;
+use parconv::graph::Network;
+use parconv::plan::Session;
+
+#[test]
+fn cache_hits_and_replay_skip_selection_entirely() {
+    let session =
+        Session::new(DeviceSpec::k40(), ScheduleConfig::default());
+    let dag = Network::GoogleNet.build(8);
+
+    // Cold: planning must actually exercise the selector.
+    let before_cold = selector_invocations();
+    let first = session.run(&dag);
+    let spent_planning = selector_invocations() - before_cold;
+    assert!(
+        spent_planning > 0,
+        "planning a GoogleNet iteration must invoke the selector"
+    );
+    assert_eq!(
+        session.plan(&dag).meta.selector_calls,
+        spent_planning,
+        "plan provenance records the planning cost"
+    );
+
+    // Warm: a cache hit performs zero selector calls.
+    let before_warm = selector_invocations();
+    let second = session.run(&dag);
+    assert_eq!(
+        selector_invocations(),
+        before_warm,
+        "cache hit invoked the selector"
+    );
+    assert_eq!(first.makespan_us, second.makespan_us);
+    let stats = session.stats();
+    assert_eq!(stats.plans_built, 1);
+    // one hit from the provenance check above + one from the warm run
+    assert_eq!(stats.cache_hits, 2);
+
+    // Explicit replay of a prebuilt plan: also selector-free.
+    let plan = session.plan(&dag);
+    let before_replay = selector_invocations();
+    let replayed = plan.execute(&dag, session.spec()).unwrap();
+    assert_eq!(
+        selector_invocations(),
+        before_replay,
+        "plan replay invoked the selector"
+    );
+    assert_eq!(replayed.makespan_us, first.makespan_us);
+
+    // A different network is a miss and plans again.
+    let other = Network::ResNet50.build(8);
+    let before_miss = selector_invocations();
+    session.run(&other);
+    assert!(selector_invocations() > before_miss);
+    assert_eq!(session.stats().plans_built, 2);
+}
