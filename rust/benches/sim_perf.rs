@@ -15,6 +15,8 @@ use parconv::coordinator::{
 use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
 use parconv::plan::Session;
+use parconv::sim::ExecutorKind;
+use parconv::util::fmt_bytes;
 
 fn main() {
     let dev = DeviceSpec::k40();
@@ -137,4 +139,40 @@ fn main() {
         stats.hit_rate() * 100.0,
         total_ms / (stats.plans_built + stats.cache_hits) as f64
     );
+
+    // 6. executor comparison: what the group barrier costs, and the
+    //    corrected workspace high-watermark. The barrier path holds every
+    //    group member's workspace until the whole group drains, so its
+    //    peak over-reports concurrent use whenever members finish at
+    //    different times; the event path frees at op-completion events.
+    //    One session, warmed once: both rows measure pure replay wall
+    //    time (plans are executor-agnostic, so the switch is a cache
+    //    hit), not plan-build overhead.
+    let mut session = Session::new(
+        dev.clone(),
+        ScheduleConfig {
+            policy: SelectionPolicy::ProfileGuided,
+            partition: PartitionMode::IntraSm,
+            streams: 2,
+            workspace_limit: 4 * 1024 * 1024 * 1024,
+            priority: PriorityPolicy::CriticalPath,
+        },
+    );
+    let dag = Network::GoogleNet.build(32);
+    let _ = session.plan(&dag); // warm the cache outside the timed region
+    for exec in [ExecutorKind::Event, ExecutorKind::Barrier] {
+        session.set_executor(exec);
+        let t0 = Instant::now();
+        let r = session.run(&dag);
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "executor {:7}: googlenet makespan {:.1} ms sim, peak \
+             workspace {} ({} rounds, {:.1} ms replay wall)",
+            exec.name(),
+            r.makespan_us / 1e3,
+            fmt_bytes(r.peak_workspace),
+            r.rounds,
+            wall
+        );
+    }
 }

@@ -1,4 +1,5 @@
-//! Bench S1 — stream-scaling sweep: makespan vs group width k.
+//! Bench S1 — stream-scaling sweep: makespan vs group width k, per
+//! executor.
 //!
 //! The paper's titular point is that inter-op parallelism in CNNs has a
 //! *limit*: non-linear networks expose some concurrency, but the DAG
@@ -8,9 +9,16 @@
 //! plus its saturation point (the first k whose marginal gain over the
 //! previous k falls under 2%).
 //!
-//! The k = 2 column doubles as the legacy cross-check: group selection at
-//! width 2 performs the exact pairwise algorithm search the pre-k-wide
-//! scheduler used, so its makespan must sit within 1% of that baseline.
+//! Since the discrete-event core landed, the sweep also carries an
+//! *executor* dimension — event-driven vs the legacy barrier replay — so
+//! the knee-vs-k curves quantify what the group barrier was costing per
+//! device generation: the event row reclaims straggler idle time and
+//! host-lane overlap that the barrier row gives away.
+//!
+//! The k = 2 barrier column doubles as the legacy cross-check: group
+//! selection at width 2 performs the exact pairwise algorithm search the
+//! pre-k-wide scheduler used, so its makespan must sit within 1% of that
+//! baseline.
 
 use std::time::Instant;
 
@@ -20,17 +28,24 @@ use parconv::coordinator::{
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::Network;
 use parconv::plan::Session;
+use parconv::sim::ExecutorKind;
 use parconv::util::{fmt_us, Table};
 
 const KS: [usize; 4] = [1, 2, 4, 8];
 
-fn makespan(dev: &DeviceSpec, net: Network, k: usize, batch: usize) -> f64 {
+fn makespan(
+    dev: &DeviceSpec,
+    net: Network,
+    k: usize,
+    batch: usize,
+    exec: ExecutorKind,
+) -> f64 {
     let (policy, partition) = if k == 1 {
         (SelectionPolicy::FastestOnly, PartitionMode::Serial)
     } else {
         (SelectionPolicy::ProfileGuided, PartitionMode::IntraSm)
     };
-    Session::new(
+    let mut session = Session::new(
         dev.clone(),
         ScheduleConfig {
             policy,
@@ -39,27 +54,29 @@ fn makespan(dev: &DeviceSpec, net: Network, k: usize, batch: usize) -> f64 {
             workspace_limit: 4 * 1024 * 1024 * 1024,
             priority: PriorityPolicy::CriticalPath,
         },
-    )
-    .run(&net.build(batch))
-    .makespan_us
+    );
+    session.set_executor(exec);
+    session.run(&net.build(batch)).makespan_us
 }
 
 fn main() {
     let batch = 32;
     let t0 = Instant::now();
     println!(
-        "=== S1: stream scaling — makespan vs group width k \
+        "=== S1: stream scaling — makespan vs group width k x executor \
          (batch {batch}, critical-path priority) ===\n"
     );
     let mut t = Table::new(vec![
         "Device",
         "Network",
+        "Executor",
         "k=1",
         "k=2",
         "k=4",
         "k=8",
         "Best speedup",
         "Saturates at",
+        "Event gain",
     ]);
     let devices = [
         DeviceSpec::k40(),
@@ -75,42 +92,66 @@ fn main() {
     ];
     for dev in &devices {
         for &net in &networks {
-            let ms: Vec<f64> =
-                KS.iter().map(|&k| makespan(dev, net, k, batch)).collect();
-            // saturation: first k whose gain over the previous k < 2%
-            // (None = still gaining at the widest k in the sweep)
-            let mut saturate: Option<usize> = None;
-            for i in 1..ms.len() {
-                if ms[i] > ms[i - 1] * 0.98 {
-                    saturate = Some(KS[i]);
-                    break;
+            let mut best_by_exec = [f64::INFINITY; 2];
+            for (ei, exec) in
+                [ExecutorKind::Event, ExecutorKind::Barrier]
+                    .into_iter()
+                    .enumerate()
+            {
+                let ms: Vec<f64> = KS
+                    .iter()
+                    .map(|&k| makespan(dev, net, k, batch, exec))
+                    .collect();
+                // saturation: first k whose gain over the previous k < 2%
+                // (None = still gaining at the widest k in the sweep)
+                let mut saturate: Option<usize> = None;
+                for i in 1..ms.len() {
+                    if ms[i] > ms[i - 1] * 0.98 {
+                        saturate = Some(KS[i]);
+                        break;
+                    }
                 }
+                let best = ms
+                    .iter()
+                    .cloned()
+                    .fold(f64::INFINITY, f64::min)
+                    .max(1e-9);
+                best_by_exec[ei] = best;
+                let gain = if ei == 1 {
+                    // barrier row: what the barrier costs vs event
+                    format!(
+                        "{:.1}%",
+                        (best_by_exec[1] / best_by_exec[0] - 1.0) * 100.0
+                    )
+                } else {
+                    "-".to_string()
+                };
+                t.row(vec![
+                    dev.name.clone(),
+                    net.name().to_string(),
+                    exec.name().to_string(),
+                    fmt_us(ms[0]),
+                    fmt_us(ms[1]),
+                    fmt_us(ms[2]),
+                    fmt_us(ms[3]),
+                    format!("{:.2}x", ms[0] / best),
+                    match saturate {
+                        Some(k) => format!("k={k}"),
+                        None => format!(">k={}", KS[KS.len() - 1]),
+                    },
+                    gain,
+                ]);
             }
-            let best = ms
-                .iter()
-                .cloned()
-                .fold(f64::INFINITY, f64::min)
-                .max(1e-9);
-            t.row(vec![
-                dev.name.clone(),
-                net.name().to_string(),
-                fmt_us(ms[0]),
-                fmt_us(ms[1]),
-                fmt_us(ms[2]),
-                fmt_us(ms[3]),
-                format!("{:.2}x", ms[0] / best),
-                match saturate {
-                    Some(k) => format!("k={k}"),
-                    None => format!(">k={}", KS[KS.len() - 1]),
-                },
-            ]);
         }
     }
     println!("{}", t.render());
     println!(
         "\nLinear networks saturate at k=2 (no independent convs); \
          non-linear ones stop gaining once the DAG width or the SM \
-         budget is exhausted — the paper's limit, measured."
+         budget is exhausted — the paper's limit, measured. The 'Event \
+         gain' column (barrier rows) is the straggler + host-overlap \
+         time the group barrier leaves on the table at each device's \
+         best k."
     );
     println!("total: {:.2} s", t0.elapsed().as_secs_f64());
 }

@@ -20,6 +20,10 @@ pub struct SchedulerConfig {
     /// Ready-queue ordering: `critical_path` (bottom-level priority) or
     /// `fifo` (legacy arrival order).
     pub priority: String,
+    /// Execution backend: `event` (discrete-event, the default — ops
+    /// launch as dependencies resolve) or `barrier` (legacy group replay,
+    /// the regression oracle).
+    pub executor: String,
 }
 
 impl Default for SchedulerConfig {
@@ -30,6 +34,7 @@ impl Default for SchedulerConfig {
             streams: 4,
             workspace_limit: 4 * 1024 * 1024 * 1024, // leave room beside tensors
             priority: "critical_path".into(),
+            executor: "event".into(),
         }
     }
 }
@@ -70,8 +75,14 @@ const TOP_LEVEL_KEYS: &[&str] =
     &["device", "network", "batch", "seed", "artifacts_dir"];
 
 /// Keys accepted inside `[scheduler]`.
-const SCHEDULER_KEYS: &[&str] =
-    &["policy", "partition", "streams", "workspace_limit_mb", "priority"];
+const SCHEDULER_KEYS: &[&str] = &[
+    "policy",
+    "partition",
+    "streams",
+    "workspace_limit_mb",
+    "priority",
+    "executor",
+];
 
 impl RunConfig {
     /// Parse from config text (TOML subset; see `config::parser`).
@@ -103,6 +114,7 @@ impl RunConfig {
                 ) * 1024
                     * 1024,
                 priority: p.str_or("scheduler", "priority", &sd.priority),
+                executor: p.str_or("scheduler", "executor", &sd.executor),
             },
         })
     }
@@ -218,6 +230,16 @@ priority = "fifo"
     fn priority_defaults_to_critical_path() {
         let c = RunConfig::from_text("").unwrap();
         assert_eq!(c.scheduler.priority, "critical_path");
+    }
+
+    #[test]
+    fn executor_defaults_to_event_and_parses() {
+        let c = RunConfig::from_text("").unwrap();
+        assert_eq!(c.scheduler.executor, "event");
+        let b =
+            RunConfig::from_text("[scheduler]\nexecutor = \"barrier\"")
+                .unwrap();
+        assert_eq!(b.scheduler.executor, "barrier");
     }
 
     #[test]

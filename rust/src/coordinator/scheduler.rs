@@ -86,6 +86,11 @@ pub struct OpExec {
     pub start_us: f64,
     pub end_us: f64,
     pub workspace_bytes: u64,
+    /// Stream lane the op ran on: `Some(lane)` for convolutions (the
+    /// member index of its group under barrier replay, the executor's
+    /// lane under event-driven execution), `None` for ops on the serial
+    /// host lane. Feeds the per-stream tracks of the Chrome-trace export.
+    pub stream: Option<usize>,
 }
 
 /// Result of scheduling a whole DAG.
@@ -108,10 +113,12 @@ pub struct ScheduleResult {
 ///
 /// Since the plan/execute split this is a compatibility shim over
 /// [`Session`]: `execute_dag` is exactly `Session::run` (plan on cache
-/// miss, replay on hit), so results are bit-identical to the pre-split
-/// inline scheduler while repeated calls on the same network skip
-/// selection entirely. Prefer [`Session`] in new code — it exposes the
-/// plan cache, `plan()`, and serialization.
+/// miss, replay on hit — event-driven by default since the discrete-event
+/// core landed; use `Session::set_executor` for the barrier oracle), so
+/// results are bit-identical to `Session` while repeated calls on the
+/// same network skip selection entirely. Prefer [`Session`] in new code —
+/// it exposes the plan cache, `plan()`, executor selection, and
+/// serialization.
 pub struct Coordinator {
     session: Session,
 }

@@ -40,6 +40,11 @@ pub type KernelId = usize;
 struct Wave {
     r: u32,
     n_waves: u64,
+    /// Blocks covered by this chunk (`<= r * n_waves`; the kernel tail may
+    /// not fill the last wave). Informational: lets
+    /// [`Engine::remaining_fraction`] report progress without disturbing
+    /// the timing model.
+    chunk_blocks: u64,
     frac_left: f64, // fraction of the *chunk* remaining
     rate: f64,      // chunk-fractions per microsecond
     last_update: f64,
@@ -94,27 +99,41 @@ pub struct SimResult {
     pub kernels: Vec<KernelRecord>,
 }
 
+/// Total wall time during which two or more of the given `(start, end)`
+/// spans are simultaneously active — the interval-depth sweep shared by
+/// [`SimResult::overlap_us`] and the event executor's per-op
+/// `conv_overlap_us`, so the two executors' overlap metric cannot drift.
+/// Spans must be passed in chronological construction order (stable sort
+/// keeps an earlier span's end before a later span's coincident start).
+pub fn overlap_us_of_spans(spans: &[(f64, f64)]) -> f64 {
+    let mut events: Vec<(f64, i32)> = Vec::new();
+    for &(start, end) in spans {
+        events.push((start, 1));
+        events.push((end, -1));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut depth = 0;
+    let mut last = 0.0;
+    let mut overlap = 0.0;
+    for (t, d) in events {
+        if depth >= 2 {
+            overlap += t - last;
+        }
+        depth += d;
+        last = t;
+    }
+    overlap
+}
+
 impl SimResult {
     /// Total wall time during which two or more kernels were in flight.
     pub fn overlap_us(&self) -> f64 {
-        // sweep over span endpoints
-        let mut events: Vec<(f64, i32)> = Vec::new();
-        for k in &self.kernels {
-            events.push((k.start_us, 1));
-            events.push((k.end_us, -1));
-        }
-        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut depth = 0;
-        let mut last = 0.0;
-        let mut overlap = 0.0;
-        for (t, d) in events {
-            if depth >= 2 {
-                overlap += t - last;
-            }
-            depth += d;
-            last = t;
-        }
-        overlap
+        let spans: Vec<(f64, f64)> = self
+            .kernels
+            .iter()
+            .map(|k| (k.start_us, k.end_us))
+            .collect();
+        overlap_us_of_spans(&spans)
     }
 
     /// Sum of isolated times: the serial-execution baseline.
@@ -175,6 +194,9 @@ pub struct Engine {
     /// mechanism for SM partitioning). Bit i set = SM i usable. Default:
     /// all SMs.
     stream_masks: Vec<u64>,
+    /// Kernels completed since the last [`Engine::step_until`] drain — the
+    /// stepping API's channel back to an external event-driven controller.
+    finished_buf: Vec<KernelId>,
 }
 
 impl Engine {
@@ -191,6 +213,7 @@ impl Engine {
             seq: 0,
             gen_counter: 0,
             stream_masks: Vec::new(),
+            finished_buf: Vec::new(),
         }
     }
 
@@ -245,23 +268,9 @@ impl Engine {
         self.dispatch();
         while let Some(Reverse(ev)) = self.heap.pop() {
             debug_assert!(ev.time >= self.time - 1e-9);
-            self.time = self.time.max(ev.time);
-            if ev.sm == usize::MAX {
-                // poke: launch-overhead elapsed
-                self.dispatch();
-                continue;
-            }
-            // wave completion — skip stale generations
-            let stale = match self.sms[ev.sm].waves.get(&ev.wid) {
-                Some((_, w)) => w.gen != ev.gen,
-                None => true,
-            };
-            if stale {
-                continue;
-            }
-            self.complete_wave(ev.sm, ev.wid);
-            self.dispatch();
+            self.handle_event(ev);
         }
+        self.finished_buf.clear();
         let makespan = self.time;
         let kernels = self
             .kernels
@@ -283,6 +292,124 @@ impl Engine {
     }
 
     // ------------------------------------------------------------------
+    // Event-driven stepping API: lets an external controller (the event
+    // executor in `crate::sim`) interleave this engine's kernel events
+    // with op-level events of its own — host-op completions, dependency
+    // resolution, workspace admission — on one shared virtual timeline.
+    // `run` is exactly `step_until(∞)` iterated, so the two drivers share
+    // every line of event-handling physics.
+    // ------------------------------------------------------------------
+
+    /// Absolute simulation clock (time of the last processed event).
+    pub fn now(&self) -> f64 {
+        self.time
+    }
+
+    /// Time of the next scheduled event, if any work is pending.
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.heap.peek().map(|r| r.0.time)
+    }
+
+    /// Raise the clock to `t` (no-op when already past). Used by an
+    /// external controller before injecting kernels whose trigger — e.g. a
+    /// host-op completion — happened between engine events. Must not jump
+    /// over pending events; the controller guarantees it by processing
+    /// events in global time order.
+    pub fn advance_to(&mut self, t: f64) {
+        debug_assert!(
+            self.heap.peek().map_or(true, |r| r.0.time >= t - 1e-9),
+            "advance_to({t}) would skip a pending event"
+        );
+        if t > self.time {
+            self.time = t;
+        }
+    }
+
+    /// Enqueue a kernel mid-simulation and dispatch immediately, so it is
+    /// admitted (and its launch-overhead clock starts) at the current
+    /// virtual time rather than at the next event.
+    pub fn inject(&mut self, desc: KernelDesc, stream: usize) -> KernelId {
+        let id = self.launch(desc, stream);
+        self.dispatch();
+        id
+    }
+
+    /// Process pending events with `time <= t_bound` until at least one
+    /// kernel completes. Returns the completed kernel ids (empty when no
+    /// completion happens within the bound — the caller's next event is
+    /// then earlier than any of this engine's).
+    pub fn step_until(&mut self, t_bound: f64) -> Vec<KernelId> {
+        while let Some(top) = self.heap.peek() {
+            if top.0.time > t_bound {
+                break;
+            }
+            let Reverse(ev) = self.heap.pop().expect("peeked event");
+            debug_assert!(ev.time >= self.time - 1e-9);
+            self.handle_event(ev);
+            if !self.finished_buf.is_empty() {
+                break;
+            }
+        }
+        std::mem::take(&mut self.finished_buf)
+    }
+
+    /// Start time of a kernel (None until its first wave launches).
+    pub fn kernel_started(&self, id: KernelId) -> Option<f64> {
+        self.kernels[id].started
+    }
+
+    /// Completion time of a kernel (None while still in flight).
+    pub fn kernel_finished(&self, id: KernelId) -> Option<f64> {
+        self.kernels[id].finished
+    }
+
+    /// Fraction of a kernel's blocks not yet retired, integrating the
+    /// lazily-updated progress of in-flight waves at their current rates.
+    /// Purely observational (feeds the executor's fluid join estimates);
+    /// never perturbs the timing model.
+    pub fn remaining_fraction(&self, id: KernelId) -> f64 {
+        let k = &self.kernels[id];
+        if k.finished.is_some() {
+            return 0.0;
+        }
+        let mut blocks = k.blocks_left as f64;
+        for sm in &self.sms {
+            for (kid, w) in sm.waves.values() {
+                if *kid != id {
+                    continue;
+                }
+                let frac = (w.frac_left
+                    - (self.time - w.last_update) * w.rate)
+                    .max(0.0);
+                blocks += frac * w.chunk_blocks as f64;
+            }
+        }
+        (blocks / k.desc.launch.grid_blocks.max(1) as f64).clamp(0.0, 1.0)
+    }
+
+    // ------------------------------------------------------------------
+
+    /// One event through the simulation physics: advance the clock, run
+    /// the poke/stale/completion logic, re-dispatch. Shared verbatim by
+    /// [`Engine::run`] and [`Engine::step_until`].
+    fn handle_event(&mut self, ev: Ev) {
+        self.time = self.time.max(ev.time);
+        if ev.sm == usize::MAX {
+            // poke: launch-overhead elapsed
+            self.dispatch();
+            return;
+        }
+        // wave completion — skip stale generations
+        let stale = match self.sms[ev.sm].waves.get(&ev.wid) {
+            Some((_, w)) => w.gen != ev.gen,
+            None => true,
+        };
+        if stale {
+            return;
+        }
+        self.complete_wave(ev.sm, ev.wid);
+        self.dispatch();
+    }
 
     fn complete_wave(&mut self, sm: usize, wid: u64) {
         let (kid, wave) =
@@ -298,6 +425,7 @@ impl Engine {
             if self.streams[s].front() == Some(&kid) {
                 self.streams[s].pop_front();
             }
+            self.finished_buf.push(kid);
         }
     }
 
@@ -471,6 +599,7 @@ impl Engine {
                         Wave {
                             r,
                             n_waves,
+                            chunk_blocks,
                             frac_left: 1.0,
                             rate: 0.0, // set by recompute_rates
                             last_update: self.time,
@@ -793,6 +922,77 @@ mod tests {
         // empty group is a no-op
         let empty = run_group(&k40(), PartitionMode::IntraSm, &[]);
         assert_eq!(empty.makespan_us, 0.0);
+    }
+
+    #[test]
+    fn stepping_api_matches_run_bit_for_bit() {
+        // Driving the engine through step_until must reproduce run()'s
+        // timeline exactly — the two share handle_event verbatim.
+        let p3 = ConvParams::incep3a_3x3(32);
+        let a = desc(Algorithm::ImplicitPrecompGemm, &p3);
+        let b = desc(Algorithm::FftTiling, &p3);
+        let reference = run_pair(a.clone(), b.clone(), PartitionMode::IntraSm);
+
+        let mut e = Engine::new(k40(), PartitionMode::IntraSm);
+        assert_eq!(e.next_event_time(), None);
+        let ka = e.inject(a, 0);
+        let kb = e.inject(b, 1);
+        assert!(e.next_event_time().is_some());
+        let mut finished: Vec<(KernelId, f64)> = Vec::new();
+        loop {
+            let done = e.step_until(f64::INFINITY);
+            if done.is_empty() {
+                break;
+            }
+            for kid in done {
+                finished.push((kid, e.now()));
+            }
+        }
+        assert_eq!(finished.len(), 2);
+        for (kid, t) in &finished {
+            assert_eq!(e.kernel_finished(*kid), Some(*t));
+            assert_eq!(e.remaining_fraction(*kid), 0.0);
+        }
+        let end_a = e.kernel_finished(ka).unwrap();
+        let end_b = e.kernel_finished(kb).unwrap();
+        let makespan = end_a.max(end_b);
+        assert_eq!(makespan, reference.makespan_us);
+        assert_eq!(e.kernel_started(ka), Some(reference.kernels[0].start_us));
+        assert_eq!(end_a, reference.kernels[0].end_us);
+        assert_eq!(end_b, reference.kernels[1].end_us);
+    }
+
+    #[test]
+    fn remaining_fraction_decreases_monotonically() {
+        let p3 = ConvParams::incep3a_3x3(32);
+        let d = desc(Algorithm::ImplicitPrecompGemm, &p3);
+        let mut e = Engine::new(k40(), PartitionMode::StreamsOnly);
+        let kid = e.inject(d, 0);
+        assert_eq!(e.remaining_fraction(kid), 1.0);
+        let mut prev = 1.0;
+        loop {
+            let done = e.step_until(f64::INFINITY);
+            let frac = e.remaining_fraction(kid);
+            assert!(
+                frac <= prev + 1e-9,
+                "remaining fraction rose: {prev} -> {frac}"
+            );
+            prev = frac;
+            if !done.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(e.remaining_fraction(kid), 0.0);
+    }
+
+    #[test]
+    fn advance_to_only_moves_forward() {
+        let mut e = Engine::new(k40(), PartitionMode::StreamsOnly);
+        assert_eq!(e.now(), 0.0);
+        e.advance_to(5.0);
+        assert_eq!(e.now(), 5.0);
+        e.advance_to(3.0); // backwards: no-op
+        assert_eq!(e.now(), 5.0);
     }
 
     #[test]

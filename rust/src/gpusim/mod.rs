@@ -14,7 +14,10 @@ pub mod sm;
 mod spec;
 pub mod timing;
 
-pub use engine::{run_group, Engine, KernelId, KernelRecord, SimResult};
+pub use engine::{
+    overlap_us_of_spans, run_group, Engine, KernelId, KernelRecord,
+    SimResult,
+};
 pub use partition::PartitionMode;
 pub use sm::{
     can_host, natural_residency, static_utilization, StaticUtilization,

@@ -24,11 +24,18 @@
 //!   (TensorFlow-style fastest-only vs the paper's profile-guided
 //!   multi-metric selection), plus complementary-pair discovery.
 //! - [`plan`] — the Plan/Execute split: [`Planner`] runs the selection
-//!   sweep once and emits an immutable, JSON-serializable [`Plan`];
-//!   [`Session`] caches plans keyed by DAG digest and replays them per
-//!   request with zero selector calls (profile-guided selection is an
-//!   *offline* activity — paper §2). `Coordinator::execute_dag` is now a
-//!   compatibility shim over `Session::run`.
+//!   sweep once and emits an immutable, JSON-serializable [`Plan`]
+//!   (schema v2: ordered groups *plus* a dependency/lane scheduling
+//!   graph); [`Session`] caches plans keyed by DAG digest and replays
+//!   them per request with zero selector calls (profile-guided selection
+//!   is an *offline* activity — paper §2). `Coordinator::execute_dag` is
+//!   now a compatibility shim over `Session::run`.
+//! - [`sim`] — the discrete-event execution core behind `Session::run`:
+//!   a virtual-time event queue and per-stream state machines launch each
+//!   op the moment its dependencies resolve, freeing SM quotas and
+//!   workspace at op-completion events; the legacy barrier-synchronous
+//!   group replay remains available as `ExecutorKind::Barrier` (the
+//!   regression oracle).
 //! - [`runtime`] — PJRT CPU client running the AOT-compiled JAX/Pallas
 //!   artifacts, so every scheduled convolution's *numerics* are real.
 //! - [`trainer`] — an SGD loop over the AOT `train_step` artifact.
@@ -78,6 +85,7 @@ pub mod memory;
 pub mod plan;
 pub mod profiler;
 pub mod runtime;
+pub mod sim;
 pub mod trainer;
 pub mod util;
 
@@ -86,3 +94,4 @@ pub use coordinator::{Coordinator, SelectionPolicy};
 pub use gpusim::{DeviceSpec, PartitionMode};
 pub use graph::Network;
 pub use plan::{Plan, Planner, Session};
+pub use sim::ExecutorKind;

@@ -20,8 +20,12 @@
 //! Global flags: `--config FILE`, `--device k40|p100|v100|a100`,
 //! `--batch N`, `--policy P`, `--partition M`, `--streams N`,
 //! `--priority critical_path|fifo`, `--workspace-mb N`,
-//! `--artifacts DIR`, `--min-speedup X` (discovery admission threshold,
-//! default 1.05).
+//! `--executor event|barrier` (`end2end`/`training`: execution backend;
+//! event-driven is the default, barrier is the legacy group replay —
+//! `plan` always self-verifies both), `--trace FILE`
+//! (`end2end`/`training`: dump the executed timeline as a Chrome trace,
+//! one track per stream), `--artifacts DIR`, `--min-speedup X`
+//! (discovery admission threshold, default 1.05).
 //!
 //! Every scheduling command goes through a [`Session`]: plans are built
 //! once per (network, batch, config) and replayed from the cache.
@@ -37,7 +41,10 @@ use parconv::coordinator::{
 use parconv::gpusim::{isolated_time_us, DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
 use parconv::plan::{Plan, Session};
-use parconv::profiler::{chrome_trace_json, table1_report, table1_row};
+use parconv::profiler::{
+    chrome_trace_json, schedule_chrome_trace_json, table1_report, table1_row,
+};
+use parconv::sim::ExecutorKind;
 use parconv::trainer::Trainer;
 use parconv::util::{fmt_bytes, fmt_us, Table};
 
@@ -59,6 +66,7 @@ struct Cli {
     min_speedup: f64,
     steps: usize,
     out: Option<String>,
+    trace: Option<String>,
 }
 
 fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
@@ -73,6 +81,7 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
     let mut min_speedup = 1.05;
     let mut steps = 300usize;
     let mut out = None;
+    let mut trace = None;
     while let Some(flag) = it.next() {
         let mut val = || -> anyhow::Result<String> {
             it.next()
@@ -91,10 +100,12 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
                 cfg.scheduler.workspace_limit =
                     val()?.parse::<u64>()? * 1024 * 1024
             }
+            "--executor" => cfg.scheduler.executor = val()?,
             "--artifacts" => cfg.artifacts_dir = val()?,
             "--min-speedup" => min_speedup = val()?.parse()?,
             "--steps" => steps = val()?.parse()?,
             "--out" => out = Some(val()?),
+            "--trace" => trace = Some(val()?),
             other => anyhow::bail!("unknown flag {other}"),
         }
     }
@@ -104,6 +115,7 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
         min_speedup,
         steps,
         out,
+        trace,
     })
 }
 
@@ -135,6 +147,15 @@ fn sched_policy(cfg: &RunConfig) -> anyhow::Result<SelectionPolicy> {
 fn sched_partition(cfg: &RunConfig) -> anyhow::Result<PartitionMode> {
     PartitionMode::parse(&cfg.scheduler.partition).ok_or_else(|| {
         anyhow::anyhow!("unknown partition {:?}", cfg.scheduler.partition)
+    })
+}
+
+fn executor_kind(cfg: &RunConfig) -> anyhow::Result<ExecutorKind> {
+    ExecutorKind::parse(&cfg.scheduler.executor).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown executor {:?}; valid: event, barrier",
+            cfg.scheduler.executor
+        )
     })
 }
 
@@ -175,7 +196,8 @@ const HELP: &str = "parconv — concurrent CNN ops on a simulated GPU (SPAA'20 r
 commands: table1 table2 networks serialization discover end2end training validate train plan trace help
 global flags: --config FILE --device D --network N --batch B --policy P
               --partition M --streams K --priority Q --workspace-mb MB
-              --artifacts DIR --min-speedup X";
+              --artifacts DIR --min-speedup X
+end2end/training also take: --executor event|barrier --trace FILE";
 
 // --------------------------------------------------------------------------
 
@@ -377,11 +399,14 @@ fn cmd_discover(cli: &Cli) -> anyhow::Result<()> {
 fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
     let dev = device(&cli.cfg)?;
     let net = network(&cli.cfg)?;
+    let exec = executor_kind(&cli.cfg)?;
     let dag = net.build(cli.cfg.batch);
     println!(
-        "E6 — one {} iteration (batch {}) under policy x partition\n",
+        "E6 — one {} iteration (batch {}) under policy x partition \
+         ({} executor)\n",
         net.name(),
-        cli.cfg.batch
+        cli.cfg.batch,
+        exec.name(),
     );
     let mut t = Table::new(vec![
         "Policy",
@@ -409,18 +434,35 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
     if !combos.contains(&configured) {
         combos.push(configured);
     }
-    for (policy, partition, streams) in combos {
-        let session = Session::new(
+    let prio = priority(&cli.cfg)?;
+    let make_session = |policy, partition, streams, kind| {
+        let mut s = Session::new(
             dev.clone(),
             ScheduleConfig {
                 policy,
                 partition,
                 streams,
                 workspace_limit: cli.cfg.scheduler.workspace_limit,
-                priority: priority(&cli.cfg)?,
+                priority: prio,
             },
         );
-        let r = session.run(&dag);
+        s.set_executor(kind);
+        s
+    };
+    // The configured combo gets one dedicated session: the table loop
+    // runs it under `exec`, then the comparison below switches executors
+    // and replays from the plan cache — one selection sweep total.
+    let mut cmp = {
+        let (policy, partition, streams) = configured;
+        make_session(policy, partition, streams, exec)
+    };
+    let mut configured_result = None;
+    for &(policy, partition, streams) in &combos {
+        let r = if (policy, partition, streams) == configured {
+            cmp.run(&dag)
+        } else {
+            make_session(policy, partition, streams, exec).run(&dag)
+        };
         t.row(vec![
             policy.name().to_string(),
             partition.name().to_string(),
@@ -430,8 +472,46 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
             fmt_bytes(r.peak_workspace),
             r.ws_fallbacks.to_string(),
         ]);
+        if (policy, partition, streams) == configured {
+            configured_result = Some(r);
+        }
     }
     println!("{}", t.render());
+
+    // What the barrier was costing: the configured combo under both
+    // executors. The event path frees workspace at op completion, so its
+    // peak is the true concurrent high-watermark — the barrier number
+    // over-reports by holding every group member's workspace until the
+    // whole group drains. The other executor's run is a cache-hit replay.
+    let first = configured_result.expect("configured combo is in the matrix");
+    let other = match exec {
+        ExecutorKind::Event => ExecutorKind::Barrier,
+        ExecutorKind::Barrier => ExecutorKind::Event,
+    };
+    cmp.set_executor(other);
+    let second = cmp.run(&dag);
+    let (event, barrier) = match exec {
+        ExecutorKind::Event => (first, second),
+        ExecutorKind::Barrier => (second, first),
+    };
+    println!(
+        "\nconfigured combo, event vs barrier executor:\n  makespan       \
+         {} vs {} ({:.2}x)\n  high-watermark {} vs {} (event frees at op \
+         completion — the corrected concurrent peak)",
+        fmt_us(event.makespan_us),
+        fmt_us(barrier.makespan_us),
+        barrier.makespan_us / event.makespan_us.max(1e-9),
+        fmt_bytes(event.peak_workspace),
+        fmt_bytes(barrier.peak_workspace),
+    );
+    if let Some(path) = &cli.trace {
+        let traced = if exec == ExecutorKind::Event { &event } else { &barrier };
+        std::fs::write(path, schedule_chrome_trace_json(traced))?;
+        println!(
+            "wrote chrome trace ({} ops, one track per stream) to {path}",
+            traced.ops.len()
+        );
+    }
     Ok(())
 }
 
@@ -439,17 +519,19 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
     use parconv::graph::training_dag;
     let dev = device(&cli.cfg)?;
     let net = network(&cli.cfg)?;
+    let exec = executor_kind(&cli.cfg)?;
     let fwd = net.build(cli.cfg.batch);
     let train = training_dag(&fwd);
     println!(
         "E9 — {} training iteration (fwd+bwd), batch {}: {} ops, {} convs, \
-         {} independent conv pairs (fwd alone: {})\n",
+         {} independent conv pairs (fwd alone: {}; {} executor)\n",
         net.name(),
         cli.cfg.batch,
         train.len(),
         train.conv_ids().len(),
         train.independent_conv_pairs().len(),
         fwd.independent_conv_pairs().len(),
+        exec.name(),
     );
     let mut t = Table::new(vec![
         "Policy",
@@ -473,8 +555,9 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
     if !combos.contains(&configured) {
         combos.push(configured);
     }
+    let mut last_configured = None;
     for (policy, partition, streams) in combos {
-        let r = Session::new(
+        let mut session = Session::new(
             dev.clone(),
             ScheduleConfig {
                 policy,
@@ -483,8 +566,9 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
                 workspace_limit: cli.cfg.scheduler.workspace_limit,
                 priority: priority(&cli.cfg)?,
             },
-        )
-        .run(&train);
+        );
+        session.set_executor(exec);
+        let r = session.run(&train);
         t.row(vec![
             policy.name().to_string(),
             partition.name().to_string(),
@@ -493,8 +577,18 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
             fmt_us(r.conv_overlap_us),
             fmt_bytes(r.peak_workspace),
         ]);
+        if (policy, partition, streams) == configured {
+            last_configured = Some(r);
+        }
     }
     println!("{}", t.render());
+    if let (Some(path), Some(r)) = (&cli.trace, &last_configured) {
+        std::fs::write(path, schedule_chrome_trace_json(r))?;
+        println!(
+            "wrote chrome trace ({} ops, one track per stream) to {path}",
+            r.ops.len()
+        );
+    }
     Ok(())
 }
 
@@ -602,8 +696,9 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
     std::fs::write(&out, plan.to_json())?;
 
     // Round-trip guard (the CI `plan-roundtrip` step relies on this):
-    // reload from disk and require the digest and the replayed makespan to
-    // match bit-for-bit, so serialization drift fails loudly.
+    // reload from disk and require the digest and the replayed makespan —
+    // under BOTH executors — to match bit-for-bit, so serialization drift
+    // in the v2 schema (steps or nodes) fails loudly.
     let reloaded = Plan::from_json(&std::fs::read_to_string(&out)?)?;
     anyhow::ensure!(
         reloaded.digest() == plan.digest(),
@@ -616,9 +711,19 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
     let replayed = reloaded.execute(&dag, &dev)?;
     anyhow::ensure!(
         direct.makespan_us == replayed.makespan_us,
-        "reloaded plan executes differently: {} vs {} us",
+        "reloaded plan executes differently (event): {} vs {} us",
         direct.makespan_us,
         replayed.makespan_us
+    );
+    let direct_barrier =
+        plan.execute_with(&dag, &dev, ExecutorKind::Barrier)?;
+    let replayed_barrier =
+        reloaded.execute_with(&dag, &dev, ExecutorKind::Barrier)?;
+    anyhow::ensure!(
+        direct_barrier.makespan_us == replayed_barrier.makespan_us,
+        "reloaded plan executes differently (barrier): {} vs {} us",
+        direct_barrier.makespan_us,
+        replayed_barrier.makespan_us
     );
 
     println!(
@@ -629,6 +734,11 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
         plan.meta.policy.name(),
         plan.meta.partition.name(),
         plan.meta.streams,
+    );
+    println!(
+        "  schema:             v{} ({} scheduling nodes w/ deps + lanes)",
+        plan.meta.version,
+        plan.nodes.len()
     );
     println!(
         "  steps:              {} ({} co-execution groups)",
@@ -643,9 +753,17 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
         "  predicted makespan: {}",
         fmt_us(plan.predicted_makespan_us)
     );
-    println!("  executed makespan:  {}", fmt_us(direct.makespan_us));
+    println!(
+        "  executed makespan:  {} event / {} barrier ({:.2}x)",
+        fmt_us(direct.makespan_us),
+        fmt_us(direct_barrier.makespan_us),
+        direct_barrier.makespan_us / direct.makespan_us.max(1e-9)
+    );
     println!("  digest:             {:016x}", plan.digest());
-    println!("\nwrote {out}; reload + replay verified identical ✓");
+    println!(
+        "\nwrote {out}; reload + replay verified identical under both \
+         executors ✓"
+    );
     Ok(())
 }
 

@@ -5,6 +5,13 @@
 //! available at launch time" — input/output/filter allocations are fixed at
 //! model construction, and *workspace* is the only degree of freedom. This
 //! module is that launch-time gate.
+//!
+//! Allocation lifetime is the caller's contract, and it determines what
+//! [`DeviceMemory::peak`] means: the event-driven executor allocates at
+//! kernel launch and frees at the op-completion event, so its peak is the
+//! true concurrent high-watermark; the legacy barrier replay holds every
+//! group member's allocation until the whole group drains, so its peak
+//! over-reports whenever group members finish at different times.
 
 use std::collections::HashMap;
 
@@ -161,6 +168,34 @@ mod tests {
         assert_eq!(m.failed_allocs(), 1);
         // state unchanged after refusal
         assert_eq!(m.used(), 80);
+    }
+
+    #[test]
+    fn completion_time_frees_lower_the_watermark() {
+        // The workspace-lifetime fix in one picture: a 3-member
+        // co-execution group where op A finishes well before the
+        // stragglers, and op C only launches as A drains. Group-boundary
+        // frees (barrier replay) hold all three allocations until the
+        // slowest member completes: peak 1200. Frees at op completion
+        // (event executor) overlap only two at a time: peak 800 — the
+        // true concurrent high-watermark.
+        let mut barrier = DeviceMemory::new(4096);
+        let a = barrier.alloc(400).unwrap();
+        let b = barrier.alloc(400).unwrap();
+        let c = barrier.alloc(400).unwrap();
+        for id in [a, b, c] {
+            barrier.free(id).unwrap();
+        }
+        assert_eq!(barrier.peak(), 1200, "group-boundary accounting");
+
+        let mut event = DeviceMemory::new(4096);
+        let a = event.alloc(400).unwrap();
+        let b = event.alloc(400).unwrap();
+        event.free(a).unwrap(); // op A completes before C launches
+        let c = event.alloc(400).unwrap();
+        event.free(b).unwrap();
+        event.free(c).unwrap();
+        assert_eq!(event.peak(), 800, "concurrent high-watermark");
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! pure function the planner used — so a JSON round-trip cannot drift from
 //! the in-memory plan. Workspace sizes, per-SM quotas, and fluid estimates
 //! are recorded as provenance/diagnostics only.
+//!
+//! Schema v2 records two views of the same schedule: the ordered `steps`
+//! (the barrier replay's authority) and the `nodes` scheduling graph —
+//! per-op dependency edges and stream-lane assignments in dispatch-
+//! priority order — which the event-driven executor launches from. The
+//! views are cross-validated at execute time so a hand-edited plan cannot
+//! silently diverge.
 
 use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
 use crate::coordinator::{
@@ -17,12 +24,16 @@ use crate::coordinator::{
 use crate::gpusim::{run_group, DeviceSpec, PartitionMode};
 use crate::graph::{Dag, OpKind};
 use crate::memory::DeviceMemory;
+use crate::sim::ExecutorKind;
 use crate::util::digest::{hex16, parse_hex16, Fnv64};
 
 use super::json::{escape, JsonValue};
 
-/// Version tag of the plan JSON layout.
-pub const PLAN_FORMAT_VERSION: u32 = 1;
+/// Version tag of the plan JSON layout. Version 2 added the `nodes` array
+/// — per-op dependency edges and stream-lane assignments — which the
+/// event-driven executor schedules from; version-1 plans (ordered groups
+/// only) are refused with [`PlanError::UnsupportedVersion`].
+pub const PLAN_FORMAT_VERSION: u32 = 2;
 
 /// Errors from plan execution or deserialization.
 #[derive(Clone, Debug, PartialEq, thiserror::Error)]
@@ -44,6 +55,15 @@ pub enum PlanError {
     IncompleteCoverage { executed: usize, ops: usize },
     #[error("algorithm {algo} is unsupported for op {op} on this device")]
     Unsupported { algo: Algorithm, op: usize },
+    #[error(
+        "unsupported plan schema version {found}: this build reads \
+         version 2 (v2 plans record dependency edges and stream lanes \
+         for the event-driven executor; earlier layouts do not) — \
+         regenerate the plan with `parconv plan`"
+    )]
+    UnsupportedVersion { found: u32 },
+    #[error("plan nodes disagree with the plan steps or DAG: {0}")]
+    NodeMismatch(String),
     #[error("malformed plan JSON: {0}")]
     Parse(String),
 }
@@ -118,6 +138,25 @@ pub enum PlanStep {
     Group(GroupPlan),
 }
 
+/// One op in the plan's scheduling graph (schema v2): its dependency
+/// edges and planned stream lane. The node *order* is the planner's
+/// dispatch order (critical-path priority), which the event-driven
+/// executor uses as its ready-queue ranking; the `steps` sequence remains
+/// the barrier replay's authority and the two are cross-validated at
+/// execute time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanNode {
+    /// Op id in the source DAG.
+    pub op: usize,
+    /// Planned stream lane (the member index within its co-execution
+    /// group); `None` for ops on the serial host lane.
+    pub lane: Option<usize>,
+    /// Ops that must complete before this one launches (the DAG's
+    /// predecessor edges — recorded so a plan is schedulable without
+    /// re-deriving the graph, and validated against the DAG on replay).
+    pub deps: Vec<usize>,
+}
+
 /// An immutable, replayable schedule for one DAG on one device under one
 /// configuration. Built by [`super::Planner`], cached by
 /// [`super::Session`], serialized with [`Plan::to_json`].
@@ -125,6 +164,10 @@ pub enum PlanStep {
 pub struct Plan {
     pub meta: PlanMeta,
     pub steps: Vec<PlanStep>,
+    /// Scheduling graph (v2): dependency edges + lane assignments per op,
+    /// in dispatch-priority order. The event-driven executor schedules
+    /// from this; the barrier replay ignores it.
+    pub nodes: Vec<PlanNode>,
     /// Analytic makespan estimate (fluid model; the executed makespan is
     /// the ground truth).
     pub predicted_makespan_us: f64,
@@ -250,6 +293,16 @@ impl Plan {
                 }
             }
         }
+        h.write_usize(self.nodes.len());
+        for n in &self.nodes {
+            h.write_usize(n.op);
+            // lane None/Some(l) encoded as 0 / l+1
+            h.write_usize(n.lane.map_or(0, |l| l + 1));
+            h.write_usize(n.deps.len());
+            for &d in &n.deps {
+                h.write_usize(d);
+            }
+        }
         h.finish()
     }
 
@@ -261,11 +314,11 @@ impl Plan {
             .count()
     }
 
-    /// Replay the plan: drive the simulator through the prerecorded step
-    /// sequence. No selection happens here — algorithm choices are read
-    /// off the plan and kernel descriptors are rebuilt from the DAG's
-    /// parameters, so replay is bit-identical to the run that would have
-    /// planned inline.
+    /// Execute the plan with the default (event-driven) executor: ops
+    /// launch as their dependency edges resolve on free stream lanes, and
+    /// workspace/SM quotas release at op-completion events. No selection
+    /// happens here — algorithm choices are read off the plan and kernel
+    /// descriptors are rebuilt from the DAG's parameters.
     ///
     /// Fails if `dag` or `spec` differ from what the plan was built for.
     pub fn execute(
@@ -273,20 +326,34 @@ impl Plan {
         dag: &Dag,
         spec: &DeviceSpec,
     ) -> Result<ScheduleResult, PlanError> {
+        self.execute_with(dag, spec, ExecutorKind::default())
+    }
+
+    /// Execute under an explicit executor: [`ExecutorKind::Event`] (the
+    /// default) or the legacy barrier-synchronous group replay
+    /// ([`ExecutorKind::Barrier`], the regression oracle).
+    pub fn execute_with(
+        &self,
+        dag: &Dag,
+        spec: &DeviceSpec,
+        executor: ExecutorKind,
+    ) -> Result<ScheduleResult, PlanError> {
         self.execute_with_memory(
             dag,
             spec,
             DeviceMemory::new(self.meta.workspace_limit),
+            executor,
         )
     }
 
-    /// Replay with a caller-provided workspace allocator (the session uses
-    /// this to thread failure injection through).
+    /// Execute with a caller-provided workspace allocator (the session
+    /// uses this to thread failure injection through).
     pub(crate) fn execute_with_memory(
         &self,
         dag: &Dag,
         spec: &DeviceSpec,
-        mut mem: DeviceMemory,
+        mem: DeviceMemory,
+        executor: ExecutorKind,
     ) -> Result<ScheduleResult, PlanError> {
         let got = dag_digest(dag);
         if got != self.meta.dag_digest {
@@ -302,7 +369,96 @@ impl Plan {
                 got: spec.name.clone(),
             });
         }
+        // v2 integrity: the node list must agree with the step sequence
+        // and the DAG under EITHER executor — a corrupted artifact fails
+        // here, not only when someone happens to replay it event-driven.
+        self.validate_nodes(dag)?;
+        match executor {
+            ExecutorKind::Event => {
+                crate::sim::execute_event(self, dag, spec, mem)
+            }
+            ExecutorKind::Barrier => self.replay_barrier(dag, spec, mem),
+        }
+    }
 
+    /// Cross-validate the v2 node list against the step sequence and the
+    /// DAG: same ops in the same order, exactly once each, with dependency
+    /// edges equal to the DAG's predecessor lists. Run before either
+    /// executor touches the plan, so the two recorded views cannot
+    /// silently diverge.
+    pub(crate) fn validate_nodes(&self, dag: &Dag) -> Result<(), PlanError> {
+        let n = dag.len();
+        let mut flat: Vec<(usize, Option<usize>)> = Vec::with_capacity(n);
+        for step in &self.steps {
+            match step {
+                PlanStep::Host { op } => flat.push((*op, None)),
+                PlanStep::Group(g) => {
+                    for (i, m) in g.members.iter().enumerate() {
+                        flat.push((m.op, Some(i)));
+                    }
+                }
+            }
+        }
+        if self.nodes.len() != flat.len() {
+            return Err(PlanError::NodeMismatch(format!(
+                "{} nodes vs {} planned ops",
+                self.nodes.len(),
+                flat.len()
+            )));
+        }
+        let mut seen = vec![false; n];
+        for (node, &(step_op, step_lane)) in self.nodes.iter().zip(&flat) {
+            if node.op >= n {
+                return Err(PlanError::OpOutOfRange { op: node.op, ops: n });
+            }
+            if node.op != step_op || node.lane != step_lane {
+                return Err(PlanError::NodeMismatch(format!(
+                    "node for op {} disagrees with the step sequence",
+                    node.op
+                )));
+            }
+            if seen[node.op] {
+                return Err(PlanError::DuplicateOp { op: node.op });
+            }
+            seen[node.op] = true;
+            // Fast path for the serving loop: planner-built nodes copy
+            // `dag.preds` verbatim, so the common case is an exact slice
+            // match with zero allocations. Only an order mismatch (e.g. a
+            // hand-written JSON listing the same edges shuffled) pays for
+            // the sorted comparison.
+            if node.deps != dag.preds(node.op) {
+                let mut deps = node.deps.clone();
+                deps.sort_unstable();
+                let mut preds = dag.preds(node.op).to_vec();
+                preds.sort_unstable();
+                if deps != preds {
+                    return Err(PlanError::NodeMismatch(format!(
+                        "op {} dependency edges disagree with the DAG",
+                        node.op
+                    )));
+                }
+            }
+        }
+        if self.nodes.len() != n {
+            return Err(PlanError::IncompleteCoverage {
+                executed: self.nodes.len(),
+                ops: n,
+            });
+        }
+        Ok(())
+    }
+
+    /// The legacy barrier replay: each planned group runs to completion
+    /// (in a fresh engine) before the next step starts, and workspace is
+    /// released only at group boundaries. Bit-identical descendant of the
+    /// pre-split inline scheduler — kept as the regression oracle the
+    /// event-driven executor is measured against.
+    fn replay_barrier(
+        &self,
+        dag: &Dag,
+        spec: &DeviceSpec,
+        mut mem: DeviceMemory,
+    ) -> Result<ScheduleResult, PlanError> {
         let mut clock = 0.0f64;
         let mut ops: Vec<OpExec> = Vec::with_capacity(dag.len());
         let mut ws_fallbacks = self.meta.planned_ws_fallbacks;
@@ -339,6 +495,7 @@ impl Plan {
                         start_us: clock,
                         end_us: clock + dur,
                         workspace_bytes: 0,
+                        stream: None,
                     });
                     clock += dur;
                 }
@@ -389,8 +546,12 @@ impl Plan {
                         }
                     }
                     let sim = run_group(spec, g.partition, &final_descs);
-                    for ((m, desc), rec) in
-                        g.members.iter().zip(&final_descs).zip(&sim.kernels)
+                    for (i, ((m, desc), rec)) in g
+                        .members
+                        .iter()
+                        .zip(&final_descs)
+                        .zip(&sim.kernels)
+                        .enumerate()
                     {
                         ops.push(OpExec {
                             op_id: m.op,
@@ -400,6 +561,7 @@ impl Plan {
                             start_us: clock + rec.start_us,
                             end_us: clock + rec.end_us,
                             workspace_bytes: desc.workspace_bytes,
+                            stream: Some(i),
                         });
                     }
                     conv_overlap_us += sim.overlap_us();
@@ -510,6 +672,26 @@ impl Plan {
                 }
             }
         }
+        s.push_str("  ],\n");
+        s.push_str("  \"nodes\": [\n");
+        for (i, n) in self.nodes.iter().enumerate() {
+            let sep = if i + 1 == self.nodes.len() { "" } else { "," };
+            let deps: Vec<String> =
+                n.deps.iter().map(|d| d.to_string()).collect();
+            match n.lane {
+                Some(lane) => s.push_str(&format!(
+                    "    {{\"op\": {}, \"lane\": {}, \"deps\": [{}]}}{sep}\n",
+                    n.op,
+                    lane,
+                    deps.join(", ")
+                )),
+                None => s.push_str(&format!(
+                    "    {{\"op\": {}, \"deps\": [{}]}}{sep}\n",
+                    n.op,
+                    deps.join(", ")
+                )),
+            }
+        }
         s.push_str("  ]\n}\n");
         s
     }
@@ -536,6 +718,13 @@ impl Plan {
         };
 
         let version = u64_field("version")? as u32;
+        if version == 1 {
+            // v1 plans recorded ordered groups only — no dependency edges
+            // or lane assignments for the event-driven executor to
+            // schedule from. A dedicated error (rather than a generic
+            // parse failure) tells the operator exactly what to do.
+            return Err(PlanError::UnsupportedVersion { found: version });
+        }
         if version != PLAN_FORMAT_VERSION {
             return Err(PlanError::Parse(format!(
                 "unsupported plan version {version} \
@@ -584,9 +773,30 @@ impl Plan {
                 ));
             }
         }
+        let mut nodes = Vec::new();
+        for nv in field("nodes")?.as_arr().ok_or_else(|| bad("nodes"))? {
+            let op = nv
+                .get("op")
+                .and_then(JsonValue::as_usize)
+                .ok_or_else(|| bad("nodes"))?;
+            let lane = match nv.get("lane") {
+                None => None,
+                Some(v) => Some(v.as_usize().ok_or_else(|| bad("nodes"))?),
+            };
+            let mut deps = Vec::new();
+            for d in nv
+                .get("deps")
+                .and_then(JsonValue::as_arr)
+                .ok_or_else(|| bad("nodes"))?
+            {
+                deps.push(d.as_usize().ok_or_else(|| bad("nodes"))?);
+            }
+            nodes.push(PlanNode { op, lane, deps });
+        }
         Ok(Plan {
             meta,
             steps,
+            nodes,
             predicted_makespan_us,
         })
     }
@@ -716,5 +926,16 @@ mod tests {
             Plan::from_json("{\"version\": 99}"),
             Err(PlanError::Parse(_))
         ));
+    }
+
+    #[test]
+    fn v1_plans_fail_with_a_versioned_schema_error() {
+        // Version 1 predates the node list; the error must say so
+        // explicitly rather than surfacing a generic parse failure.
+        let err = Plan::from_json("{\"version\": 1}").unwrap_err();
+        assert_eq!(err, PlanError::UnsupportedVersion { found: 1 });
+        let msg = err.to_string();
+        assert!(msg.contains("version 1"), "{msg}");
+        assert!(msg.contains("parconv plan"), "{msg}");
     }
 }

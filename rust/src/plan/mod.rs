@@ -12,12 +12,15 @@
 //!   choices, ordered co-execution groups with per-SM quota plans,
 //!   workspace reservations, and provenance (device, batch, config
 //!   digest).
-//! - [`Plan::execute`] replays the cheap launch sequence against the
-//!   simulator — zero selector calls, bit-identical results to inline
-//!   scheduling.
+//! - [`Plan::execute`] replays the plan — zero selector calls. The
+//!   default backend is the discrete-event executor (`crate::sim`): ops
+//!   launch as their recorded dependency edges resolve on free stream
+//!   lanes. `Plan::execute_with` selects the legacy barrier-synchronous
+//!   group replay (`sim::ExecutorKind::Barrier`), kept as the regression
+//!   oracle.
 //! - [`Session`] owns a device + config + keyed plan cache and exposes
-//!   `run` (plan-on-miss then replay) and `plan`; `Coordinator` is now a
-//!   thin compatibility shim over it.
+//!   `run` (plan-on-miss then replay), `plan`, and `set_executor`;
+//!   `Coordinator` is now a thin compatibility shim over it.
 //!
 //! ```no_run
 //! use parconv::coordinator::ScheduleConfig;
@@ -44,7 +47,7 @@ mod session;
 
 pub use artifact::{
     config_digest, dag_digest, spec_digest, GroupPlan, OpPlan, Plan,
-    PlanError, PlanMeta, PlanStep, PLAN_FORMAT_VERSION,
+    PlanError, PlanMeta, PlanNode, PlanStep, PLAN_FORMAT_VERSION,
 };
 pub use planner::Planner;
 pub use session::{Session, SessionStats};

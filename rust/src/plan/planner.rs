@@ -28,7 +28,7 @@ use crate::graph::{Dag, OpKind};
 
 use super::artifact::{
     config_digest, dag_digest, spec_digest, GroupPlan, OpPlan, Plan,
-    PlanMeta, PlanStep, PLAN_FORMAT_VERSION,
+    PlanMeta, PlanNode, PlanStep, PLAN_FORMAT_VERSION,
 };
 
 /// Builds [`Plan`]s: owns the device spec, the scheduler configuration,
@@ -74,6 +74,10 @@ impl Planner {
             Vec::new()
         };
         let mut steps: Vec<PlanStep> = Vec::with_capacity(dag.len());
+        // The v2 scheduling graph, built alongside the steps: node order
+        // is the dispatch-priority order, each node carrying its DAG
+        // dependency edges and planned stream lane.
+        let mut nodes: Vec<PlanNode> = Vec::with_capacity(dag.len());
         let mut predicted = 0.0f64;
         let mut planned_ws_fallbacks = 0u64;
         let mut done = vec![false; dag.len()];
@@ -89,6 +93,11 @@ impl Planner {
                         // bandwidth-bound ops run back-to-back (negligible
                         // concurrency value; cuDNN launches them serially)
                         steps.push(PlanStep::Host { op: id });
+                        nodes.push(PlanNode {
+                            op: id,
+                            lane: None,
+                            deps: dag.preds(id).to_vec(),
+                        });
                         predicted += non_conv_time_us(kind, &self.spec);
                     }
                 }
@@ -112,6 +121,13 @@ impl Planner {
                     &mut planned_ws_fallbacks,
                 );
                 predicted += g.est_us;
+                for (lane, m) in g.members.iter().enumerate() {
+                    nodes.push(PlanNode {
+                        op: m.op,
+                        lane: Some(lane),
+                        deps: dag.preds(m.op).to_vec(),
+                    });
+                }
                 steps.push(PlanStep::Group(g));
             }
 
@@ -158,6 +174,7 @@ impl Planner {
                     .wrapping_sub(selector_before),
             },
             steps,
+            nodes,
             predicted_makespan_us: predicted,
         }
     }
@@ -435,6 +452,33 @@ mod tests {
         assert_eq!(a.digest(), b.digest());
         assert_eq!(a.steps, b.steps);
         assert_eq!(a.predicted_makespan_us, b.predicted_makespan_us);
+    }
+
+    #[test]
+    fn nodes_mirror_steps_and_record_dag_edges() {
+        let dag = Network::GoogleNet.build(8);
+        let plan = planner(4).plan(&dag, "");
+        assert_eq!(plan.nodes.len(), dag.len());
+        let mut flat: Vec<(usize, Option<usize>)> = Vec::new();
+        for step in &plan.steps {
+            match step {
+                PlanStep::Host { op } => flat.push((*op, None)),
+                PlanStep::Group(g) => {
+                    for (i, m) in g.members.iter().enumerate() {
+                        flat.push((m.op, Some(i)));
+                    }
+                }
+            }
+        }
+        for (node, (op, lane)) in plan.nodes.iter().zip(flat) {
+            assert_eq!(node.op, op, "node order mirrors step order");
+            assert_eq!(node.lane, lane, "op {op} lane");
+            let mut deps = node.deps.clone();
+            deps.sort_unstable();
+            let mut preds = dag.preds(node.op).to_vec();
+            preds.sort_unstable();
+            assert_eq!(deps, preds, "op {op} dependency edges");
+        }
     }
 
     #[test]

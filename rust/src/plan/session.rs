@@ -7,6 +7,12 @@
 //! the whole point for serving repeated traffic: profile-guided selection
 //! is an offline activity (paper §2), so the request path should only pay
 //! for the simulator.
+//!
+//! Replay is event-driven by default (`sim::ExecutorKind::Event`): ops
+//! launch as their dependency edges resolve, with workspace and SM quotas
+//! released at op-completion events. [`Session::set_executor`] switches to
+//! the legacy barrier-synchronous group replay, kept as the regression
+//! oracle.
 
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
@@ -16,6 +22,7 @@ use crate::coordinator::{ScheduleConfig, ScheduleResult};
 use crate::gpusim::DeviceSpec;
 use crate::graph::Dag;
 use crate::memory::DeviceMemory;
+use crate::sim::ExecutorKind;
 
 use super::artifact::{dag_digest, Plan, PlanError};
 use super::planner::Planner;
@@ -52,6 +59,9 @@ pub struct Session {
     /// Optional (rate, seed) workspace-allocation failure injection,
     /// applied per `run` (each run re-seeds, like the legacy coordinator).
     failure_injection: Option<(f64, u64)>,
+    /// Which backend replays plans (event-driven by default; barrier is
+    /// the legacy regression oracle).
+    executor: ExecutorKind,
 }
 
 impl Session {
@@ -62,7 +72,21 @@ impl Session {
             plans_built: Cell::new(0),
             cache_hits: Cell::new(0),
             failure_injection: None,
+            executor: ExecutorKind::default(),
         }
+    }
+
+    /// Select the execution backend for subsequent [`Session::run`] calls
+    /// (`ExecutorKind::Event` is the default; `ExecutorKind::Barrier` is
+    /// the legacy group replay). Plans are executor-agnostic, so switching
+    /// never invalidates the cache.
+    pub fn set_executor(&mut self, executor: ExecutorKind) {
+        self.executor = executor;
+    }
+
+    /// The execution backend this session replays plans with.
+    pub fn executor(&self) -> ExecutorKind {
+        self.executor
     }
 
     /// Session whose workspace allocator spuriously refuses a `rate`
@@ -164,7 +188,7 @@ impl Session {
             }
             None => DeviceMemory::new(limit),
         };
-        plan.execute_with_memory(dag, self.planner.spec(), mem)
+        plan.execute_with_memory(dag, self.planner.spec(), mem, self.executor)
     }
 }
 
@@ -254,6 +278,31 @@ mod tests {
         let r2 = serving2.run(&dag);
         assert_eq!(r2.ops.len(), dag.len());
         assert_eq!(serving2.stats().plans_built, 1);
+    }
+
+    #[test]
+    fn executor_switch_replays_the_same_cached_plan() {
+        use crate::sim::ExecutorKind;
+        let mut s = session();
+        assert_eq!(s.executor(), ExecutorKind::Event, "event is the default");
+        let dag = Network::GoogleNet.build(8);
+        let event = s.run(&dag);
+        s.set_executor(ExecutorKind::Barrier);
+        assert_eq!(s.executor(), ExecutorKind::Barrier);
+        let barrier = s.run(&dag);
+        // switching executors is an execution-time decision: one plan,
+        // two replays, no re-planning
+        let stats = s.stats();
+        assert_eq!(stats.plans_built, 1);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(event.ops.len(), barrier.ops.len());
+        // dissolving the group barrier can only help
+        assert!(
+            event.makespan_us <= barrier.makespan_us * (1.0 + 1e-6),
+            "event {} > barrier {}",
+            event.makespan_us,
+            barrier.makespan_us
+        );
     }
 
     #[test]

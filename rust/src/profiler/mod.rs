@@ -5,4 +5,4 @@ mod report;
 mod trace;
 
 pub use report::{table1_report, table1_row, Table1Row};
-pub use trace::chrome_trace_json;
+pub use trace::{chrome_trace_json, schedule_chrome_trace_json};

@@ -1,5 +1,14 @@
 //! Chrome-trace (about://tracing / Perfetto) export of simulated timelines.
+//!
+//! Two exports: [`chrome_trace_json`] for a raw engine timeline (one
+//! track per CUDA-style stream of kernel records) and
+//! [`schedule_chrome_trace_json`] for a whole-DAG schedule — the event
+//! executor's op-level event log — with one named track per stream lane
+//! plus a `host` track, so inter-op overlap (and the lack of it under the
+//! barrier replay) is visually inspectable in `chrome://tracing` /
+//! Perfetto.
 
+use crate::coordinator::ScheduleResult;
 use crate::gpusim::SimResult;
 
 fn json_escape(s: &str) -> String {
@@ -40,6 +49,63 @@ pub fn chrome_trace_json(result: &SimResult) -> String {
     out
 }
 
+/// Serialize a whole-DAG schedule (the op-level event log) as a Chrome
+/// trace-event JSON document: one track ("tid") per stream lane, ops on
+/// the serial host lane on track 0, convolutions on track `lane + 1`.
+/// Thread-name metadata events label the tracks, and each op's algorithm
+/// and workspace ride along in `args`.
+pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    // track-name metadata: host + every lane observed
+    let mut max_lane: Option<usize> = None;
+    for o in &result.ops {
+        if let Some(l) = o.stream {
+            max_lane = Some(max_lane.map_or(l, |m: usize| m.max(l)));
+        }
+    }
+    out.push_str(
+        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+         \"args\":{\"name\":\"host\"}}",
+    );
+    if let Some(m) = max_lane {
+        for lane in 0..=m {
+            out.push_str(&format!(
+                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\
+                 \"tid\":{},\"args\":{{\"name\":\"stream {lane}\"}}}}",
+                lane + 1
+            ));
+        }
+    }
+    for o in &result.ops {
+        // the host-track metadata event always precedes, so every op
+        // record is comma-separated
+        out.push(',');
+        let tid = o.stream.map_or(0, |l| l + 1);
+        let algo = o
+            .algo
+            .map_or(String::from("-"), |a| a.name().to_string());
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\
+             \"dur\":{:.3},\"pid\":0,\"tid\":{},\"args\":{{\"op\":{},\
+             \"algo\":\"{}\",\"workspace\":{}}}}}",
+            json_escape(&o.name),
+            o.kind,
+            o.start_us,
+            o.end_us - o.start_us,
+            tid,
+            o.op_id,
+            json_escape(&algo),
+            o.workspace_bytes
+        ));
+    }
+    out.push_str(&format!(
+        "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"makespan_us\":{:.3},\
+         \"conv_overlap_us\":{:.3},\"peak_workspace\":{}}}}}",
+        result.makespan_us, result.conv_overlap_us, result.peak_workspace
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,5 +138,26 @@ mod tests {
     fn escapes_quotes() {
         assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
         assert_eq!(json_escape("x\ny"), "x\\u000ay");
+    }
+
+    #[test]
+    fn schedule_trace_has_per_stream_tracks() {
+        use crate::coordinator::ScheduleConfig;
+        use crate::graph::Network;
+        use crate::plan::Session;
+        let session =
+            Session::new(DeviceSpec::k40(), ScheduleConfig::default());
+        let r = session.run(&Network::GoogleNet.build(8));
+        let json = schedule_chrome_trace_json(&r);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"thread_name\""), "track metadata");
+        assert!(json.contains("\"name\":\"host\""), "host track");
+        assert!(json.contains("\"name\":\"stream 0\""), "stream track");
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("conv_overlap_us"));
+        assert!(json.contains("peak_workspace"));
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
     }
 }

@@ -1,0 +1,104 @@
+//! Virtual-time event queue for op-level events.
+//!
+//! The engine keeps its own heap for *kernel*-level events (wave
+//! completions, launch-overhead pokes); this queue carries the executor's
+//! *op*-level events — currently host-op completions — so the main loop
+//! can merge both sources in global time order. Ties break by insertion
+//! sequence, which keeps execution deterministic regardless of float
+//! coincidences.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// An op-level event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum SimEvent {
+    /// A bandwidth-bound non-convolution op finished on the host lane.
+    /// `start` is carried along so the timeline record needs no side
+    /// lookup.
+    HostDone { op: usize, start: f64 },
+}
+
+#[derive(Debug)]
+struct Entry {
+    time: f64,
+    seq: u64,
+    payload: SimEvent,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of [`SimEvent`]s keyed by virtual time, FIFO on ties.
+#[derive(Debug, Default)]
+pub(crate) struct EventQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, payload: SimEvent) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { time, seq, payload }));
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|r| r.0.time)
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, SimEvent)> {
+        self.heap.pop().map(|Reverse(e)| (e.time, e.payload))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.push(2.0, SimEvent::HostDone { op: 2, start: 1.0 });
+        q.push(1.0, SimEvent::HostDone { op: 1, start: 0.0 });
+        q.push(1.0, SimEvent::HostDone { op: 3, start: 0.5 });
+        assert_eq!(q.peek_time(), Some(1.0));
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!(t1, 1.0);
+        assert_eq!(e1, SimEvent::HostDone { op: 1, start: 0.0 });
+        let (t2, e2) = q.pop().unwrap();
+        assert_eq!(t2, 1.0);
+        assert_eq!(e2, SimEvent::HostDone { op: 3, start: 0.5 });
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t3, 2.0);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+}

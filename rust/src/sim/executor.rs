@@ -1,0 +1,508 @@
+//! The event-driven plan executor.
+//!
+//! Replays a `plan::Plan` against one continuous [`Engine`] instead of the
+//! barrier path's one-fresh-engine-per-group: ops launch the moment their
+//! recorded dependency edges resolve on a free stream lane, and an
+//! op-completion event immediately frees the op's SM quota and workspace
+//! and admits the next ready op into the running mix (the engine re-plans
+//! per-SM quotas for the new mix through the existing `plan_intra_sm`
+//! dispatch path).
+//!
+//! Mid-flight joins are profit-gated exactly like offline group admission:
+//! a ready convolution joins a non-empty mix only when the fluid estimate
+//! over the mix's *remaining* work says co-running beats serializing by
+//! the planner's own margin. A join evaluated at full remaining work is
+//! therefore the planner's group-admission decision verbatim — planned
+//! groups re-form on their own, and extra joins happen only where the
+//! barrier was provably leaving time on the table. Non-profile-guided
+//! policies admit freely, mirroring their unconditional k-wide chunking
+//! in the barrier path.
+//!
+//! Workspace lifetime follows execution, not group boundaries: allocation
+//! at launch, release at the completion event, so `DeviceMemory::peak()`
+//! reports the true concurrent high-watermark. A refused allocation
+//! degrades gracefully — the op waits for the mix to drain (solo
+//! execution) and, if still refused standing alone (failure injection),
+//! falls back to the workspace-free GEMM kernel; an op is never aborted.
+
+use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
+use crate::coordinator::{
+    non_conv_time_us, OpExec, ScheduleResult, SelectionPolicy,
+};
+use crate::gpusim::{
+    isolated_time_us, overlap_us_of_spans, DeviceSpec, Engine, KernelId,
+    PartitionMode,
+};
+use crate::graph::{Dag, OpKind};
+use crate::memory::DeviceMemory;
+use crate::plan::{Plan, PlanError, PlanStep};
+
+use super::event::{EventQueue, SimEvent};
+use super::fluid::fluid_makespan;
+use super::streams::Lanes;
+
+/// Join margin: a ready op enters a running mix only when the fluid
+/// estimate beats serializing it after the mix by at least this factor.
+/// Deliberately identical to the planner's `GROUP_GAIN_MARGIN`, so a join
+/// evaluated at full remaining work reproduces offline group admission.
+const JOIN_GAIN_MARGIN: f64 = 0.98;
+
+struct RunInfo {
+    op: usize,
+    lane: usize,
+    alloc: Option<u64>,
+    desc: KernelDesc,
+}
+
+struct EventRun<'a> {
+    dag: &'a Dag,
+    spec: &'a DeviceSpec,
+    policy: SelectionPolicy,
+    engine: Engine,
+    lanes: Lanes,
+    events: EventQueue,
+    mem: DeviceMemory,
+    /// Recorded algorithm decision per convolution op (None = host op).
+    decision: Vec<Option<KernelDesc>>,
+    /// Priority: position in the plan's node order (the planner's
+    /// critical-path dispatch order).
+    rank: Vec<usize>,
+    /// Planned stream lane per op (advisory; a busy hint falls back to the
+    /// lowest free lane).
+    lane_hint: Vec<Option<usize>>,
+    indeg: Vec<usize>,
+    /// Ready queues, kept sorted by ascending rank.
+    conv_ready: Vec<usize>,
+    host_ready: Vec<usize>,
+    /// Bookkeeping per engine kernel id (dense: ids are assigned in
+    /// injection order).
+    running: Vec<Option<RunInfo>>,
+    ops_out: Vec<OpExec>,
+    host_busy: bool,
+    clock: f64,
+    rounds: u64,
+    ws_fallbacks: u64,
+}
+
+impl<'a> EventRun<'a> {
+    /// Merge engine (kernel) and op-level events in global time order
+    /// until both sources run dry.
+    fn drive(&mut self) {
+        loop {
+            let te = self.engine.next_event_time();
+            let th = self.events.peek_time();
+            let advance_engine = match (te, th) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(engine_t), Some(host_t)) => engine_t <= host_t,
+            };
+            if advance_engine {
+                let bound = th.unwrap_or(f64::INFINITY);
+                let done = self.engine.step_until(bound);
+                if done.is_empty() {
+                    if th.is_none() {
+                        // engine drained without a completion and no host
+                        // event pending: re-evaluate (likely finished)
+                        continue;
+                    }
+                    // no kernel completion at or before the host event:
+                    // the host event is globally next
+                    self.pop_host();
+                } else {
+                    let t = self.engine.now();
+                    self.clock = self.clock.max(t);
+                    for kid in done {
+                        self.complete_conv(kid, t);
+                    }
+                }
+            } else {
+                self.pop_host();
+            }
+            self.admit_ready();
+        }
+    }
+
+    fn pop_host(&mut self) {
+        if let Some((t, SimEvent::HostDone { op, start })) = self.events.pop()
+        {
+            self.clock = self.clock.max(t);
+            self.host_busy = false;
+            let dag = self.dag;
+            self.ops_out.push(OpExec {
+                op_id: op,
+                name: dag.ops[op].name.clone(),
+                kind: dag.ops[op].kind.kind_name(),
+                algo: None,
+                start_us: start,
+                end_us: t,
+                workspace_bytes: 0,
+                stream: None,
+            });
+            self.finish_op(op);
+        }
+    }
+
+    fn complete_conv(&mut self, kid: KernelId, t: f64) {
+        let info = self.running[kid].take().expect("kernel bookkeeping");
+        let released = self.lanes.release(kid);
+        debug_assert_eq!(released, Some((info.lane, info.op)));
+        // workspace freed at the completion event — not at a batch
+        // boundary — which is what makes peak() a true concurrent
+        // high-watermark
+        if let Some(a) = info.alloc {
+            self.mem.free(a).expect("workspace free");
+        }
+        let dag = self.dag;
+        let start = self.engine.kernel_started(kid).unwrap_or(t);
+        self.ops_out.push(OpExec {
+            op_id: info.op,
+            name: dag.ops[info.op].name.clone(),
+            kind: "conv",
+            algo: Some(info.desc.algo),
+            start_us: start,
+            end_us: t,
+            workspace_bytes: info.desc.workspace_bytes,
+            stream: Some(info.lane),
+        });
+        self.finish_op(info.op);
+    }
+
+    /// Resolve dependency edges out of a completed op; newly-ready ops
+    /// enter the rank-sorted ready queues.
+    fn finish_op(&mut self, op: usize) {
+        let dag = self.dag;
+        for &s in dag.succs(op) {
+            self.indeg[s] -= 1;
+            if self.indeg[s] == 0 {
+                self.enqueue_ready(s);
+            }
+        }
+    }
+
+    fn enqueue_ready(&mut self, op: usize) {
+        let rank = self.rank[op];
+        let is_conv = self.decision[op].is_some();
+        let pos = {
+            let rank_of = &self.rank;
+            let list: &Vec<usize> = if is_conv {
+                &self.conv_ready
+            } else {
+                &self.host_ready
+            };
+            match list.binary_search_by_key(&rank, |&o| rank_of[o]) {
+                Ok(p) | Err(p) => p,
+            }
+        };
+        if is_conv {
+            self.conv_ready.insert(pos, op);
+        } else {
+            self.host_ready.insert(pos, op);
+        }
+    }
+
+    /// Would admitting `cand` into the current mix beat serializing it
+    /// after the mix? Same fluid model and margin as offline group
+    /// admission, evaluated over the mix's *remaining* work.
+    fn join_is_profitable(&self, cand: &KernelDesc) -> bool {
+        let mut descs: Vec<&KernelDesc> = Vec::new();
+        let mut lefts: Vec<f64> = Vec::new();
+        for (_, _, kid) in self.lanes.running() {
+            let info = self.running[kid].as_ref().expect("running kernel");
+            let frac = self.engine.remaining_fraction(kid);
+            if frac <= 0.0 {
+                continue;
+            }
+            descs.push(&info.desc);
+            lefts.push(frac * isolated_time_us(&info.desc, self.spec));
+        }
+        if descs.is_empty() {
+            return true;
+        }
+        let est_alone = fluid_makespan(&descs, &lefts, self.spec);
+        let iso_c = isolated_time_us(cand, self.spec);
+        descs.push(cand);
+        lefts.push(iso_c);
+        let est_join = fluid_makespan(&descs, &lefts, self.spec);
+        est_join < (est_alone + iso_c) * JOIN_GAIN_MARGIN
+    }
+
+    /// Launch everything that can start right now: the next host op onto
+    /// the serial host lane, and ready convolutions (in rank order) onto
+    /// free stream lanes, subject to the join guard and workspace
+    /// admission.
+    fn admit_ready(&mut self) {
+        let t = self.clock;
+        if !self.host_busy && !self.host_ready.is_empty() {
+            let op = self.host_ready.remove(0);
+            let dag = self.dag;
+            let dur = non_conv_time_us(&dag.ops[op].kind, self.spec);
+            self.events.push(t + dur, SimEvent::HostDone { op, start: t });
+            self.host_busy = true;
+        }
+        let mut idx = 0;
+        while idx < self.conv_ready.len() {
+            if self.lanes.free_lane(None).is_none() {
+                break;
+            }
+            let op = self.conv_ready[idx];
+            let base =
+                self.decision[op].as_ref().expect("conv decision").clone();
+            let mix_busy = self.lanes.busy() > 0;
+            if mix_busy
+                && self.policy == SelectionPolicy::ProfileGuided
+                && !self.join_is_profitable(&base)
+            {
+                idx += 1;
+                continue;
+            }
+            let (desc, alloc) = match self.mem.alloc(base.workspace_bytes) {
+                Ok(id) => (base, Some(id)),
+                Err(_) if mix_busy => {
+                    // serialize-on-OOM: wait for the mix to drain, retry
+                    // standing alone at the next completion event
+                    idx += 1;
+                    continue;
+                }
+                Err(_) => {
+                    // refused even solo (failure injection): degrade to
+                    // the workspace-free fallback — never abort the batch
+                    let fb = kernel_desc(
+                        Algorithm::Gemm,
+                        &base.params,
+                        self.spec,
+                    )
+                    .expect("GEMM supports every convolution");
+                    debug_assert_eq!(fb.workspace_bytes, 0);
+                    if fb.algo != base.algo {
+                        self.ws_fallbacks += 1;
+                    }
+                    (fb, None)
+                }
+            };
+            let lane = self
+                .lanes
+                .free_lane(self.lane_hint[op])
+                .expect("free lane checked above");
+            if !mix_busy {
+                self.rounds += 1;
+            }
+            self.conv_ready.remove(idx);
+            self.engine.advance_to(t);
+            let kid = self.engine.inject(desc.clone(), lane);
+            debug_assert_eq!(kid, self.running.len());
+            self.lanes.occupy(lane, op, kid);
+            self.running.push(Some(RunInfo {
+                op,
+                lane,
+                alloc,
+                desc,
+            }));
+        }
+    }
+}
+
+/// Wall time with two or more convolutions in flight: the shared
+/// interval-depth sweep ([`overlap_us_of_spans`]) over conv op records —
+/// the same function the barrier path's `SimResult::overlap_us` uses, so
+/// the two executors' `conv_overlap_us` metric cannot drift.
+fn conv_overlap(ops: &[OpExec]) -> f64 {
+    let spans: Vec<(f64, f64)> = ops
+        .iter()
+        .filter(|o| o.kind == "conv")
+        .map(|o| (o.start_us, o.end_us))
+        .collect();
+    overlap_us_of_spans(&spans)
+}
+
+/// Execute a plan event-driven. Provenance (DAG/device digests) and the
+/// v2 node list have already been checked by `Plan::execute_with_memory`
+/// (`Plan::validate_nodes` runs for both executors); this builds the
+/// scheduling state off the nodes and drives the discrete-event loop.
+pub(crate) fn execute_event(
+    plan: &Plan,
+    dag: &Dag,
+    spec: &DeviceSpec,
+    mem: DeviceMemory,
+) -> Result<ScheduleResult, PlanError> {
+    let n = dag.len();
+    // Rebuild each convolution's kernel descriptor from the recorded
+    // (op, algorithm) decision — the same pure function the planner used.
+    let mut decision: Vec<Option<KernelDesc>> = vec![None; n];
+    for step in &plan.steps {
+        if let PlanStep::Group(g) = step {
+            for m in &g.members {
+                let OpKind::Conv(p) = &dag.ops[m.op].kind else {
+                    return Err(PlanError::NotAConv { op: m.op });
+                };
+                let d = kernel_desc(m.algo, p, spec).ok_or(
+                    PlanError::Unsupported {
+                        algo: m.algo,
+                        op: m.op,
+                    },
+                )?;
+                decision[m.op] = Some(d);
+            }
+        }
+    }
+    let mut rank = vec![0usize; n];
+    let mut lane_hint: Vec<Option<usize>> = vec![None; n];
+    for (r, node) in plan.nodes.iter().enumerate() {
+        rank[node.op] = r;
+        lane_hint[node.op] = node.lane;
+    }
+    // Serial partitioning means one kernel at a time regardless of the
+    // stream budget — one lane keeps workspace admission equivalent to
+    // the barrier path's per-group allocation.
+    let width = if plan.meta.partition == PartitionMode::Serial {
+        1
+    } else {
+        plan.meta.streams.max(1)
+    };
+    let mut run = EventRun {
+        dag,
+        spec,
+        policy: plan.meta.policy,
+        engine: Engine::new(spec.clone(), plan.meta.partition),
+        lanes: Lanes::new(width),
+        events: EventQueue::new(),
+        mem,
+        decision,
+        rank,
+        lane_hint,
+        indeg: (0..n).map(|i| dag.preds(i).len()).collect(),
+        conv_ready: Vec::new(),
+        host_ready: Vec::new(),
+        running: Vec::new(),
+        ops_out: Vec::with_capacity(n),
+        host_busy: false,
+        clock: 0.0,
+        rounds: 0,
+        ws_fallbacks: plan.meta.planned_ws_fallbacks,
+    };
+    for i in 0..n {
+        if run.indeg[i] == 0 {
+            run.enqueue_ready(i);
+        }
+    }
+    run.admit_ready();
+    run.drive();
+    if run.ops_out.len() != n {
+        return Err(PlanError::IncompleteCoverage {
+            executed: run.ops_out.len(),
+            ops: n,
+        });
+    }
+    let makespan_us = run.clock;
+    let peak_workspace = run.mem.peak();
+    let ws_fallbacks = run.ws_fallbacks;
+    let rounds = run.rounds;
+    let mut ops = run.ops_out;
+    ops.sort_by(|a, b| {
+        a.start_us
+            .partial_cmp(&b.start_us)
+            .unwrap()
+            .then(a.op_id.cmp(&b.op_id))
+    });
+    let conv_overlap_us = conv_overlap(&ops);
+    Ok(ScheduleResult {
+        makespan_us,
+        ops,
+        peak_workspace,
+        ws_fallbacks,
+        rounds,
+        conv_overlap_us,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PriorityPolicy, ScheduleConfig};
+    use crate::graph::Network;
+    use crate::plan::Planner;
+    use crate::sim::ExecutorKind;
+
+    fn config(streams: usize) -> ScheduleConfig {
+        ScheduleConfig {
+            policy: SelectionPolicy::ProfileGuided,
+            partition: PartitionMode::IntraSm,
+            streams,
+            workspace_limit: 4 * 1024 * 1024 * 1024,
+            priority: PriorityPolicy::CriticalPath,
+        }
+    }
+
+    #[test]
+    fn event_execution_covers_dag_and_respects_deps() {
+        let dag = Network::GoogleNet.build(8);
+        let spec = DeviceSpec::k40();
+        let plan = Planner::new(spec.clone(), config(2)).plan(&dag, "");
+        let r = execute_event(
+            &plan,
+            &dag,
+            &spec,
+            DeviceMemory::new(plan.meta.workspace_limit),
+        )
+        .unwrap();
+        assert_eq!(r.ops.len(), dag.len());
+        let mut start = vec![0.0f64; dag.len()];
+        let mut end = vec![0.0f64; dag.len()];
+        for o in &r.ops {
+            start[o.op_id] = o.start_us;
+            end[o.op_id] = o.end_us;
+            assert!(o.end_us <= r.makespan_us + 1e-6);
+        }
+        for i in 0..dag.len() {
+            for &p in dag.preds(i) {
+                assert!(
+                    end[p] <= start[i] + 1e-6,
+                    "op {i} started before pred {p} finished"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn event_beats_barrier_on_googlenet() {
+        let dag = Network::GoogleNet.build(8);
+        let spec = DeviceSpec::k40();
+        let plan = Planner::new(spec.clone(), config(2)).plan(&dag, "");
+        let event = plan
+            .execute_with(&dag, &spec, ExecutorKind::Event)
+            .unwrap();
+        let barrier = plan
+            .execute_with(&dag, &spec, ExecutorKind::Barrier)
+            .unwrap();
+        assert!(
+            event.makespan_us <= barrier.makespan_us * (1.0 + 1e-6),
+            "event {} > barrier {}",
+            event.makespan_us,
+            barrier.makespan_us
+        );
+    }
+
+    #[test]
+    fn event_execution_is_deterministic() {
+        let dag = Network::ResNet50.build(8);
+        let spec = DeviceSpec::k40();
+        let plan = Planner::new(spec.clone(), config(2)).plan(&dag, "");
+        let a = execute_event(
+            &plan,
+            &dag,
+            &spec,
+            DeviceMemory::new(plan.meta.workspace_limit),
+        )
+        .unwrap();
+        let b = execute_event(
+            &plan,
+            &dag,
+            &spec,
+            DeviceMemory::new(plan.meta.workspace_limit),
+        )
+        .unwrap();
+        assert_eq!(a.makespan_us, b.makespan_us);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.peak_workspace, b.peak_workspace);
+    }
+}

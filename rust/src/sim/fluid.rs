@@ -1,0 +1,167 @@
+//! Multi-phase fluid makespan over *remaining* work.
+//!
+//! The offline planner gates group admission on
+//! `coordinator::estimate_group_makespan_us`, which prices a group of
+//! kernels from a standing start. Mid-flight joins need the same estimate
+//! but with the running members' work *partially consumed* — this variant
+//! takes the remaining per-member work explicitly. With
+//! `left[i] == isolated_time_us(descs[i])` it reduces to the planner's
+//! function exactly (pinned by a test below), so a join admitted at
+//! op-ready time under full work makes precisely the decision the planner
+//! would have made when it formed the group offline.
+
+use crate::convlib::{KernelDesc, LaunchConfig};
+use crate::gpusim::partition::plan_intra_sm;
+use crate::gpusim::timing::full_rate_bw_demand;
+use crate::gpusim::{natural_residency, DeviceSpec};
+
+/// Fluid-model makespan of co-running `descs` when member `i` still has
+/// `left_us[i]` microseconds of isolated-time work outstanding. Each phase
+/// runs every unfinished member at the rate its per-SM quota allows
+/// (issue capacity shared when oversubscribed, DRAM contention applied to
+/// phases of three or more — mirroring the planner's estimator); when a
+/// member finishes, quotas are re-planned for the survivors.
+pub(crate) fn fluid_makespan(
+    descs: &[&KernelDesc],
+    left_us: &[f64],
+    dev: &DeviceSpec,
+) -> f64 {
+    assert_eq!(descs.len(), left_us.len());
+    match descs.len() {
+        0 => return 0.0,
+        1 => return left_us[0].max(0.0),
+        _ => {}
+    }
+    let mut left: Vec<f64> = left_us.iter().map(|l| l.max(0.0)).collect();
+    let mut alive: Vec<usize> =
+        (0..descs.len()).filter(|&i| left[i] > 1e-9).collect();
+    let mut t = 0.0f64;
+    while !alive.is_empty() {
+        if alive.len() == 1 {
+            t += left[alive[0]];
+            break;
+        }
+        let launches: Vec<&LaunchConfig> =
+            alive.iter().map(|&i| &descs[i].launch).collect();
+        let utils: Vec<f64> =
+            alive.iter().map(|&i| descs[i].alu_util).collect();
+        let plan = plan_intra_sm(&launches, &utils, dev);
+        let fracs: Vec<f64> = alive
+            .iter()
+            .zip(&plan)
+            .map(|(&i, &q)| {
+                let rn =
+                    natural_residency(&descs[i].launch, dev).max(1) as f64;
+                q as f64 / rn
+            })
+            .collect();
+        let demand: f64 =
+            utils.iter().zip(&fracs).map(|(u, f)| u * f).sum();
+        let phi = if demand > 1.0 { 1.0 / demand } else { 1.0 };
+        // DRAM contention only for phases of three or more live members:
+        // two-member phases keep the legacy pair form, exactly like the
+        // planner's estimator.
+        let mu = if alive.len() >= 3 {
+            let bw_limit = dev.effective_bw() / 1e6; // bytes per us
+            let bw_demand: f64 = alive
+                .iter()
+                .zip(&fracs)
+                .map(|(&i, f)| full_rate_bw_demand(descs[i], dev) * phi * f)
+                .sum();
+            if bw_demand > bw_limit {
+                bw_limit / bw_demand
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+        let rates: Vec<f64> = fracs.iter().map(|f| phi * mu * f).collect();
+        if rates.iter().all(|&v| v <= 0.0) {
+            // no member can hold a block: the remainder serializes
+            t += alive.iter().map(|&i| left[i]).sum::<f64>();
+            break;
+        }
+        // advance to the first completion among progressing members
+        let mut dt = f64::INFINITY;
+        for (pos, &i) in alive.iter().enumerate() {
+            if rates[pos] > 0.0 {
+                dt = dt.min(left[i] / rates[pos]);
+            }
+        }
+        t += dt;
+        let mut next = Vec::with_capacity(alive.len());
+        for (pos, &i) in alive.iter().enumerate() {
+            left[i] -= dt * rates[pos];
+            if left[i] > 1e-9 {
+                next.push(i);
+            }
+        }
+        alive = next;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convlib::{kernel_desc, Algorithm, ConvParams};
+    use crate::coordinator::estimate_group_makespan_us;
+    use crate::gpusim::isolated_time_us;
+
+    fn k40() -> DeviceSpec {
+        DeviceSpec::k40()
+    }
+
+    #[test]
+    fn full_work_reduces_to_planner_estimate() {
+        let dev = k40();
+        let p3 = ConvParams::incep3a_3x3(32);
+        let p5 = ConvParams::incep3a_5x5(32);
+        let descs = [
+            kernel_desc(Algorithm::ImplicitPrecompGemm, &p3, &dev).unwrap(),
+            kernel_desc(Algorithm::FftTiling, &p3, &dev).unwrap(),
+            kernel_desc(Algorithm::Gemm, &p5, &dev).unwrap(),
+        ];
+        for width in 2..=3 {
+            let refs: Vec<&KernelDesc> =
+                descs.iter().take(width).collect();
+            let lefts: Vec<f64> =
+                refs.iter().map(|d| isolated_time_us(d, &dev)).collect();
+            let ours = fluid_makespan(&refs, &lefts, &dev);
+            let planner = estimate_group_makespan_us(&refs, &dev);
+            assert!(
+                (ours - planner).abs() <= planner * 1e-12 + 1e-12,
+                "width {width}: {ours} vs {planner}"
+            );
+        }
+    }
+
+    #[test]
+    fn partial_work_shrinks_the_estimate() {
+        let dev = k40();
+        let p3 = ConvParams::incep3a_3x3(32);
+        let a = kernel_desc(Algorithm::ImplicitPrecompGemm, &p3, &dev)
+            .unwrap();
+        let b = kernel_desc(Algorithm::FftTiling, &p3, &dev).unwrap();
+        let ta = isolated_time_us(&a, &dev);
+        let tb = isolated_time_us(&b, &dev);
+        let full = fluid_makespan(&[&a, &b], &[ta, tb], &dev);
+        let half = fluid_makespan(&[&a, &b], &[ta * 0.5, tb], &dev);
+        assert!(half < full, "{half} vs {full}");
+        assert!(half >= tb - 1e-9, "cannot beat the longest member");
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let dev = k40();
+        let p3 = ConvParams::incep3a_3x3(32);
+        let a = kernel_desc(Algorithm::Gemm, &p3, &dev).unwrap();
+        assert_eq!(fluid_makespan(&[], &[], &dev), 0.0);
+        assert_eq!(fluid_makespan(&[&a], &[42.0], &dev), 42.0);
+        assert_eq!(fluid_makespan(&[&a], &[-1.0], &dev), 0.0);
+        // an already-finished member contributes nothing
+        let two = fluid_makespan(&[&a, &a], &[0.0, 10.0], &dev);
+        assert!((two - 10.0).abs() < 1e-9, "{two}");
+    }
+}

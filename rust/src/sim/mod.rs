@@ -1,0 +1,99 @@
+//! Discrete-event execution core: the event-driven replacement for the
+//! barrier-synchronous group replay.
+//!
+//! The barrier replay (`Plan::execute_with` + [`ExecutorKind::Barrier`])
+//! runs each planned co-execution group to completion before the next step
+//! starts: a finished member's stream sits idle until the slowest member
+//! drains, and its workspace stays held until the whole group's boundary.
+//! Opara-style event-driven execution (see PAPERS.md) dissolves that
+//! barrier: a global event queue keyed by virtual time drives per-stream
+//! state machines, and an op-completion event *immediately*
+//!
+//! - frees the op's workspace (so `DeviceMemory::peak()` is a true
+//!   concurrent high-watermark, not a group-boundary over-report that
+//!   charges a finished straggler's workspace as if still live),
+//! - resolves dependency edges and admits newly-ready ops into the running
+//!   mix — the engine re-plans per-SM quotas for the new mix through the
+//!   existing `plan_intra_sm` path on the very next dispatch,
+//! - hands the freed stream lane to the highest-priority ready op whose
+//!   fluid join estimate pays for co-residency.
+//!
+//! The executor shares every line of kernel physics with the barrier path
+//! (both drive `gpusim::Engine`; the event path through its stepping API),
+//! so the two executors are comparable to float precision: the
+//! `executor_equivalence` regression asserts the event-driven makespan
+//! never exceeds the barrier makespan. The barrier replay is kept as the
+//! regression oracle — it is the bit-identical descendant of the legacy
+//! inline scheduler that the pair-equivalence and monotonicity tests pin.
+//!
+//! Module map:
+//! - [`event`] — the virtual-time event queue (deterministic FIFO
+//!   tie-break) carrying op-level events.
+//! - [`streams`] — per-stream lane state machines (idle/busy) for the k
+//!   conv lanes.
+//! - [`fluid`] — the multi-phase fluid makespan estimate over *remaining*
+//!   work, used to profit-gate mid-flight joins with the same margin the
+//!   offline planner applies to group admission.
+//! - [`executor`] — `execute_event` (and its `EventRun` state machine)
+//!   gluing it together behind `Plan::execute` / `Session::run`.
+
+pub(crate) mod event;
+pub(crate) mod executor;
+pub(crate) mod fluid;
+pub(crate) mod streams;
+
+pub(crate) use executor::execute_event;
+
+/// Which execution backend replays a `plan::Plan`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ExecutorKind {
+    /// Discrete-event execution: ops launch the moment their dependencies
+    /// resolve on a free stream; workspace and SM quotas are released at
+    /// op-completion events. The default behind `Session::run`.
+    #[default]
+    Event,
+    /// Legacy barrier-synchronous group replay: each planned co-execution
+    /// group runs to completion before the next step starts. Kept as the
+    /// regression oracle (`--executor barrier`).
+    Barrier,
+}
+
+impl ExecutorKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "event" | "event_driven" | "event-driven" => Some(Self::Event),
+            "barrier" | "group" | "legacy" => Some(Self::Barrier),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Event => "event",
+            Self::Barrier => "barrier",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executor_kind_parses() {
+        assert_eq!(ExecutorKind::parse("event"), Some(ExecutorKind::Event));
+        assert_eq!(
+            ExecutorKind::parse("event-driven"),
+            Some(ExecutorKind::Event)
+        );
+        assert_eq!(
+            ExecutorKind::parse("barrier"),
+            Some(ExecutorKind::Barrier)
+        );
+        assert_eq!(ExecutorKind::parse("legacy"), Some(ExecutorKind::Barrier));
+        assert_eq!(ExecutorKind::parse("?"), None);
+        assert_eq!(ExecutorKind::Event.name(), "event");
+        assert_eq!(ExecutorKind::Barrier.name(), "barrier");
+        assert_eq!(ExecutorKind::default(), ExecutorKind::Event);
+    }
+}

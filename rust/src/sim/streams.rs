@@ -1,0 +1,117 @@
+//! Per-stream lane state machines.
+//!
+//! The executor owns `k` convolution lanes (one per CUDA-style stream in
+//! the schedule's width) plus an implicit serial host lane managed by the
+//! executor itself. A lane is either `Idle` or `Busy` with exactly one
+//! in-flight convolution; admission moves a lane Idle→Busy, an
+//! op-completion event moves it Busy→Idle *at that event* — there is no
+//! barrier holding a drained lane hostage to its former group.
+
+use crate::gpusim::KernelId;
+
+/// One stream lane's state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum LaneState {
+    Idle,
+    /// `op` is running as engine kernel `kernel` on this lane.
+    Busy { op: usize, kernel: KernelId },
+}
+
+/// The k conv lanes.
+#[derive(Clone, Debug)]
+pub(crate) struct Lanes {
+    slots: Vec<LaneState>,
+}
+
+impl Lanes {
+    pub fn new(width: usize) -> Self {
+        Self {
+            slots: vec![LaneState::Idle; width.max(1)],
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of lanes currently running a kernel.
+    pub fn busy(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| !matches!(s, LaneState::Idle))
+            .count()
+    }
+
+    /// Lowest-numbered idle lane, honouring the plan's recorded lane hint
+    /// when that lane happens to be free (so an uncontended replay keeps
+    /// the planner's stream assignment).
+    pub fn free_lane(&self, preferred: Option<usize>) -> Option<usize> {
+        if let Some(p) = preferred {
+            if p < self.slots.len() && self.slots[p] == LaneState::Idle {
+                return Some(p);
+            }
+        }
+        self.slots.iter().position(|s| *s == LaneState::Idle)
+    }
+
+    pub fn occupy(&mut self, lane: usize, op: usize, kernel: KernelId) {
+        debug_assert_eq!(self.slots[lane], LaneState::Idle, "lane in use");
+        self.slots[lane] = LaneState::Busy { op, kernel };
+    }
+
+    /// Release the lane running `kernel`; returns `(lane, op)`.
+    pub fn release(&mut self, kernel: KernelId) -> Option<(usize, usize)> {
+        for (lane, slot) in self.slots.iter_mut().enumerate() {
+            if let LaneState::Busy { op, kernel: k } = *slot {
+                if k == kernel {
+                    *slot = LaneState::Idle;
+                    return Some((lane, op));
+                }
+            }
+        }
+        None
+    }
+
+    /// Snapshot of the running mix: `(lane, op, kernel)` per busy lane, in
+    /// lane order (deterministic).
+    pub fn running(&self) -> Vec<(usize, usize, KernelId)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(lane, slot)| match *slot {
+                LaneState::Idle => None,
+                LaneState::Busy { op, kernel } => Some((lane, op, kernel)),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_lifecycle() {
+        let mut lanes = Lanes::new(2);
+        assert_eq!(lanes.width(), 2);
+        assert_eq!(lanes.busy(), 0);
+        assert_eq!(lanes.free_lane(None), Some(0));
+        assert_eq!(lanes.free_lane(Some(1)), Some(1), "hint honoured");
+        lanes.occupy(1, 7, 42);
+        assert_eq!(lanes.busy(), 1);
+        assert_eq!(lanes.free_lane(Some(1)), Some(0), "busy hint falls back");
+        lanes.occupy(0, 8, 43);
+        assert_eq!(lanes.free_lane(None), None);
+        assert_eq!(lanes.running(), vec![(0, 8, 43), (1, 7, 42)]);
+        assert_eq!(lanes.release(42), Some((1, 7)));
+        assert_eq!(lanes.release(42), None, "double release");
+        assert_eq!(lanes.busy(), 1);
+        assert_eq!(lanes.free_lane(None), Some(1));
+    }
+
+    #[test]
+    fn zero_width_clamps_to_one() {
+        let lanes = Lanes::new(0);
+        assert_eq!(lanes.width(), 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Event-vs-barrier executor contracts (the CI `executor-equivalence`
+//! step):
+//!
+//! - the event-driven makespan never exceeds the barrier makespan (within
+//!   float tolerance) across all four headline networks × k ∈ {1, 2, 4},
+//!   and is strictly ≥1% faster on at least one network×k point;
+//! - both executors satisfy the scheduler's safety invariants, so the
+//!   legacy barrier oracle stays pinned alongside the new default;
+//! - workspace-allocation refusals (failure injection or a tight budget)
+//!   degrade the event executor to solo execution or the workspace-free
+//!   fallback — never an aborted batch;
+//! - the v2 plan schema (dependency edges + stream lanes) round-trips,
+//!   and v1 plans fail with a dedicated versioned-schema error.
+
+use parconv::coordinator::{
+    PriorityPolicy, ScheduleConfig, ScheduleResult, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, PartitionMode};
+use parconv::graph::Network;
+use parconv::plan::{Plan, PlanError, Session};
+use parconv::sim::ExecutorKind;
+
+const GB4: u64 = 4 * 1024 * 1024 * 1024;
+
+const NETS: [Network; 4] = [
+    Network::AlexNet,
+    Network::GoogleNet,
+    Network::ResNet50,
+    Network::PathNet,
+];
+
+fn config(streams: usize) -> ScheduleConfig {
+    ScheduleConfig {
+        policy: SelectionPolicy::ProfileGuided,
+        partition: PartitionMode::IntraSm,
+        streams,
+        workspace_limit: GB4,
+        priority: PriorityPolicy::CriticalPath,
+    }
+}
+
+fn run(net: Network, batch: usize, streams: usize, exec: ExecutorKind) -> ScheduleResult {
+    let mut session = Session::new(DeviceSpec::k40(), config(streams));
+    session.set_executor(exec);
+    session.run(&net.build(batch))
+}
+
+fn check_invariants(net: Network, batch: usize, r: &ScheduleResult, what: &str) {
+    let dag = net.build(batch);
+    assert_eq!(r.ops.len(), dag.len(), "{what}: every op exactly once");
+    let mut ids: Vec<usize> = r.ops.iter().map(|o| o.op_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), dag.len(), "{what}: duplicate ops");
+    let mut start = vec![0.0f64; dag.len()];
+    let mut end = vec![0.0f64; dag.len()];
+    for o in &r.ops {
+        start[o.op_id] = o.start_us;
+        end[o.op_id] = o.end_us;
+        assert!(o.end_us >= o.start_us, "{what}: negative duration");
+        assert!(
+            o.end_us <= r.makespan_us + 1e-6,
+            "{what}: op past makespan"
+        );
+    }
+    for i in 0..dag.len() {
+        for &p in dag.preds(i) {
+            assert!(
+                end[p] <= start[i] + 1e-6,
+                "{what}: op {i} started before pred {p} finished"
+            );
+        }
+    }
+}
+
+#[test]
+fn event_never_slower_than_barrier_and_somewhere_faster() {
+    // The acceptance contract: dissolving the group barrier can only
+    // help. Event-driven makespan <= barrier makespan within 1e-6
+    // relative tolerance for every network x k, with at least one point
+    // strictly faster by >= 1%.
+    let mut best_gain = 1.0f64;
+    let mut best_at = String::new();
+    for net in NETS {
+        for streams in [1usize, 2, 4] {
+            let event = run(net, 8, streams, ExecutorKind::Event);
+            let barrier = run(net, 8, streams, ExecutorKind::Barrier);
+            let what = format!("{} k={streams}", net.name());
+            check_invariants(net, 8, &event, &format!("{what} event"));
+            check_invariants(net, 8, &barrier, &format!("{what} barrier"));
+            assert!(
+                event.makespan_us
+                    <= barrier.makespan_us * (1.0 + 1e-6),
+                "{what}: event {} > barrier {}",
+                event.makespan_us,
+                barrier.makespan_us
+            );
+            let gain = barrier.makespan_us / event.makespan_us.max(1e-9);
+            if gain > best_gain {
+                best_gain = gain;
+                best_at = what;
+            }
+        }
+    }
+    assert!(
+        best_gain >= 1.01,
+        "no network x k point gained >= 1% (best {best_gain:.4}x at \
+         {best_at:?})"
+    );
+}
+
+#[test]
+fn event_workspace_watermark_is_a_true_concurrent_peak() {
+    // The corrected high-watermark: frees happen at op completion, so the
+    // reported peak is what was genuinely live at once — never above the
+    // budget, never below the largest single allocation that ran, and on
+    // a serialized schedule (k = 1) exactly the largest single workspace
+    // (batch-boundary accounting would sum whole groups instead).
+    for net in [Network::GoogleNet, Network::PathNet] {
+        for streams in [1usize, 2, 4] {
+            let event = run(net, 8, streams, ExecutorKind::Event);
+            let max_single = event
+                .ops
+                .iter()
+                .map(|o| o.workspace_bytes)
+                .max()
+                .unwrap_or(0);
+            assert!(
+                event.peak_workspace <= GB4,
+                "{}: budget exceeded",
+                net.name()
+            );
+            assert!(
+                event.peak_workspace >= max_single,
+                "{} k={streams}: peak {} below largest single ws {}",
+                net.name(),
+                event.peak_workspace,
+                max_single
+            );
+            if streams == 1 {
+                assert_eq!(
+                    event.peak_workspace, max_single,
+                    "{}: serialized schedule must peak at one op's ws",
+                    net.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn barrier_oracle_still_pins_legacy_behaviour() {
+    // The monotonicity regression, explicitly on the barrier path: the
+    // plan-level admission contract predates the event executor and must
+    // keep holding for the oracle.
+    let ms: Vec<f64> = [1usize, 2, 4]
+        .iter()
+        .map(|&k| {
+            run(Network::GoogleNet, 32, k, ExecutorKind::Barrier).makespan_us
+        })
+        .collect();
+    assert!(ms[1] <= ms[0] * 1.005, "barrier 1->2: {} -> {}", ms[0], ms[1]);
+    assert!(ms[2] <= ms[1] * 1.01, "barrier 2->4: {} -> {}", ms[1], ms[2]);
+    assert!(ms[2] < ms[0], "barrier k=4 must beat serial");
+    // and the event path preserves the same contract
+    let ev: Vec<f64> = [1usize, 2, 4]
+        .iter()
+        .map(|&k| {
+            run(Network::GoogleNet, 32, k, ExecutorKind::Event).makespan_us
+        })
+        .collect();
+    assert!(ev[1] <= ev[0] * 1.005, "event 1->2: {} -> {}", ev[0], ev[1]);
+    assert!(ev[2] <= ev[1] * 1.01, "event 2->4: {} -> {}", ev[1], ev[2]);
+    assert!(ev[2] < ev[0], "event k=4 must beat serial");
+}
+
+#[test]
+fn oom_injection_never_aborts_event_execution() {
+    // Robustness: spuriously refused workspace allocations must degrade
+    // to solo execution or the zero-workspace fallback, never abort.
+    let dag = Network::GoogleNet.build(16);
+    let clean = run(Network::GoogleNet, 16, 4, ExecutorKind::Event);
+    for rate in [0.3f64, 0.9] {
+        let session = Session::with_failure_injection(
+            DeviceSpec::k40(),
+            config(4),
+            rate,
+            42,
+        );
+        let r = session.run(&dag);
+        check_invariants(
+            Network::GoogleNet,
+            16,
+            &r,
+            &format!("injection rate {rate}"),
+        );
+        assert!(r.makespan_us.is_finite());
+        // at the moderate rate, fallbacks cost bounded time (same band
+        // the legacy barrier-path regression pins); at 0.9 nearly every
+        // conv degrades to GEMM, so only completion is asserted
+        if rate < 0.5 {
+            assert!(
+                r.makespan_us <= clean.makespan_us * 2.5,
+                "rate {rate}: {} vs clean {}",
+                r.makespan_us,
+                clean.makespan_us
+            );
+        }
+    }
+}
+
+#[test]
+fn tight_workspace_budget_serializes_instead_of_aborting() {
+    // serialize-on-OOM: with a 16 MB budget, co-resident workspace rarely
+    // fits — ops must wait for the mix to drain (solo execution) or fall
+    // back, and the corrected high-watermark must respect the cap.
+    let cap = 16 * 1024 * 1024;
+    let mut session = Session::new(
+        DeviceSpec::k40(),
+        ScheduleConfig {
+            workspace_limit: cap,
+            ..config(4)
+        },
+    );
+    session.set_executor(ExecutorKind::Event);
+    let dag = Network::GoogleNet.build(32);
+    let r = session.run(&dag);
+    check_invariants(Network::GoogleNet, 32, &r, "tight budget");
+    assert!(
+        r.peak_workspace <= cap,
+        "peak {} exceeds cap {cap}",
+        r.peak_workspace
+    );
+}
+
+#[test]
+fn v2_schema_roundtrips_dependency_edges_and_lanes() {
+    let dag = Network::GoogleNet.build(8);
+    let session = Session::new(DeviceSpec::k40(), config(2));
+    let plan = session.plan_labeled(&dag, "googlenet");
+    assert_eq!(plan.meta.version, 2);
+    assert_eq!(plan.nodes.len(), dag.len());
+    // lanes: group members carry Some(member index), host ops None
+    for node in &plan.nodes {
+        let is_conv =
+            matches!(dag.ops[node.op].kind, parconv::graph::OpKind::Conv(_));
+        assert_eq!(
+            node.lane.is_some(),
+            is_conv,
+            "op {} lane/kind disagreement",
+            node.op
+        );
+        let mut deps = node.deps.clone();
+        deps.sort_unstable();
+        let mut preds = dag.preds(node.op).to_vec();
+        preds.sort_unstable();
+        assert_eq!(deps, preds, "op {} edges", node.op);
+    }
+    let json = plan.to_json();
+    assert!(json.contains("\"version\": 2"));
+    assert!(json.contains("\"nodes\": ["));
+    let reloaded = Plan::from_json(&json).expect("v2 round-trip");
+    assert_eq!(reloaded.nodes, plan.nodes);
+    assert_eq!(reloaded.digest(), plan.digest());
+    // and both executors replay the reloaded plan identically
+    for exec in [ExecutorKind::Event, ExecutorKind::Barrier] {
+        let a = plan.execute_with(&dag, session.spec(), exec).unwrap();
+        let b = reloaded.execute_with(&dag, session.spec(), exec).unwrap();
+        assert_eq!(a.makespan_us, b.makespan_us, "{}", exec.name());
+        assert_eq!(a.peak_workspace, b.peak_workspace, "{}", exec.name());
+    }
+}
+
+#[test]
+fn v1_plans_fail_with_clear_versioned_error() {
+    let dag = Network::GoogleNet.build(8);
+    let session = Session::new(DeviceSpec::k40(), config(2));
+    let v2 = session.plan(&dag).to_json();
+    let v1 = v2.replacen("\"version\": 2", "\"version\": 1", 1);
+    let err = Plan::from_json(&v1).unwrap_err();
+    assert_eq!(err, PlanError::UnsupportedVersion { found: 1 });
+    let msg = err.to_string();
+    assert!(msg.contains("version 1"), "{msg}");
+    assert!(
+        msg.contains("regenerate") && msg.contains("parconv plan"),
+        "error must tell the operator what to do: {msg}"
+    );
+}
