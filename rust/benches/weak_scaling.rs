@@ -1,0 +1,118 @@
+//! Bench W1 — weak scaling: data-parallel training across 1/2/4/8
+//! replicas, overlapped vs serial-tail gradient reduction.
+//!
+//! Data parallelism keeps the per-device batch constant as devices are
+//! added (weak scaling), so one iteration's compute time is flat and the
+//! ring all-reduce is the whole scaling tax: its bandwidth term
+//! `2 (N-1) / N * S / beta` saturates near `2 S / beta` as N grows, which
+//! makes *where the reduce runs* — overlapped with the backward pass, or
+//! serialized after it — the difference between near-flat scaling and a
+//! constant per-iteration penalty. This bench measures exactly that gap:
+//! per network and replica count, the overlapped and serial-tail
+//! makespans, the total wire time, and how much of it the overlap hides.
+//!
+//! The serial-tail variant is the same DAG with every reduce additionally
+//! gated on the complete backward pass of every replica — both run under
+//! the same event executor, so the comparison isolates the reduction
+//! policy, not the executor.
+
+use std::time::Instant;
+
+use parconv::cluster::{ClusterConfig, DevicePool, LinkModel};
+use parconv::coordinator::{
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, PartitionMode};
+use parconv::graph::Network;
+use parconv::util::{fmt_us, Table};
+
+const REPLICAS: [usize; 4] = [1, 2, 4, 8];
+
+fn sched() -> ScheduleConfig {
+    ScheduleConfig {
+        policy: SelectionPolicy::ProfileGuided,
+        partition: PartitionMode::IntraSm,
+        streams: 2,
+        workspace_limit: 4 * 1024 * 1024 * 1024,
+        priority: PriorityPolicy::CriticalPath,
+    }
+}
+
+fn main() {
+    let batch = 16;
+    let link = LinkModel::pcie3();
+    let t0 = Instant::now();
+    println!(
+        "=== W1: weak scaling — data-parallel training, overlapped vs \
+         serial-tail all-reduce (batch {batch}/replica, K40 x N, ring \
+         {} us/hop + {} GB/s) ===\n",
+        link.latency_us, link.gb_per_s
+    );
+    let mut t = Table::new(vec![
+        "Network",
+        "N",
+        "Overlapped",
+        "Serial tail",
+        "Gain",
+        "Comm total",
+        "Comm hidden",
+    ]);
+    for net in [Network::ResNet50, Network::GoogleNet, Network::PathNet] {
+        let fwd = net.build(batch);
+        for &n in &REPLICAS {
+            let run = |overlap: bool| {
+                DevicePool::new(
+                    DeviceSpec::k40(),
+                    sched(),
+                    ClusterConfig {
+                        replicas: n,
+                        link,
+                        overlap,
+                    },
+                )
+                .run_training(&fwd)
+            };
+            let ov = run(true);
+            let st = run(false);
+            // wire time the overlap keeps off the critical path: the
+            // serial tail pays all of it on top of the compute makespan
+            let exposed = (ov.makespan_us
+                - (st.makespan_us - st.comm_us))
+                .max(0.0);
+            let hidden = (ov.comm_us - exposed).max(0.0);
+            t.row(vec![
+                net.name().to_string(),
+                format!("{n}"),
+                fmt_us(ov.makespan_us),
+                fmt_us(st.makespan_us),
+                if n == 1 {
+                    "-".to_string()
+                } else {
+                    format!(
+                        "{:.2}x",
+                        st.makespan_us / ov.makespan_us.max(1e-9)
+                    )
+                },
+                fmt_us(ov.comm_us),
+                if n == 1 {
+                    "-".to_string()
+                } else {
+                    format!(
+                        "{:.0}%",
+                        100.0 * hidden / ov.comm_us.max(1e-9)
+                    )
+                },
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "\nWeak scaling is decided by overlap: the ring's bandwidth term \
+         saturates at 2S/beta, so the serial tail pays a near-constant \
+         per-iteration tax at every N while overlapped reduction hides \
+         most of it behind the backward pass (launching each reduce the \
+         moment its weight gradient resolves — the cross-device analog \
+         of the paper's intra-GPU inter-op overlap)."
+    );
+    println!("total: {:.2} s", t0.elapsed().as_secs_f64());
+}

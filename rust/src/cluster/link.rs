@@ -1,0 +1,119 @@
+//! The interconnect model: ring all-reduce cost over a homogeneous link.
+//!
+//! The model is the standard bandwidth-optimal ring collective (Shi et
+//! al., *Performance Modeling and Evaluation of Distributed Deep Learning
+//! Frameworks on GPUs*): reducing an `S`-byte tensor across `N` devices
+//! takes `2 * (N - 1)` steps (a reduce-scatter pass followed by an
+//! all-gather pass), each step moving `S / N` bytes per link, so
+//!
+//! ```text
+//! t = 2 * (N - 1) * (alpha + (S / N) / beta)
+//! ```
+//!
+//! with `alpha` the per-hop latency and `beta` the link bandwidth. The
+//! alpha term makes small tensors latency-bound (many small reduces pay
+//! for fusion in real stacks), the beta term makes large tensors
+//! bandwidth-bound and — crucially for weak scaling — nearly
+//! N-independent: `2 * (N - 1) / N -> 2`, which is exactly why hiding the
+//! reduce behind backward compute matters more as the pool grows.
+
+/// A homogeneous point-to-point link (ring topology).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Per-hop latency in microseconds (launch + wire + sync).
+    pub latency_us: f64,
+    /// Per-link bandwidth in GB/s.
+    pub gb_per_s: f64,
+}
+
+impl Default for LinkModel {
+    /// PCIe 3.0 x16-class interconnect: the fabric of the paper's K40 era.
+    fn default() -> Self {
+        Self::pcie3()
+    }
+}
+
+impl LinkModel {
+    /// PCIe 3.0 x16: ~12 GB/s effective per direction, ~10 us per hop.
+    pub fn pcie3() -> Self {
+        Self {
+            latency_us: 10.0,
+            gb_per_s: 12.0,
+        }
+    }
+
+    /// NVLink-class fabric: ~60 GB/s per link, ~5 us per hop.
+    pub fn nvlink() -> Self {
+        Self {
+            latency_us: 5.0,
+            gb_per_s: 60.0,
+        }
+    }
+
+    /// Time for one ring all-reduce of `bytes` across `replicas` devices.
+    /// Zero when nothing needs to move (one replica, or an empty tensor).
+    pub fn ring_allreduce_us(&self, bytes: u64, replicas: usize) -> f64 {
+        if replicas <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let steps = (2 * (replicas - 1)) as f64;
+        let hop_bytes = bytes as f64 / replicas as f64;
+        // GB/s = 1e3 bytes per microsecond
+        steps * (self.latency_us + hop_bytes / (self.gb_per_s * 1e3))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_replica_or_empty_tensor_is_free() {
+        let l = LinkModel::default();
+        assert_eq!(l.ring_allreduce_us(1 << 20, 1), 0.0);
+        assert_eq!(l.ring_allreduce_us(0, 8), 0.0);
+    }
+
+    #[test]
+    fn two_replica_cost_is_latency_plus_wire() {
+        let l = LinkModel {
+            latency_us: 10.0,
+            gb_per_s: 12.0,
+        };
+        // N=2: 2 steps of S/2 bytes -> total wire bytes = S
+        let s = 24_000_000u64; // 24 MB
+        let t = l.ring_allreduce_us(s, 2);
+        let expect = 2.0 * (10.0 + 12_000_000.0 / 12_000.0);
+        assert!((t - expect).abs() < 1e-9, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn bandwidth_term_saturates_with_replicas() {
+        // large tensors: per-device wire time approaches 2 * S / beta as N
+        // grows, so doubling the pool barely changes the reduce time —
+        // weak scaling is decided by overlap, not by the collective.
+        let l = LinkModel::pcie3();
+        let s = 256 << 20; // 256 MB: firmly bandwidth-bound
+        let t2 = l.ring_allreduce_us(s, 2);
+        let t8 = l.ring_allreduce_us(s, 8);
+        assert!(t8 > t2, "more steps still cost more");
+        assert!(t8 < t2 * 2.0, "but far from linearly: {t2} -> {t8}");
+    }
+
+    #[test]
+    fn latency_bound_small_tensors_scale_with_steps() {
+        let l = LinkModel::pcie3();
+        let t2 = l.ring_allreduce_us(64, 2); // 2 steps
+        let t4 = l.ring_allreduce_us(64, 4); // 6 steps
+        assert!(t4 > t2 * 2.5, "{t2} -> {t4}");
+    }
+
+    #[test]
+    fn presets_are_ordered() {
+        let s = 64 << 20;
+        assert!(
+            LinkModel::nvlink().ring_allreduce_us(s, 4)
+                < LinkModel::pcie3().ring_allreduce_us(s, 4)
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Multi-GPU data-parallel execution: a pool of per-device simulated
+//! engines plus a modeled interconnect.
+//!
+//! The paper's argument — serial launch leaves inter-op parallelism on
+//! the table — extends across devices: in data-parallel training the
+//! gradient all-reduce is the serial tail, and the same event-driven
+//! machinery that overlaps independent layers on one GPU can overlap
+//! each parameter's reduction with the remainder of the backward pass
+//! (Shi et al., *Performance Modeling and Evaluation of Distributed Deep
+//! Learning Frameworks on GPUs*). The pieces:
+//!
+//! - [`LinkModel`] — ring all-reduce cost over a homogeneous link
+//!   (`2 (N-1)` hops of `S / N` bytes: latency- or bandwidth-bound).
+//! - [`data_parallel_dag`] — N device-tagged copies of the training DAG
+//!   plus one [`crate::graph::OpKind::GradReduce`] node per parameter,
+//!   depending on the N copies of that parameter's gradient producer
+//!   (or, in serial-tail mode, on every replica's full backward pass).
+//! - [`DevicePool`] — the facade: plans the replicated DAG through the
+//!   replica-aware [`crate::plan::Planner`] (schema v3: per-node device
+//!   assignments) and executes it on the multi-device event executor,
+//!   which instantiates one `gpusim::Engine` per device plus a single
+//!   interconnect lane that serializes collectives, NCCL-style.
+//!
+//! Single-GPU runs never enter this module's code paths: a one-replica
+//! pool degenerates to `Session::run` on the plain training DAG, pinned
+//! bit-identical by `rust/tests/cluster_scaling.rs`.
+
+mod link;
+mod pool;
+
+pub use link::LinkModel;
+pub use pool::{
+    data_parallel_dag, reduce_sites, ClusterConfig, DevicePool, ReduceSite,
+};

@@ -1,0 +1,348 @@
+//! The device pool: N data-parallel replicas plus a modeled interconnect.
+//!
+//! Data parallelism replicates the whole training graph onto every device
+//! (same model, a different minibatch shard each) and reconciles the
+//! replicas by all-reducing every parameter gradient once per iteration.
+//! [`data_parallel_dag`] builds that global DAG: `N` copies of the
+//! per-replica training DAG, each op tagged with its device, plus one
+//! [`OpKind::GradReduce`] node per parameter tensor whose dependency
+//! edges are the `N` copies of that parameter's gradient producer — so
+//! under the event executor a reduction launches the moment the *last*
+//! replica's weight gradient resolves, overlapping the collective with
+//! the rest of the backward pass. The serial-tail variant (the baseline
+//! every framework paper measures against) additionally gates every
+//! reduce on the complete backward pass of every replica.
+//!
+//! [`DevicePool`] is the facade: it owns a [`Session`] (so multi-GPU
+//! plans hit the same digest-keyed plan cache as single-GPU ones) and the
+//! [`ClusterConfig`], and builds/executes the replicated DAG per forward
+//! graph. With `replicas == 1` the pool degenerates to exactly
+//! `Session::run` on the unreplicated training DAG — no reduce ops, no
+//! comm lane — which is what keeps single-GPU behavior bit-identical to
+//! the pre-cluster baselines.
+
+use crate::coordinator::{ScheduleConfig, ScheduleResult};
+use crate::gpusim::DeviceSpec;
+use crate::graph::{training_dag, Dag, OpKind};
+use crate::plan::Session;
+use crate::sim::ExecutorKind;
+
+use super::link::LinkModel;
+
+/// Data-parallel cluster shape and reduction policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Data-parallel replica count (1 = single device, no reductions).
+    pub replicas: usize,
+    /// The interconnect the ring all-reduce runs over.
+    pub link: LinkModel,
+    /// `true`: launch each reduction the moment its gradient resolves
+    /// (comm/compute overlap). `false`: the serial-tail baseline — every
+    /// reduction waits for the complete backward pass.
+    pub overlap: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            link: LinkModel::default(),
+            overlap: true,
+        }
+    }
+}
+
+/// One gradient tensor to all-reduce: `(op, bytes)` — the op id in the
+/// *single-replica* training DAG that produces the gradient, and the
+/// parameter-tensor size.
+pub type ReduceSite = (usize, u64);
+
+/// Find the parameter-gradient producers of a training DAG: the `_wgrad`
+/// node of every forward convolution (weights: `k * c * r * s` floats)
+/// and the `_bwd` node of every fully-connected layer (weights: `k * n`
+/// floats — FC backward is emitted fused, so its weight gradient resolves
+/// with the op). `fwd` is the forward graph the training DAG was built
+/// from; `train` is `training_dag(fwd)`.
+pub fn reduce_sites(fwd: &Dag, train: &Dag) -> Vec<ReduceSite> {
+    let position = |name: &str| -> Option<usize> {
+        train.ops.iter().position(|o| o.name == name)
+    };
+    let mut sites = Vec::new();
+    for op in &fwd.ops {
+        let (grad_name, bytes) = match &op.kind {
+            OpKind::Conv(p) => (
+                format!("{}_wgrad", op.name),
+                (p.k * p.c * p.r * p.s * 4) as u64,
+            ),
+            OpKind::FullyConnected { k, n, .. } => {
+                (format!("{}_bwd", op.name), (k * n * 4) as u64)
+            }
+            _ => continue,
+        };
+        let site = position(&grad_name).unwrap_or_else(|| {
+            panic!("training DAG lacks gradient node {grad_name:?}")
+        });
+        sites.push((site, bytes));
+    }
+    sites
+}
+
+/// Replicate a single-device DAG across `cluster.replicas` devices and
+/// append one [`OpKind::GradReduce`] per site. Replica `d`'s copy of op
+/// `i` is op `d * n + i`, named `d{d}/<name>` and assigned to device `d`;
+/// reduce nodes are named `<producer>_allreduce`. With one replica the
+/// input DAG is returned unchanged (no reduction is needed, and
+/// single-GPU digests/makespans stay bit-identical to the uncluster'd
+/// path).
+pub fn data_parallel_dag(
+    train: &Dag,
+    sites: &[ReduceSite],
+    cluster: &ClusterConfig,
+) -> Dag {
+    assert!(cluster.replicas >= 1, "a pool needs at least one device");
+    if cluster.replicas == 1 {
+        return train.clone();
+    }
+    let n = train.len();
+    let replicas = cluster.replicas;
+    let mut g = Dag::new();
+    for d in 0..replicas {
+        for op in &train.ops {
+            let id = g.add(format!("d{d}/{}", op.name), op.kind.clone());
+            g.set_device(id, d);
+        }
+        for i in 0..n {
+            for &s in train.succs(i) {
+                g.add_edge(d * n + i, d * n + s);
+            }
+        }
+    }
+    // Serial-tail gating set: the backward frontier of every replica (the
+    // per-replica sinks). `add_edge` deduplicates, so a site that is
+    // itself a sink contributes one edge.
+    let sinks: Vec<usize> = (0..n)
+        .filter(|&i| train.succs(i).is_empty())
+        .collect();
+    for &(site, bytes) in sites {
+        assert!(site < n, "reduce site {site} outside the training DAG");
+        let kind = OpKind::GradReduce {
+            bytes,
+            replicas,
+            link_latency_us: cluster.link.latency_us,
+            link_gb_per_s: cluster.link.gb_per_s,
+        };
+        let mut deps: Vec<usize> =
+            (0..replicas).map(|d| d * n + site).collect();
+        if !cluster.overlap {
+            for d in 0..replicas {
+                for &s in &sinks {
+                    deps.push(d * n + s);
+                }
+            }
+        }
+        let rid = g.add_after(
+            format!("{}_allreduce", train.ops[site].name),
+            kind,
+            &deps,
+        );
+        // the collective involves every device; it sits on device 0
+        // nominally, and the executor routes it to the interconnect lane
+        // by kind
+        g.set_device(rid, 0);
+    }
+    g
+}
+
+/// N data-parallel devices behind one planning/execution facade.
+pub struct DevicePool {
+    session: Session,
+    cluster: ClusterConfig,
+}
+
+impl DevicePool {
+    pub fn new(
+        spec: DeviceSpec,
+        cfg: ScheduleConfig,
+        cluster: ClusterConfig,
+    ) -> Self {
+        assert!(cluster.replicas >= 1, "a pool needs at least one device");
+        Self {
+            session: Session::new(spec, cfg),
+            cluster,
+        }
+    }
+
+    /// Pool whose per-device workspace allocators spuriously refuse a
+    /// `rate` fraction of allocations (robustness testing: replay must
+    /// degrade to solo execution or workspace-free kernels with reduce
+    /// ops still in flight — never abort).
+    pub fn with_failure_injection(
+        spec: DeviceSpec,
+        cfg: ScheduleConfig,
+        cluster: ClusterConfig,
+        rate: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(cluster.replicas >= 1, "a pool needs at least one device");
+        Self {
+            session: Session::with_failure_injection(spec, cfg, rate, seed),
+            cluster,
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.cluster.replicas
+    }
+
+    pub fn cluster(&self) -> &ClusterConfig {
+        &self.cluster
+    }
+
+    /// The session backing the pool (plan cache, stats, executor choice).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// Select the execution backend for subsequent runs.
+    pub fn set_executor(&mut self, executor: ExecutorKind) {
+        self.session.set_executor(executor);
+    }
+
+    /// The N-replica data-parallel training DAG for one forward graph:
+    /// forward+backward per replica plus a `GradReduce` per parameter.
+    pub fn training_dag(&self, fwd: &Dag) -> Dag {
+        let train = training_dag(fwd);
+        let sites = reduce_sites(fwd, &train);
+        data_parallel_dag(&train, &sites, &self.cluster)
+    }
+
+    /// One data-parallel training iteration of `fwd` across the pool:
+    /// plan on miss (replica-aware), then replay.
+    pub fn run_training(&self, fwd: &Dag) -> ScheduleResult {
+        self.session.run(&self.training_dag(fwd))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Network;
+
+    fn cluster(replicas: usize, overlap: bool) -> ClusterConfig {
+        ClusterConfig {
+            replicas,
+            link: LinkModel::pcie3(),
+            overlap,
+        }
+    }
+
+    #[test]
+    fn single_replica_is_the_plain_training_dag() {
+        let fwd = Network::GoogleNet.build(4);
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        assert!(!sites.is_empty());
+        let one = data_parallel_dag(&train, &sites, &cluster(1, true));
+        assert_eq!(one.len(), train.len(), "no reduce ops at N=1");
+        assert_eq!(one.num_devices(), 1);
+    }
+
+    #[test]
+    fn replication_tags_devices_and_appends_reduces() {
+        let fwd = Network::GoogleNet.build(4);
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        let g = data_parallel_dag(&train, &sites, &cluster(3, true));
+        assert_eq!(g.len(), 3 * train.len() + sites.len());
+        assert_eq!(g.num_devices(), 3);
+        assert!(g.is_acyclic());
+        // each replica copy keeps its device tag and the copied edges
+        for d in 0..3 {
+            for i in 0..train.len() {
+                assert_eq!(g.device_of(d * train.len() + i), d);
+            }
+        }
+        // every reduce depends on exactly the N copies of its producer
+        for (r, &(site, bytes)) in sites.iter().enumerate() {
+            let rid = 3 * train.len() + r;
+            assert!(g.ops[rid].kind.is_grad_reduce());
+            match g.ops[rid].kind {
+                OpKind::GradReduce {
+                    bytes: b, replicas, ..
+                } => {
+                    assert_eq!(b, bytes);
+                    assert_eq!(replicas, 3);
+                }
+                _ => unreachable!(),
+            }
+            let mut preds = g.preds(rid).to_vec();
+            preds.sort_unstable();
+            let mut expect: Vec<usize> =
+                (0..3).map(|d| d * train.len() + site).collect();
+            expect.sort_unstable();
+            assert_eq!(preds, expect);
+        }
+    }
+
+    #[test]
+    fn serial_tail_gates_reduces_on_the_backward_frontier() {
+        let fwd = Network::AlexNet.build(2);
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        let ov = data_parallel_dag(&train, &sites, &cluster(2, true));
+        let st = data_parallel_dag(&train, &sites, &cluster(2, false));
+        assert_eq!(ov.len(), st.len());
+        assert!(st.is_acyclic());
+        // serial-tail reduces have strictly more dependency edges: every
+        // per-replica sink gates them
+        let first_reduce = 2 * train.len();
+        assert!(
+            st.preds(first_reduce).len() > ov.preds(first_reduce).len(),
+            "serial tail must gate on the backward frontier"
+        );
+    }
+
+    #[test]
+    fn sites_cover_convs_and_fc_layers() {
+        let fwd = Network::AlexNet.build(2); // convs + FC head
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        let convs = fwd.conv_ids().len();
+        let fcs = fwd
+            .ops
+            .iter()
+            .filter(|o| {
+                matches!(o.kind, OpKind::FullyConnected { .. })
+            })
+            .count();
+        assert_eq!(sites.len(), convs + fcs);
+        for &(site, bytes) in &sites {
+            assert!(bytes > 0);
+            let name = &train.ops[site].name;
+            assert!(
+                name.ends_with("_wgrad") || name.ends_with("_bwd"),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_runs_a_training_iteration_per_replica_count() {
+        let fwd = Network::GoogleNet.build(4);
+        for replicas in [1usize, 2] {
+            let pool = DevicePool::new(
+                DeviceSpec::k40(),
+                ScheduleConfig::default(),
+                cluster(replicas, true),
+            );
+            let dag = pool.training_dag(&fwd);
+            let r = pool.run_training(&fwd);
+            assert_eq!(r.ops.len(), dag.len(), "replicas={replicas}");
+            if replicas > 1 {
+                assert!(r.comm_us > 0.0, "reduces must cost wire time");
+            } else {
+                assert_eq!(r.comm_us, 0.0);
+            }
+        }
+    }
+}

@@ -39,6 +39,36 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// Multi-GPU cluster knobs (`[cluster]` section / `--gpus` flag).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSettings {
+    /// Data-parallel replica count. 1 (the default) runs single-GPU with
+    /// no reduction ops; >1 routes `training` through the device pool.
+    pub gpus: usize,
+    /// Per-hop interconnect latency in microseconds.
+    pub link_latency_us: f64,
+    /// Per-link interconnect bandwidth in GB/s.
+    pub link_gb_per_s: f64,
+    /// Overlap gradient reductions with backward compute (`true`, the
+    /// default) or serialize them after the full backward pass (`false`
+    /// — the serial-tail baseline).
+    pub overlap: bool,
+}
+
+impl Default for ClusterSettings {
+    fn default() -> Self {
+        // link defaults read off the preset itself, so retuning
+        // `LinkModel::pcie3()` can never desynchronize the config layer
+        let link = crate::cluster::LinkModel::pcie3();
+        Self {
+            gpus: 1,
+            link_latency_us: link.latency_us,
+            link_gb_per_s: link.gb_per_s,
+            overlap: true,
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -53,6 +83,7 @@ pub struct RunConfig {
     /// RNG seed for anything stochastic.
     pub seed: u64,
     pub scheduler: SchedulerConfig,
+    pub cluster: ClusterSettings,
     /// Directory holding AOT artifacts (`manifest.txt`, `*.hlo.txt`).
     pub artifacts_dir: String,
 }
@@ -65,6 +96,7 @@ impl Default for RunConfig {
             batch: 32,
             seed: 0,
             scheduler: SchedulerConfig::default(),
+            cluster: ClusterSettings::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -84,6 +116,10 @@ const SCHEDULER_KEYS: &[&str] = &[
     "executor",
 ];
 
+/// Keys accepted inside `[cluster]`.
+const CLUSTER_KEYS: &[&str] =
+    &["gpus", "link_latency_us", "link_gb_per_s", "overlap"];
+
 impl RunConfig {
     /// Parse from config text (TOML subset; see `config::parser`).
     ///
@@ -95,6 +131,7 @@ impl RunConfig {
         Self::reject_unknown_keys(&p, text)?;
         let d = RunConfig::default();
         let sd = SchedulerConfig::default();
+        let cd = ClusterSettings::default();
         Ok(RunConfig {
             device: p.str_or("", "device", &d.device),
             network: p.str_or("", "network", &d.network),
@@ -116,6 +153,22 @@ impl RunConfig {
                 priority: p.str_or("scheduler", "priority", &sd.priority),
                 executor: p.str_or("scheduler", "executor", &sd.executor),
             },
+            cluster: ClusterSettings {
+                gpus: p
+                    .uint_or("cluster", "gpus", cd.gpus as u64)
+                    .max(1) as usize,
+                link_latency_us: p.float_or(
+                    "cluster",
+                    "link_latency_us",
+                    cd.link_latency_us,
+                ),
+                link_gb_per_s: p.float_or(
+                    "cluster",
+                    "link_gb_per_s",
+                    cd.link_gb_per_s,
+                ),
+                overlap: p.bool_or("cluster", "overlap", cd.overlap),
+            },
         })
     }
 
@@ -133,12 +186,13 @@ impl RunConfig {
             let (valid, place) = match section {
                 "" => (TOP_LEVEL_KEYS, "top level".to_string()),
                 "scheduler" => (SCHEDULER_KEYS, "[scheduler]".to_string()),
+                "cluster" => (CLUSTER_KEYS, "[cluster]".to_string()),
                 other => {
                     return Err(ConfigError {
                         line: locate_line(text, other, None),
                         msg: format!(
                             "unknown section [{other}]; valid sections: \
-                             [scheduler]"
+                             [scheduler], [cluster]"
                         ),
                     })
                 }
@@ -240,6 +294,35 @@ priority = "fifo"
             RunConfig::from_text("[scheduler]\nexecutor = \"barrier\"")
                 .unwrap();
         assert_eq!(b.scheduler.executor, "barrier");
+    }
+
+    #[test]
+    fn cluster_section_parses_and_defaults() {
+        let d = RunConfig::from_text("").unwrap();
+        assert_eq!(d.cluster, ClusterSettings::default());
+        assert_eq!(d.cluster.gpus, 1);
+        assert!(d.cluster.overlap);
+        let c = RunConfig::from_text(
+            "[cluster]\ngpus = 4\nlink_latency_us = 5.0\n\
+             link_gb_per_s = 60.0\noverlap = false\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.gpus, 4);
+        assert_eq!(c.cluster.link_latency_us, 5.0);
+        assert_eq!(c.cluster.link_gb_per_s, 60.0);
+        assert!(!c.cluster.overlap);
+        // gpus clamps to at least one device
+        let z = RunConfig::from_text("[cluster]\ngpus = 0\n").unwrap();
+        assert_eq!(z.cluster.gpus, 1);
+    }
+
+    #[test]
+    fn unknown_cluster_key_rejected() {
+        let err = RunConfig::from_text("[cluster]\ngpsu = 2\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("gpsu"), "{msg}");
+        assert!(msg.contains("gpus"), "error must list valid keys: {msg}");
+        assert_eq!(err.line, 2);
     }
 
     #[test]

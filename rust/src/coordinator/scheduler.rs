@@ -91,6 +91,10 @@ pub struct OpExec {
     /// lane under event-driven execution), `None` for ops on the serial
     /// host lane. Feeds the per-stream tracks of the Chrome-trace export.
     pub stream: Option<usize>,
+    /// Device the op ran on (0 for single-GPU schedules). Gradient
+    /// reductions record device 0 but render on the interconnect track of
+    /// the Chrome-trace export (`kind == "grad_reduce"`).
+    pub device: usize,
 }
 
 /// Result of scheduling a whole DAG.
@@ -107,6 +111,11 @@ pub struct ScheduleResult {
     pub rounds: u64,
     /// Wall time spent with >= 2 convs in flight.
     pub conv_overlap_us: f64,
+    /// Total interconnect time spent in gradient reductions (zero for
+    /// single-GPU schedules). Under the event executor this time runs on
+    /// the dedicated comm lane, concurrent with compute; the makespan
+    /// tells whether it was hidden.
+    pub comm_us: f64,
 }
 
 /// Legacy facade: owns the device spec and config, executes DAGs.
@@ -165,10 +174,23 @@ impl Coordinator {
     }
 }
 
-/// Duration model for non-convolution ops: bandwidth-bound.
+/// Duration model for non-convolution ops: bandwidth-bound on the
+/// device, except gradient reductions, which are priced by the ring
+/// all-reduce formula of the link model they carry (the interconnect,
+/// not device DRAM, is their bottleneck).
 pub fn non_conv_time_us(kind: &OpKind, spec: &DeviceSpec) -> f64 {
     match kind {
         OpKind::Input => 0.0,
+        OpKind::GradReduce {
+            bytes,
+            replicas,
+            link_latency_us,
+            link_gb_per_s,
+        } => crate::cluster::LinkModel {
+            latency_us: *link_latency_us,
+            gb_per_s: *link_gb_per_s,
+        }
+        .ring_allreduce_us(*bytes, *replicas),
         OpKind::FullyConnected { .. } => {
             // small GEMM: compute at modest efficiency + overhead
             kind.flops() / (spec.peak_flops * 0.3) * 1e6
@@ -308,6 +330,32 @@ mod tests {
         )
         .execute_dag(&dag);
         assert!(loose.makespan_us <= tight.makespan_us * 1.01);
+    }
+
+    #[test]
+    fn grad_reduce_priced_by_its_link_model_not_dram() {
+        let spec = DeviceSpec::k40();
+        let kind = OpKind::GradReduce {
+            bytes: 24_000_000,
+            replicas: 4,
+            link_latency_us: 10.0,
+            link_gb_per_s: 12.0,
+        };
+        let t = non_conv_time_us(&kind, &spec);
+        let expect = crate::cluster::LinkModel {
+            latency_us: 10.0,
+            gb_per_s: 12.0,
+        }
+        .ring_allreduce_us(24_000_000, 4);
+        assert_eq!(t, expect);
+        // a one-replica reduce is free (and never emitted anyway)
+        let solo = OpKind::GradReduce {
+            bytes: 24_000_000,
+            replicas: 1,
+            link_latency_us: 10.0,
+            link_gb_per_s: 12.0,
+        };
+        assert_eq!(non_conv_time_us(&solo, &spec), 0.0);
     }
 
     #[test]

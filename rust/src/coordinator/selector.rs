@@ -9,10 +9,9 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::convlib::{
-    kernel_desc, ConvParams, KernelDesc, LaunchConfig, ALL_ALGORITHMS,
+    kernel_desc, ConvParams, KernelDesc, ALL_ALGORITHMS,
 };
 use crate::gpusim::partition::plan_intra_sm;
-use crate::gpusim::timing::full_rate_bw_demand;
 use crate::gpusim::{isolated_time_us, natural_residency, DeviceSpec};
 
 /// Process-wide count of selector entry-point invocations ([`select_solo`],
@@ -176,84 +175,20 @@ pub fn estimate_pair_makespan_us(
 /// survivors and the next phase begins. For two kernels this reduces
 /// exactly to [`estimate_pair_makespan_us`]; members whose blocks cannot
 /// co-reside simply serialize after the others.
+///
+/// This is [`crate::sim::fluid::fluid_makespan`] evaluated at full
+/// remaining work — ONE phase-loop implementation shared with the event
+/// executor's mid-flight join gate, so the planner's 2% admission margin
+/// and the executor's join margin can never drift apart (they price
+/// groups through the same function; a second copy of the math is how
+/// they would diverge).
 pub fn estimate_group_makespan_us(
     descs: &[&KernelDesc],
     dev: &DeviceSpec,
 ) -> f64 {
-    match descs.len() {
-        0 => return 0.0,
-        1 => return isolated_time_us(descs[0], dev),
-        _ => {}
-    }
-    let mut left: Vec<f64> =
+    let left: Vec<f64> =
         descs.iter().map(|d| isolated_time_us(d, dev)).collect();
-    let mut alive: Vec<usize> = (0..descs.len()).collect();
-    let mut t = 0.0f64;
-    while !alive.is_empty() {
-        if alive.len() == 1 {
-            t += left[alive[0]];
-            break;
-        }
-        let launches: Vec<&LaunchConfig> =
-            alive.iter().map(|&i| &descs[i].launch).collect();
-        let utils: Vec<f64> =
-            alive.iter().map(|&i| descs[i].alu_util).collect();
-        let plan = plan_intra_sm(&launches, &utils, dev);
-        let fracs: Vec<f64> = alive
-            .iter()
-            .zip(&plan)
-            .map(|(&i, &q)| {
-                let rn =
-                    natural_residency(&descs[i].launch, dev).max(1) as f64;
-                q as f64 / rn
-            })
-            .collect();
-        let demand: f64 =
-            utils.iter().zip(&fracs).map(|(u, f)| u * f).sum();
-        let phi = if demand > 1.0 { 1.0 / demand } else { 1.0 };
-        // DRAM contention, mirroring the engine's global factor. Applied
-        // only to phases with three or more live members: the two-kernel
-        // phase keeps the legacy two-phase pair form so that k = 2
-        // reproduces `select_pair`'s estimates (and choices) exactly.
-        let mu = if alive.len() >= 3 {
-            let bw_limit = dev.effective_bw() / 1e6; // bytes per us
-            let bw_demand: f64 = alive
-                .iter()
-                .zip(&fracs)
-                .map(|(&i, f)| full_rate_bw_demand(descs[i], dev) * phi * f)
-                .sum();
-            if bw_demand > bw_limit {
-                bw_limit / bw_demand
-            } else {
-                1.0
-            }
-        } else {
-            1.0
-        };
-        let rates: Vec<f64> = fracs.iter().map(|f| phi * mu * f).collect();
-        if rates.iter().all(|&v| v <= 0.0) {
-            // no member can hold a block: the remainder serializes
-            t += alive.iter().map(|&i| left[i]).sum::<f64>();
-            break;
-        }
-        // advance to the first completion among progressing members
-        let mut dt = f64::INFINITY;
-        for (pos, &i) in alive.iter().enumerate() {
-            if rates[pos] > 0.0 {
-                dt = dt.min(left[i] / rates[pos]);
-            }
-        }
-        t += dt;
-        let mut next = Vec::with_capacity(alive.len());
-        for (pos, &i) in alive.iter().enumerate() {
-            left[i] -= dt * rates[pos];
-            if left[i] > 1e-9 {
-                next.push(i);
-            }
-        }
-        alive = next;
-    }
-    t
+    crate::sim::fluid::fluid_makespan(descs, &left, dev)
 }
 
 /// One k-wide co-execution selection: which ready candidates to co-run

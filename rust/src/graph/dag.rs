@@ -11,6 +11,12 @@ pub struct Dag {
     pub ops: Vec<Op>,
     succs: Vec<Vec<usize>>,
     preds: Vec<Vec<usize>>,
+    /// Data-parallel device assignment per op: 0 for single-device DAGs
+    /// (every builder's default), set per replica copy by
+    /// `cluster::data_parallel_dag`. Interconnect ops (`GradReduce`)
+    /// nominally sit on device 0 — the executor routes them by kind, not
+    /// by device.
+    device: Vec<usize>,
 }
 
 impl Dag {
@@ -28,6 +34,7 @@ impl Dag {
         });
         self.succs.push(Vec::new());
         self.preds.push(Vec::new());
+        self.device.push(0);
         id
     }
 
@@ -69,6 +76,23 @@ impl Dag {
 
     pub fn succs(&self, id: usize) -> &[usize] {
         &self.succs[id]
+    }
+
+    /// Data-parallel device assignment of an op (0 unless set).
+    pub fn device_of(&self, id: usize) -> usize {
+        self.device.get(id).copied().unwrap_or(0)
+    }
+
+    /// Assign an op to a device (see `cluster::data_parallel_dag`).
+    pub fn set_device(&mut self, id: usize, device: usize) {
+        assert!(id < self.ops.len(), "op {id} out of range");
+        self.device[id] = device;
+    }
+
+    /// Number of devices the DAG spans (1 for single-device DAGs; the
+    /// highest assigned device id + 1 otherwise).
+    pub fn num_devices(&self) -> usize {
+        self.device.iter().copied().max().map_or(1, |m| m + 1)
     }
 
     /// Kahn topological order; `None` if a cycle exists.
@@ -382,5 +406,25 @@ mod tests {
     #[should_panic(expected = "one cost per op")]
     fn bottom_levels_cost_length_checked() {
         diamond().bottom_levels(&[1.0]);
+    }
+
+    #[test]
+    fn device_assignment_defaults_to_zero() {
+        let mut g = diamond();
+        assert_eq!(g.num_devices(), 1);
+        for i in 0..g.len() {
+            assert_eq!(g.device_of(i), 0);
+        }
+        g.set_device(2, 3);
+        assert_eq!(g.device_of(2), 3);
+        assert_eq!(g.num_devices(), 4);
+        // clones carry the assignment
+        assert_eq!(g.clone().device_of(2), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn set_device_bounds_checked() {
+        diamond().set_device(99, 1);
     }
 }

@@ -28,6 +28,23 @@ pub enum OpKind {
     BatchNorm { bytes: u64 },
     /// Fully connected layer: M x K x N GEMM.
     FullyConnected { m: usize, k: usize, n: usize },
+    /// Cross-device ring all-reduce of one parameter-gradient tensor,
+    /// emitted by `cluster::data_parallel_dag`. Runs on the interconnect
+    /// lane, not a compute stream. The link model is carried inline so
+    /// every consumer (planner cost model, barrier replay, event
+    /// executor) prices the collective identically without a side
+    /// channel: `2 * (replicas - 1)` ring steps, each moving
+    /// `bytes / replicas` per hop.
+    GradReduce {
+        /// Parameter-tensor bytes per replica.
+        bytes: u64,
+        /// Devices participating in the ring.
+        replicas: usize,
+        /// Per-hop link latency, microseconds.
+        link_latency_us: f64,
+        /// Link bandwidth, GB/s.
+        link_gb_per_s: f64,
+    },
 }
 
 impl OpKind {
@@ -41,6 +58,8 @@ impl OpKind {
         match self {
             OpKind::Conv(p) => p.naive_flops(),
             OpKind::FullyConnected { m, k, n } => 2.0 * (*m * *k * *n) as f64,
+            // reductions are elementwise adds on the wire — counted as
+            // communication, not device FLOPs
             _ => 0.0,
         }
     }
@@ -62,6 +81,18 @@ impl OpKind {
             OpKind::FullyConnected { m, k, n } => {
                 4.0 * ((*m * *k) + (*k * *n) + (*m * *n)) as f64
             }
+            // wire traffic per device of a ring all-reduce: every device
+            // sends (and receives) 2 * (N-1)/N of the tensor
+            OpKind::GradReduce {
+                bytes, replicas, ..
+            } => {
+                if *replicas <= 1 {
+                    0.0
+                } else {
+                    2.0 * (*replicas - 1) as f64 / *replicas as f64
+                        * *bytes as f64
+                }
+            }
         }
     }
 
@@ -76,7 +107,13 @@ impl OpKind {
             OpKind::Lrn { .. } => "lrn",
             OpKind::BatchNorm { .. } => "batchnorm",
             OpKind::FullyConnected { .. } => "fc",
+            OpKind::GradReduce { .. } => "grad_reduce",
         }
+    }
+
+    /// Is this a cross-device gradient reduction (interconnect-lane op)?
+    pub fn is_grad_reduce(&self) -> bool {
+        matches!(self, OpKind::GradReduce { .. })
     }
 }
 
@@ -110,5 +147,23 @@ mod tests {
         assert_eq!(OpKind::Concat { bytes: 100 }.flops(), 0.0);
         assert_eq!(OpKind::Pool { bytes_in: 8, bytes_out: 4 }.flops(), 0.0);
         assert!(OpKind::Concat { bytes: 100 }.dram_bytes() > 0.0);
+    }
+
+    #[test]
+    fn grad_reduce_wire_bytes_follow_the_ring_formula() {
+        let kind = |replicas| OpKind::GradReduce {
+            bytes: 1000,
+            replicas,
+            link_latency_us: 10.0,
+            link_gb_per_s: 12.0,
+        };
+        assert!(kind(4).is_grad_reduce());
+        assert!(!kind(4).is_conv());
+        assert_eq!(kind(4).kind_name(), "grad_reduce");
+        assert_eq!(kind(4).flops(), 0.0);
+        // 2 * (N-1)/N * S
+        assert_eq!(kind(2).dram_bytes(), 1000.0);
+        assert_eq!(kind(4).dram_bytes(), 1500.0);
+        assert_eq!(kind(1).dram_bytes(), 0.0);
     }
 }

@@ -25,8 +25,9 @@
 //!   multi-metric selection), plus complementary-pair discovery.
 //! - [`plan`] — the Plan/Execute split: [`Planner`] runs the selection
 //!   sweep once and emits an immutable, JSON-serializable [`Plan`]
-//!   (schema v2: ordered groups *plus* a dependency/lane scheduling
-//!   graph); [`Session`] caches plans keyed by DAG digest and replays
+//!   (schema v3: ordered groups *plus* a dependency/lane/device
+//!   scheduling graph, closed by a verified digest); [`Session`] caches
+//!   plans keyed by DAG digest and replays
 //!   them per request with zero selector calls (profile-guided selection
 //!   is an *offline* activity — paper §2). `Coordinator::execute_dag` is
 //!   now a compatibility shim over `Session::run`.
@@ -36,6 +37,12 @@
 //!   workspace at op-completion events; the legacy barrier-synchronous
 //!   group replay remains available as `ExecutorKind::Barrier` (the
 //!   regression oracle).
+//! - [`cluster`] — multi-GPU data parallelism: a [`DevicePool`] of
+//!   per-device engines plus a ring all-reduce [`LinkModel`]; the
+//!   training DAG gains per-parameter `GradReduce` ops whose dependency
+//!   edges let the event executor overlap each reduction with the rest
+//!   of the backward pass (plan schema v3 records per-node device
+//!   assignments).
 //! - [`runtime`] — PJRT CPU client running the AOT-compiled JAX/Pallas
 //!   artifacts, so every scheduled convolution's *numerics* are real.
 //! - [`trainer`] — an SGD loop over the AOT `train_step` artifact.
@@ -76,6 +83,7 @@
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+pub mod cluster;
 pub mod config;
 pub mod convlib;
 pub mod coordinator;
@@ -89,6 +97,7 @@ pub mod sim;
 pub mod trainer;
 pub mod util;
 
+pub use cluster::{ClusterConfig, DevicePool, LinkModel};
 pub use convlib::{Algorithm, ConvParams};
 pub use coordinator::{Coordinator, SelectionPolicy};
 pub use gpusim::{DeviceSpec, PartitionMode};

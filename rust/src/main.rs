@@ -24,8 +24,15 @@
 //! event-driven is the default, barrier is the legacy group replay —
 //! `plan` always self-verifies both), `--trace FILE`
 //! (`end2end`/`training`: dump the executed timeline as a Chrome trace,
-//! one track per stream), `--artifacts DIR`, `--min-speedup X`
-//! (discovery admission threshold, default 1.05).
+//! one process per device + one track per stream), `--artifacts DIR`,
+//! `--min-speedup X` (discovery admission threshold, default 1.05).
+//!
+//! Multi-GPU flags (`training`): `--gpus N` (data-parallel replicas;
+//! N > 1 routes the iteration through the `cluster::DevicePool`),
+//! `--link-latency-us X` / `--link-gbps X` (ring interconnect model),
+//! `--reduce overlapped|serial_tail` (launch each gradient reduction as
+//! its wgrad resolves, or only after the full backward pass). The same
+//! knobs live under `[cluster]` in the config file.
 //!
 //! Every scheduling command goes through a [`Session`]: plans are built
 //! once per (network, batch, config) and replayed from the cache.
@@ -33,6 +40,7 @@
 use std::path::Path;
 use std::process::ExitCode;
 
+use parconv::cluster::{ClusterConfig, DevicePool, LinkModel};
 use parconv::config::RunConfig;
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams, ALL_ALGORITHMS};
 use parconv::coordinator::{
@@ -101,6 +109,21 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
                     val()?.parse::<u64>()? * 1024 * 1024
             }
             "--executor" => cfg.scheduler.executor = val()?,
+            "--gpus" => cfg.cluster.gpus = val()?.parse::<usize>()?.max(1),
+            "--link-latency-us" => {
+                cfg.cluster.link_latency_us = val()?.parse()?
+            }
+            "--link-gbps" => cfg.cluster.link_gb_per_s = val()?.parse()?,
+            "--reduce" => {
+                cfg.cluster.overlap = match val()?.as_str() {
+                    "overlapped" | "overlap" => true,
+                    "serial_tail" | "serial-tail" => false,
+                    other => anyhow::bail!(
+                        "unknown --reduce mode {other:?}; valid: \
+                         overlapped, serial_tail"
+                    ),
+                }
+            }
             "--artifacts" => cfg.artifacts_dir = val()?,
             "--min-speedup" => min_speedup = val()?.parse()?,
             "--steps" => steps = val()?.parse()?,
@@ -197,7 +220,9 @@ commands: table1 table2 networks serialization discover end2end training validat
 global flags: --config FILE --device D --network N --batch B --policy P
               --partition M --streams K --priority Q --workspace-mb MB
               --artifacts DIR --min-speedup X
-end2end/training also take: --executor event|barrier --trace FILE";
+end2end/training also take: --executor event|barrier --trace FILE
+training also takes: --gpus N --link-latency-us X --link-gbps X
+                     --reduce overlapped|serial_tail  (data parallelism)";
 
 // --------------------------------------------------------------------------
 
@@ -582,10 +607,89 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
         }
     }
     println!("{}", t.render());
-    if let (Some(path), Some(r)) = (&cli.trace, &last_configured) {
+
+    // Multi-GPU data parallelism: run the configured scheduler across the
+    // device pool, overlapped vs serial-tail all-reduce, so the comm time
+    // the overlap hides is visible next to the single-GPU matrix above.
+    let gpus = cli.cfg.cluster.gpus;
+    let mut cluster_trace = None;
+    if gpus > 1 {
+        let link = LinkModel {
+            latency_us: cli.cfg.cluster.link_latency_us,
+            gb_per_s: cli.cfg.cluster.link_gb_per_s,
+        };
+        println!(
+            "\ndata-parallel x{gpus} (ring all-reduce, {} us/hop + {} GB/s \
+             per link; configured: {}):",
+            link.latency_us,
+            link.gb_per_s,
+            if cli.cfg.cluster.overlap {
+                "overlapped"
+            } else {
+                "serial_tail"
+            },
+        );
+        let mut ct = Table::new(vec![
+            "Reduce mode",
+            "Makespan",
+            "Comm total",
+            "Comm hidden",
+        ]);
+        let mut results = Vec::new();
+        for (label, overlap) in
+            [("overlapped", true), ("serial_tail", false)]
+        {
+            let mut pool = DevicePool::new(
+                dev.clone(),
+                schedule_config(&cli.cfg)?,
+                ClusterConfig {
+                    replicas: gpus,
+                    link,
+                    overlap,
+                },
+            );
+            pool.set_executor(exec);
+            let r = pool.run_training(&fwd);
+            results.push((label, overlap, r));
+        }
+        // comm hidden = how much of the wire time the makespan does NOT
+        // pay on top of the compute-only floor. The floor is the serial
+        // tail's makespan minus its comm: that run pays every reduce
+        // after compute by construction, so subtracting its wire time
+        // isolates pure compute (same formula as the weak_scaling bench).
+        let compute_floor = results
+            .iter()
+            .find(|(_, overlap, _)| !*overlap)
+            .map(|(_, _, r)| r.makespan_us - r.comm_us)
+            .expect("serial_tail run is in the results");
+        for (label, _, r) in &results {
+            let exposed = (r.makespan_us - compute_floor).max(0.0);
+            let hidden = (r.comm_us - exposed).max(0.0);
+            ct.row(vec![
+                label.to_string(),
+                fmt_us(r.makespan_us),
+                fmt_us(r.comm_us),
+                format!("{:.0}%", 100.0 * hidden / r.comm_us.max(1e-9)),
+            ]);
+        }
+        println!("{}", ct.render());
+        let (_, _, ov) = &results[0];
+        let (_, _, st) = &results[1];
+        println!(
+            "overlapped gradient reduction beats the serial tail by \
+             {:.2}x ({} saved per iteration)",
+            st.makespan_us / ov.makespan_us.max(1e-9),
+            fmt_us(st.makespan_us - ov.makespan_us),
+        );
+        let keep = if cli.cfg.cluster.overlap { 0 } else { 1 };
+        cluster_trace = Some(results.swap_remove(keep).2);
+    }
+    let traced = cluster_trace.as_ref().or(last_configured.as_ref());
+    if let (Some(path), Some(r)) = (&cli.trace, traced) {
         std::fs::write(path, schedule_chrome_trace_json(r))?;
         println!(
-            "wrote chrome trace ({} ops, one track per stream) to {path}",
+            "wrote chrome trace ({} ops, one process per device + one \
+             track per stream) to {path}",
             r.ops.len()
         );
     }
@@ -736,9 +840,11 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
         plan.meta.streams,
     );
     println!(
-        "  schema:             v{} ({} scheduling nodes w/ deps + lanes)",
+        "  schema:             v{} ({} scheduling nodes w/ deps + lanes \
+         + devices; {} replica(s))",
         plan.meta.version,
-        plan.nodes.len()
+        plan.nodes.len(),
+        plan.meta.replicas
     );
     println!(
         "  steps:              {} ({} co-execution groups)",

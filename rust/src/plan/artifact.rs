@@ -9,12 +9,16 @@
 //! the in-memory plan. Workspace sizes, per-SM quotas, and fluid estimates
 //! are recorded as provenance/diagnostics only.
 //!
-//! Schema v2 records two views of the same schedule: the ordered `steps`
+//! Schema v3 records two views of the same schedule: the ordered `steps`
 //! (the barrier replay's authority) and the `nodes` scheduling graph —
-//! per-op dependency edges and stream-lane assignments in dispatch-
-//! priority order — which the event-driven executor launches from. The
-//! views are cross-validated at execute time so a hand-edited plan cannot
-//! silently diverge.
+//! per-op dependency edges, stream-lane assignments, and device
+//! assignments in dispatch-priority order — which the event-driven
+//! executor launches from. The views are cross-validated at execute time
+//! so a hand-edited plan cannot silently diverge, and the document
+//! carries a self-`digest` the reader verifies before anything else
+//! trusts it. Multi-GPU data-parallel plans (built by
+//! `cluster::DevicePool`) record the replica count and include the
+//! per-parameter `GradReduce` interconnect ops among their nodes.
 
 use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
 use crate::coordinator::{
@@ -29,11 +33,14 @@ use crate::util::digest::{hex16, parse_hex16, Fnv64};
 
 use super::json::{escape, JsonValue};
 
-/// Version tag of the plan JSON layout. Version 2 added the `nodes` array
-/// — per-op dependency edges and stream-lane assignments — which the
-/// event-driven executor schedules from; version-1 plans (ordered groups
-/// only) are refused with [`PlanError::UnsupportedVersion`].
-pub const PLAN_FORMAT_VERSION: u32 = 2;
+/// Version tag of the plan JSON layout. Version 3 added per-node device
+/// assignments and the `replicas` count (multi-GPU data-parallel plans
+/// whose `nodes` include `GradReduce` ops), plus a self-`digest` field
+/// the reader verifies; version 2 added the `nodes` array — per-op
+/// dependency edges and stream-lane assignments — which the event-driven
+/// executor schedules from. Version-1 and version-2 plans are refused
+/// with [`PlanError::UnsupportedVersion`].
+pub const PLAN_FORMAT_VERSION: u32 = 3;
 
 /// Errors from plan execution or deserialization.
 #[derive(Clone, Debug, PartialEq, thiserror::Error)]
@@ -57,13 +64,25 @@ pub enum PlanError {
     Unsupported { algo: Algorithm, op: usize },
     #[error(
         "unsupported plan schema version {found}: this build reads \
-         version 2 (v2 plans record dependency edges and stream lanes \
-         for the event-driven executor; earlier layouts do not) — \
+         version 3 (v3 plans record per-node device assignments and \
+         gradient-reduce ops for multi-GPU replay, and carry a verified \
+         digest; v2 and earlier layouts do not) — \
          regenerate the plan with `parconv plan`"
     )]
     UnsupportedVersion { found: u32 },
     #[error("plan nodes disagree with the plan steps or DAG: {0}")]
     NodeMismatch(String),
+    #[error(
+        "unknown plan field {0:?} — hand-edited or foreign plan documents \
+         are refused; regenerate with `parconv plan`"
+    )]
+    UnknownField(String),
+    #[error(
+        "plan digest mismatch: document says {expected:016x} but its \
+         content hashes to {got:016x} — the plan was modified after it \
+         was written"
+    )]
+    DigestMismatch { expected: u64, got: u64 },
     #[error("malformed plan JSON: {0}")]
     Parse(String),
 }
@@ -94,6 +113,10 @@ pub struct PlanMeta {
     pub streams: usize,
     pub workspace_limit: u64,
     pub priority: PriorityPolicy,
+    /// Data-parallel replica count the plan was built for: the number of
+    /// devices its DAG spans (1 for single-GPU plans). The executor
+    /// instantiates one engine per replica.
+    pub replicas: usize,
     /// Workspace fallbacks already taken at plan time (budget fitting).
     pub planned_ws_fallbacks: u64,
     /// Selector invocations spent building the plan (diagnostics: replay
@@ -138,8 +161,8 @@ pub enum PlanStep {
     Group(GroupPlan),
 }
 
-/// One op in the plan's scheduling graph (schema v2): its dependency
-/// edges and planned stream lane. The node *order* is the planner's
+/// One op in the plan's scheduling graph (schema v3): its dependency
+/// edges, planned stream lane, and device. The node *order* is the planner's
 /// dispatch order (critical-path priority), which the event-driven
 /// executor uses as its ready-queue ranking; the `steps` sequence remains
 /// the barrier replay's authority and the two are cross-validated at
@@ -149,8 +172,13 @@ pub struct PlanNode {
     /// Op id in the source DAG.
     pub op: usize,
     /// Planned stream lane (the member index within its co-execution
-    /// group); `None` for ops on the serial host lane.
+    /// group); `None` for ops on the serial host lane or the
+    /// interconnect lane.
     pub lane: Option<usize>,
+    /// Device the op is assigned to (schema v3; 0 for single-GPU plans
+    /// and for interconnect ops, which the executor routes by kind).
+    /// Validated against the DAG's device map on replay.
+    pub device: usize,
     /// Ops that must complete before this one launches (the DAG's
     /// predecessor edges — recorded so a plan is schedulable without
     /// re-deriving the graph, and validated against the DAG on replay).
@@ -164,9 +192,9 @@ pub struct PlanNode {
 pub struct Plan {
     pub meta: PlanMeta,
     pub steps: Vec<PlanStep>,
-    /// Scheduling graph (v2): dependency edges + lane assignments per op,
-    /// in dispatch-priority order. The event-driven executor schedules
-    /// from this; the barrier replay ignores it.
+    /// Scheduling graph (v3): dependency edges + lane and device
+    /// assignments per op, in dispatch-priority order. The event-driven
+    /// executor schedules from this; the barrier replay ignores it.
     pub nodes: Vec<PlanNode>,
     /// Analytic makespan estimate (fluid model; the executed makespan is
     /// the ground truth).
@@ -195,6 +223,19 @@ pub fn dag_digest(dag: &Dag) -> u64 {
                     h.write_usize(v);
                 }
             }
+            OpKind::GradReduce {
+                bytes,
+                replicas,
+                link_latency_us,
+                link_gb_per_s,
+            } => {
+                // explicit fields: the wire-bytes summary would collapse
+                // distinct (bytes, replicas, link) combinations
+                h.write_u64(*bytes);
+                h.write_usize(*replicas);
+                h.write_f64(*link_latency_us);
+                h.write_f64(*link_gb_per_s);
+            }
             kind => {
                 h.write_f64(kind.flops());
                 h.write_f64(kind.dram_bytes());
@@ -206,6 +247,11 @@ pub fn dag_digest(dag: &Dag) -> u64 {
         for &s in dag.succs(i) {
             h.write_usize(s);
         }
+    }
+    // device map: two DAGs with the same structure but different replica
+    // assignments are different scheduling problems
+    for i in 0..dag.len() {
+        h.write_usize(dag.device_of(i));
     }
     h.finish()
 }
@@ -268,6 +314,7 @@ impl Plan {
         h.write_usize(m.streams);
         h.write_u64(m.workspace_limit);
         h.write_str(m.priority.name());
+        h.write_usize(m.replicas);
         h.write_u64(m.planned_ws_fallbacks);
         h.write_f64(self.predicted_makespan_us);
         for step in &self.steps {
@@ -298,6 +345,7 @@ impl Plan {
             h.write_usize(n.op);
             // lane None/Some(l) encoded as 0 / l+1
             h.write_usize(n.lane.map_or(0, |l| l + 1));
+            h.write_usize(n.device);
             h.write_usize(n.deps.len());
             for &d in &n.deps {
                 h.write_usize(d);
@@ -388,6 +436,13 @@ impl Plan {
     /// silently diverge.
     pub(crate) fn validate_nodes(&self, dag: &Dag) -> Result<(), PlanError> {
         let n = dag.len();
+        if self.meta.replicas != dag.num_devices() {
+            return Err(PlanError::NodeMismatch(format!(
+                "plan built for {} replicas, DAG spans {} devices",
+                self.meta.replicas,
+                dag.num_devices()
+            )));
+        }
         let mut flat: Vec<(usize, Option<usize>)> = Vec::with_capacity(n);
         for step in &self.steps {
             match step {
@@ -415,6 +470,15 @@ impl Plan {
                 return Err(PlanError::NodeMismatch(format!(
                     "node for op {} disagrees with the step sequence",
                     node.op
+                )));
+            }
+            if node.device != dag.device_of(node.op) {
+                return Err(PlanError::NodeMismatch(format!(
+                    "op {} assigned to device {} but the DAG places it \
+                     on device {}",
+                    node.op,
+                    node.device,
+                    dag.device_of(node.op)
                 )));
             }
             if seen[node.op] {
@@ -464,6 +528,7 @@ impl Plan {
         let mut ws_fallbacks = self.meta.planned_ws_fallbacks;
         let mut rounds = 0u64;
         let mut conv_overlap_us = 0.0f64;
+        let mut comm_us = 0.0f64;
         // Integrity: every step's op must exist and be scheduled exactly
         // once — a hand-edited plan whose digests still match must fail
         // loudly here, not return a silently truncated timeline.
@@ -487,6 +552,11 @@ impl Plan {
                     check_op(*op)?;
                     let kind = &dag.ops[*op].kind;
                     let dur = non_conv_time_us(kind, spec);
+                    if kind.is_grad_reduce() {
+                        // the barrier replay serializes reductions with
+                        // everything else — it IS the serial tail
+                        comm_us += dur;
+                    }
                     ops.push(OpExec {
                         op_id: *op,
                         name: dag.ops[*op].name.clone(),
@@ -496,6 +566,7 @@ impl Plan {
                         end_us: clock + dur,
                         workspace_bytes: 0,
                         stream: None,
+                        device: dag.device_of(*op),
                     });
                     clock += dur;
                 }
@@ -562,6 +633,7 @@ impl Plan {
                             end_us: clock + rec.end_us,
                             workspace_bytes: desc.workspace_bytes,
                             stream: Some(i),
+                            device: dag.device_of(m.op),
                         });
                     }
                     conv_overlap_us += sim.overlap_us();
@@ -585,6 +657,7 @@ impl Plan {
             ws_fallbacks,
             rounds,
             conv_overlap_us,
+            comm_us,
         })
     }
 
@@ -625,6 +698,7 @@ impl Plan {
             m.workspace_limit
         ));
         s.push_str(&format!("  \"priority\": \"{}\",\n", m.priority.name()));
+        s.push_str(&format!("  \"replicas\": {},\n", m.replicas));
         s.push_str(&format!(
             "  \"planned_ws_fallbacks\": {},\n",
             m.planned_ws_fallbacks
@@ -680,25 +754,70 @@ impl Plan {
                 n.deps.iter().map(|d| d.to_string()).collect();
             match n.lane {
                 Some(lane) => s.push_str(&format!(
-                    "    {{\"op\": {}, \"lane\": {}, \"deps\": [{}]}}{sep}\n",
+                    "    {{\"op\": {}, \"lane\": {}, \"device\": {}, \
+                     \"deps\": [{}]}}{sep}\n",
                     n.op,
                     lane,
+                    n.device,
                     deps.join(", ")
                 )),
                 None => s.push_str(&format!(
-                    "    {{\"op\": {}, \"deps\": [{}]}}{sep}\n",
+                    "    {{\"op\": {}, \"device\": {}, \
+                     \"deps\": [{}]}}{sep}\n",
                     n.op,
+                    n.device,
                     deps.join(", ")
                 )),
             }
         }
-        s.push_str("  ]\n}\n");
+        s.push_str("  ],\n");
+        // self-checksum, written last and verified on read: covers the
+        // whole decision content (meta + steps + nodes), so any
+        // post-write tampering is refused with `DigestMismatch`
+        s.push_str(&format!("  \"digest\": \"{}\"\n", hex16(self.digest())));
+        s.push_str("}\n");
         s
     }
 
     /// Deserialize a plan written by [`Plan::to_json`].
+    ///
+    /// The reader is strict: unknown fields — top-level or nested inside
+    /// steps, groups, members, and nodes — are refused
+    /// ([`PlanError::UnknownField`]), pre-v3 layouts are refused
+    /// ([`PlanError::UnsupportedVersion`]), and the document's `digest`
+    /// field is recomputed over the parsed content and must match
+    /// ([`PlanError::DigestMismatch`]) — a truncated, hand-edited, or
+    /// bit-rotted plan fails with a typed error, never a panic or a
+    /// silently different schedule.
     pub fn from_json(text: &str) -> Result<Plan, PlanError> {
         let v = JsonValue::parse(text).map_err(PlanError::Parse)?;
+        const KNOWN_FIELDS: &[&str] = &[
+            "version",
+            "label",
+            "device",
+            "batch",
+            "ops",
+            "dag_digest",
+            "spec_digest",
+            "config_digest",
+            "policy",
+            "partition",
+            "streams",
+            "workspace_limit",
+            "priority",
+            "replicas",
+            "planned_ws_fallbacks",
+            "selector_calls",
+            "predicted_makespan_us",
+            "steps",
+            "nodes",
+            "digest",
+        ];
+        for key in v.keys() {
+            if !KNOWN_FIELDS.contains(&key) {
+                return Err(PlanError::UnknownField(key.to_string()));
+            }
+        }
         let field = |key: &str| {
             v.get(key).ok_or_else(|| {
                 PlanError::Parse(format!("missing field {key:?}"))
@@ -718,11 +837,11 @@ impl Plan {
         };
 
         let version = u64_field("version")? as u32;
-        if version == 1 {
-            // v1 plans recorded ordered groups only — no dependency edges
-            // or lane assignments for the event-driven executor to
-            // schedule from. A dedicated error (rather than a generic
-            // parse failure) tells the operator exactly what to do.
+        if version == 1 || version == 2 {
+            // v1 plans recorded ordered groups only; v2 plans lack device
+            // assignments, the replica count, and the verified digest. A
+            // dedicated error (rather than a generic parse failure) tells
+            // the operator exactly what to do.
             return Err(PlanError::UnsupportedVersion { found: version });
         }
         if version != PLAN_FORMAT_VERSION {
@@ -751,6 +870,7 @@ impl Plan {
             streams: u64_field("streams")? as usize,
             workspace_limit: u64_field("workspace_limit")?,
             priority,
+            replicas: (u64_field("replicas")? as usize).max(1),
             planned_ws_fallbacks: u64_field("planned_ws_fallbacks")?,
             selector_calls: u64_field("selector_calls")?,
         };
@@ -761,6 +881,7 @@ impl Plan {
         for step in
             field("steps")?.as_arr().ok_or_else(|| bad("steps"))?
         {
+            reject_unknown(step, &["host", "group"])?;
             if let Some(op) = step.get("host") {
                 steps.push(PlanStep::Host {
                     op: op.as_usize().ok_or_else(|| bad("host"))?,
@@ -775,6 +896,7 @@ impl Plan {
         }
         let mut nodes = Vec::new();
         for nv in field("nodes")?.as_arr().ok_or_else(|| bad("nodes"))? {
+            reject_unknown(nv, &["op", "lane", "device", "deps"])?;
             let op = nv
                 .get("op")
                 .and_then(JsonValue::as_usize)
@@ -783,6 +905,12 @@ impl Plan {
                 None => None,
                 Some(v) => Some(v.as_usize().ok_or_else(|| bad("nodes"))?),
             };
+            // device is mandatory in v3: a deleted assignment must fail
+            // loudly, not silently default to device 0
+            let device = nv
+                .get("device")
+                .and_then(JsonValue::as_usize)
+                .ok_or_else(|| bad("nodes"))?;
             let mut deps = Vec::new();
             for d in nv
                 .get("deps")
@@ -791,21 +919,49 @@ impl Plan {
             {
                 deps.push(d.as_usize().ok_or_else(|| bad("nodes"))?);
             }
-            nodes.push(PlanNode { op, lane, deps });
+            nodes.push(PlanNode {
+                op,
+                lane,
+                device,
+                deps,
+            });
         }
-        Ok(Plan {
+        let plan = Plan {
             meta,
             steps,
             nodes,
             predicted_makespan_us,
-        })
+        };
+        let expected = digest_field("digest")?;
+        let got = plan.digest();
+        if got != expected {
+            return Err(PlanError::DigestMismatch { expected, got });
+        }
+        Ok(plan)
     }
+}
+
+/// Refuse unknown keys in a nested plan object: the self-digest covers
+/// only the *parsed* decision content, so stray fields (which parsing
+/// would otherwise ignore) must be rejected here or a hand-edited
+/// document could carry them undetected.
+fn reject_unknown(
+    v: &JsonValue,
+    known: &[&str],
+) -> Result<(), PlanError> {
+    for key in v.keys() {
+        if !known.contains(&key) {
+            return Err(PlanError::UnknownField(key.to_string()));
+        }
+    }
+    Ok(())
 }
 
 fn parse_group(g: &JsonValue) -> Result<GroupPlan, PlanError> {
     let bad = |key: &str| {
         PlanError::Parse(format!("malformed group field {key:?}"))
     };
+    reject_unknown(g, &["partition", "est_us", "quotas", "members"])?;
     let partition = PartitionMode::parse(
         g.get("partition")
             .and_then(JsonValue::as_str)
@@ -830,6 +986,7 @@ fn parse_group(g: &JsonValue) -> Result<GroupPlan, PlanError> {
         .and_then(JsonValue::as_arr)
         .ok_or_else(|| bad("members"))?
     {
+        reject_unknown(m, &["op", "algo", "workspace"])?;
         let algo = Algorithm::parse(
             m.get("algo")
                 .and_then(JsonValue::as_str)

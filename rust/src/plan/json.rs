@@ -79,6 +79,18 @@ impl JsonValue {
             _ => None,
         }
     }
+
+    /// Object keys in document order (empty for non-objects). The plan
+    /// reader uses this to refuse unknown fields instead of silently
+    /// ignoring them.
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            JsonValue::Obj(fields) => {
+                fields.iter().map(|(k, _)| k.as_str()).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
 }
 
 /// Escape a string for embedding in JSON (quotes not included).

@@ -82,6 +82,7 @@ impl Planner {
         let mut planned_ws_fallbacks = 0u64;
         let mut done = vec![false; dag.len()];
 
+        let ndev = dag.num_devices();
         while !ready.is_empty() {
             // Partition the ready set into convs and cheap ops.
             let round: Vec<usize> = ready.drain(..).collect();
@@ -96,6 +97,7 @@ impl Planner {
                         nodes.push(PlanNode {
                             op: id,
                             lane: None,
+                            device: dag.device_of(id),
                             deps: dag.preds(id).to_vec(),
                         });
                         predicted += non_conv_time_us(kind, &self.spec);
@@ -113,22 +115,34 @@ impl Planner {
                         .then(a.cmp(&b))
                 });
             }
-            let mut pending: VecDeque<usize> = convs.into();
-            while !pending.is_empty() {
-                let g = self.plan_batch(
-                    dag,
-                    &mut pending,
-                    &mut planned_ws_fallbacks,
-                );
-                predicted += g.est_us;
-                for (lane, m) in g.members.iter().enumerate() {
-                    nodes.push(PlanNode {
-                        op: m.op,
-                        lane: Some(lane),
-                        deps: dag.preds(m.op).to_vec(),
-                    });
+            // Replica-aware packing: a co-execution group shares one
+            // device's SMs, so ready convs are packed per device
+            // (ascending device id, priority order preserved within each
+            // device). Single-device DAGs take the one-queue path
+            // unchanged.
+            let mut by_dev: Vec<VecDeque<usize>> =
+                vec![VecDeque::new(); ndev];
+            for id in convs {
+                by_dev[dag.device_of(id)].push_back(id);
+            }
+            for mut pending in by_dev {
+                while !pending.is_empty() {
+                    let g = self.plan_batch(
+                        dag,
+                        &mut pending,
+                        &mut planned_ws_fallbacks,
+                    );
+                    predicted += g.est_us;
+                    for (lane, m) in g.members.iter().enumerate() {
+                        nodes.push(PlanNode {
+                            op: m.op,
+                            lane: Some(lane),
+                            device: dag.device_of(m.op),
+                            deps: dag.preds(m.op).to_vec(),
+                        });
+                    }
+                    steps.push(PlanStep::Group(g));
                 }
-                steps.push(PlanStep::Group(g));
             }
 
             // Mark round done, release successors.
@@ -169,6 +183,7 @@ impl Planner {
                 streams: self.cfg.streams,
                 workspace_limit: self.cfg.workspace_limit,
                 priority: self.cfg.priority,
+                replicas: ndev,
                 planned_ws_fallbacks,
                 selector_calls: selector_invocations()
                     .wrapping_sub(selector_before),
@@ -479,6 +494,54 @@ mod tests {
             preds.sort_unstable();
             assert_eq!(deps, preds, "op {op} dependency edges");
         }
+    }
+
+    #[test]
+    fn replica_aware_packing_never_groups_across_devices() {
+        use crate::cluster::{
+            data_parallel_dag, reduce_sites, ClusterConfig,
+        };
+        use crate::graph::training_dag;
+        let fwd = Network::GoogleNet.build(4);
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        let dag = data_parallel_dag(
+            &train,
+            &sites,
+            &ClusterConfig {
+                replicas: 2,
+                ..Default::default()
+            },
+        );
+        let plan = planner(4).plan(&dag, "dp2");
+        assert_eq!(plan.meta.replicas, 2);
+        // a co-execution group shares one device's SMs: members must
+        // never span devices
+        for step in &plan.steps {
+            if let PlanStep::Group(g) = step {
+                let d0 = dag.device_of(g.members[0].op);
+                for m in &g.members {
+                    assert_eq!(
+                        dag.device_of(m.op),
+                        d0,
+                        "group spans devices"
+                    );
+                }
+            }
+        }
+        // nodes record the DAG's device assignments, and the reduce ops
+        // appear among them as host-lane (lane-less) nodes
+        assert_eq!(plan.nodes.len(), dag.len());
+        for node in &plan.nodes {
+            assert_eq!(node.device, dag.device_of(node.op));
+            if dag.ops[node.op].kind.is_grad_reduce() {
+                assert_eq!(node.lane, None);
+            }
+        }
+        assert!(plan
+            .nodes
+            .iter()
+            .any(|n| dag.ops[n.op].kind.is_grad_reduce()));
     }
 
     #[test]

@@ -50,58 +50,95 @@ pub fn chrome_trace_json(result: &SimResult) -> String {
 }
 
 /// Serialize a whole-DAG schedule (the op-level event log) as a Chrome
-/// trace-event JSON document: one track ("tid") per stream lane, ops on
-/// the serial host lane on track 0, convolutions on track `lane + 1`.
-/// Thread-name metadata events label the tracks, and each op's algorithm
-/// and workspace ride along in `args`.
+/// trace-event JSON document: one *process* ("pid") per device plus, for
+/// multi-GPU schedules, an `interconnect` process carrying the gradient
+/// reductions. Within each device, ops on the serial host lane sit on
+/// track 0 and convolutions on track `lane + 1`. Process- and
+/// thread-name metadata events label everything, and each op's
+/// algorithm, workspace, and device ride along in `args`.
 pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
     let mut out = String::from("{\"traceEvents\":[");
-    // track-name metadata: host + every lane observed
+    // track-name metadata: every device's host + every lane observed,
+    // plus the interconnect when reductions are present
     let mut max_lane: Option<usize> = None;
+    let mut max_device = 0usize;
+    let mut has_comm = false;
     for o in &result.ops {
         if let Some(l) = o.stream {
             max_lane = Some(max_lane.map_or(l, |m: usize| m.max(l)));
         }
+        max_device = max_device.max(o.device);
+        has_comm |= o.kind == "grad_reduce";
     }
-    out.push_str(
-        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
-         \"args\":{\"name\":\"host\"}}",
-    );
-    if let Some(m) = max_lane {
-        for lane in 0..=m {
-            out.push_str(&format!(
-                ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\
-                 \"tid\":{},\"args\":{{\"name\":\"stream {lane}\"}}}}",
-                lane + 1
-            ));
+    let comm_pid = max_device + 1;
+    for d in 0..=max_device {
+        if d > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{d},\
+             \"tid\":0,\"args\":{{\"name\":\"gpu {d}\"}}}}"
+        ));
+        out.push_str(&format!(
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{d},\
+             \"tid\":0,\"args\":{{\"name\":\"host\"}}}}"
+        ));
+        if let Some(m) = max_lane {
+            for lane in 0..=m {
+                out.push_str(&format!(
+                    ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{d},\
+                     \"tid\":{},\"args\":{{\"name\":\"stream {lane}\"}}}}",
+                    lane + 1
+                ));
+            }
         }
     }
+    if has_comm {
+        out.push_str(&format!(
+            ",{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{comm_pid},\
+             \"tid\":0,\"args\":{{\"name\":\"interconnect\"}}}}"
+        ));
+        out.push_str(&format!(
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{comm_pid},\
+             \"tid\":0,\"args\":{{\"name\":\"ring\"}}}}"
+        ));
+    }
     for o in &result.ops {
-        // the host-track metadata event always precedes, so every op
-        // record is comma-separated
+        // metadata events always precede, so every op record is
+        // comma-separated
         out.push(',');
-        let tid = o.stream.map_or(0, |l| l + 1);
+        let (pid, tid) = if o.kind == "grad_reduce" {
+            (comm_pid, 0)
+        } else {
+            (o.device, o.stream.map_or(0, |l| l + 1))
+        };
         let algo = o
             .algo
             .map_or(String::from("-"), |a| a.name().to_string());
         out.push_str(&format!(
             "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\
-             \"dur\":{:.3},\"pid\":0,\"tid\":{},\"args\":{{\"op\":{},\
-             \"algo\":\"{}\",\"workspace\":{}}}}}",
+             \"dur\":{:.3},\"pid\":{},\"tid\":{},\"args\":{{\"op\":{},\
+             \"algo\":\"{}\",\"workspace\":{},\"device\":{}}}}}",
             json_escape(&o.name),
             o.kind,
             o.start_us,
             o.end_us - o.start_us,
+            pid,
             tid,
             o.op_id,
             json_escape(&algo),
-            o.workspace_bytes
+            o.workspace_bytes,
+            o.device
         ));
     }
     out.push_str(&format!(
         "],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"makespan_us\":{:.3},\
-         \"conv_overlap_us\":{:.3},\"peak_workspace\":{}}}}}",
-        result.makespan_us, result.conv_overlap_us, result.peak_workspace
+         \"conv_overlap_us\":{:.3},\"peak_workspace\":{},\
+         \"comm_us\":{:.3}}}}}",
+        result.makespan_us,
+        result.conv_overlap_us,
+        result.peak_workspace,
+        result.comm_us
     ));
     out
 }
@@ -151,11 +188,45 @@ mod tests {
         let json = schedule_chrome_trace_json(&r);
         assert!(json.starts_with("{\"traceEvents\":["));
         assert!(json.contains("\"thread_name\""), "track metadata");
+        assert!(json.contains("\"name\":\"gpu 0\""), "device process");
         assert!(json.contains("\"name\":\"host\""), "host track");
         assert!(json.contains("\"name\":\"stream 0\""), "stream track");
         assert!(json.contains("\"ph\":\"X\""));
         assert!(json.contains("conv_overlap_us"));
         assert!(json.contains("peak_workspace"));
+        assert!(
+            !json.contains("interconnect"),
+            "single-GPU schedules have no comm track"
+        );
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn multi_gpu_trace_has_per_device_and_interconnect_tracks() {
+        use crate::cluster::{ClusterConfig, DevicePool, LinkModel};
+        use crate::coordinator::ScheduleConfig;
+        use crate::graph::Network;
+        let pool = DevicePool::new(
+            DeviceSpec::k40(),
+            ScheduleConfig::default(),
+            ClusterConfig {
+                replicas: 2,
+                link: LinkModel::pcie3(),
+                overlap: true,
+            },
+        );
+        let r = pool.run_training(&Network::GoogleNet.build(4));
+        let json = schedule_chrome_trace_json(&r);
+        assert!(json.contains("\"name\":\"gpu 0\""));
+        assert!(json.contains("\"name\":\"gpu 1\""));
+        assert!(json.contains("\"name\":\"interconnect\""));
+        assert!(json.contains("\"name\":\"ring\""));
+        assert!(json.contains("\"cat\":\"grad_reduce\""));
+        assert!(json.contains("\"comm_us\""));
+        // reduce ops land on the interconnect pid, one past the devices
+        assert!(json.contains("\"pid\":2"));
         let opens = json.matches('{').count();
         let closes = json.matches('}').count();
         assert_eq!(opens, closes);

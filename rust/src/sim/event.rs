@@ -13,10 +13,13 @@ use std::collections::BinaryHeap;
 /// An op-level event.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub(crate) enum SimEvent {
-    /// A bandwidth-bound non-convolution op finished on the host lane.
-    /// `start` is carried along so the timeline record needs no side
-    /// lookup.
+    /// A bandwidth-bound non-convolution op finished on its device's
+    /// host lane. `start` is carried along so the timeline record needs
+    /// no side lookup.
     HostDone { op: usize, start: f64 },
+    /// A gradient reduction finished on the interconnect lane (one
+    /// collective at a time on the ring, NCCL-style).
+    CommDone { op: usize, start: f64 },
 }
 
 #[derive(Debug)]

@@ -1,27 +1,47 @@
 //! The event-driven plan executor.
 //!
-//! Replays a `plan::Plan` against one continuous [`Engine`] instead of the
-//! barrier path's one-fresh-engine-per-group: ops launch the moment their
-//! recorded dependency edges resolve on a free stream lane, and an
-//! op-completion event immediately frees the op's SM quota and workspace
-//! and admits the next ready op into the running mix (the engine re-plans
-//! per-SM quotas for the new mix through the existing `plan_intra_sm`
-//! dispatch path).
+//! Replays a `plan::Plan` against one continuous [`Engine`] *per device*
+//! instead of the barrier path's one-fresh-engine-per-group: ops launch
+//! the moment their recorded dependency edges resolve on a free stream
+//! lane of their device, and an op-completion event immediately frees the
+//! op's SM quota and workspace and admits the next ready op into that
+//! device's running mix (the engine re-plans per-SM quotas for the new
+//! mix through the existing `plan_intra_sm` dispatch path).
 //!
-//! Mid-flight joins are profit-gated exactly like offline group admission:
-//! a ready convolution joins a non-empty mix only when the fluid estimate
-//! over the mix's *remaining* work says co-running beats serializing by
-//! the planner's own margin. A join evaluated at full remaining work is
-//! therefore the planner's group-admission decision verbatim — planned
-//! groups re-form on their own, and extra joins happen only where the
-//! barrier was provably leaving time on the table. Non-profile-guided
-//! policies admit freely, mirroring their unconditional k-wide chunking
-//! in the barrier path.
+//! Multi-device plans (schema v3, built by `cluster::DevicePool`) add two
+//! things on top of the single-GPU machinery:
+//!
+//! - every device owns its own engine, stream lanes, host lane, and
+//!   workspace allocator — replicas never contend for each other's SMs or
+//!   memory, only for the interconnect;
+//! - `GradReduce` ops run on a single shared **interconnect lane** (one
+//!   collective at a time on the ring, NCCL-style). Their dependency
+//!   edges are the per-replica gradient producers, so a reduction
+//!   launches the moment the last replica's weight gradient resolves —
+//!   overlapping communication with the rest of the backward pass. The
+//!   executor merges all engines' kernel events and the op-level event
+//!   queue in global time order, so a reduce starts at its gradient's
+//!   true completion time even while another device's simulation is
+//!   mid-flight.
+//!
+//! Single-device plans take exactly the pre-cluster code path (one
+//! engine, an always-empty comm lane), keeping their timelines
+//! bit-identical — `rust/tests/cluster_scaling.rs` pins this.
+//!
+//! Mid-flight joins are profit-gated exactly like offline group
+//! admission: a ready convolution joins a non-empty mix only when the
+//! fluid estimate over the mix's *remaining* work says co-running beats
+//! serializing by the planner's own margin. A join evaluated at full
+//! remaining work is therefore the planner's group-admission decision
+//! verbatim — planned groups re-form on their own, and extra joins happen
+//! only where the barrier was provably leaving time on the table.
+//! Non-profile-guided policies admit freely, mirroring their
+//! unconditional k-wide chunking in the barrier path.
 //!
 //! Workspace lifetime follows execution, not group boundaries: allocation
 //! at launch, release at the completion event, so `DeviceMemory::peak()`
-//! reports the true concurrent high-watermark. A refused allocation
-//! degrades gracefully — the op waits for the mix to drain (solo
+//! is a true per-device concurrent high-watermark. A refused allocation
+//! degrades gracefully — the op waits for its device's mix to drain (solo
 //! execution) and, if still refused standing alone (failure injection),
 //! falls back to the workspace-free GEMM kernel; an op is never aborted.
 
@@ -58,103 +78,137 @@ struct EventRun<'a> {
     dag: &'a Dag,
     spec: &'a DeviceSpec,
     policy: SelectionPolicy,
-    engine: Engine,
-    lanes: Lanes,
+    /// One engine per device (index = device id).
+    engines: Vec<Engine>,
+    /// Per-device stream lanes.
+    lanes: Vec<Lanes>,
     events: EventQueue,
-    mem: DeviceMemory,
-    /// Recorded algorithm decision per convolution op (None = host op).
+    /// Per-device workspace allocators (replicas do not share memory).
+    mems: Vec<DeviceMemory>,
+    /// Recorded algorithm decision per convolution op (None = host/comm).
     decision: Vec<Option<KernelDesc>>,
     /// Priority: position in the plan's node order (the planner's
     /// critical-path dispatch order).
     rank: Vec<usize>,
     /// Planned stream lane per op (advisory; a busy hint falls back to the
-    /// lowest free lane).
+    /// lowest free lane of the op's device).
     lane_hint: Vec<Option<usize>>,
     indeg: Vec<usize>,
-    /// Ready queues, kept sorted by ascending rank.
-    conv_ready: Vec<usize>,
-    host_ready: Vec<usize>,
-    /// Bookkeeping per engine kernel id (dense: ids are assigned in
-    /// injection order).
-    running: Vec<Option<RunInfo>>,
+    /// Per-device ready queues, kept sorted by ascending rank.
+    conv_ready: Vec<Vec<usize>>,
+    host_ready: Vec<Vec<usize>>,
+    /// Interconnect queue (global): gradient reductions awaiting the ring.
+    comm_ready: Vec<usize>,
+    /// Bookkeeping per device per engine kernel id (dense: each engine
+    /// assigns ids in its own injection order).
+    running: Vec<Vec<Option<RunInfo>>>,
     ops_out: Vec<OpExec>,
-    host_busy: bool,
+    host_busy: Vec<bool>,
+    comm_busy: bool,
     clock: f64,
     rounds: u64,
     ws_fallbacks: u64,
+    comm_us: f64,
 }
 
 impl<'a> EventRun<'a> {
-    /// Merge engine (kernel) and op-level events in global time order
-    /// until both sources run dry.
+    /// Merge every engine's kernel events and the op-level queue in
+    /// global time order until all sources run dry.
     fn drive(&mut self) {
         loop {
-            let te = self.engine.next_event_time();
+            // earliest pending kernel event across devices (ties break to
+            // the lowest device id — deterministic)
+            let mut eng: Option<(f64, usize)> = None;
+            for (d, e) in self.engines.iter().enumerate() {
+                if let Some(t) = e.next_event_time() {
+                    if eng.map_or(true, |(bt, _)| t < bt) {
+                        eng = Some((t, d));
+                    }
+                }
+            }
             let th = self.events.peek_time();
-            let advance_engine = match (te, th) {
+            let advance_engine = match (eng, th) {
                 (None, None) => break,
                 (Some(_), None) => true,
                 (None, Some(_)) => false,
-                (Some(engine_t), Some(host_t)) => engine_t <= host_t,
+                (Some((engine_t, _)), Some(host_t)) => engine_t <= host_t,
             };
             if advance_engine {
-                let bound = th.unwrap_or(f64::INFINITY);
-                let done = self.engine.step_until(bound);
-                if done.is_empty() {
-                    if th.is_none() {
-                        // engine drained without a completion and no host
-                        // event pending: re-evaluate (likely finished)
-                        continue;
-                    }
-                    // no kernel completion at or before the host event:
-                    // the host event is globally next
-                    self.pop_host();
-                } else {
-                    let t = self.engine.now();
-                    self.clock = self.clock.max(t);
-                    for kid in done {
-                        self.complete_conv(kid, t);
+                let (_, d) = eng.expect("engine event pending");
+                // Bound the step by the next op-level event AND the next
+                // event of any other engine, so completions are processed
+                // in global time order: a reduce must start at its
+                // gradient's true completion time, not after another
+                // device's simulation has run ahead of it.
+                let mut bound = th.unwrap_or(f64::INFINITY);
+                for (o, e) in self.engines.iter().enumerate() {
+                    if o != d {
+                        if let Some(t) = e.next_event_time() {
+                            bound = bound.min(t);
+                        }
                     }
                 }
+                let done = self.engines[d].step_until(bound);
+                if done.is_empty() {
+                    // only internal (non-completion) events were due up to
+                    // the bound; re-evaluate the globally earliest source
+                    continue;
+                }
+                let t = self.engines[d].now();
+                self.clock = self.clock.max(t);
+                for kid in done {
+                    self.complete_conv(d, kid, t);
+                }
             } else {
-                self.pop_host();
+                self.pop_op_event();
             }
             self.admit_ready();
         }
     }
 
-    fn pop_host(&mut self) {
-        if let Some((t, SimEvent::HostDone { op, start })) = self.events.pop()
-        {
-            self.clock = self.clock.max(t);
-            self.host_busy = false;
-            let dag = self.dag;
-            self.ops_out.push(OpExec {
-                op_id: op,
-                name: dag.ops[op].name.clone(),
-                kind: dag.ops[op].kind.kind_name(),
-                algo: None,
-                start_us: start,
-                end_us: t,
-                workspace_bytes: 0,
-                stream: None,
-            });
-            self.finish_op(op);
-        }
+    fn pop_op_event(&mut self) {
+        let Some((t, ev)) = self.events.pop() else { return };
+        self.clock = self.clock.max(t);
+        let (op, start) = match ev {
+            SimEvent::HostDone { op, start } => {
+                let d = self.dag.device_of(op);
+                self.host_busy[d] = false;
+                (op, start)
+            }
+            SimEvent::CommDone { op, start } => {
+                self.comm_busy = false;
+                self.comm_us += t - start;
+                (op, start)
+            }
+        };
+        let dag = self.dag;
+        self.ops_out.push(OpExec {
+            op_id: op,
+            name: dag.ops[op].name.clone(),
+            kind: dag.ops[op].kind.kind_name(),
+            algo: None,
+            start_us: start,
+            end_us: t,
+            workspace_bytes: 0,
+            stream: None,
+            device: dag.device_of(op),
+        });
+        self.finish_op(op);
     }
 
-    fn complete_conv(&mut self, kid: KernelId, t: f64) {
-        let info = self.running[kid].take().expect("kernel bookkeeping");
-        let released = self.lanes.release(kid);
+    fn complete_conv(&mut self, device: usize, kid: KernelId, t: f64) {
+        let info =
+            self.running[device][kid].take().expect("kernel bookkeeping");
+        let released = self.lanes[device].release(kid);
         debug_assert_eq!(released, Some((info.lane, info.op)));
         // workspace freed at the completion event — not at a batch
         // boundary — which is what makes peak() a true concurrent
         // high-watermark
         if let Some(a) = info.alloc {
-            self.mem.free(a).expect("workspace free");
+            self.mems[device].free(a).expect("workspace free");
         }
         let dag = self.dag;
-        let start = self.engine.kernel_started(kid).unwrap_or(t);
+        let start = self.engines[device].kernel_started(kid).unwrap_or(t);
         self.ops_out.push(OpExec {
             op_id: info.op,
             name: dag.ops[info.op].name.clone(),
@@ -164,6 +218,7 @@ impl<'a> EventRun<'a> {
             end_us: t,
             workspace_bytes: info.desc.workspace_bytes,
             stream: Some(info.lane),
+            device,
         });
         self.finish_op(info.op);
     }
@@ -182,34 +237,33 @@ impl<'a> EventRun<'a> {
 
     fn enqueue_ready(&mut self, op: usize) {
         let rank = self.rank[op];
+        let dev = self.dag.device_of(op);
         let is_conv = self.decision[op].is_some();
-        let pos = {
-            let rank_of = &self.rank;
-            let list: &Vec<usize> = if is_conv {
-                &self.conv_ready
-            } else {
-                &self.host_ready
-            };
-            match list.binary_search_by_key(&rank, |&o| rank_of[o]) {
-                Ok(p) | Err(p) => p,
-            }
-        };
-        if is_conv {
-            self.conv_ready.insert(pos, op);
+        let is_comm = !is_conv && self.dag.ops[op].kind.is_grad_reduce();
+        let rank_of = &self.rank;
+        let list: &mut Vec<usize> = if is_conv {
+            &mut self.conv_ready[dev]
+        } else if is_comm {
+            &mut self.comm_ready
         } else {
-            self.host_ready.insert(pos, op);
-        }
+            &mut self.host_ready[dev]
+        };
+        let pos = match list.binary_search_by_key(&rank, |&o| rank_of[o]) {
+            Ok(p) | Err(p) => p,
+        };
+        list.insert(pos, op);
     }
 
-    /// Would admitting `cand` into the current mix beat serializing it
-    /// after the mix? Same fluid model and margin as offline group
+    /// Would admitting `cand` into `device`'s current mix beat serializing
+    /// it after the mix? Same fluid model and margin as offline group
     /// admission, evaluated over the mix's *remaining* work.
-    fn join_is_profitable(&self, cand: &KernelDesc) -> bool {
+    fn join_is_profitable(&self, device: usize, cand: &KernelDesc) -> bool {
         let mut descs: Vec<&KernelDesc> = Vec::new();
         let mut lefts: Vec<f64> = Vec::new();
-        for (_, _, kid) in self.lanes.running() {
-            let info = self.running[kid].as_ref().expect("running kernel");
-            let frac = self.engine.remaining_fraction(kid);
+        for (_, _, kid) in self.lanes[device].running() {
+            let info =
+                self.running[device][kid].as_ref().expect("running kernel");
+            let frac = self.engines[device].remaining_fraction(kid);
             if frac <= 0.0 {
                 continue;
             }
@@ -227,85 +281,104 @@ impl<'a> EventRun<'a> {
         est_join < (est_alone + iso_c) * JOIN_GAIN_MARGIN
     }
 
-    /// Launch everything that can start right now: the next host op onto
-    /// the serial host lane, and ready convolutions (in rank order) onto
-    /// free stream lanes, subject to the join guard and workspace
-    /// admission.
+    /// Launch everything that can start right now: per device, the next
+    /// host op onto its serial host lane and ready convolutions (in rank
+    /// order) onto free stream lanes, subject to the join guard and
+    /// workspace admission; then the next gradient reduction onto the
+    /// shared interconnect lane.
     fn admit_ready(&mut self) {
         let t = self.clock;
-        if !self.host_busy && !self.host_ready.is_empty() {
-            let op = self.host_ready.remove(0);
-            let dag = self.dag;
-            let dur = non_conv_time_us(&dag.ops[op].kind, self.spec);
-            self.events.push(t + dur, SimEvent::HostDone { op, start: t });
-            self.host_busy = true;
-        }
-        let mut idx = 0;
-        while idx < self.conv_ready.len() {
-            if self.lanes.free_lane(None).is_none() {
-                break;
+        for d in 0..self.engines.len() {
+            if !self.host_busy[d] && !self.host_ready[d].is_empty() {
+                let op = self.host_ready[d].remove(0);
+                let dag = self.dag;
+                let dur = non_conv_time_us(&dag.ops[op].kind, self.spec);
+                self.events
+                    .push(t + dur, SimEvent::HostDone { op, start: t });
+                self.host_busy[d] = true;
             }
-            let op = self.conv_ready[idx];
-            let base =
-                self.decision[op].as_ref().expect("conv decision").clone();
-            let mix_busy = self.lanes.busy() > 0;
-            if mix_busy
-                && self.policy == SelectionPolicy::ProfileGuided
-                && !self.join_is_profitable(&base)
-            {
-                idx += 1;
-                continue;
-            }
-            let (desc, alloc) = match self.mem.alloc(base.workspace_bytes) {
-                Ok(id) => (base, Some(id)),
-                Err(_) if mix_busy => {
-                    // serialize-on-OOM: wait for the mix to drain, retry
-                    // standing alone at the next completion event
+            let mut idx = 0;
+            while idx < self.conv_ready[d].len() {
+                if self.lanes[d].free_lane(None).is_none() {
+                    break;
+                }
+                let op = self.conv_ready[d][idx];
+                let base = self.decision[op]
+                    .as_ref()
+                    .expect("conv decision")
+                    .clone();
+                let mix_busy = self.lanes[d].busy() > 0;
+                if mix_busy
+                    && self.policy == SelectionPolicy::ProfileGuided
+                    && !self.join_is_profitable(d, &base)
+                {
                     idx += 1;
                     continue;
                 }
-                Err(_) => {
-                    // refused even solo (failure injection): degrade to
-                    // the workspace-free fallback — never abort the batch
-                    let fb = kernel_desc(
-                        Algorithm::Gemm,
-                        &base.params,
-                        self.spec,
-                    )
-                    .expect("GEMM supports every convolution");
-                    debug_assert_eq!(fb.workspace_bytes, 0);
-                    if fb.algo != base.algo {
-                        self.ws_fallbacks += 1;
-                    }
-                    (fb, None)
+                let (desc, alloc) =
+                    match self.mems[d].alloc(base.workspace_bytes) {
+                        Ok(id) => (base, Some(id)),
+                        Err(_) if mix_busy => {
+                            // serialize-on-OOM: wait for the mix to drain,
+                            // retry standing alone at the next completion
+                            // event
+                            idx += 1;
+                            continue;
+                        }
+                        Err(_) => {
+                            // refused even solo (failure injection):
+                            // degrade to the workspace-free fallback —
+                            // never abort the batch
+                            let fb = kernel_desc(
+                                Algorithm::Gemm,
+                                &base.params,
+                                self.spec,
+                            )
+                            .expect("GEMM supports every convolution");
+                            debug_assert_eq!(fb.workspace_bytes, 0);
+                            if fb.algo != base.algo {
+                                self.ws_fallbacks += 1;
+                            }
+                            (fb, None)
+                        }
+                    };
+                let lane = self.lanes[d]
+                    .free_lane(self.lane_hint[op])
+                    .expect("free lane checked above");
+                if !mix_busy {
+                    self.rounds += 1;
                 }
-            };
-            let lane = self
-                .lanes
-                .free_lane(self.lane_hint[op])
-                .expect("free lane checked above");
-            if !mix_busy {
-                self.rounds += 1;
+                self.conv_ready[d].remove(idx);
+                self.engines[d].advance_to(t);
+                let kid = self.engines[d].inject(desc.clone(), lane);
+                debug_assert_eq!(kid, self.running[d].len());
+                self.lanes[d].occupy(lane, op, kid);
+                self.running[d].push(Some(RunInfo {
+                    op,
+                    lane,
+                    alloc,
+                    desc,
+                }));
             }
-            self.conv_ready.remove(idx);
-            self.engine.advance_to(t);
-            let kid = self.engine.inject(desc.clone(), lane);
-            debug_assert_eq!(kid, self.running.len());
-            self.lanes.occupy(lane, op, kid);
-            self.running.push(Some(RunInfo {
-                op,
-                lane,
-                alloc,
-                desc,
-            }));
+        }
+        // Interconnect: one collective at a time on the ring, in rank
+        // (dispatch-priority) order — which, reductions being enqueued as
+        // their gradients resolve, is their readiness order.
+        if !self.comm_busy && !self.comm_ready.is_empty() {
+            let op = self.comm_ready.remove(0);
+            let dag = self.dag;
+            let dur = non_conv_time_us(&dag.ops[op].kind, self.spec);
+            self.events.push(t + dur, SimEvent::CommDone { op, start: t });
+            self.comm_busy = true;
         }
     }
 }
 
-/// Wall time with two or more convolutions in flight: the shared
-/// interval-depth sweep ([`overlap_us_of_spans`]) over conv op records —
-/// the same function the barrier path's `SimResult::overlap_us` uses, so
-/// the two executors' `conv_overlap_us` metric cannot drift.
+/// Wall time with two or more convolutions in flight (across all
+/// devices): the shared interval-depth sweep ([`overlap_us_of_spans`])
+/// over conv op records — the same function the barrier path's
+/// `SimResult::overlap_us` uses, so the two executors' `conv_overlap_us`
+/// metric cannot drift.
 fn conv_overlap(ops: &[OpExec]) -> f64 {
     let spans: Vec<(f64, f64)> = ops
         .iter()
@@ -316,9 +389,14 @@ fn conv_overlap(ops: &[OpExec]) -> f64 {
 }
 
 /// Execute a plan event-driven. Provenance (DAG/device digests) and the
-/// v2 node list have already been checked by `Plan::execute_with_memory`
+/// v3 node list have already been checked by `Plan::execute_with_memory`
 /// (`Plan::validate_nodes` runs for both executors); this builds the
 /// scheduling state off the nodes and drives the discrete-event loop.
+///
+/// `mem` seeds device 0's workspace allocator; devices 1..N get identical
+/// independent clones (each GPU has its own memory, and under failure
+/// injection each device sees the same refusal stream — replicas are
+/// symmetric).
 pub(crate) fn execute_event(
     plan: &Plan,
     dag: &Dag,
@@ -326,6 +404,7 @@ pub(crate) fn execute_event(
     mem: DeviceMemory,
 ) -> Result<ScheduleResult, PlanError> {
     let n = dag.len();
+    let devices = plan.meta.replicas.max(1);
     // Rebuild each convolution's kernel descriptor from the recorded
     // (op, algorithm) decision — the same pure function the planner used.
     let mut decision: Vec<Option<KernelDesc>> = vec![None; n];
@@ -359,26 +438,39 @@ pub(crate) fn execute_event(
     } else {
         plan.meta.streams.max(1)
     };
+    let mems = {
+        let mut v = Vec::with_capacity(devices);
+        for _ in 1..devices {
+            v.push(mem.clone());
+        }
+        v.insert(0, mem);
+        v
+    };
     let mut run = EventRun {
         dag,
         spec,
         policy: plan.meta.policy,
-        engine: Engine::new(spec.clone(), plan.meta.partition),
-        lanes: Lanes::new(width),
+        engines: (0..devices)
+            .map(|_| Engine::new(spec.clone(), plan.meta.partition))
+            .collect(),
+        lanes: (0..devices).map(|_| Lanes::new(width)).collect(),
         events: EventQueue::new(),
-        mem,
+        mems,
         decision,
         rank,
         lane_hint,
         indeg: (0..n).map(|i| dag.preds(i).len()).collect(),
-        conv_ready: Vec::new(),
-        host_ready: Vec::new(),
-        running: Vec::new(),
+        conv_ready: vec![Vec::new(); devices],
+        host_ready: vec![Vec::new(); devices],
+        comm_ready: Vec::new(),
+        running: (0..devices).map(|_| Vec::new()).collect(),
         ops_out: Vec::with_capacity(n),
-        host_busy: false,
+        host_busy: vec![false; devices],
+        comm_busy: false,
         clock: 0.0,
         rounds: 0,
         ws_fallbacks: plan.meta.planned_ws_fallbacks,
+        comm_us: 0.0,
     };
     for i in 0..n {
         if run.indeg[i] == 0 {
@@ -394,9 +486,11 @@ pub(crate) fn execute_event(
         });
     }
     let makespan_us = run.clock;
-    let peak_workspace = run.mem.peak();
+    let peak_workspace =
+        run.mems.iter().map(DeviceMemory::peak).max().unwrap_or(0);
     let ws_fallbacks = run.ws_fallbacks;
     let rounds = run.rounds;
+    let comm_us = run.comm_us;
     let mut ops = run.ops_out;
     ops.sort_by(|a, b| {
         a.start_us
@@ -412,6 +506,7 @@ pub(crate) fn execute_event(
         ws_fallbacks,
         rounds,
         conv_overlap_us,
+        comm_us,
     })
 }
 
@@ -452,6 +547,7 @@ mod tests {
             start[o.op_id] = o.start_us;
             end[o.op_id] = o.end_us;
             assert!(o.end_us <= r.makespan_us + 1e-6);
+            assert_eq!(o.device, 0, "single-device plan");
         }
         for i in 0..dag.len() {
             for &p in dag.preds(i) {
@@ -504,5 +600,75 @@ mod tests {
         assert_eq!(a.makespan_us, b.makespan_us);
         assert_eq!(a.rounds, b.rounds);
         assert_eq!(a.peak_workspace, b.peak_workspace);
+    }
+
+    #[test]
+    fn multi_device_run_overlaps_reduces_with_compute() {
+        use crate::cluster::{
+            data_parallel_dag, reduce_sites, ClusterConfig, LinkModel,
+        };
+        use crate::graph::training_dag;
+        let fwd = Network::GoogleNet.build(4);
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        let cluster = ClusterConfig {
+            replicas: 2,
+            link: LinkModel::pcie3(),
+            overlap: true,
+        };
+        let dag = data_parallel_dag(&train, &sites, &cluster);
+        let spec = DeviceSpec::k40();
+        let plan = Planner::new(spec.clone(), config(2)).plan(&dag, "");
+        assert_eq!(plan.meta.replicas, 2);
+        let r = execute_event(
+            &plan,
+            &dag,
+            &spec,
+            DeviceMemory::new(plan.meta.workspace_limit),
+        )
+        .unwrap();
+        assert_eq!(r.ops.len(), dag.len());
+        assert!(r.comm_us > 0.0, "reductions must cost wire time");
+        // dependencies hold across devices and the interconnect
+        let mut start = vec![0.0f64; dag.len()];
+        let mut end = vec![0.0f64; dag.len()];
+        for o in &r.ops {
+            start[o.op_id] = o.start_us;
+            end[o.op_id] = o.end_us;
+        }
+        for i in 0..dag.len() {
+            for &p in dag.preds(i) {
+                assert!(
+                    end[p] <= start[i] + 1e-6,
+                    "op {i} started before pred {p} finished"
+                );
+            }
+        }
+        // at least one reduction runs while compute is still in flight
+        // (the whole point of the overlap mode)
+        let compute_end = r
+            .ops
+            .iter()
+            .filter(|o| o.kind != "grad_reduce")
+            .map(|o| o.end_us)
+            .fold(0.0f64, f64::max);
+        let first_reduce_start = r
+            .ops
+            .iter()
+            .filter(|o| o.kind == "grad_reduce")
+            .map(|o| o.start_us)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            first_reduce_start < compute_end,
+            "no reduce started before compute drained: {first_reduce_start} \
+             vs {compute_end}"
+        );
+        // both devices did compute work
+        for d in 0..2 {
+            assert!(
+                r.ops.iter().any(|o| o.device == d && o.kind == "conv"),
+                "device {d} ran no convolutions"
+            );
+        }
     }
 }

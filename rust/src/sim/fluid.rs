@@ -1,14 +1,15 @@
 //! Multi-phase fluid makespan over *remaining* work.
 //!
-//! The offline planner gates group admission on
-//! `coordinator::estimate_group_makespan_us`, which prices a group of
-//! kernels from a standing start. Mid-flight joins need the same estimate
-//! but with the running members' work *partially consumed* — this variant
-//! takes the remaining per-member work explicitly. With
-//! `left[i] == isolated_time_us(descs[i])` it reduces to the planner's
-//! function exactly (pinned by a test below), so a join admitted at
-//! op-ready time under full work makes precisely the decision the planner
-//! would have made when it formed the group offline.
+//! This is the ONE implementation of the phase-loop fluid estimate: the
+//! offline planner's group-admission gate
+//! (`coordinator::estimate_group_makespan_us`) is now a thin wrapper that
+//! calls [`fluid_makespan`] with `left[i] == isolated_time_us(descs[i])`
+//! (full remaining work), and the event executor's mid-flight join gate
+//! calls it with the running members' work partially consumed. One
+//! function means the planner's 2% admission margin and the executor's
+//! join margin price groups identically by construction — the
+//! `full_work_reduces_to_planner_estimate` test below pins the wrapper's
+//! equivalence.
 
 use crate::convlib::{KernelDesc, LaunchConfig};
 use crate::gpusim::partition::plan_intra_sm;

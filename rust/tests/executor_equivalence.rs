@@ -234,11 +234,12 @@ fn tight_workspace_budget_serializes_instead_of_aborting() {
 }
 
 #[test]
-fn v2_schema_roundtrips_dependency_edges_and_lanes() {
+fn v3_schema_roundtrips_dependency_edges_and_lanes() {
     let dag = Network::GoogleNet.build(8);
     let session = Session::new(DeviceSpec::k40(), config(2));
     let plan = session.plan_labeled(&dag, "googlenet");
-    assert_eq!(plan.meta.version, 2);
+    assert_eq!(plan.meta.version, 3);
+    assert_eq!(plan.meta.replicas, 1);
     assert_eq!(plan.nodes.len(), dag.len());
     // lanes: group members carry Some(member index), host ops None
     for node in &plan.nodes {
@@ -257,9 +258,10 @@ fn v2_schema_roundtrips_dependency_edges_and_lanes() {
         assert_eq!(deps, preds, "op {} edges", node.op);
     }
     let json = plan.to_json();
-    assert!(json.contains("\"version\": 2"));
+    assert!(json.contains("\"version\": 3"));
     assert!(json.contains("\"nodes\": ["));
-    let reloaded = Plan::from_json(&json).expect("v2 round-trip");
+    assert!(json.contains("\"digest\": \""));
+    let reloaded = Plan::from_json(&json).expect("v3 round-trip");
     assert_eq!(reloaded.nodes, plan.nodes);
     assert_eq!(reloaded.digest(), plan.digest());
     // and both executors replay the reloaded plan identically
@@ -275,8 +277,8 @@ fn v2_schema_roundtrips_dependency_edges_and_lanes() {
 fn v1_plans_fail_with_clear_versioned_error() {
     let dag = Network::GoogleNet.build(8);
     let session = Session::new(DeviceSpec::k40(), config(2));
-    let v2 = session.plan(&dag).to_json();
-    let v1 = v2.replacen("\"version\": 2", "\"version\": 1", 1);
+    let v3 = session.plan(&dag).to_json();
+    let v1 = v3.replacen("\"version\": 3", "\"version\": 1", 1);
     let err = Plan::from_json(&v1).unwrap_err();
     assert_eq!(err, PlanError::UnsupportedVersion { found: 1 });
     let msg = err.to_string();

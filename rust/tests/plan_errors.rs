@@ -1,0 +1,233 @@
+//! Error paths of the plan JSON reader: every malformed, truncated,
+//! stale-versioned, or tampered document must come back as a typed
+//! [`PlanError`] — never a panic, and never a silently different
+//! schedule.
+
+use parconv::cluster::{ClusterConfig, DevicePool, LinkModel};
+use parconv::coordinator::{
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, PartitionMode};
+use parconv::graph::Network;
+use parconv::plan::{Plan, PlanError, Session};
+
+fn config() -> ScheduleConfig {
+    ScheduleConfig {
+        policy: SelectionPolicy::ProfileGuided,
+        partition: PartitionMode::IntraSm,
+        streams: 2,
+        workspace_limit: 4 * 1024 * 1024 * 1024,
+        priority: PriorityPolicy::CriticalPath,
+    }
+}
+
+fn v3_json() -> String {
+    let dag = Network::GoogleNet.build(8);
+    Session::new(DeviceSpec::k40(), config())
+        .plan_labeled(&dag, "googlenet")
+        .to_json()
+}
+
+#[test]
+fn truncated_documents_fail_with_parse_errors() {
+    let json = v3_json();
+    // every prefix family: mid-structure, mid-token, empty
+    for cut in [json.len() / 2, json.len() - 3, 25, 1, 0] {
+        match Plan::from_json(&json[..cut]) {
+            Err(PlanError::Parse(_)) => {}
+            other => panic!("truncation at {cut} returned {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn unknown_top_level_keys_are_refused() {
+    let json = v3_json();
+    let bad = json.replacen(
+        "\"version\": 3,",
+        "\"version\": 3,\n  \"wat\": 1,",
+        1,
+    );
+    match Plan::from_json(&bad) {
+        Err(PlanError::UnknownField(k)) => assert_eq!(k, "wat"),
+        other => panic!("unknown key returned {other:?}"),
+    }
+}
+
+#[test]
+fn unknown_nested_keys_and_missing_node_device_are_refused() {
+    let json = v3_json();
+    // a stray key inside a node object is invisible to the self-digest
+    // (it covers the *parsed* content), so the reader must refuse it
+    let node_key = json.replacen(
+        "\"device\": 0, \"deps\"",
+        "\"device\": 0, \"note\": 1, \"deps\"",
+        1,
+    );
+    match Plan::from_json(&node_key) {
+        Err(PlanError::UnknownField(k)) => assert_eq!(k, "note"),
+        other => panic!("node-level unknown key returned {other:?}"),
+    }
+    // same inside a co-execution group object
+    let group_key = json.replacen(
+        "{\"group\": {\"partition\"",
+        "{\"group\": {\"x\": 1, \"partition\"",
+        1,
+    );
+    match Plan::from_json(&group_key) {
+        Err(PlanError::UnknownField(k)) => assert_eq!(k, "x"),
+        other => panic!("group-level unknown key returned {other:?}"),
+    }
+    // a deleted device assignment must fail loudly, never default to 0
+    let no_device = json.replacen(", \"device\": 0", "", 1);
+    assert!(matches!(
+        Plan::from_json(&no_device),
+        Err(PlanError::Parse(_))
+    ));
+}
+
+#[test]
+fn v1_and_v2_documents_fail_with_the_versioned_error() {
+    let json = v3_json();
+    for old in [1u32, 2] {
+        let stale = json.replacen(
+            "\"version\": 3",
+            &format!("\"version\": {old}"),
+            1,
+        );
+        let err = Plan::from_json(&stale).unwrap_err();
+        assert_eq!(err, PlanError::UnsupportedVersion { found: old });
+        let msg = err.to_string();
+        assert!(msg.contains(&format!("version {old}")), "{msg}");
+        assert!(msg.contains("parconv plan"), "{msg}");
+    }
+    // a future version is refused too (generic parse error: we cannot
+    // know what it means)
+    let future = json.replacen("\"version\": 3", "\"version\": 9", 1);
+    assert!(matches!(
+        Plan::from_json(&future),
+        Err(PlanError::Parse(_))
+    ));
+}
+
+#[test]
+fn tampered_content_fails_the_digest_check() {
+    let json = v3_json();
+    // flip a recorded decision value but keep the written digest: the
+    // reader recomputes over content and must refuse
+    assert!(json.contains("\"streams\": 2"), "fixture changed");
+    let tampered = json.replacen("\"streams\": 2", "\"streams\": 4", 1);
+    match Plan::from_json(&tampered) {
+        Err(PlanError::DigestMismatch { expected, got }) => {
+            assert_ne!(expected, got)
+        }
+        other => panic!("tampering returned {other:?}"),
+    }
+    // ... and a missing digest field is a parse error, not a pass
+    let headless = {
+        let at = json.rfind(",\n  \"digest\"").expect("digest field");
+        format!("{}\n}}\n", &json[..at])
+    };
+    assert!(matches!(
+        Plan::from_json(&headless),
+        Err(PlanError::Parse(_))
+    ));
+}
+
+#[test]
+fn malformed_node_entries_fail_typed() {
+    let json = v3_json();
+    // non-numeric lane
+    let bad_lane = json.replacen("\"lane\": 0", "\"lane\": \"zero\"", 1);
+    assert!(matches!(
+        Plan::from_json(&bad_lane),
+        Err(PlanError::Parse(_) | PlanError::DigestMismatch { .. })
+    ));
+    // deps array replaced by a scalar
+    let bad_deps = json.replacen("\"deps\": []", "\"deps\": 7", 1);
+    assert!(matches!(
+        Plan::from_json(&bad_deps),
+        Err(PlanError::Parse(_) | PlanError::DigestMismatch { .. })
+    ));
+}
+
+#[test]
+fn node_and_step_views_are_cross_validated_at_execute_time() {
+    // A plan whose two recorded views disagree (here: a node's device
+    // flipped after deserialization) must fail validation under EITHER
+    // executor, not only when someone happens to replay it event-driven.
+    let dag = Network::GoogleNet.build(8);
+    let session = Session::new(DeviceSpec::k40(), config());
+    let mut plan = (*session.plan(&dag)).clone();
+    plan.nodes[3].device = 1;
+    match plan.execute(&dag, session.spec()) {
+        Err(PlanError::NodeMismatch(msg)) => {
+            assert!(msg.contains("device"), "{msg}")
+        }
+        other => panic!("device mismatch returned {other:?}"),
+    }
+}
+
+#[test]
+fn replica_count_is_validated_against_the_dag() {
+    // a multi-GPU plan replayed against the single-device DAG (and vice
+    // versa) is a structural mismatch, caught before execution
+    let fwd = Network::GoogleNet.build(4);
+    let pool = DevicePool::new(
+        DeviceSpec::k40(),
+        config(),
+        ClusterConfig {
+            replicas: 2,
+            link: LinkModel::pcie3(),
+            overlap: true,
+        },
+    );
+    let cdag = pool.training_dag(&fwd);
+    let plan = (*pool.session().plan(&cdag)).clone();
+    assert_eq!(plan.meta.replicas, 2);
+    let single = parconv::graph::training_dag(&fwd);
+    // different structure => digest mismatch fires first; that is the
+    // correct refusal for a foreign DAG
+    assert!(matches!(
+        plan.execute(&single, pool.session().spec()),
+        Err(PlanError::DagMismatch { .. })
+    ));
+    // same DAG, doctored replica count => the node validator refuses
+    let mut doctored = plan.clone();
+    doctored.meta.replicas = 3;
+    assert!(matches!(
+        doctored.execute(&cdag, pool.session().spec()),
+        Err(PlanError::NodeMismatch(_))
+    ));
+}
+
+#[test]
+fn multi_gpu_plans_roundtrip_with_devices_and_reduce_ops() {
+    // the happy path of the v3 additions: a 2-replica plan serializes
+    // device assignments + reduce nodes, reloads digest-identical, and
+    // replays to the same timeline
+    let fwd = Network::GoogleNet.build(4);
+    let pool = DevicePool::new(
+        DeviceSpec::k40(),
+        config(),
+        ClusterConfig {
+            replicas: 2,
+            link: LinkModel::pcie3(),
+            overlap: true,
+        },
+    );
+    let cdag = pool.training_dag(&fwd);
+    let plan = (*pool.session().plan(&cdag)).clone();
+    let json = plan.to_json();
+    assert!(json.contains("\"version\": 3"));
+    assert!(json.contains("\"replicas\": 2"));
+    assert!(json.contains("\"device\": 1"));
+    assert!(json.contains("_allreduce"));
+    let reloaded = Plan::from_json(&json).expect("v3 round-trip");
+    assert_eq!(reloaded.digest(), plan.digest());
+    assert_eq!(reloaded.nodes, plan.nodes);
+    let a = plan.execute(&cdag, pool.session().spec()).unwrap();
+    let b = reloaded.execute(&cdag, pool.session().spec()).unwrap();
+    assert_eq!(a.makespan_us, b.makespan_us);
+    assert_eq!(a.comm_us, b.comm_us);
+}

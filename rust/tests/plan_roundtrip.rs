@@ -34,6 +34,7 @@ fn assert_identical(a: &ScheduleResult, b: &ScheduleResult, what: &str) {
         a.conv_overlap_us, b.conv_overlap_us,
         "{what}: conv overlap"
     );
+    assert_eq!(a.comm_us, b.comm_us, "{what}: comm");
     assert_eq!(a.ops.len(), b.ops.len(), "{what}: op count");
     for (x, y) in a.ops.iter().zip(&b.ops) {
         assert_eq!(x.op_id, y.op_id, "{what}: op order");
