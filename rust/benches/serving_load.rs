@@ -1,0 +1,99 @@
+//! Bench V1 — serving-load sweep: goodput and tail latency vs offered
+//! rate x batching window.
+//!
+//! The serving driver turns the paper's intra-GPU scheduling question
+//! into a capacity question: how many requests per second can a 2-GPU
+//! pool sustain inside a latency SLO when every dispatch replays a
+//! cached plan? This bench sweeps arrival rate x batching window over a
+//! three-model mix and prints the full operating surface — goodput,
+//! p99, shed rate, mean batch size, and plan-cache hit rate — so the
+//! knee (where goodput stops tracking offered load and shedding takes
+//! over) is visible in one table. A second table contrasts arrival
+//! processes at a fixed mid-load point: bursty and diurnal arrivals
+//! buy the batcher different coalescing opportunities than Poisson at
+//! the same mean rate.
+
+use std::time::Instant;
+
+use parconv::coordinator::ScheduleConfig;
+use parconv::gpusim::DeviceSpec;
+use parconv::serve::{ArrivalKind, ServeConfig, ServeDriver};
+use parconv::util::Table;
+
+const RATES_PER_S: [f64; 3] = [50.0, 200.0, 800.0];
+const WINDOWS_US: [f64; 3] = [0.0, 2_000.0, 10_000.0];
+const REQUESTS: usize = 400;
+
+fn run(cfg: ServeConfig) -> parconv::ServeReport {
+    ServeDriver::new(DeviceSpec::k40(), ScheduleConfig::default(), cfg)
+        .run()
+}
+
+fn main() {
+    let wall = Instant::now();
+    println!(
+        "V1 — serving load sweep ({REQUESTS} requests per cell, 2 GPUs, \
+         googlenet+resnet50+alexnet, slo 1s)\n"
+    );
+    let mut t = Table::new(vec![
+        "Rate/s",
+        "Window us",
+        "Goodput/s",
+        "p50 us",
+        "p99 us",
+        "Shed rate",
+        "Mean batch",
+        "Cache hit",
+    ]);
+    for &rate in &RATES_PER_S {
+        for &window in &WINDOWS_US {
+            let r = run(ServeConfig {
+                requests: REQUESTS,
+                rate_per_s: rate,
+                window_us: window,
+                ..ServeConfig::default()
+            });
+            t.row(vec![
+                format!("{rate:.0}"),
+                format!("{window:.0}"),
+                format!("{:.1}", r.goodput_per_s),
+                format!("{:.0}", r.p50_us),
+                format!("{:.0}", r.p99_us),
+                format!("{:.3}", r.shed_rate),
+                format!("{:.2}", r.mean_batch),
+                format!("{:.1}%", 100.0 * r.cache_hit_rate),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    println!("arrival-process shapes at 200/s, window 5 ms:\n");
+    let mut a = Table::new(vec![
+        "Arrival",
+        "Goodput/s",
+        "p50 us",
+        "p99 us",
+        "Shed rate",
+        "Mean batch",
+    ]);
+    for kind in
+        [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal]
+    {
+        let r = run(ServeConfig {
+            requests: REQUESTS,
+            arrival: kind,
+            rate_per_s: 200.0,
+            ..ServeConfig::default()
+        });
+        a.row(vec![
+            kind.name().to_string(),
+            format!("{:.1}", r.goodput_per_s),
+            format!("{:.0}", r.p50_us),
+            format!("{:.0}", r.p99_us),
+            format!("{:.3}", r.shed_rate),
+            format!("{:.2}", r.mean_batch),
+        ]);
+    }
+    println!("{}", a.render());
+    println!("bench wall time: {:.2?}", wall.elapsed());
+}

@@ -50,8 +50,27 @@ impl LinkModel {
         }
     }
 
+    /// Bandwidth floor applied by [`Self::effective_gb_per_s`]: a link
+    /// configured at or below zero (or with a non-finite value) behaves
+    /// like a ~1 KB/s wire instead of dividing by zero.
+    pub const MIN_GB_PER_S: f64 = 1e-6;
+
+    /// The bandwidth the cost model actually uses: `gb_per_s` when it is
+    /// a finite positive number, else clamped to [`Self::MIN_GB_PER_S`].
+    /// A degenerate link must yield an enormous-but-finite wire time —
+    /// never an `inf`/NaN that would poison the executor's event queue
+    /// (whose `push` hard-rejects non-finite times).
+    pub fn effective_gb_per_s(&self) -> f64 {
+        if self.gb_per_s.is_finite() && self.gb_per_s > 0.0 {
+            self.gb_per_s
+        } else {
+            Self::MIN_GB_PER_S
+        }
+    }
+
     /// Time for one ring all-reduce of `bytes` across `replicas` devices.
     /// Zero when nothing needs to move (one replica, or an empty tensor).
+    /// Always finite, even for a zero-bandwidth link.
     pub fn ring_allreduce_us(&self, bytes: u64, replicas: usize) -> f64 {
         if replicas <= 1 || bytes == 0 {
             return 0.0;
@@ -59,7 +78,9 @@ impl LinkModel {
         let steps = (2 * (replicas - 1)) as f64;
         let hop_bytes = bytes as f64 / replicas as f64;
         // GB/s = 1e3 bytes per microsecond
-        steps * (self.latency_us + hop_bytes / (self.gb_per_s * 1e3))
+        steps
+            * (self.latency_us
+                + hop_bytes / (self.effective_gb_per_s() * 1e3))
     }
 }
 
@@ -106,6 +127,34 @@ mod tests {
         let t2 = l.ring_allreduce_us(64, 2); // 2 steps
         let t4 = l.ring_allreduce_us(64, 4); // 6 steps
         assert!(t4 > t2 * 2.5, "{t2} -> {t4}");
+    }
+
+    #[test]
+    fn zero_bandwidth_link_stays_finite() {
+        // A misconfigured (or deliberately adversarial) link must not be
+        // able to mint a non-finite duration: the executor's event queue
+        // rejects those with a hard panic.
+        for gb in [0.0, -3.0, f64::NAN, f64::INFINITY] {
+            let l = LinkModel {
+                latency_us: 10.0,
+                gb_per_s: gb,
+            };
+            let t = l.ring_allreduce_us(1 << 20, 2);
+            assert!(t.is_finite(), "gb_per_s={gb} gave {t}");
+            assert!(t > 0.0, "gb_per_s={gb} gave {t}");
+        }
+    }
+
+    #[test]
+    fn positive_bandwidth_is_passed_through_unclamped() {
+        // the clamp must be invisible for every valid configuration
+        let l = LinkModel::pcie3();
+        assert_eq!(l.effective_gb_per_s(), 12.0);
+        assert_eq!(LinkModel::nvlink().effective_gb_per_s(), 60.0);
+        assert_eq!(
+            l.ring_allreduce_us(24_000_000, 2),
+            2.0 * (10.0 + 12_000_000.0 / 12_000.0)
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!   depending on the N copies of that parameter's gradient producer
 //!   (or, in serial-tail mode, on every replica's full backward pass).
 //! - [`DevicePool`] — the facade: plans the replicated DAG through the
-//!   replica-aware [`crate::plan::Planner`] (schema v3: per-node device
+//!   replica-aware [`crate::plan::Planner`] (schema v4: per-node device
 //!   assignments) and executes it on the multi-device event executor,
 //!   which instantiates one `gpusim::Engine` per device plus a single
 //!   interconnect lane that serializes collectives, NCCL-style.

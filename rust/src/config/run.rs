@@ -69,6 +69,42 @@ impl Default for ClusterSettings {
     }
 }
 
+/// Serving knobs (`[serve]` section / `parconv serve` flags).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSettings {
+    /// Requests to generate (trace replay ignores this).
+    pub requests: usize,
+    /// Arrival process: `poisson`, `bursty`, `diurnal`.
+    pub arrival: String,
+    /// Mean offered load in requests per second.
+    pub rate_per_s: f64,
+    /// Batching window in µs (0 = per-request execution).
+    pub window_us: f64,
+    /// Largest batch one dispatch may carry.
+    pub max_batch: usize,
+    /// Latency SLO in µs; 0 disables admission shedding.
+    pub slo_us: f64,
+    /// GPUs in the serving pool.
+    pub gpus: usize,
+    /// Comma-separated model mix (network names).
+    pub mix: String,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        Self {
+            requests: 2_000,
+            arrival: "poisson".into(),
+            rate_per_s: 100.0,
+            window_us: 5_000.0,
+            max_batch: 8,
+            slo_us: 1_000_000.0,
+            gpus: 2,
+            mix: "googlenet,resnet50,alexnet".into(),
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -84,6 +120,7 @@ pub struct RunConfig {
     pub seed: u64,
     pub scheduler: SchedulerConfig,
     pub cluster: ClusterSettings,
+    pub serve: ServeSettings,
     /// Directory holding AOT artifacts (`manifest.txt`, `*.hlo.txt`).
     pub artifacts_dir: String,
 }
@@ -97,6 +134,7 @@ impl Default for RunConfig {
             seed: 0,
             scheduler: SchedulerConfig::default(),
             cluster: ClusterSettings::default(),
+            serve: ServeSettings::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -120,6 +158,18 @@ const SCHEDULER_KEYS: &[&str] = &[
 const CLUSTER_KEYS: &[&str] =
     &["gpus", "link_latency_us", "link_gb_per_s", "overlap"];
 
+/// Keys accepted inside `[serve]`.
+const SERVE_KEYS: &[&str] = &[
+    "requests",
+    "arrival",
+    "rate_per_s",
+    "window_us",
+    "max_batch",
+    "slo_us",
+    "gpus",
+    "mix",
+];
+
 impl RunConfig {
     /// Parse from config text (TOML subset; see `config::parser`).
     ///
@@ -132,6 +182,7 @@ impl RunConfig {
         let d = RunConfig::default();
         let sd = SchedulerConfig::default();
         let cd = ClusterSettings::default();
+        let vd = ServeSettings::default();
         Ok(RunConfig {
             device: p.str_or("", "device", &d.device),
             network: p.str_or("", "network", &d.network),
@@ -169,6 +220,28 @@ impl RunConfig {
                 ),
                 overlap: p.bool_or("cluster", "overlap", cd.overlap),
             },
+            serve: ServeSettings {
+                requests: p
+                    .uint_or("serve", "requests", vd.requests as u64)
+                    .max(1) as usize,
+                arrival: p.str_or("serve", "arrival", &vd.arrival),
+                rate_per_s: p.float_or(
+                    "serve",
+                    "rate_per_s",
+                    vd.rate_per_s,
+                ),
+                window_us: p
+                    .float_or("serve", "window_us", vd.window_us)
+                    .max(0.0),
+                max_batch: p
+                    .uint_or("serve", "max_batch", vd.max_batch as u64)
+                    .max(1) as usize,
+                slo_us: p.float_or("serve", "slo_us", vd.slo_us),
+                gpus: p
+                    .uint_or("serve", "gpus", vd.gpus as u64)
+                    .max(1) as usize,
+                mix: p.str_or("serve", "mix", &vd.mix),
+            },
         })
     }
 
@@ -187,12 +260,13 @@ impl RunConfig {
                 "" => (TOP_LEVEL_KEYS, "top level".to_string()),
                 "scheduler" => (SCHEDULER_KEYS, "[scheduler]".to_string()),
                 "cluster" => (CLUSTER_KEYS, "[cluster]".to_string()),
+                "serve" => (SERVE_KEYS, "[serve]".to_string()),
                 other => {
                     return Err(ConfigError {
                         line: locate_line(text, other, None),
                         msg: format!(
                             "unknown section [{other}]; valid sections: \
-                             [scheduler], [cluster]"
+                             [scheduler], [cluster], [serve]"
                         ),
                     })
                 }
@@ -314,6 +388,49 @@ priority = "fifo"
         // gpus clamps to at least one device
         let z = RunConfig::from_text("[cluster]\ngpus = 0\n").unwrap();
         assert_eq!(z.cluster.gpus, 1);
+    }
+
+    #[test]
+    fn serve_section_parses_and_defaults() {
+        let d = RunConfig::from_text("").unwrap();
+        assert_eq!(d.serve, ServeSettings::default());
+        assert_eq!(d.serve.requests, 2_000);
+        assert_eq!(d.serve.arrival, "poisson");
+        let c = RunConfig::from_text(
+            "[serve]\nrequests = 500\narrival = \"bursty\"\n\
+             rate_per_s = 250.0\nwindow_us = 2000.0\nmax_batch = 4\n\
+             slo_us = 80000.0\ngpus = 4\nmix = \"alexnet,vgg16\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.requests, 500);
+        assert_eq!(c.serve.arrival, "bursty");
+        assert_eq!(c.serve.rate_per_s, 250.0);
+        assert_eq!(c.serve.window_us, 2_000.0);
+        assert_eq!(c.serve.max_batch, 4);
+        assert_eq!(c.serve.slo_us, 80_000.0);
+        assert_eq!(c.serve.gpus, 4);
+        assert_eq!(c.serve.mix, "alexnet,vgg16");
+        // requests / max_batch / gpus clamp to at least one
+        let z = RunConfig::from_text(
+            "[serve]\nrequests = 0\nmax_batch = 0\ngpus = 0\n",
+        )
+        .unwrap();
+        assert_eq!(z.serve.requests, 1);
+        assert_eq!(z.serve.max_batch, 1);
+        assert_eq!(z.serve.gpus, 1);
+    }
+
+    #[test]
+    fn unknown_serve_key_rejected() {
+        let err =
+            RunConfig::from_text("[serve]\nrate = 100.0\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("rate"), "{msg}");
+        assert!(
+            msg.contains("rate_per_s"),
+            "error must list valid keys: {msg}"
+        );
+        assert_eq!(err.line, 2);
     }
 
     #[test]

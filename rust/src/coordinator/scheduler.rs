@@ -91,10 +91,12 @@ pub struct OpExec {
     /// lane under event-driven execution), `None` for ops on the serial
     /// host lane. Feeds the per-stream tracks of the Chrome-trace export.
     pub stream: Option<usize>,
-    /// Device the op ran on (0 for single-GPU schedules). Gradient
-    /// reductions record device 0 but render on the interconnect track of
-    /// the Chrome-trace export (`kind == "grad_reduce"`).
-    pub device: usize,
+    /// Where the op ran: `Some(d)` for compute and host ops on device
+    /// `d` (0 for single-GPU schedules), `None` for gradient reductions,
+    /// which occupy the shared interconnect lane rather than any compute
+    /// device. The Chrome-trace export routes `None` to the interconnect
+    /// track.
+    pub device: Option<usize>,
 }
 
 /// Result of scheduling a whole DAG.

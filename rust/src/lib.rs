@@ -25,8 +25,9 @@
 //!   multi-metric selection), plus complementary-pair discovery.
 //! - [`plan`] — the Plan/Execute split: [`Planner`] runs the selection
 //!   sweep once and emits an immutable, JSON-serializable [`Plan`]
-//!   (schema v3: ordered groups *plus* a dependency/lane/device
-//!   scheduling graph, closed by a verified digest); [`Session`] caches
+//!   (schema v4: ordered groups *plus* a dependency/lane/device
+//!   scheduling graph with per-member workspace-fallback flags, closed
+//!   by a verified digest); [`Session`] caches
 //!   plans keyed by DAG digest and replays
 //!   them per request with zero selector calls (profile-guided selection
 //!   is an *offline* activity — paper §2). `Coordinator::execute_dag` is
@@ -41,8 +42,15 @@
 //!   per-device engines plus a ring all-reduce [`LinkModel`]; the
 //!   training DAG gains per-parameter `GradReduce` ops whose dependency
 //!   edges let the event executor overlap each reduction with the rest
-//!   of the backward pass (plan schema v3 records per-node device
+//!   of the backward pass (plan schema v4 records per-node device
 //!   assignments).
+//! - [`serve`] — trace-driven multi-tenant inference serving on the
+//!   event core: open-loop workload generation (Poisson / bursty /
+//!   diurnal, replayable text traces), per-model queues with windowed
+//!   dynamic batching, SLO-aware admission shedding, and a virtual-time
+//!   driver multiplexing dispatches over the device pool with the
+//!   `Session` plan cache serving steady-state plans (latency
+//!   percentiles, goodput vs offered load, shed + cache-hit rates).
 //! - [`runtime`] — PJRT CPU client running the AOT-compiled JAX/Pallas
 //!   artifacts, so every scheduled convolution's *numerics* are real.
 //! - [`trainer`] — an SGD loop over the AOT `train_step` artifact.
@@ -93,6 +101,7 @@ pub mod memory;
 pub mod plan;
 pub mod profiler;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod trainer;
 pub mod util;
@@ -103,4 +112,5 @@ pub use coordinator::{Coordinator, SelectionPolicy};
 pub use gpusim::{DeviceSpec, PartitionMode};
 pub use graph::Network;
 pub use plan::{Plan, Planner, Session};
+pub use serve::{ServeConfig, ServeDriver, ServeReport};
 pub use sim::ExecutorKind;

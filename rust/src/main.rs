@@ -15,6 +15,8 @@
 //! parconv plan       [--out F]         # build + save a Plan (JSON), verify
 //!                                      #   it reloads and replays identically
 //! parconv trace      [--out F]         # chrome-trace of one iteration
+//! parconv serve      [--requests N]    # trace-driven multi-tenant serving
+//!                                      #   (latency percentiles, goodput)
 //! ```
 //!
 //! Global flags: `--config FILE`, `--device k40|p100|v100|a100`,
@@ -34,6 +36,15 @@
 //! its wgrad resolves, or only after the full backward pass). The same
 //! knobs live under `[cluster]` in the config file.
 //!
+//! Serving flags (`serve`): `--requests N`, `--arrival
+//! poisson|bursty|diurnal`, `--rate R` (requests/s), `--window-us W`
+//! (batching window; 0 = per-request), `--max-batch B`, `--slo-us S`
+//! (latency SLO; 0 disables shedding), `--serve-gpus N`, `--mix
+//! net1,net2,...`, `--seed S`, `--trace-out F` (save the generated
+//! arrival trace), `--trace-in F` (replay a saved trace instead of
+//! generating; the mix comes from the trace). The same knobs live under
+//! `[serve]` in the config file.
+//!
 //! Every scheduling command goes through a [`Session`]: plans are built
 //! once per (network, batch, config) and replayed from the cache.
 
@@ -51,6 +62,9 @@ use parconv::graph::Network;
 use parconv::plan::{Plan, Session};
 use parconv::profiler::{
     chrome_trace_json, schedule_chrome_trace_json, table1_report, table1_row,
+};
+use parconv::serve::{
+    trace_from_text, trace_to_text, ArrivalKind, ServeConfig, ServeDriver,
 };
 use parconv::sim::ExecutorKind;
 use parconv::trainer::Trainer;
@@ -75,6 +89,8 @@ struct Cli {
     steps: usize,
     out: Option<String>,
     trace: Option<String>,
+    trace_in: Option<String>,
+    trace_out: Option<String>,
 }
 
 fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
@@ -90,6 +106,8 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
     let mut steps = 300usize;
     let mut out = None;
     let mut trace = None;
+    let mut trace_in = None;
+    let mut trace_out = None;
     while let Some(flag) = it.next() {
         let mut val = || -> anyhow::Result<String> {
             it.next()
@@ -125,6 +143,23 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
                 }
             }
             "--artifacts" => cfg.artifacts_dir = val()?,
+            "--seed" => cfg.seed = val()?.parse()?,
+            "--requests" => {
+                cfg.serve.requests = val()?.parse::<usize>()?.max(1)
+            }
+            "--arrival" => cfg.serve.arrival = val()?,
+            "--rate" => cfg.serve.rate_per_s = val()?.parse()?,
+            "--window-us" => cfg.serve.window_us = val()?.parse()?,
+            "--max-batch" => {
+                cfg.serve.max_batch = val()?.parse::<usize>()?.max(1)
+            }
+            "--slo-us" => cfg.serve.slo_us = val()?.parse()?,
+            "--serve-gpus" => {
+                cfg.serve.gpus = val()?.parse::<usize>()?.max(1)
+            }
+            "--mix" => cfg.serve.mix = val()?,
+            "--trace-in" => trace_in = Some(val()?),
+            "--trace-out" => trace_out = Some(val()?),
             "--min-speedup" => min_speedup = val()?.parse()?,
             "--steps" => steps = val()?.parse()?,
             "--out" => out = Some(val()?),
@@ -139,6 +174,8 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
         steps,
         out,
         trace,
+        trace_in,
+        trace_out,
     })
 }
 
@@ -207,6 +244,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "train" => cmd_train(&cli),
         "plan" => cmd_plan(&cli),
         "trace" => cmd_trace(&cli),
+        "serve" => cmd_serve(&cli),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())
@@ -216,13 +254,16 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "parconv — concurrent CNN ops on a simulated GPU (SPAA'20 reproduction)
-commands: table1 table2 networks serialization discover end2end training validate train plan trace help
+commands: table1 table2 networks serialization discover end2end training validate train plan trace serve help
 global flags: --config FILE --device D --network N --batch B --policy P
               --partition M --streams K --priority Q --workspace-mb MB
-              --artifacts DIR --min-speedup X
+              --artifacts DIR --min-speedup X --seed S
 end2end/training also take: --executor event|barrier --trace FILE
 training also takes: --gpus N --link-latency-us X --link-gbps X
-                     --reduce overlapped|serial_tail  (data parallelism)";
+                     --reduce overlapped|serial_tail  (data parallelism)
+serve takes: --requests N --arrival poisson|bursty|diurnal --rate R
+             --window-us W --max-batch B --slo-us S --serve-gpus N
+             --mix net1,net2,... --trace-out F --trace-in F";
 
 // --------------------------------------------------------------------------
 
@@ -870,6 +911,64 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
         "\nwrote {out}; reload + replay verified identical under both \
          executors ✓"
     );
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
+    let dev = device(&cli.cfg)?;
+    let sched = schedule_config(&cli.cfg)?;
+    let sv = &cli.cfg.serve;
+    let arrival = ArrivalKind::parse(&sv.arrival).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown arrival {:?}; valid: poisson, bursty, diurnal",
+            sv.arrival
+        )
+    })?;
+    let mut mix = Vec::new();
+    for name in sv.mix.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        mix.push(Network::parse(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown network {name:?} in serving mix")
+        })?);
+    }
+    anyhow::ensure!(
+        !mix.is_empty(),
+        "serving mix must name at least one network"
+    );
+    let mut cfg = ServeConfig {
+        requests: sv.requests,
+        arrival,
+        rate_per_s: sv.rate_per_s,
+        window_us: sv.window_us,
+        max_batch: sv.max_batch,
+        slo_us: sv.slo_us,
+        gpus: sv.gpus,
+        mix,
+        seed: cli.cfg.seed,
+    };
+    let report = if let Some(path) = &cli.trace_in {
+        // replay: the trace dictates both the arrivals and the mix
+        let (requests, trace_mix) =
+            trace_from_text(&std::fs::read_to_string(path)?)?;
+        cfg.mix = trace_mix;
+        cfg.requests = requests.len();
+        println!(
+            "replaying {} arrivals from {path}\n",
+            requests.len()
+        );
+        ServeDriver::new(dev, sched, cfg).run_trace(&requests)
+    } else {
+        let driver = ServeDriver::new(dev, sched, cfg);
+        let requests = driver.generate_workload();
+        if let Some(path) = &cli.trace_out {
+            std::fs::write(
+                path,
+                trace_to_text(&requests, &driver.config().mix),
+            )?;
+            println!("wrote {} arrivals to {path}\n", requests.len());
+        }
+        driver.run_trace(&requests)
+    };
+    println!("{}", report.render());
     Ok(())
 }
 

@@ -9,7 +9,7 @@
 //! the in-memory plan. Workspace sizes, per-SM quotas, and fluid estimates
 //! are recorded as provenance/diagnostics only.
 //!
-//! Schema v3 records two views of the same schedule: the ordered `steps`
+//! The schema records two views of the same schedule: the ordered `steps`
 //! (the barrier replay's authority) and the `nodes` scheduling graph —
 //! per-op dependency edges, stream-lane assignments, and device
 //! assignments in dispatch-priority order — which the event-driven
@@ -18,7 +18,10 @@
 //! carries a self-`digest` the reader verifies before anything else
 //! trusts it. Multi-GPU data-parallel plans (built by
 //! `cluster::DevicePool`) record the replica count and include the
-//! per-parameter `GradReduce` interconnect ops among their nodes.
+//! per-parameter `GradReduce` interconnect ops among their nodes. Schema
+//! v4 additionally marks each member the planner already downgraded to
+//! fit the workspace budget (`fallback`), so replay-time fallback
+//! accounting cannot double-count those ops.
 
 use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
 use crate::coordinator::{
@@ -33,14 +36,18 @@ use crate::util::digest::{hex16, parse_hex16, Fnv64};
 
 use super::json::{escape, JsonValue};
 
-/// Version tag of the plan JSON layout. Version 3 added per-node device
-/// assignments and the `replicas` count (multi-GPU data-parallel plans
-/// whose `nodes` include `GradReduce` ops), plus a self-`digest` field
-/// the reader verifies; version 2 added the `nodes` array — per-op
-/// dependency edges and stream-lane assignments — which the event-driven
-/// executor schedules from. Version-1 and version-2 plans are refused
-/// with [`PlanError::UnsupportedVersion`].
-pub const PLAN_FORMAT_VERSION: u32 = 3;
+/// Version tag of the plan JSON layout. Version 4 adds the per-member
+/// `fallback` flag — whether the planner already downgraded that op's
+/// algorithm to fit the workspace budget — so executors can tell a
+/// re-taken fallback from a fresh runtime one and count each op once.
+/// Version 3 added per-node device assignments and the `replicas` count
+/// (multi-GPU data-parallel plans whose `nodes` include `GradReduce`
+/// ops), plus a self-`digest` field the reader verifies; version 2 added
+/// the `nodes` array — per-op dependency edges and stream-lane
+/// assignments — which the event-driven executor schedules from. Plans
+/// of version 3 and earlier are refused with
+/// [`PlanError::UnsupportedVersion`].
+pub const PLAN_FORMAT_VERSION: u32 = 4;
 
 /// Errors from plan execution or deserialization.
 #[derive(Clone, Debug, PartialEq, thiserror::Error)]
@@ -64,9 +71,10 @@ pub enum PlanError {
     Unsupported { algo: Algorithm, op: usize },
     #[error(
         "unsupported plan schema version {found}: this build reads \
-         version 3 (v3 plans record per-node device assignments and \
-         gradient-reduce ops for multi-GPU replay, and carry a verified \
-         digest; v2 and earlier layouts do not) — \
+         version 4 (v4 plans record per-member workspace-fallback flags \
+         so replay never double-counts a downgrade, on top of v3's \
+         per-node device assignments, gradient-reduce ops, and verified \
+         digest; v3 and earlier layouts lack one or more of these) — \
          regenerate the plan with `parconv plan`"
     )]
     UnsupportedVersion { found: u32 },
@@ -135,6 +143,11 @@ pub struct OpPlan {
     pub algo: Algorithm,
     /// Workspace the chosen kernel allocates (informational).
     pub workspace_bytes: u64,
+    /// Whether `algo` is already a workspace downgrade from the planner's
+    /// unconstrained choice (schema v4). Such ops are counted in
+    /// `planned_ws_fallbacks`; executors that re-take the same downgrade
+    /// at run time must not count them a second time.
+    pub fallback: bool,
 }
 
 /// One ordered co-execution group: members launch on streams 0..k under
@@ -161,7 +174,7 @@ pub enum PlanStep {
     Group(GroupPlan),
 }
 
-/// One op in the plan's scheduling graph (schema v3): its dependency
+/// One op in the plan's scheduling graph (schema v3+): its dependency
 /// edges, planned stream lane, and device. The node *order* is the planner's
 /// dispatch order (critical-path priority), which the event-driven
 /// executor uses as its ready-queue ranking; the `steps` sequence remains
@@ -175,7 +188,7 @@ pub struct PlanNode {
     /// group); `None` for ops on the serial host lane or the
     /// interconnect lane.
     pub lane: Option<usize>,
-    /// Device the op is assigned to (schema v3; 0 for single-GPU plans
+    /// Device the op is assigned to (schema v3+; 0 for single-GPU plans
     /// and for interconnect ops, which the executor routes by kind).
     /// Validated against the DAG's device map on replay.
     pub device: usize,
@@ -192,7 +205,7 @@ pub struct PlanNode {
 pub struct Plan {
     pub meta: PlanMeta,
     pub steps: Vec<PlanStep>,
-    /// Scheduling graph (v3): dependency edges + lane and device
+    /// Scheduling graph (v3+): dependency edges + lane and device
     /// assignments per op, in dispatch-priority order. The event-driven
     /// executor schedules from this; the barrier replay ignores it.
     pub nodes: Vec<PlanNode>,
@@ -336,6 +349,7 @@ impl Plan {
                         h.write_usize(m.op);
                         h.write_str(m.algo.name());
                         h.write_u64(m.workspace_bytes);
+                        h.write_u32(m.fallback as u32);
                     }
                 }
             }
@@ -566,7 +580,13 @@ impl Plan {
                         end_us: clock + dur,
                         workspace_bytes: 0,
                         stream: None,
-                        device: dag.device_of(*op),
+                        // reductions occupy the interconnect, not the
+                        // device their DAG node nominally sits on
+                        device: if kind.is_grad_reduce() {
+                            None
+                        } else {
+                            Some(dag.device_of(*op))
+                        },
                     });
                     clock += dur;
                 }
@@ -595,7 +615,7 @@ impl Plan {
                     let mut final_descs: Vec<KernelDesc> =
                         Vec::with_capacity(descs.len());
                     let mut allocs = Vec::with_capacity(descs.len());
-                    for d in &descs {
+                    for (m, d) in g.members.iter().zip(&descs) {
                         match mem.alloc(d.workspace_bytes) {
                             Ok(id) => {
                                 allocs.push(id);
@@ -609,7 +629,11 @@ impl Plan {
                                 )
                                 .expect("GEMM supports every convolution");
                                 debug_assert_eq!(fallback.workspace_bytes, 0);
-                                if fallback.algo != d.algo {
+                                // counted once: a downgrade the planner
+                                // already recorded (m.fallback, included
+                                // in planned_ws_fallbacks) must not be
+                                // re-counted when replay re-takes it
+                                if fallback.algo != d.algo && !m.fallback {
                                     ws_fallbacks += 1;
                                 }
                                 final_descs.push(fallback);
@@ -633,7 +657,7 @@ impl Plan {
                             end_us: clock + rec.end_us,
                             workspace_bytes: desc.workspace_bytes,
                             stream: Some(i),
-                            device: dag.device_of(m.op),
+                            device: Some(dag.device_of(m.op)),
                         });
                     }
                     conv_overlap_us += sim.overlap_us();
@@ -727,10 +751,11 @@ impl Plan {
                         .map(|p| {
                             format!(
                                 "{{\"op\": {}, \"algo\": \"{}\", \
-                                 \"workspace\": {}}}",
+                                 \"workspace\": {}, \"fallback\": {}}}",
                                 p.op,
                                 p.algo.name(),
-                                p.workspace_bytes
+                                p.workspace_bytes,
+                                p.fallback
                             )
                         })
                         .collect();
@@ -837,11 +862,12 @@ impl Plan {
         };
 
         let version = u64_field("version")? as u32;
-        if version == 1 || version == 2 {
+        if version >= 1 && version < PLAN_FORMAT_VERSION {
             // v1 plans recorded ordered groups only; v2 plans lack device
-            // assignments, the replica count, and the verified digest. A
-            // dedicated error (rather than a generic parse failure) tells
-            // the operator exactly what to do.
+            // assignments, the replica count, and the verified digest; v3
+            // plans lack the per-member fallback flags. A dedicated error
+            // (rather than a generic parse failure) tells the operator
+            // exactly what to do.
             return Err(PlanError::UnsupportedVersion { found: version });
         }
         if version != PLAN_FORMAT_VERSION {
@@ -986,7 +1012,7 @@ fn parse_group(g: &JsonValue) -> Result<GroupPlan, PlanError> {
         .and_then(JsonValue::as_arr)
         .ok_or_else(|| bad("members"))?
     {
-        reject_unknown(m, &["op", "algo", "workspace"])?;
+        reject_unknown(m, &["op", "algo", "workspace", "fallback"])?;
         let algo = Algorithm::parse(
             m.get("algo")
                 .and_then(JsonValue::as_str)
@@ -1003,6 +1029,12 @@ fn parse_group(g: &JsonValue) -> Result<GroupPlan, PlanError> {
                 .get("workspace")
                 .and_then(JsonValue::as_u64)
                 .ok_or_else(|| bad("workspace"))?,
+            // mandatory in v4: a deleted flag must fail loudly, not
+            // silently default (it changes fallback accounting on replay)
+            fallback: m
+                .get("fallback")
+                .and_then(JsonValue::as_bool)
+                .ok_or_else(|| bad("fallback"))?,
         });
     }
     Ok(GroupPlan {

@@ -266,9 +266,13 @@ impl Planner {
                     let batch: Vec<usize> =
                         g.members.iter().map(|&m| ids[m]).collect();
                     pending.retain(|id| !batch.contains(id));
+                    // group selection fits the budget by construction —
+                    // nothing here is a workspace downgrade
+                    let no_fallback = vec![false; batch.len()];
                     return self.group_plan(
                         &batch,
                         g.descs,
+                        &no_fallback,
                         self.cfg.partition,
                         Some(g.est_us),
                     );
@@ -276,11 +280,12 @@ impl Planner {
             }
             // no partner pays off: the seed runs alone, serially
             let id = pending.pop_front().expect("pending non-empty");
-            let descs =
+            let (descs, fallbacks) =
                 self.solo_batch(&[conv_params(id)], budget, ws_fallbacks);
             return self.group_plan(
                 &[id],
                 descs,
+                &fallbacks,
                 PartitionMode::Serial,
                 None,
             );
@@ -289,16 +294,22 @@ impl Planner {
         let batch: Vec<usize> = pending.drain(..take).collect();
         let params: Vec<&ConvParams> =
             batch.iter().map(|&id| conv_params(id)).collect();
-        let descs = self.solo_batch(&params, budget, ws_fallbacks);
-        self.group_plan(&batch, descs, self.cfg.partition, None)
+        let (descs, fallbacks) =
+            self.solo_batch(&params, budget, ws_fallbacks);
+        self.group_plan(&batch, descs, &fallbacks, self.cfg.partition, None)
     }
 
+    /// Returns the fitted descriptors plus a per-member flag marking
+    /// which of them are workspace downgrades (fitted algorithm differs
+    /// from the unconstrained choice). The flags land in
+    /// [`OpPlan::fallback`] so executors can tell a fallback they are
+    /// *re-taking* from a fresh runtime one and count each op once.
     fn solo_batch(
         &self,
         params: &[&ConvParams],
         mut budget: u64,
         ws_fallbacks: &mut u64,
-    ) -> Vec<KernelDesc> {
+    ) -> (Vec<KernelDesc>, Vec<bool>) {
         // Sequential admission: each op's workspace shrinks the budget the
         // next sees (launch-time memory check, paper §2 footnote 1).
         // ProfileGuided ops running solo take the fastest fitting algorithm
@@ -308,6 +319,7 @@ impl Planner {
             p => p,
         };
         let mut out = Vec::with_capacity(params.len());
+        let mut flags = Vec::with_capacity(params.len());
         for p in params {
             let unconstrained = self.solo_unconstrained(policy, p);
             let fitted = if unconstrained.workspace_bytes <= budget {
@@ -316,13 +328,15 @@ impl Planner {
                 select_solo(policy, p, &self.spec, budget)
                     .expect("GEMM fallback always fits")
             };
-            if fitted.algo != unconstrained.algo {
+            let is_fallback = fitted.algo != unconstrained.algo;
+            if is_fallback {
                 *ws_fallbacks += 1;
             }
+            flags.push(is_fallback);
             budget = budget.saturating_sub(fitted.workspace_bytes);
             out.push(fitted);
         }
-        out
+        (out, flags)
     }
 
     /// Freeze one batch into a [`GroupPlan`]: record the algorithm per
@@ -332,9 +346,11 @@ impl Planner {
         &self,
         ids: &[usize],
         descs: Vec<KernelDesc>,
+        fallbacks: &[bool],
         partition: PartitionMode,
         est: Option<f64>,
     ) -> GroupPlan {
+        debug_assert_eq!(ids.len(), fallbacks.len());
         let partition = if descs.len() <= 1 {
             PartitionMode::Serial
         } else {
@@ -359,10 +375,12 @@ impl Planner {
         let members = ids
             .iter()
             .zip(&descs)
-            .map(|(&op, d)| OpPlan {
+            .zip(fallbacks)
+            .map(|((&op, d), &fallback)| OpPlan {
                 op,
                 algo: d.algo,
                 workspace_bytes: d.workspace_bytes,
+                fallback,
             })
             .collect();
         GroupPlan {
@@ -542,6 +560,42 @@ mod tests {
             .nodes
             .iter()
             .any(|n| dag.ops[n.op].kind.is_grad_reduce()));
+    }
+
+    #[test]
+    fn fallback_flags_agree_with_the_planned_counter() {
+        // zero budget: every solo-planned conv whose unconstrained choice
+        // needs workspace is downgraded — and each downgrade must be both
+        // counted in meta and flagged on its member record
+        let dag = Network::AlexNet.build(8);
+        let p = Planner::new(
+            DeviceSpec::k40(),
+            ScheduleConfig {
+                workspace_limit: 0,
+                ..Default::default()
+            },
+        );
+        let plan = p.plan(&dag, "alexnet");
+        let flagged: u64 = plan
+            .steps
+            .iter()
+            .map(|s| match s {
+                PlanStep::Group(g) => {
+                    g.members.iter().filter(|m| m.fallback).count() as u64
+                }
+                PlanStep::Host { .. } => 0,
+            })
+            .sum();
+        assert_eq!(flagged, plan.meta.planned_ws_fallbacks);
+        assert!(flagged > 0, "zero budget must force downgrades");
+        // an unconstrained budget plans with no flags at all
+        let free = planner(4).plan(&dag, "alexnet");
+        assert_eq!(free.meta.planned_ws_fallbacks, 0);
+        for step in &free.steps {
+            if let PlanStep::Group(g) = step {
+                assert!(g.members.iter().all(|m| !m.fallback));
+            }
+        }
     }
 
     #[test]

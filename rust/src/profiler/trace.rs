@@ -67,8 +67,10 @@ pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
         if let Some(l) = o.stream {
             max_lane = Some(max_lane.map_or(l, |m: usize| m.max(l)));
         }
-        max_device = max_device.max(o.device);
-        has_comm |= o.kind == "grad_reduce";
+        if let Some(d) = o.device {
+            max_device = max_device.max(d);
+        }
+        has_comm |= o.device.is_none();
     }
     let comm_pid = max_device + 1;
     for d in 0..=max_device {
@@ -107,10 +109,11 @@ pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
         // metadata events always precede, so every op record is
         // comma-separated
         out.push(',');
-        let (pid, tid) = if o.kind == "grad_reduce" {
-            (comm_pid, 0)
-        } else {
-            (o.device, o.stream.map_or(0, |l| l + 1))
+        // interconnect residency is recorded on the op itself
+        // (`device: None`), not inferred from the kind string
+        let (pid, tid) = match o.device {
+            None => (comm_pid, 0),
+            Some(d) => (d, o.stream.map_or(0, |l| l + 1)),
         };
         let algo = o
             .algo
@@ -128,7 +131,10 @@ pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
             o.op_id,
             json_escape(&algo),
             o.workspace_bytes,
-            o.device
+            o.device.map_or_else(
+                || String::from("\"interconnect\""),
+                |d| d.to_string()
+            )
         ));
     }
     out.push_str(&format!(

@@ -1,0 +1,475 @@
+//! The serving driver: admission, batching, placement, and metrics.
+//!
+//! [`ServeDriver`] multiplexes an open-loop request stream over a
+//! [`DevicePool`] in virtual time. Each model in the mix owns a
+//! [`BatchQueue`]; a queue flushes when its batching window expires or
+//! it holds a full batch, whichever comes first. A flush becomes one
+//! *dispatch*: the batch is rounded up to a power-of-two bucket (so a
+//! handful of plan shapes serves every batch size), the [`Session`]
+//! plan cache supplies the plan — built once per (model, bucket) shape,
+//! replayed with zero selector calls thereafter — and the dispatch runs
+//! on the least-loaded GPU of the pool.
+//!
+//! Admission is SLO-aware: before executing, requests whose *projected*
+//! completion (queue start + the plan's predicted makespan) already
+//! misses the deadline are shed, open-loop style — an overloaded server
+//! that sheds early protects the goodput of the requests it keeps.
+//!
+//! Everything runs in virtual microseconds off a seeded PRNG: two runs
+//! with the same config and seed produce bit-identical reports, which
+//! CI exploits (`serving-smoke` diffs two runs).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cluster::{ClusterConfig, DevicePool, LinkModel};
+use crate::coordinator::ScheduleConfig;
+use crate::gpusim::DeviceSpec;
+use crate::graph::{Dag, Network};
+use crate::plan::Plan;
+use crate::util::{Prng, Summary};
+
+use super::queue::BatchQueue;
+use super::workload::{generate, ArrivalKind, Request};
+
+/// Serving-run shape: workload, batching, SLO, and pool size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Number of requests to generate (ignored when replaying a trace).
+    pub requests: usize,
+    /// Arrival process of the open-loop workload.
+    pub arrival: ArrivalKind,
+    /// Mean offered load in requests per second.
+    pub rate_per_s: f64,
+    /// Batching window in virtual µs (0 = per-request execution).
+    pub window_us: f64,
+    /// Largest batch one dispatch may carry.
+    pub max_batch: usize,
+    /// Latency SLO in virtual µs; <= 0 disables admission shedding.
+    pub slo_us: f64,
+    /// GPUs in the pool.
+    pub gpus: usize,
+    /// Model mix; requests draw uniformly from it.
+    pub mix: Vec<Network>,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            requests: 2_000,
+            arrival: ArrivalKind::Poisson,
+            rate_per_s: 100.0,
+            window_us: 5_000.0,
+            max_batch: 8,
+            slo_us: 1_000_000.0,
+            gpus: 2,
+            mix: vec![
+                Network::GoogleNet,
+                Network::ResNet50,
+                Network::AlexNet,
+            ],
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregate metrics of one serving run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeReport {
+    /// One-line description of the run shape (for `render`).
+    pub label: String,
+    pub requests: usize,
+    /// Requests that executed (admitted and completed).
+    pub completed: usize,
+    /// Requests shed at admission (projected SLO miss).
+    pub shed: usize,
+    /// Completed requests that made their latency SLO.
+    pub slo_met: usize,
+    /// Offered load over the whole run.
+    pub offered_per_s: f64,
+    /// SLO-meeting completions per second — the number overload melts.
+    pub goodput_per_s: f64,
+    pub shed_rate: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    /// Dispatches executed.
+    pub batches: usize,
+    /// Mean requests per dispatch.
+    pub mean_batch: f64,
+    /// Plans built from scratch by the shared session cache.
+    pub plans_built: u64,
+    /// Fraction of plan lookups served from the cache.
+    pub cache_hit_rate: f64,
+    /// Virtual time the run spans (last completion or arrival).
+    pub makespan_us: f64,
+}
+
+impl ServeReport {
+    /// Human-readable report. Line format is load-bearing: the CI
+    /// `serving-smoke` step diffs two runs and greps `goodput_per_s`.
+    pub fn render(&self) -> String {
+        format!(
+            "serving report — {}\n\
+             \x20 requests:       {} ({} completed, {} shed, shed rate \
+             {:.4})\n\
+             \x20 latency_us:     p50 {:.1} / p95 {:.1} / p99 {:.1} \
+             (mean {:.1})\n\
+             \x20 offered_per_s:  {:.2}\n\
+             \x20 goodput_per_s:  {:.2} ({} of {} completions met the \
+             SLO)\n\
+             \x20 batches:        {} (mean batch {:.2})\n\
+             \x20 plan cache:     {} built, hit rate {:.2}%\n\
+             \x20 makespan:       {:.1} us",
+            self.label,
+            self.requests,
+            self.completed,
+            self.shed,
+            self.shed_rate,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.mean_us,
+            self.offered_per_s,
+            self.goodput_per_s,
+            self.slo_met,
+            self.completed,
+            self.batches,
+            self.mean_batch,
+            self.plans_built,
+            100.0 * self.cache_hit_rate,
+            self.makespan_us,
+        )
+    }
+}
+
+/// Mutable run state threaded through the flush path.
+struct RunStats {
+    latencies: Summary,
+    slo_met: usize,
+    shed: usize,
+    batches: usize,
+    batched: usize,
+    last_completion_us: f64,
+}
+
+/// Round a batch size up to its plan bucket: the next power of two,
+/// capped at `max_batch`. Buckets keep the set of distinct plan shapes
+/// (and so the cold-start cost) logarithmic in `max_batch`.
+fn bucket_of(count: usize, max_batch: usize) -> usize {
+    count.next_power_of_two().min(max_batch).max(1)
+}
+
+/// Trace-driven multi-tenant inference serving over a device pool.
+pub struct ServeDriver {
+    cfg: ServeConfig,
+    pool: DevicePool,
+}
+
+impl ServeDriver {
+    /// A driver over a fresh pool of `cfg.gpus` devices. The pool's
+    /// session (and so the plan cache) lives as long as the driver:
+    /// repeated runs keep their warmed cache.
+    pub fn new(
+        spec: DeviceSpec,
+        sched: ScheduleConfig,
+        cfg: ServeConfig,
+    ) -> Self {
+        assert!(!cfg.mix.is_empty(), "serving needs at least one model");
+        let pool = DevicePool::new(
+            spec,
+            sched,
+            ClusterConfig {
+                replicas: cfg.gpus.max(1),
+                link: LinkModel::default(),
+                overlap: true,
+            },
+        );
+        Self { cfg, pool }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// The pool backing the driver (plan cache, executor choice).
+    pub fn pool(&self) -> &DevicePool {
+        &self.pool
+    }
+
+    /// The workload this driver's config describes, generated fresh
+    /// (seeded, so repeated calls return the same arrivals).
+    pub fn generate_workload(&self) -> Vec<Request> {
+        let mut prng = Prng::new(self.cfg.seed);
+        generate(
+            self.cfg.arrival,
+            self.cfg.requests,
+            self.cfg.rate_per_s,
+            self.cfg.mix.len(),
+            &mut prng,
+        )
+    }
+
+    /// Generate the configured workload and serve it.
+    pub fn run(&self) -> ServeReport {
+        self.run_trace(&self.generate_workload())
+    }
+
+    /// Serve an explicit request trace (arrival-sorted; model indices
+    /// must address this driver's mix). The virtual-time loop
+    /// interleaves two event sources — arrivals and queue-window
+    /// expiries — in strict time order, with arrivals winning ties so a
+    /// request landing exactly at a window edge still rides the batch.
+    pub fn run_trace(&self, requests: &[Request]) -> ServeReport {
+        let models = self.cfg.mix.len();
+        let mut dags: HashMap<(usize, usize), Dag> = HashMap::new();
+        let mut queues: Vec<BatchQueue> = (0..models)
+            .map(|_| BatchQueue::new(self.cfg.window_us, self.cfg.max_batch))
+            .collect();
+        let mut free = vec![0.0f64; self.cfg.gpus.max(1)];
+        let mut stats = RunStats {
+            latencies: Summary::new(),
+            slo_met: 0,
+            shed: 0,
+            batches: 0,
+            batched: 0,
+            last_completion_us: 0.0,
+        };
+        let mut i = 0usize;
+        loop {
+            // earliest queue deadline (lowest model index wins ties)
+            let mut next_flush: Option<(f64, usize)> = None;
+            for (m, q) in queues.iter().enumerate() {
+                if let Some(t) = q.ready_at() {
+                    if next_flush.map_or(true, |(bt, _)| t < bt) {
+                        next_flush = Some((t, m));
+                    }
+                }
+            }
+            let next_arrival = requests.get(i).map(|r| r.arrival_us);
+            match (next_arrival, next_flush) {
+                (None, None) => break,
+                (Some(ta), nf)
+                    if nf.map_or(true, |(tf, _)| ta <= tf) =>
+                {
+                    let r = requests[i];
+                    i += 1;
+                    assert!(
+                        r.model < models,
+                        "request {} addresses model {} outside the mix",
+                        r.id,
+                        r.model
+                    );
+                    queues[r.model].push(r, ta);
+                    if queues[r.model].is_full() {
+                        self.flush(
+                            &mut dags,
+                            &mut queues[r.model],
+                            &mut free,
+                            ta,
+                            r.model,
+                            &mut stats,
+                        );
+                    }
+                }
+                (_, Some((tf, m))) => {
+                    self.flush(
+                        &mut dags,
+                        &mut queues[m],
+                        &mut free,
+                        tf,
+                        m,
+                        &mut stats,
+                    );
+                }
+                // the arrival guard is a tautology when there is no
+                // pending flush, but guards don't count toward
+                // exhaustiveness
+                (Some(_), None) => unreachable!(),
+            }
+        }
+        self.report(requests, stats)
+    }
+
+    /// Dispatch one model's pending batch at virtual time `t`.
+    fn flush(
+        &self,
+        dags: &mut HashMap<(usize, usize), Dag>,
+        queue: &mut BatchQueue,
+        free: &mut [f64],
+        t: f64,
+        m: usize,
+        stats: &mut RunStats,
+    ) {
+        let mut kept = queue.drain(t);
+        if kept.is_empty() {
+            return;
+        }
+        // least-loaded placement, lowest device index on ties
+        let mut g = 0usize;
+        for (d, &f) in free.iter().enumerate().skip(1) {
+            if f < free[g] {
+                g = d;
+            }
+        }
+        let start = t.max(free[g]);
+        if self.cfg.slo_us > 0.0 {
+            // admission: shed requests whose projected completion
+            // already misses the deadline (prediction, not execution —
+            // shedding must not cost simulator time)
+            let bucket = bucket_of(kept.len(), self.cfg.max_batch);
+            let predicted =
+                self.plan_for(dags, m, bucket).predicted_makespan_us;
+            let before = kept.len();
+            kept.retain(|r| {
+                start + predicted - r.arrival_us <= self.cfg.slo_us
+            });
+            stats.shed += before - kept.len();
+            if kept.is_empty() {
+                return;
+            }
+        }
+        let bucket = bucket_of(kept.len(), self.cfg.max_batch);
+        let plan = self.plan_for(dags, m, bucket);
+        let dag = &dags[&(m, bucket)];
+        let session = self.pool.session();
+        let result = plan
+            .execute_with(dag, session.spec(), session.executor())
+            .expect("freshly planned DAG replays against itself");
+        let service = result.makespan_us;
+        free[g] = start + service;
+        stats.last_completion_us = stats.last_completion_us.max(free[g]);
+        stats.batches += 1;
+        stats.batched += kept.len();
+        for req in &kept {
+            let latency = start + service - req.arrival_us;
+            stats.latencies.add(latency);
+            if self.cfg.slo_us <= 0.0 || latency <= self.cfg.slo_us {
+                stats.slo_met += 1;
+            }
+        }
+    }
+
+    /// The (cached) plan for one model at one batch bucket, building
+    /// the DAG lazily. Steady state performs zero selector calls: the
+    /// session cache hits on the DAG digest.
+    fn plan_for(
+        &self,
+        dags: &mut HashMap<(usize, usize), Dag>,
+        m: usize,
+        bucket: usize,
+    ) -> Arc<Plan> {
+        let dag = dags
+            .entry((m, bucket))
+            .or_insert_with(|| self.cfg.mix[m].build(bucket));
+        let label = format!("{}@b{bucket}", self.cfg.mix[m].name());
+        self.pool.session().plan_labeled(dag, &label)
+    }
+
+    fn report(&self, requests: &[Request], stats: RunStats) -> ServeReport {
+        let last_arrival =
+            requests.last().map_or(0.0, |r| r.arrival_us);
+        let makespan_us = stats.last_completion_us.max(last_arrival);
+        let span_s = (makespan_us / 1e6).max(1e-9);
+        let completed = stats.latencies.count();
+        let cache = self.pool.session().stats();
+        let mix = self
+            .cfg
+            .mix
+            .iter()
+            .map(|n| n.name())
+            .collect::<Vec<_>>()
+            .join("+");
+        ServeReport {
+            label: format!(
+                "{} arrivals @ {:.0}/s, window {:.0} us, max batch {}, \
+                 slo {:.0} us, {} gpus, mix {}",
+                self.cfg.arrival.name(),
+                self.cfg.rate_per_s,
+                self.cfg.window_us,
+                self.cfg.max_batch,
+                self.cfg.slo_us,
+                self.cfg.gpus.max(1),
+                mix,
+            ),
+            requests: requests.len(),
+            completed,
+            shed: stats.shed,
+            slo_met: stats.slo_met,
+            offered_per_s: requests.len() as f64 / span_s,
+            goodput_per_s: stats.slo_met as f64 / span_s,
+            shed_rate: stats.shed as f64
+                / (requests.len().max(1)) as f64,
+            p50_us: stats.latencies.percentile(50.0),
+            p95_us: stats.latencies.percentile(95.0),
+            p99_us: stats.latencies.percentile(99.0),
+            mean_us: stats.latencies.mean(),
+            batches: stats.batches,
+            mean_batch: stats.batched as f64
+                / (stats.batches.max(1)) as f64,
+            plans_built: cache.plans_built,
+            cache_hit_rate: cache.hit_rate(),
+            makespan_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn driver(cfg: ServeConfig) -> ServeDriver {
+        ServeDriver::new(
+            DeviceSpec::k40(),
+            ScheduleConfig::default(),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn small_run_completes_and_accounts_every_request() {
+        let d = driver(ServeConfig {
+            requests: 120,
+            rate_per_s: 400.0,
+            ..ServeConfig::default()
+        });
+        let r = d.run();
+        assert_eq!(r.requests, 120);
+        assert_eq!(r.completed + r.shed, 120, "no request vanishes");
+        assert!(r.makespan_us.is_finite() && r.makespan_us > 0.0);
+        assert!(r.p50_us <= r.p95_us && r.p95_us <= r.p99_us);
+        assert!(r.batches > 0 && r.mean_batch >= 1.0);
+        assert!(r.goodput_per_s <= r.offered_per_s * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn bucketing_is_a_pow2_cap() {
+        assert_eq!(bucket_of(1, 8), 1);
+        assert_eq!(bucket_of(3, 8), 4);
+        assert_eq!(bucket_of(5, 8), 8);
+        assert_eq!(bucket_of(5, 6), 6, "cap wins over pow2");
+        assert_eq!(bucket_of(8, 8), 8);
+    }
+
+    #[test]
+    fn steady_state_hits_the_plan_cache() {
+        let d = driver(ServeConfig {
+            requests: 300,
+            rate_per_s: 300.0,
+            slo_us: 0.0, // keep every request; one lookup per dispatch
+            ..ServeConfig::default()
+        });
+        let r = d.run();
+        // few distinct (model, bucket) shapes serve hundreds of
+        // dispatches — the whole point of serving off a plan cache
+        assert!(
+            r.plans_built <= (d.config().mix.len() * 4) as u64,
+            "built {} plans",
+            r.plans_built
+        );
+        assert!(r.cache_hit_rate > 0.5, "hit rate {}", r.cache_hit_rate);
+    }
+}

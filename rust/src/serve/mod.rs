@@ -1,0 +1,34 @@
+//! Trace-driven multi-tenant inference serving on the event core.
+//!
+//! The training-side question the paper asks — how much intra-GPU
+//! parallelism can schedulers actually extract? — has a serving-side
+//! twin: how many *requests per second* can a small pool of GPUs
+//! sustain inside a latency SLO when every request replays a cached
+//! plan? This module answers it in simulation, end to end:
+//!
+//! - [`workload`] — open-loop arrival generation (Poisson / bursty /
+//!   diurnal) over the crate's seeded PRNG, plus a replayable text
+//!   trace format;
+//! - [`queue`] — per-model request queues with windowed dynamic
+//!   batching (flush on window expiry or a full batch);
+//! - [`driver`] — the virtual-time serving loop: SLO-aware admission
+//!   shedding, power-of-two batch bucketing into the [`Session`] plan
+//!   cache, least-loaded placement across the pool, and a
+//!   percentile/goodput/shed/cache report.
+//!
+//! Everything is virtual-time and seeded: a serving run is exactly
+//! reproducible, so latency percentiles are diffable across commits the
+//! same way makespans are. `parconv serve` is the CLI entry point; the
+//! `serving_load` bench sweeps arrival rate x batching window x mix.
+//!
+//! [`Session`]: crate::plan::Session
+
+pub mod driver;
+pub mod queue;
+pub mod workload;
+
+pub use driver::{ServeConfig, ServeDriver, ServeReport};
+pub use queue::BatchQueue;
+pub use workload::{
+    generate, trace_from_text, trace_to_text, ArrivalKind, Request,
+};

@@ -1,0 +1,134 @@
+//! Per-model request queues with windowed dynamic batching.
+//!
+//! Each model in the mix gets one [`BatchQueue`]. The first request to
+//! land in an empty queue opens a *batching window*: the queue promises
+//! to flush no later than `window_us` after that arrival, so later
+//! requests can ride along in the same batch (amortizing one plan
+//! replay over several requests) without unbounded queueing delay. A
+//! queue also flushes early the moment it holds `max_batch` requests.
+//! `window_us == 0` degenerates to per-request execution: every arrival
+//! flushes immediately as a batch of one.
+
+use super::workload::Request;
+
+/// FIFO of waiting requests for one model, flushed by deadline or size.
+#[derive(Clone, Debug)]
+pub struct BatchQueue {
+    window_us: f64,
+    max_batch: usize,
+    pending: Vec<Request>,
+    /// Virtual time the oldest pending request must flush by; `None`
+    /// when the queue is empty.
+    deadline_us: Option<f64>,
+}
+
+impl BatchQueue {
+    pub fn new(window_us: f64, max_batch: usize) -> Self {
+        assert!(
+            window_us >= 0.0 && window_us.is_finite(),
+            "batching window must be finite and non-negative"
+        );
+        Self {
+            window_us,
+            max_batch: max_batch.max(1),
+            pending: Vec::new(),
+            deadline_us: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// The queue holds a full batch and should flush without waiting
+    /// for its window deadline.
+    pub fn is_full(&self) -> bool {
+        self.pending.len() >= self.max_batch
+    }
+
+    /// When this queue must next flush (its window deadline), or `None`
+    /// when empty.
+    pub fn ready_at(&self) -> Option<f64> {
+        self.deadline_us
+    }
+
+    /// Enqueue one request at virtual time `now` (its arrival time). An
+    /// empty queue opens a new window ending `window_us` later.
+    pub fn push(&mut self, req: Request, now: f64) {
+        if self.pending.is_empty() {
+            self.deadline_us = Some(now + self.window_us);
+        }
+        self.pending.push(req);
+    }
+
+    /// Take up to `max_batch` requests for dispatch at time `now`. Any
+    /// remainder opens a fresh window starting at `now` (those requests
+    /// were queued behind a full batch; they get a full window again so
+    /// the flush cadence stays size- or deadline-driven, never a tight
+    /// drain loop).
+    pub fn drain(&mut self, now: f64) -> Vec<Request> {
+        let take = self.pending.len().min(self.max_batch);
+        let batch: Vec<Request> = self.pending.drain(..take).collect();
+        self.deadline_us = if self.pending.is_empty() {
+            None
+        } else {
+            Some(now + self.window_us)
+        };
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, at: f64) -> Request {
+        Request {
+            id,
+            model: 0,
+            arrival_us: at,
+        }
+    }
+
+    #[test]
+    fn first_request_opens_the_window() {
+        let mut q = BatchQueue::new(5_000.0, 8);
+        assert!(q.is_empty());
+        assert_eq!(q.ready_at(), None);
+        q.push(req(0, 100.0), 100.0);
+        assert_eq!(q.ready_at(), Some(5_100.0));
+        // later arrivals do not extend the promise made to the first
+        q.push(req(1, 4_000.0), 4_000.0);
+        assert_eq!(q.ready_at(), Some(5_100.0));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drain_caps_at_max_batch_and_rearms() {
+        let mut q = BatchQueue::new(1_000.0, 2);
+        for i in 0..5 {
+            q.push(req(i, i as f64), i as f64);
+        }
+        assert!(q.is_full());
+        let b = q.drain(10.0);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), [0, 1]);
+        // the remainder gets a fresh window from the drain time
+        assert_eq!(q.ready_at(), Some(1_010.0));
+        assert_eq!(q.drain(20.0).len(), 2);
+        assert_eq!(q.drain(30.0).len(), 1);
+        assert_eq!(q.ready_at(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn zero_window_flushes_at_the_arrival_instant() {
+        let mut q = BatchQueue::new(0.0, 8);
+        q.push(req(0, 42.5), 42.5);
+        assert_eq!(q.ready_at(), Some(42.5), "no added delay");
+        assert_eq!(q.drain(42.5).len(), 1);
+    }
+}

@@ -1,0 +1,316 @@
+//! Open-loop workload generation for the serving driver.
+//!
+//! Arrivals are generated in *virtual* microseconds from a seeded
+//! [`Prng`] — an open-loop client keeps submitting at its configured
+//! rate no matter how far the servers fall behind, which is what makes
+//! overload (and SLO shedding) observable at all. Three arrival
+//! processes cover the canonical serving studies:
+//!
+//! - [`ArrivalKind::Poisson`] — memoryless arrivals at a constant rate
+//!   (exponential inter-arrival gaps);
+//! - [`ArrivalKind::Bursty`] — a two-state modulated Poisson process
+//!   alternating hot (3x rate) and cold (rate/3) phases with
+//!   exponentially distributed dwell times, the classic flash-crowd
+//!   shape;
+//! - [`ArrivalKind::Diurnal`] — a sinusoidally rate-modulated Poisson
+//!   process (thinning construction) whose intensity swings between
+//!   25% and 100% of the configured peak over a fixed period.
+//!
+//! A generated (or captured) workload round-trips through a plain-text
+//! trace format so runs are replayable and diffable:
+//!
+//! ```text
+//! # parconv serving trace v1
+//! # arrival_us,model
+//! 153.271,googlenet
+//! 9817.554,resnet50
+//! ```
+
+use crate::graph::Network;
+use crate::util::Prng;
+
+/// One inference request: which model, and when it arrived (virtual µs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Dense id, assigned in arrival order.
+    pub id: usize,
+    /// Index into the driver's model mix.
+    pub model: usize,
+    /// Arrival time in virtual microseconds.
+    pub arrival_us: f64,
+}
+
+/// Arrival-process family of an open-loop workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    Bursty,
+    Diurnal,
+}
+
+/// Mean dwell time of one bursty hot/cold phase, in virtual µs.
+const BURST_PHASE_MEAN_US: f64 = 100_000.0;
+
+/// Period of the diurnal intensity cycle, in virtual µs (one "day" is
+/// compressed to one simulated second so short runs still see both the
+/// peak and the trough).
+const DIURNAL_PERIOD_US: f64 = 1_000_000.0;
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Some(Self::Poisson),
+            "bursty" | "burst" => Some(Self::Bursty),
+            "diurnal" => Some(Self::Diurnal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Bursty => "bursty",
+            Self::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Exponential variate with the given rate (events per µs).
+fn exp_gap_us(prng: &mut Prng, rate_per_us: f64) -> f64 {
+    // 1 - u is in (0, 1], so ln() is finite and the gap non-negative
+    -(1.0 - prng.next_f64()).ln() / rate_per_us
+}
+
+/// Generate `n` open-loop arrivals at a mean `rate_per_s`, each tagged
+/// with a model drawn uniformly from `num_models`. Deterministic for a
+/// given `prng` state.
+pub fn generate(
+    kind: ArrivalKind,
+    n: usize,
+    rate_per_s: f64,
+    num_models: usize,
+    prng: &mut Prng,
+) -> Vec<Request> {
+    assert!(num_models > 0, "a workload needs at least one model");
+    assert!(
+        rate_per_s > 0.0 && rate_per_s.is_finite(),
+        "arrival rate must be positive and finite"
+    );
+    let rate_us = rate_per_s / 1e6;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    // bursty-phase state: start hot, switch at phase_end
+    let mut hot = true;
+    let mut phase_end = exp_gap_us(prng, 1.0 / BURST_PHASE_MEAN_US);
+    while out.len() < n {
+        match kind {
+            ArrivalKind::Poisson => t += exp_gap_us(prng, rate_us),
+            ArrivalKind::Bursty => {
+                let phase_rate =
+                    if hot { rate_us * 3.0 } else { rate_us / 3.0 };
+                t += exp_gap_us(prng, phase_rate);
+                while t > phase_end {
+                    hot = !hot;
+                    phase_end +=
+                        exp_gap_us(prng, 1.0 / BURST_PHASE_MEAN_US);
+                }
+            }
+            ArrivalKind::Diurnal => {
+                // thinning: candidates at the peak rate, accepted with
+                // probability intensity(t)/peak
+                loop {
+                    t += exp_gap_us(prng, rate_us);
+                    let phase = 2.0 * std::f64::consts::PI * t
+                        / DIURNAL_PERIOD_US;
+                    let intensity = 0.625 + 0.375 * phase.sin();
+                    if prng.next_f64() < intensity {
+                        break;
+                    }
+                }
+            }
+        }
+        out.push(Request {
+            id: out.len(),
+            model: prng.below(num_models as u64) as usize,
+            arrival_us: t,
+        });
+    }
+    out
+}
+
+/// Serialize a workload as the replayable text trace format.
+pub fn trace_to_text(requests: &[Request], models: &[Network]) -> String {
+    let mut out = String::from("# parconv serving trace v1\n");
+    out.push_str("# arrival_us,model\n");
+    for r in requests {
+        out.push_str(&format!(
+            "{:.3},{}\n",
+            r.arrival_us,
+            models[r.model].name()
+        ));
+    }
+    out
+}
+
+/// Parse a text trace back into requests plus the model mix it uses
+/// (distinct model names, in order of first appearance). Rejects
+/// unknown model names, malformed lines, non-finite or time-travelling
+/// arrival stamps — a replayed trace must mean what the original run
+/// meant, or fail loudly.
+pub fn trace_from_text(
+    text: &str,
+) -> anyhow::Result<(Vec<Request>, Vec<Network>)> {
+    let mut requests = Vec::new();
+    let mut models: Vec<Network> = Vec::new();
+    let mut last = 0.0f64;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let lineno = idx + 1;
+        let (stamp, name) = line.split_once(',').ok_or_else(|| {
+            anyhow::anyhow!(
+                "trace line {lineno}: expected `arrival_us,model`, got \
+                 {line:?}"
+            )
+        })?;
+        let arrival_us: f64 = stamp.trim().parse().map_err(|_| {
+            anyhow::anyhow!(
+                "trace line {lineno}: bad arrival stamp {stamp:?}"
+            )
+        })?;
+        anyhow::ensure!(
+            arrival_us.is_finite() && arrival_us >= last,
+            "trace line {lineno}: arrival {arrival_us} is non-finite or \
+             earlier than the previous line ({last})"
+        );
+        last = arrival_us;
+        let net = Network::parse(name.trim()).ok_or_else(|| {
+            anyhow::anyhow!(
+                "trace line {lineno}: unknown model {:?}",
+                name.trim()
+            )
+        })?;
+        let model = match models.iter().position(|m| *m == net) {
+            Some(i) => i,
+            None => {
+                models.push(net);
+                models.len() - 1
+            }
+        };
+        requests.push(Request {
+            id: requests.len(),
+            model,
+            arrival_us,
+        });
+    }
+    anyhow::ensure!(!requests.is_empty(), "trace holds no requests");
+    Ok((requests, models))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_are_sorted_finite_and_seeded() {
+        let mut a = Prng::new(9);
+        let mut b = Prng::new(9);
+        let xs = generate(ArrivalKind::Poisson, 500, 200.0, 3, &mut a);
+        let ys = generate(ArrivalKind::Poisson, 500, 200.0, 3, &mut b);
+        assert_eq!(xs, ys, "same seed, same workload");
+        assert_eq!(xs.len(), 500);
+        let mut last = 0.0;
+        for r in &xs {
+            assert!(r.arrival_us.is_finite() && r.arrival_us >= last);
+            assert!(r.model < 3);
+            last = r.arrival_us;
+        }
+        // mean inter-arrival ~ 1/rate = 5000 us (law of large numbers)
+        let mean = last / xs.len() as f64;
+        assert!((2_500.0..10_000.0).contains(&mean), "mean gap {mean}");
+    }
+
+    #[test]
+    fn every_arrival_kind_generates_monotone_stamps() {
+        for kind in
+            [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal]
+        {
+            let mut prng = Prng::new(4);
+            let xs = generate(kind, 300, 500.0, 2, &mut prng);
+            assert_eq!(xs.len(), 300, "{}", kind.name());
+            let mut last = 0.0;
+            for r in &xs {
+                assert!(
+                    r.arrival_us.is_finite() && r.arrival_us >= last,
+                    "{}: non-monotone stamp",
+                    kind.name()
+                );
+                last = r.arrival_us;
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_has_higher_gap_dispersion_than_poisson() {
+        let mut pp = Prng::new(11);
+        let mut pb = Prng::new(11);
+        let gaps = |xs: &[Request]| -> Vec<f64> {
+            xs.windows(2)
+                .map(|w| w[1].arrival_us - w[0].arrival_us)
+                .collect()
+        };
+        let cv2 = |gs: &[f64]| -> f64 {
+            let m = gs.iter().sum::<f64>() / gs.len() as f64;
+            let v = gs.iter().map(|g| (g - m).powi(2)).sum::<f64>()
+                / gs.len() as f64;
+            v / (m * m)
+        };
+        let poisson =
+            generate(ArrivalKind::Poisson, 2_000, 300.0, 1, &mut pp);
+        let bursty =
+            generate(ArrivalKind::Bursty, 2_000, 300.0, 1, &mut pb);
+        // squared coefficient of variation: ~1 for Poisson, strictly
+        // larger for the modulated process
+        assert!(
+            cv2(&gaps(&bursty)) > cv2(&gaps(&poisson)),
+            "bursty must be overdispersed vs poisson"
+        );
+    }
+
+    #[test]
+    fn trace_round_trips_requests_and_mix() {
+        let mut prng = Prng::new(21);
+        let models = [Network::GoogleNet, Network::AlexNet];
+        let xs = generate(ArrivalKind::Poisson, 200, 400.0, 2, &mut prng);
+        let text = trace_to_text(&xs, &models);
+        assert!(text.starts_with("# parconv serving trace v1\n"));
+        let (ys, mix) = trace_from_text(&text).unwrap();
+        assert_eq!(ys.len(), xs.len());
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(models[x.model], mix[y.model]);
+            // stamps round-trip at the trace's ms precision
+            assert!((x.arrival_us - y.arrival_us).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn malformed_traces_are_refused() {
+        assert!(trace_from_text("").is_err(), "empty trace");
+        assert!(
+            trace_from_text("10.0,nosuchnet\n").is_err(),
+            "unknown model"
+        );
+        assert!(trace_from_text("10.0 googlenet\n").is_err(), "no comma");
+        assert!(trace_from_text("xyz,googlenet\n").is_err(), "bad stamp");
+        assert!(
+            trace_from_text("10.0,googlenet\n5.0,googlenet\n").is_err(),
+            "time travel"
+        );
+        assert!(
+            trace_from_text("inf,googlenet\n").is_err(),
+            "non-finite stamp"
+        );
+    }
+}

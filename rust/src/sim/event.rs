@@ -62,7 +62,14 @@ impl EventQueue {
     }
 
     pub fn push(&mut self, time: f64, payload: SimEvent) {
-        debug_assert!(time.is_finite(), "non-finite event time");
+        // A NaN here would otherwise surface as an opaque `partial_cmp`
+        // unwrap panic deep inside `BinaryHeap` — and only in debug
+        // builds. Reject at the boundary, in every build profile, with a
+        // message that names the culprit.
+        assert!(
+            time.is_finite(),
+            "non-finite event time {time} for {payload:?}"
+        );
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Reverse(Entry { time, seq, payload }));
@@ -103,5 +110,22 @@ mod tests {
         assert_eq!(t3, 2.0);
         assert!(q.is_empty());
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_times_are_rejected_at_the_boundary() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, SimEvent::HostDone { op: 0, start: 0.0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_times_are_rejected_at_the_boundary() {
+        let mut q = EventQueue::new();
+        q.push(
+            f64::INFINITY,
+            SimEvent::CommDone { op: 0, start: 0.0 },
+        );
     }
 }

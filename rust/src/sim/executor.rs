@@ -8,7 +8,7 @@
 //! device's running mix (the engine re-plans per-SM quotas for the new
 //! mix through the existing `plan_intra_sm` dispatch path).
 //!
-//! Multi-device plans (schema v3, built by `cluster::DevicePool`) add two
+//! Multi-device plans (schema v4, built by `cluster::DevicePool`) add two
 //! things on top of the single-GPU machinery:
 //!
 //! - every device owns its own engine, stream lanes, host lane, and
@@ -45,6 +45,9 @@
 //! execution) and, if still refused standing alone (failure injection),
 //! falls back to the workspace-free GEMM kernel; an op is never aborted.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
 use crate::coordinator::{
     non_conv_time_us, OpExec, ScheduleResult, SelectionPolicy,
@@ -74,6 +77,10 @@ struct RunInfo {
     desc: KernelDesc,
 }
 
+/// Min-heap of ready ops keyed by `(rank, op)`; ranks are unique, so the
+/// order is total and deterministic.
+type ReadyHeap = BinaryHeap<Reverse<(usize, usize)>>;
+
 struct EventRun<'a> {
     dag: &'a Dag,
     spec: &'a DeviceSpec,
@@ -93,12 +100,21 @@ struct EventRun<'a> {
     /// Planned stream lane per op (advisory; a busy hint falls back to the
     /// lowest free lane of the op's device).
     lane_hint: Vec<Option<usize>>,
+    /// Fallbacks the planner already recorded per op (mirrors
+    /// `OpPlan::fallback`): a runtime re-take of the same downgrade must
+    /// not increment `ws_fallbacks` a second time.
+    planned_fallback: Vec<bool>,
     indeg: Vec<usize>,
-    /// Per-device ready queues, kept sorted by ascending rank.
-    conv_ready: Vec<Vec<usize>>,
-    host_ready: Vec<Vec<usize>>,
+    /// Per-device ready queues: min-heaps keyed by `(rank, op)`. Ranks
+    /// are unique (position in the plan's node order), so the pop order
+    /// is exactly the ascending-rank scan the old sorted-`Vec` queues
+    /// produced — but pushes and pops are O(log n) instead of the
+    /// O(n) `insert`/`remove(0)` that turned serving-scale runs
+    /// quadratic.
+    conv_ready: Vec<ReadyHeap>,
+    host_ready: Vec<ReadyHeap>,
     /// Interconnect queue (global): gradient reductions awaiting the ring.
-    comm_ready: Vec<usize>,
+    comm_ready: ReadyHeap,
     /// Bookkeeping per device per engine kernel id (dense: each engine
     /// assigns ids in its own injection order).
     running: Vec<Vec<Option<RunInfo>>>,
@@ -169,16 +185,18 @@ impl<'a> EventRun<'a> {
     fn pop_op_event(&mut self) {
         let Some((t, ev)) = self.events.pop() else { return };
         self.clock = self.clock.max(t);
-        let (op, start) = match ev {
+        let (op, start, device) = match ev {
             SimEvent::HostDone { op, start } => {
                 let d = self.dag.device_of(op);
                 self.host_busy[d] = false;
-                (op, start)
+                (op, start, Some(d))
             }
             SimEvent::CommDone { op, start } => {
                 self.comm_busy = false;
                 self.comm_us += t - start;
-                (op, start)
+                // the reduce ran on the shared interconnect lane, not on
+                // the device its DAG node nominally sits on
+                (op, start, None)
             }
         };
         let dag = self.dag;
@@ -191,7 +209,7 @@ impl<'a> EventRun<'a> {
             end_us: t,
             workspace_bytes: 0,
             stream: None,
-            device: dag.device_of(op),
+            device,
         });
         self.finish_op(op);
     }
@@ -218,13 +236,13 @@ impl<'a> EventRun<'a> {
             end_us: t,
             workspace_bytes: info.desc.workspace_bytes,
             stream: Some(info.lane),
-            device,
+            device: Some(device),
         });
         self.finish_op(info.op);
     }
 
     /// Resolve dependency edges out of a completed op; newly-ready ops
-    /// enter the rank-sorted ready queues.
+    /// enter the rank-keyed ready heaps.
     fn finish_op(&mut self, op: usize) {
         let dag = self.dag;
         for &s in dag.succs(op) {
@@ -240,18 +258,14 @@ impl<'a> EventRun<'a> {
         let dev = self.dag.device_of(op);
         let is_conv = self.decision[op].is_some();
         let is_comm = !is_conv && self.dag.ops[op].kind.is_grad_reduce();
-        let rank_of = &self.rank;
-        let list: &mut Vec<usize> = if is_conv {
+        let heap: &mut ReadyHeap = if is_conv {
             &mut self.conv_ready[dev]
         } else if is_comm {
             &mut self.comm_ready
         } else {
             &mut self.host_ready[dev]
         };
-        let pos = match list.binary_search_by_key(&rank, |&o| rank_of[o]) {
-            Ok(p) | Err(p) => p,
-        };
-        list.insert(pos, op);
+        heap.push(Reverse((rank, op)));
     }
 
     /// Would admitting `cand` into `device`'s current mix beat serializing
@@ -289,20 +303,28 @@ impl<'a> EventRun<'a> {
     fn admit_ready(&mut self) {
         let t = self.clock;
         for d in 0..self.engines.len() {
-            if !self.host_busy[d] && !self.host_ready[d].is_empty() {
-                let op = self.host_ready[d].remove(0);
-                let dag = self.dag;
-                let dur = non_conv_time_us(&dag.ops[op].kind, self.spec);
-                self.events
-                    .push(t + dur, SimEvent::HostDone { op, start: t });
-                self.host_busy[d] = true;
-            }
-            let mut idx = 0;
-            while idx < self.conv_ready[d].len() {
-                if self.lanes[d].free_lane(None).is_none() {
-                    break;
+            if !self.host_busy[d] {
+                if let Some(Reverse((_, op))) = self.host_ready[d].pop() {
+                    let dag = self.dag;
+                    let dur =
+                        non_conv_time_us(&dag.ops[op].kind, self.spec);
+                    self.events
+                        .push(t + dur, SimEvent::HostDone { op, start: t });
+                    self.host_busy[d] = true;
                 }
-                let op = self.conv_ready[d][idx];
+            }
+            // Pop ready convolutions in ascending rank. Ops that cannot
+            // launch right now (unprofitable join, OOM while the mix is
+            // busy) are parked in `deferred` and re-enter the heap after
+            // the pass — exactly the old sorted-scan's "skip and keep"
+            // behavior, where a skipped op was not reconsidered within
+            // the same pass.
+            let mut deferred: Vec<(usize, usize)> = Vec::new();
+            while self.lanes[d].free_lane(None).is_some() {
+                let Some(Reverse((rank, op))) = self.conv_ready[d].pop()
+                else {
+                    break;
+                };
                 let base = self.decision[op]
                     .as_ref()
                     .expect("conv decision")
@@ -312,7 +334,7 @@ impl<'a> EventRun<'a> {
                     && self.policy == SelectionPolicy::ProfileGuided
                     && !self.join_is_profitable(d, &base)
                 {
-                    idx += 1;
+                    deferred.push((rank, op));
                     continue;
                 }
                 let (desc, alloc) =
@@ -322,7 +344,7 @@ impl<'a> EventRun<'a> {
                             // serialize-on-OOM: wait for the mix to drain,
                             // retry standing alone at the next completion
                             // event
-                            idx += 1;
+                            deferred.push((rank, op));
                             continue;
                         }
                         Err(_) => {
@@ -336,7 +358,13 @@ impl<'a> EventRun<'a> {
                             )
                             .expect("GEMM supports every convolution");
                             debug_assert_eq!(fb.workspace_bytes, 0);
-                            if fb.algo != base.algo {
+                            // counted once: a downgrade the planner
+                            // already recorded for this op is in
+                            // `planned_ws_fallbacks` and must not be
+                            // re-counted when the executor re-takes it
+                            if fb.algo != base.algo
+                                && !self.planned_fallback[op]
+                            {
                                 self.ws_fallbacks += 1;
                             }
                             (fb, None)
@@ -348,7 +376,6 @@ impl<'a> EventRun<'a> {
                 if !mix_busy {
                     self.rounds += 1;
                 }
-                self.conv_ready[d].remove(idx);
                 self.engines[d].advance_to(t);
                 let kid = self.engines[d].inject(desc.clone(), lane);
                 debug_assert_eq!(kid, self.running[d].len());
@@ -360,16 +387,21 @@ impl<'a> EventRun<'a> {
                     desc,
                 }));
             }
+            for (rank, op) in deferred {
+                self.conv_ready[d].push(Reverse((rank, op)));
+            }
         }
         // Interconnect: one collective at a time on the ring, in rank
         // (dispatch-priority) order — which, reductions being enqueued as
         // their gradients resolve, is their readiness order.
-        if !self.comm_busy && !self.comm_ready.is_empty() {
-            let op = self.comm_ready.remove(0);
-            let dag = self.dag;
-            let dur = non_conv_time_us(&dag.ops[op].kind, self.spec);
-            self.events.push(t + dur, SimEvent::CommDone { op, start: t });
-            self.comm_busy = true;
+        if !self.comm_busy {
+            if let Some(Reverse((_, op))) = self.comm_ready.pop() {
+                let dag = self.dag;
+                let dur = non_conv_time_us(&dag.ops[op].kind, self.spec);
+                self.events
+                    .push(t + dur, SimEvent::CommDone { op, start: t });
+                self.comm_busy = true;
+            }
         }
     }
 }
@@ -389,7 +421,7 @@ fn conv_overlap(ops: &[OpExec]) -> f64 {
 }
 
 /// Execute a plan event-driven. Provenance (DAG/device digests) and the
-/// v3 node list have already been checked by `Plan::execute_with_memory`
+/// v4 node list have already been checked by `Plan::execute_with_memory`
 /// (`Plan::validate_nodes` runs for both executors); this builds the
 /// scheduling state off the nodes and drives the discrete-event loop.
 ///
@@ -408,6 +440,7 @@ pub(crate) fn execute_event(
     // Rebuild each convolution's kernel descriptor from the recorded
     // (op, algorithm) decision — the same pure function the planner used.
     let mut decision: Vec<Option<KernelDesc>> = vec![None; n];
+    let mut planned_fallback = vec![false; n];
     for step in &plan.steps {
         if let PlanStep::Group(g) = step {
             for m in &g.members {
@@ -421,6 +454,7 @@ pub(crate) fn execute_event(
                     },
                 )?;
                 decision[m.op] = Some(d);
+                planned_fallback[m.op] = m.fallback;
             }
         }
     }
@@ -459,10 +493,11 @@ pub(crate) fn execute_event(
         decision,
         rank,
         lane_hint,
+        planned_fallback,
         indeg: (0..n).map(|i| dag.preds(i).len()).collect(),
-        conv_ready: vec![Vec::new(); devices],
-        host_ready: vec![Vec::new(); devices],
-        comm_ready: Vec::new(),
+        conv_ready: (0..devices).map(|_| ReadyHeap::new()).collect(),
+        host_ready: (0..devices).map(|_| ReadyHeap::new()).collect(),
+        comm_ready: ReadyHeap::new(),
         running: (0..devices).map(|_| Vec::new()).collect(),
         ops_out: Vec::with_capacity(n),
         host_busy: vec![false; devices],
@@ -547,7 +582,7 @@ mod tests {
             start[o.op_id] = o.start_us;
             end[o.op_id] = o.end_us;
             assert!(o.end_us <= r.makespan_us + 1e-6);
-            assert_eq!(o.device, 0, "single-device plan");
+            assert_eq!(o.device, Some(0), "single-device plan");
         }
         for i in 0..dag.len() {
             for &p in dag.preds(i) {
@@ -666,9 +701,15 @@ mod tests {
         // both devices did compute work
         for d in 0..2 {
             assert!(
-                r.ops.iter().any(|o| o.device == d && o.kind == "conv"),
+                r.ops
+                    .iter()
+                    .any(|o| o.device == Some(d) && o.kind == "conv"),
                 "device {d} ran no convolutions"
             );
+        }
+        // reductions carry no compute device: they ran on the interconnect
+        for o in r.ops.iter().filter(|o| o.kind == "grad_reduce") {
+            assert_eq!(o.device, None, "{} on a compute device", o.name);
         }
     }
 }

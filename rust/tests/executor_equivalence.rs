@@ -9,8 +9,11 @@
 //! - workspace-allocation refusals (failure injection or a tight budget)
 //!   degrade the event executor to solo execution or the workspace-free
 //!   fallback — never an aborted batch;
-//! - the v2 plan schema (dependency edges + stream lanes) round-trips,
-//!   and v1 plans fail with a dedicated versioned-schema error.
+//! - the v4 plan schema (dependency edges, stream lanes, per-member
+//!   fallback flags) round-trips, and v1 plans fail with a dedicated
+//!   versioned-schema error;
+//! - a planner-recorded workspace fallback is never counted a second
+//!   time when failure injection forces a runtime re-take.
 
 use parconv::coordinator::{
     PriorityPolicy, ScheduleConfig, ScheduleResult, SelectionPolicy,
@@ -210,6 +213,56 @@ fn oom_injection_never_aborts_event_execution() {
 }
 
 #[test]
+fn planned_fallbacks_are_counted_once_under_runtime_refusals() {
+    // The double-count pin: a conv the planner already downgraded (and
+    // recorded in `planned_ws_fallbacks`) can still have its runtime
+    // workspace allocation refused by failure injection. The re-take
+    // must not increment the counter a second time — each op
+    // contributes at most one fallback, planned or runtime.
+    let dag = Network::GoogleNet.build(32);
+    let tight = ScheduleConfig {
+        workspace_limit: 64 * 1024 * 1024,
+        ..config(4)
+    };
+    let convs = (0..dag.len())
+        .filter(|&i| {
+            matches!(dag.ops[i].kind, parconv::graph::OpKind::Conv(_))
+        })
+        .count() as u64;
+    // no injection: the runtime takes every planned decision as-is, so
+    // the executed counter must equal the planned one exactly
+    let clean = Session::new(DeviceSpec::k40(), tight.clone());
+    let planned = clean.plan(&dag).meta.planned_ws_fallbacks;
+    assert!(planned > 0, "fixture must force planner downgrades");
+    assert_eq!(clean.run(&dag).ws_fallbacks, planned);
+    // rate-1.0 injection: every allocation is refused, so every conv
+    // is re-taken at runtime — planner-flagged ops must not be counted
+    // again on top of their planned entry
+    for exec in [ExecutorKind::Event, ExecutorKind::Barrier] {
+        let mut injected = Session::with_failure_injection(
+            DeviceSpec::k40(),
+            tight.clone(),
+            1.0,
+            7,
+        );
+        injected.set_executor(exec);
+        let r = injected.run(&dag);
+        assert!(
+            r.ws_fallbacks >= planned,
+            "{}: counter lost planned fallbacks",
+            exec.name()
+        );
+        assert!(
+            r.ws_fallbacks <= convs,
+            "{}: {} fallbacks for {convs} convs — some op was counted \
+             twice",
+            exec.name(),
+            r.ws_fallbacks
+        );
+    }
+}
+
+#[test]
 fn tight_workspace_budget_serializes_instead_of_aborting() {
     // serialize-on-OOM: with a 16 MB budget, co-resident workspace rarely
     // fits — ops must wait for the mix to drain (solo execution) or fall
@@ -234,11 +287,11 @@ fn tight_workspace_budget_serializes_instead_of_aborting() {
 }
 
 #[test]
-fn v3_schema_roundtrips_dependency_edges_and_lanes() {
+fn v4_schema_roundtrips_dependency_edges_and_lanes() {
     let dag = Network::GoogleNet.build(8);
     let session = Session::new(DeviceSpec::k40(), config(2));
     let plan = session.plan_labeled(&dag, "googlenet");
-    assert_eq!(plan.meta.version, 3);
+    assert_eq!(plan.meta.version, 4);
     assert_eq!(plan.meta.replicas, 1);
     assert_eq!(plan.nodes.len(), dag.len());
     // lanes: group members carry Some(member index), host ops None
@@ -258,10 +311,11 @@ fn v3_schema_roundtrips_dependency_edges_and_lanes() {
         assert_eq!(deps, preds, "op {} edges", node.op);
     }
     let json = plan.to_json();
-    assert!(json.contains("\"version\": 3"));
+    assert!(json.contains("\"version\": 4"));
     assert!(json.contains("\"nodes\": ["));
     assert!(json.contains("\"digest\": \""));
-    let reloaded = Plan::from_json(&json).expect("v3 round-trip");
+    assert!(json.contains("\"fallback\":"));
+    let reloaded = Plan::from_json(&json).expect("v4 round-trip");
     assert_eq!(reloaded.nodes, plan.nodes);
     assert_eq!(reloaded.digest(), plan.digest());
     // and both executors replay the reloaded plan identically
@@ -277,8 +331,8 @@ fn v3_schema_roundtrips_dependency_edges_and_lanes() {
 fn v1_plans_fail_with_clear_versioned_error() {
     let dag = Network::GoogleNet.build(8);
     let session = Session::new(DeviceSpec::k40(), config(2));
-    let v3 = session.plan(&dag).to_json();
-    let v1 = v3.replacen("\"version\": 3", "\"version\": 1", 1);
+    let v4 = session.plan(&dag).to_json();
+    let v1 = v4.replacen("\"version\": 4", "\"version\": 1", 1);
     let err = Plan::from_json(&v1).unwrap_err();
     assert_eq!(err, PlanError::UnsupportedVersion { found: 1 });
     let msg = err.to_string();

@@ -144,7 +144,7 @@ fn check_schedule(
         let convs: Vec<_> = r
             .ops
             .iter()
-            .filter(|o| o.kind == "conv" && o.device == d)
+            .filter(|o| o.kind == "conv" && o.device == Some(d))
             .collect();
         for o in &convs {
             let mut in_flight = 0usize;
