@@ -6,10 +6,11 @@
 use std::time::Instant;
 
 use parconv::coordinator::{
-    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::Network;
+use parconv::plan::Session;
 use parconv::util::{fmt_bytes, fmt_us, Table};
 
 fn main() {
@@ -31,7 +32,7 @@ fn main() {
     let budgets_mb: [u64; 6] = [4096, 1024, 256, 64, 16, 4];
     let mut base = None;
     for mb in budgets_mb {
-        let r = Coordinator::new(
+        let r = Session::new(
             dev.clone(),
             ScheduleConfig {
                 policy: SelectionPolicy::FastestOnly,
@@ -41,7 +42,7 @@ fn main() {
                 priority: PriorityPolicy::CriticalPath,
             },
         )
-        .execute_dag(&dag);
+        .run(&dag);
         let b = *base.get_or_insert(r.makespan_us);
         t.row(vec![
             fmt_bytes(mb * 1024 * 1024),

@@ -9,8 +9,7 @@ use std::time::Instant;
 
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams};
 use parconv::coordinator::{
-    discover_pairs, Coordinator, PriorityPolicy, ScheduleConfig,
-    SelectionPolicy,
+    discover_pairs, PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
@@ -44,7 +43,7 @@ fn main() {
     // 2. full-network scheduling wall time
     for net in [Network::GoogleNet, Network::ResNet50] {
         let dag = net.build(32);
-        let coord = Coordinator::new(
+        let session = Session::new(
             dev.clone(),
             ScheduleConfig {
                 policy: SelectionPolicy::ProfileGuided,
@@ -55,10 +54,10 @@ fn main() {
             },
         );
         let t0 = Instant::now();
-        let r = coord.execute_dag(&dag);
+        let r = session.run(&dag);
         let wall = t0.elapsed().as_secs_f64() * 1e3;
         println!(
-            "coordinator: {} iteration scheduled in {wall:.1} ms wall \
+            "scheduler: {} iteration scheduled in {wall:.1} ms wall \
              (sim makespan {:.1} ms, {} rounds)",
             net.name(),
             r.makespan_us / 1e3,

@@ -9,10 +9,11 @@
 use std::time::Instant;
 
 use parconv::coordinator::{
-    Coordinator, PriorityPolicy, ScheduleConfig, SelectionPolicy,
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::{training_dag, Network};
+use parconv::plan::Session;
 use parconv::util::{fmt_us, Table};
 
 fn main() {
@@ -34,7 +35,7 @@ fn main() {
         let fwd = net.build(batch);
         let train = training_dag(&fwd);
         let run = |policy, partition, streams| {
-            Coordinator::new(
+            Session::new(
                 dev.clone(),
                 ScheduleConfig {
                     policy,
@@ -44,7 +45,7 @@ fn main() {
                     priority: PriorityPolicy::CriticalPath,
                 },
             )
-            .execute_dag(&train)
+            .run(&train)
             .makespan_us
         };
         let serial =

@@ -18,7 +18,7 @@
 
 use std::time::Instant;
 
-use parconv::cluster::{ClusterConfig, DevicePool, LinkModel};
+use parconv::cluster::{DevicePool, LinkModel, PoolOptions};
 use parconv::coordinator::{
     PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
@@ -62,13 +62,10 @@ fn main() {
         for &n in &REPLICAS {
             let run = |overlap: bool| {
                 DevicePool::new(
-                    DeviceSpec::k40(),
-                    sched(),
-                    ClusterConfig {
-                        replicas: n,
-                        link,
-                        overlap,
-                    },
+                    PoolOptions::homogeneous(DeviceSpec::k40(), n)
+                        .schedule(sched())
+                        .link(link)
+                        .overlap(overlap),
                 )
                 .run_training(&fwd)
             };

@@ -15,9 +15,13 @@
 //!   plus one [`crate::graph::OpKind::GradReduce`] node per parameter,
 //!   depending on the N copies of that parameter's gradient producer
 //!   (or, in serial-tail mode, on every replica's full backward pass).
+//! - [`PoolSpec`] — per-device specs of a (possibly heterogeneous)
+//!   pool, ordered by device id; the planner family resolves costs and
+//!   placement per member through it.
 //! - [`DevicePool`] — the facade: plans the replicated DAG through the
-//!   replica-aware [`crate::plan::Planner`] (schema v4: per-node device
-//!   assignments) and executes it on the multi-device event executor,
+//!   replica-aware [`crate::plan::Planner`] (schema v5: per-node device
+//!   assignments plus the per-device spec-name pool) and executes it on
+//!   the multi-device event executor,
 //!   which instantiates one `gpusim::Engine` per device plus a single
 //!   interconnect lane that serializes collectives, NCCL-style.
 //!
@@ -27,8 +31,11 @@
 
 mod link;
 mod pool;
+mod poolspec;
 
 pub use link::LinkModel;
 pub use pool::{
-    data_parallel_dag, reduce_sites, ClusterConfig, DevicePool, ReduceSite,
+    data_parallel_dag, reduce_sites, ClusterConfig, DevicePool,
+    PoolOptions, ReduceSite,
 };
+pub use poolspec::PoolSpec;

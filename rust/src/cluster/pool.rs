@@ -24,10 +24,11 @@
 use crate::coordinator::{ScheduleConfig, ScheduleResult};
 use crate::gpusim::DeviceSpec;
 use crate::graph::{training_dag, Dag, OpKind};
-use crate::plan::Session;
+use crate::plan::{PlannerKind, Session};
 use crate::sim::ExecutorKind;
 
 use super::link::LinkModel;
+use super::poolspec::PoolSpec;
 
 /// Data-parallel cluster shape and reduction policy.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -153,6 +154,70 @@ pub fn data_parallel_dag(
     g
 }
 
+/// Builder-lite options for [`DevicePool`]: one constructor path instead
+/// of the old `new`/`with_failure_injection` pair. The replica count is
+/// the pool's device count — heterogeneous pools train with one replica
+/// per member.
+#[derive(Clone)]
+pub struct PoolOptions {
+    /// Per-device specs; `devices.len()` is the replica count.
+    pub devices: PoolSpec,
+    pub schedule: ScheduleConfig,
+    /// The interconnect the ring all-reduce runs over.
+    pub link: LinkModel,
+    /// Overlap reductions with the backward pass (`false` = the
+    /// serial-tail baseline).
+    pub overlap: bool,
+    /// Which member of the planner family builds the plans.
+    pub planner: PlannerKind,
+    /// Optional (rate, seed) workspace-allocation failure injection.
+    pub failure_injection: Option<(f64, u64)>,
+}
+
+impl PoolOptions {
+    /// Options for an explicit (possibly heterogeneous) device list.
+    pub fn new(devices: PoolSpec) -> Self {
+        Self {
+            devices,
+            schedule: ScheduleConfig::default(),
+            link: LinkModel::default(),
+            overlap: true,
+            planner: PlannerKind::Greedy,
+            failure_injection: None,
+        }
+    }
+
+    /// The legacy shape: `replicas` identical devices.
+    pub fn homogeneous(spec: DeviceSpec, replicas: usize) -> Self {
+        Self::new(PoolSpec::homogeneous(spec, replicas.max(1)))
+    }
+
+    pub fn schedule(mut self, schedule: ScheduleConfig) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn link(mut self, link: LinkModel) -> Self {
+        self.link = link;
+        self
+    }
+
+    pub fn overlap(mut self, overlap: bool) -> Self {
+        self.overlap = overlap;
+        self
+    }
+
+    pub fn planner(mut self, planner: PlannerKind) -> Self {
+        self.planner = planner;
+        self
+    }
+
+    pub fn failure_injection(mut self, rate: f64, seed: u64) -> Self {
+        self.failure_injection = Some((rate, seed));
+        self
+    }
+}
+
 /// N data-parallel devices behind one planning/execution facade.
 pub struct DevicePool {
     session: Session,
@@ -160,34 +225,18 @@ pub struct DevicePool {
 }
 
 impl DevicePool {
-    pub fn new(
-        spec: DeviceSpec,
-        cfg: ScheduleConfig,
-        cluster: ClusterConfig,
-    ) -> Self {
-        assert!(cluster.replicas >= 1, "a pool needs at least one device");
-        Self {
-            session: Session::new(spec, cfg),
-            cluster,
+    pub fn new(opts: PoolOptions) -> Self {
+        let cluster = ClusterConfig {
+            replicas: opts.devices.len(),
+            link: opts.link,
+            overlap: opts.overlap,
+        };
+        let mut session =
+            Session::with_planner(opts.devices, opts.schedule, opts.planner);
+        if let Some((rate, seed)) = opts.failure_injection {
+            session.inject_failures(rate, seed);
         }
-    }
-
-    /// Pool whose per-device workspace allocators spuriously refuse a
-    /// `rate` fraction of allocations (robustness testing: replay must
-    /// degrade to solo execution or workspace-free kernels with reduce
-    /// ops still in flight — never abort).
-    pub fn with_failure_injection(
-        spec: DeviceSpec,
-        cfg: ScheduleConfig,
-        cluster: ClusterConfig,
-        rate: f64,
-        seed: u64,
-    ) -> Self {
-        assert!(cluster.replicas >= 1, "a pool needs at least one device");
-        Self {
-            session: Session::with_failure_injection(spec, cfg, rate, seed),
-            cluster,
-        }
+        Self { session, cluster }
     }
 
     pub fn replicas(&self) -> usize {
@@ -331,9 +380,8 @@ mod tests {
         let fwd = Network::GoogleNet.build(4);
         for replicas in [1usize, 2] {
             let pool = DevicePool::new(
-                DeviceSpec::k40(),
-                ScheduleConfig::default(),
-                cluster(replicas, true),
+                PoolOptions::homogeneous(DeviceSpec::k40(), replicas)
+                    .link(LinkModel::pcie3()),
             );
             let dag = pool.training_dag(&fwd);
             let r = pool.run_training(&fwd);

@@ -1,0 +1,157 @@
+//! [`PoolSpec`]: the per-device specification list of a (possibly
+//! heterogeneous) device pool.
+//!
+//! The original API threaded a single [`DeviceSpec`] everywhere, which
+//! bakes in the assumption that every replica is the same GPU. The
+//! planner family (HEFT/PEFT/lookahead) exists precisely because that
+//! assumption fails: per-algorithm costs shift across GPU generations
+//! (Chetlur et al.), so on a mixed K40/P100/V100/A100 pool placement and
+//! ordering genuinely matter. `PoolSpec` is the list of member specs,
+//! ordered by device id; every layer that used to take one spec —
+//! `Planner`, `Session`, `DevicePool`, the executors — now resolves the
+//! spec *per device* through it. A one-member pool reproduces the old
+//! homogeneous behavior bit-for-bit.
+
+use std::fmt;
+
+use crate::gpusim::{DeviceSpec, UnknownDevice};
+
+/// Per-device specifications of a device pool, ordered by device id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolSpec {
+    members: Vec<DeviceSpec>,
+}
+
+impl PoolSpec {
+    /// A pool of explicit member specs (device `i` runs `members[i]`).
+    pub fn new(members: Vec<DeviceSpec>) -> Self {
+        assert!(!members.is_empty(), "a pool needs at least one device");
+        Self { members }
+    }
+
+    /// The degenerate single-device pool (the legacy homogeneous API).
+    pub fn single(spec: DeviceSpec) -> Self {
+        Self::new(vec![spec])
+    }
+
+    /// `n` identical devices.
+    pub fn homogeneous(spec: DeviceSpec, n: usize) -> Self {
+        assert!(n >= 1, "a pool needs at least one device");
+        Self::new(vec![spec; n])
+    }
+
+    /// Parse a device list like `"k40,v100x2,a100"`: comma-separated
+    /// preset names, each with an optional `xN` multiplicity suffix.
+    /// Unknown names are refused with the preset-listing
+    /// [`UnknownDevice`] error; a single name degenerates to the
+    /// homogeneous behavior of the old `--device` flag.
+    pub fn parse(list: &str) -> Result<Self, UnknownDevice> {
+        let mut members = Vec::new();
+        for part in list.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            // split an optional trailing xN multiplicity off the name
+            let (name, count) = match part.rsplit_once(['x', 'X']) {
+                Some((name, n)) if !name.is_empty() => {
+                    match n.parse::<usize>() {
+                        Ok(c) if c >= 1 => (name, c),
+                        _ => (part, 1),
+                    }
+                }
+                _ => (part, 1),
+            };
+            let spec = DeviceSpec::preset(name)?;
+            for _ in 0..count {
+                members.push(spec.clone());
+            }
+        }
+        if members.is_empty() {
+            return Err(UnknownDevice {
+                name: list.to_string(),
+            });
+        }
+        Ok(Self { members })
+    }
+
+    /// Number of devices in the pool.
+    #[allow(clippy::len_without_is_empty)] // never empty by construction
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The spec of device `d`.
+    pub fn device(&self, d: usize) -> &DeviceSpec {
+        &self.members[d]
+    }
+
+    /// All member specs, ordered by device id.
+    pub fn members(&self) -> &[DeviceSpec] {
+        &self.members
+    }
+
+    /// Display names of the members, ordered by device id.
+    pub fn names(&self) -> Vec<String> {
+        self.members.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// Whether every member is the same spec (placement cannot matter).
+    pub fn is_homogeneous(&self) -> bool {
+        self.members.iter().all(|m| *m == self.members[0])
+    }
+}
+
+impl fmt::Display for PoolSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.names().join(" + "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_expands_multiplicity_suffixes() {
+        let p = PoolSpec::parse("k40,v100x2,a100").unwrap();
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.device(0).name, "Tesla K40");
+        assert_eq!(p.device(1).name, "Tesla V100");
+        assert_eq!(p.device(2).name, "Tesla V100");
+        assert_eq!(p.device(3).name, "NVIDIA A100");
+        assert!(!p.is_homogeneous());
+    }
+
+    #[test]
+    fn single_name_degenerates_to_homogeneous() {
+        let p = PoolSpec::parse("v100").unwrap();
+        assert_eq!(p.len(), 1);
+        assert!(p.is_homogeneous());
+        assert_eq!(p, PoolSpec::single(crate::gpusim::DeviceSpec::v100()));
+        // "v100x4" is homogeneous too, just wider
+        let p4 = PoolSpec::parse("v100x4").unwrap();
+        assert_eq!(p4.len(), 4);
+        assert!(p4.is_homogeneous());
+    }
+
+    #[test]
+    fn unknown_names_error_listing_presets() {
+        let err = PoolSpec::parse("k40,h100").unwrap_err();
+        assert_eq!(err.name, "h100");
+        let msg = err.to_string();
+        for preset in crate::gpusim::DeviceSpec::PRESET_NAMES {
+            assert!(msg.contains(preset), "{msg} lacks {preset}");
+        }
+        // an empty list is refused, not an empty pool
+        assert!(PoolSpec::parse("").is_err());
+        assert!(PoolSpec::parse(" , ,").is_err());
+    }
+
+    #[test]
+    fn parse_is_case_insensitive_and_trims() {
+        let p = PoolSpec::parse(" K40 , V100X2 ").unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.device(2).name, "Tesla V100");
+    }
+}

@@ -24,6 +24,9 @@ pub struct SchedulerConfig {
     /// launch as dependencies resolve) or `barrier` (legacy group replay,
     /// the regression oracle).
     pub executor: String,
+    /// Planning algorithm: `greedy` (the default packer), `heft`,
+    /// `peft`, or `lookahead` (the heterogeneous list schedulers).
+    pub planner: String,
 }
 
 impl Default for SchedulerConfig {
@@ -35,6 +38,7 @@ impl Default for SchedulerConfig {
             workspace_limit: 4 * 1024 * 1024 * 1024, // leave room beside tensors
             priority: "critical_path".into(),
             executor: "event".into(),
+            planner: "greedy".into(),
         }
     }
 }
@@ -45,6 +49,10 @@ pub struct ClusterSettings {
     /// Data-parallel replica count. 1 (the default) runs single-GPU with
     /// no reduction ops; >1 routes `training` through the device pool.
     pub gpus: usize,
+    /// Device-pool member list: comma-separated preset names with
+    /// optional `xN` multipliers (`"k40,v100x2,a100"`). Empty (the
+    /// default) replicates the top-level `device` preset `gpus` times.
+    pub devices: String,
     /// Per-hop interconnect latency in microseconds.
     pub link_latency_us: f64,
     /// Per-link interconnect bandwidth in GB/s.
@@ -62,6 +70,7 @@ impl Default for ClusterSettings {
         let link = crate::cluster::LinkModel::pcie3();
         Self {
             gpus: 1,
+            devices: String::new(),
             link_latency_us: link.latency_us,
             link_gb_per_s: link.gb_per_s,
             overlap: true,
@@ -152,11 +161,12 @@ const SCHEDULER_KEYS: &[&str] = &[
     "workspace_limit_mb",
     "priority",
     "executor",
+    "planner",
 ];
 
 /// Keys accepted inside `[cluster]`.
 const CLUSTER_KEYS: &[&str] =
-    &["gpus", "link_latency_us", "link_gb_per_s", "overlap"];
+    &["gpus", "devices", "link_latency_us", "link_gb_per_s", "overlap"];
 
 /// Keys accepted inside `[serve]`.
 const SERVE_KEYS: &[&str] = &[
@@ -203,11 +213,13 @@ impl RunConfig {
                     * 1024,
                 priority: p.str_or("scheduler", "priority", &sd.priority),
                 executor: p.str_or("scheduler", "executor", &sd.executor),
+                planner: p.str_or("scheduler", "planner", &sd.planner),
             },
             cluster: ClusterSettings {
                 gpus: p
                     .uint_or("cluster", "gpus", cd.gpus as u64)
                     .max(1) as usize,
+                devices: p.str_or("cluster", "devices", &cd.devices),
                 link_latency_us: p.float_or(
                     "cluster",
                     "link_latency_us",
@@ -368,6 +380,26 @@ priority = "fifo"
             RunConfig::from_text("[scheduler]\nexecutor = \"barrier\"")
                 .unwrap();
         assert_eq!(b.scheduler.executor, "barrier");
+    }
+
+    #[test]
+    fn planner_defaults_to_greedy_and_parses() {
+        let d = RunConfig::from_text("").unwrap();
+        assert_eq!(d.scheduler.planner, "greedy");
+        let c =
+            RunConfig::from_text("[scheduler]\nplanner = \"heft\"").unwrap();
+        assert_eq!(c.scheduler.planner, "heft");
+    }
+
+    #[test]
+    fn cluster_devices_list_parses() {
+        let d = RunConfig::from_text("").unwrap();
+        assert_eq!(d.cluster.devices, "");
+        let c = RunConfig::from_text(
+            "[cluster]\ndevices = \"k40,v100x2,a100\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.cluster.devices, "k40,v100x2,a100");
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //!   profile-guided multi-metric selection, including the k-wide
 //!   [`selector::select_group`] packing.
 //! - [`scheduler`] — the scheduler vocabulary ([`ScheduleConfig`],
-//!   [`ScheduleResult`], priorities, the non-conv duration model) and the
-//!   legacy [`Coordinator`] facade, now a thin shim over
+//!   [`ScheduleResult`], priorities, the non-conv duration model); the
+//!   retired `Coordinator` facade survives only as a deprecated alias of
 //!   [`crate::plan::Session`]. Planning itself lives in
 //!   [`crate::plan::Planner`]; replay in [`crate::plan::Plan`].
 //! - [`pairing`] — discovery of complementary convolution pairs and
@@ -17,8 +17,10 @@ pub mod scheduler;
 pub mod selector;
 
 pub use pairing::{discover_groups, discover_pairs, GroupFinding, PairFinding};
+#[allow(deprecated)]
+pub use scheduler::Coordinator;
 pub use scheduler::{
-    non_conv_time_us, Coordinator, OpExec, PriorityPolicy, ScheduleConfig,
+    non_conv_time_us, OpExec, PriorityPolicy, ScheduleConfig,
     ScheduleResult,
 };
 pub use selector::{

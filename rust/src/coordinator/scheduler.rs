@@ -8,14 +8,14 @@
 //! [`crate::plan::Plan`] is replayed per request by
 //! [`crate::plan::Session`]. This module keeps the shared vocabulary —
 //! [`ScheduleConfig`], [`PriorityPolicy`], [`OpExec`], [`ScheduleResult`],
-//! the non-convolution duration model — plus `Coordinator`, now a thin
-//! shim over a private `Session` so every pre-split caller (and the
-//! pair-equivalence / monotonicity regressions that pin its behavior)
-//! keeps working unchanged. New code should use `Session` directly.
+//! the non-convolution duration model — plus `Coordinator`, now a
+//! deprecated type alias of [`Session`]: the shim's `execute_dag` was
+//! exactly `Session::run`, so the alias is the whole compatibility
+//! surface. New code should name `Session` directly.
 
 use crate::convlib::Algorithm;
 use crate::gpusim::{DeviceSpec, PartitionMode};
-use crate::graph::{Dag, OpKind};
+use crate::graph::OpKind;
 use crate::plan::Session;
 
 use super::selector::SelectionPolicy;
@@ -120,61 +120,16 @@ pub struct ScheduleResult {
     pub comm_us: f64,
 }
 
-/// Legacy facade: owns the device spec and config, executes DAGs.
-///
-/// Since the plan/execute split this is a compatibility shim over
-/// [`Session`]: `execute_dag` is exactly `Session::run` (plan on cache
-/// miss, replay on hit — event-driven by default since the discrete-event
-/// core landed; use `Session::set_executor` for the barrier oracle), so
-/// results are bit-identical to `Session` while repeated calls on the
-/// same network skip selection entirely. Prefer [`Session`] in new code —
-/// it exposes the plan cache, `plan()`, executor selection, and
-/// serialization.
-pub struct Coordinator {
-    session: Session,
-}
-
-impl Coordinator {
-    pub fn new(spec: DeviceSpec, cfg: ScheduleConfig) -> Self {
-        Self {
-            session: Session::new(spec, cfg),
-        }
-    }
-
-    /// Coordinator whose workspace allocator spuriously refuses a `rate`
-    /// fraction of allocations (robustness testing: the scheduler must
-    /// degrade to workspace-free algorithms, never fail an op).
-    pub fn with_failure_injection(
-        spec: DeviceSpec,
-        cfg: ScheduleConfig,
-        rate: f64,
-        seed: u64,
-    ) -> Self {
-        Self {
-            session: Session::with_failure_injection(spec, cfg, rate, seed),
-        }
-    }
-
-    pub fn spec(&self) -> &DeviceSpec {
-        self.session.spec()
-    }
-
-    pub fn config(&self) -> &ScheduleConfig {
-        self.session.config()
-    }
-
-    /// The session backing this shim (plan cache, stats, serialization).
-    pub fn session(&self) -> &Session {
-        &self.session
-    }
-
-    /// Execute the DAG: returns the simulated timeline. Equivalent to
-    /// [`Session::run`] — plan-then-execute, with the plan cached for
-    /// subsequent calls.
-    pub fn execute_dag(&self, dag: &Dag) -> ScheduleResult {
-        self.session.run(dag)
-    }
-}
+/// Retired legacy facade, kept as a one-line alias so old code and docs
+/// still resolve. `Coordinator::execute_dag` was exactly
+/// [`Session::run`]; call that. Every constructor (`new`,
+/// `with_failure_injection`) and accessor already lives on [`Session`]
+/// under the same name.
+#[deprecated(
+    since = "0.7.0",
+    note = "use plan::Session (Coordinator::execute_dag is Session::run)"
+)]
+pub type Coordinator = Session;
 
 /// Duration model for non-convolution ops: bandwidth-bound on the
 /// device, except gradient reductions, which are priced by the ring
@@ -215,8 +170,8 @@ mod tests {
         policy: SelectionPolicy,
         partition: PartitionMode,
         streams: usize,
-    ) -> Coordinator {
-        Coordinator::new(
+    ) -> Session {
+        Session::new(
             DeviceSpec::k40(),
             ScheduleConfig {
                 policy,
@@ -236,7 +191,7 @@ mod tests {
             PartitionMode::IntraSm,
             4,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         assert_eq!(r.ops.len(), dag.len());
         let mut ids: Vec<usize> = r.ops.iter().map(|o| o.op_id).collect();
         ids.sort_unstable();
@@ -252,7 +207,7 @@ mod tests {
             PartitionMode::IntraSm,
             4,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         let mut end: Vec<f64> = vec![0.0; dag.len()];
         let mut start: Vec<f64> = vec![0.0; dag.len()];
         for o in &r.ops {
@@ -278,13 +233,13 @@ mod tests {
             PartitionMode::Serial,
             1,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         let conc = coord(
             SelectionPolicy::ProfileGuided,
             PartitionMode::IntraSm,
             2,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         assert!(
             conc.makespan_us < serial.makespan_us,
             "concurrent {} >= serial {}",
@@ -304,14 +259,14 @@ mod tests {
             PartitionMode::IntraSm,
             4,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         assert_eq!(conc.conv_overlap_us, 0.0);
     }
 
     #[test]
     fn workspace_budget_forces_fallbacks() {
         let dag = Network::GoogleNet.build(32);
-        let tight = Coordinator::new(
+        let tight = Session::new(
             DeviceSpec::k40(),
             ScheduleConfig {
                 policy: SelectionPolicy::FastestOnly,
@@ -321,7 +276,7 @@ mod tests {
                 priority: PriorityPolicy::CriticalPath,
             },
         )
-        .execute_dag(&dag);
+        .run(&dag);
         assert!(tight.ws_fallbacks > 0);
         assert!(tight.peak_workspace <= 16 * 1024 * 1024);
         // loose budget: no fallbacks
@@ -330,7 +285,7 @@ mod tests {
             PartitionMode::Serial,
             1,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         assert!(loose.makespan_us <= tight.makespan_us * 1.01);
     }
 
@@ -381,7 +336,7 @@ mod tests {
         // policies execute every op once and respect dependencies.
         let dag = Network::GoogleNet.build(8);
         for priority in [PriorityPolicy::Fifo, PriorityPolicy::CriticalPath] {
-            let r = Coordinator::new(
+            let r = Session::new(
                 DeviceSpec::k40(),
                 ScheduleConfig {
                     policy: SelectionPolicy::ProfileGuided,
@@ -391,7 +346,7 @@ mod tests {
                     priority,
                 },
             )
-            .execute_dag(&dag);
+            .run(&dag);
             assert_eq!(r.ops.len(), dag.len(), "{priority:?}");
         }
     }
@@ -406,13 +361,13 @@ mod tests {
             PartitionMode::Serial,
             1,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         let wide = coord(
             SelectionPolicy::ProfileGuided,
             PartitionMode::IntraSm,
             4,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         assert!(wide.conv_overlap_us > 0.0);
         assert!(
             wide.makespan_us < serial.makespan_us,
@@ -430,28 +385,28 @@ mod tests {
             PartitionMode::Serial,
             1,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         let conc = coord(
             SelectionPolicy::FastestOnly,
             PartitionMode::StreamsOnly,
             4,
         )
-        .execute_dag(&dag);
+        .run(&dag);
         // running 4 convs at once cannot use less peak workspace
         assert!(conc.peak_workspace >= serial.peak_workspace);
     }
 
     #[test]
-    fn shim_exposes_its_session() {
+    fn session_caches_across_runs() {
         let c = coord(
             SelectionPolicy::ProfileGuided,
             PartitionMode::IntraSm,
             2,
         );
         let dag = Network::GoogleNet.build(8);
-        c.execute_dag(&dag);
-        c.execute_dag(&dag);
-        let stats = c.session().stats();
+        c.run(&dag);
+        c.run(&dag);
+        let stats = c.stats();
         assert_eq!(stats.plans_built, 1);
         assert_eq!(stats.cache_hits, 1);
         assert_eq!(c.spec().name, "Tesla K40");

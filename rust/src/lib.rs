@@ -23,15 +23,17 @@
 //!   workspace-aware admission, and algorithm-selection policies
 //!   (TensorFlow-style fastest-only vs the paper's profile-guided
 //!   multi-metric selection), plus complementary-pair discovery.
-//! - [`plan`] — the Plan/Execute split: [`Planner`] runs the selection
-//!   sweep once and emits an immutable, JSON-serializable [`Plan`]
-//!   (schema v4: ordered groups *plus* a dependency/lane/device
-//!   scheduling graph with per-member workspace-fallback flags, closed
-//!   by a verified digest); [`Session`] caches
-//!   plans keyed by DAG digest and replays
-//!   them per request with zero selector calls (profile-guided selection
-//!   is an *offline* activity — paper §2). `Coordinator::execute_dag` is
-//!   now a compatibility shim over `Session::run`.
+//! - [`plan`] — the Plan/Execute split: [`Planner`] resolves the device
+//!   pool and runs the configured scheduler once, emitting an immutable,
+//!   JSON-serializable [`Plan`] (schema v5: ordered groups *plus* a
+//!   dependency/lane/device scheduling graph, per-member
+//!   workspace-fallback flags, and the per-device spec-name pool, closed
+//!   by a verified digest). The `Scheduler` trait covers the default
+//!   greedy packer and the heterogeneous list schedulers
+//!   (HEFT/PEFT/lookahead, `--planner`); [`Session`] caches plans keyed
+//!   by DAG digest and replays them per request with zero selector calls
+//!   (profile-guided selection is an *offline* activity — paper §2).
+//!   `Coordinator` is a deprecated alias of `Session`.
 //! - [`sim`] — the discrete-event execution core behind `Session::run`:
 //!   a virtual-time event queue and per-stream state machines launch each
 //!   op the moment its dependencies resolve, freeing SM quotas and
@@ -42,8 +44,9 @@
 //!   per-device engines plus a ring all-reduce [`LinkModel`]; the
 //!   training DAG gains per-parameter `GradReduce` ops whose dependency
 //!   edges let the event executor overlap each reduction with the rest
-//!   of the backward pass (plan schema v4 records per-node device
-//!   assignments).
+//!   of the backward pass (plan schema v5 records per-node device
+//!   assignments over a per-device [`cluster::PoolSpec`], which may mix
+//!   GPU generations).
 //! - [`serve`] — trace-driven multi-tenant inference serving on the
 //!   event core: open-loop workload generation (Poisson / bursty /
 //!   diurnal, replayable text traces), per-model queues with windowed
@@ -106,11 +109,15 @@ pub mod sim;
 pub mod trainer;
 pub mod util;
 
-pub use cluster::{ClusterConfig, DevicePool, LinkModel};
+pub use cluster::{
+    ClusterConfig, DevicePool, LinkModel, PoolOptions, PoolSpec,
+};
 pub use convlib::{Algorithm, ConvParams};
-pub use coordinator::{Coordinator, SelectionPolicy};
+#[allow(deprecated)]
+pub use coordinator::Coordinator;
+pub use coordinator::SelectionPolicy;
 pub use gpusim::{DeviceSpec, PartitionMode};
 pub use graph::Network;
-pub use plan::{Plan, Planner, Session};
+pub use plan::{Plan, Planner, PlannerKind, Session};
 pub use serve::{ServeConfig, ServeDriver, ServeReport};
 pub use sim::ExecutorKind;

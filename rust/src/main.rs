@@ -20,6 +20,10 @@
 //! ```
 //!
 //! Global flags: `--config FILE`, `--device k40|p100|v100|a100`,
+//! `--devices k40,v100x2,a100` (explicit — possibly mixed-generation —
+//! device pool; overrides `--device`/`--gpus`; also the `[cluster]
+//! devices` config key), `--planner greedy|heft|peft|lookahead`
+//! (planning algorithm; `[scheduler] planner`),
 //! `--batch N`, `--policy P`, `--partition M`, `--streams N`,
 //! `--priority critical_path|fifo`, `--workspace-mb N`,
 //! `--executor event|barrier` (`end2end`/`training`: execution backend;
@@ -51,7 +55,7 @@
 use std::path::Path;
 use std::process::ExitCode;
 
-use parconv::cluster::{ClusterConfig, DevicePool, LinkModel};
+use parconv::cluster::{DevicePool, LinkModel, PoolOptions, PoolSpec};
 use parconv::config::RunConfig;
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams, ALL_ALGORITHMS};
 use parconv::coordinator::{
@@ -59,7 +63,7 @@ use parconv::coordinator::{
 };
 use parconv::gpusim::{isolated_time_us, DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
-use parconv::plan::{Plan, Session};
+use parconv::plan::{Plan, PlannerKind, Session};
 use parconv::profiler::{
     chrome_trace_json, schedule_chrome_trace_json, table1_report, table1_row,
 };
@@ -127,7 +131,9 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
                     val()?.parse::<u64>()? * 1024 * 1024
             }
             "--executor" => cfg.scheduler.executor = val()?,
+            "--planner" => cfg.scheduler.planner = val()?,
             "--gpus" => cfg.cluster.gpus = val()?.parse::<usize>()?.max(1),
+            "--devices" => cfg.cluster.devices = val()?,
             "--link-latency-us" => {
                 cfg.cluster.link_latency_us = val()?.parse()?
             }
@@ -182,6 +188,28 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
 fn device(cfg: &RunConfig) -> anyhow::Result<DeviceSpec> {
     // the preset error already lists the valid names
     Ok(DeviceSpec::preset(&cfg.device)?)
+}
+
+/// The device pool the run targets: `--devices` / `[cluster] devices`
+/// when given (comma-separated presets with optional `xN` multipliers; a
+/// single name degenerates to the homogeneous case), otherwise the
+/// single `--device` preset.
+fn pool(cfg: &RunConfig) -> anyhow::Result<PoolSpec> {
+    if cfg.cluster.devices.trim().is_empty() {
+        Ok(PoolSpec::single(device(cfg)?))
+    } else {
+        // the parse error already lists the valid preset names
+        Ok(PoolSpec::parse(&cfg.cluster.devices)?)
+    }
+}
+
+fn planner_kind(cfg: &RunConfig) -> anyhow::Result<PlannerKind> {
+    PlannerKind::parse(&cfg.scheduler.planner).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown planner {:?}; valid: greedy, heft, peft, lookahead",
+            cfg.scheduler.planner
+        )
+    })
 }
 
 fn network(cfg: &RunConfig) -> anyhow::Result<Network> {
@@ -258,6 +286,10 @@ commands: table1 table2 networks serialization discover end2end training validat
 global flags: --config FILE --device D --network N --batch B --policy P
               --partition M --streams K --priority Q --workspace-mb MB
               --artifacts DIR --min-speedup X --seed S
+end2end/training/plan/serve also take:
+  --planner greedy|heft|peft|lookahead   (planning algorithm)
+  --devices D1,D2xN,...   (device pool, e.g. k40,v100x2,a100;
+                           overrides --device / --gpus / --serve-gpus)
 end2end/training also take: --executor event|barrier --trace FILE
 training also takes: --gpus N --link-latency-us X --link-gbps X
                      --reduce overlapped|serial_tail  (data parallelism)
@@ -463,16 +495,19 @@ fn cmd_discover(cli: &Cli) -> anyhow::Result<()> {
 }
 
 fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
-    let dev = device(&cli.cfg)?;
+    let devices = pool(&cli.cfg)?;
+    let planner = planner_kind(&cli.cfg)?;
     let net = network(&cli.cfg)?;
     let exec = executor_kind(&cli.cfg)?;
     let dag = net.build(cli.cfg.batch);
     println!(
         "E6 — one {} iteration (batch {}) under policy x partition \
-         ({} executor)\n",
+         ({} executor, {} planner, pool: {})\n",
         net.name(),
         cli.cfg.batch,
         exec.name(),
+        planner.name(),
+        devices,
     );
     let mut t = Table::new(vec![
         "Policy",
@@ -502,8 +537,8 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
     }
     let prio = priority(&cli.cfg)?;
     let make_session = |policy, partition, streams, kind| {
-        let mut s = Session::new(
-            dev.clone(),
+        let mut s = Session::with_planner(
+            devices.clone(),
             ScheduleConfig {
                 policy,
                 partition,
@@ -511,6 +546,7 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
                 workspace_limit: cli.cfg.scheduler.workspace_limit,
                 priority: prio,
             },
+            planner,
         );
         s.set_executor(kind);
         s
@@ -583,7 +619,8 @@ fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
 
 fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
     use parconv::graph::training_dag;
-    let dev = device(&cli.cfg)?;
+    let devices = pool(&cli.cfg)?;
+    let planner = planner_kind(&cli.cfg)?;
     let net = network(&cli.cfg)?;
     let exec = executor_kind(&cli.cfg)?;
     let fwd = net.build(cli.cfg.batch);
@@ -623,8 +660,8 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
     }
     let mut last_configured = None;
     for (policy, partition, streams) in combos {
-        let mut session = Session::new(
-            dev.clone(),
+        let mut session = Session::with_planner(
+            devices.clone(),
             ScheduleConfig {
                 policy,
                 partition,
@@ -632,6 +669,7 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
                 workspace_limit: cli.cfg.scheduler.workspace_limit,
                 priority: priority(&cli.cfg)?,
             },
+            planner,
         );
         session.set_executor(exec);
         let r = session.run(&train);
@@ -652,16 +690,27 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
     // Multi-GPU data parallelism: run the configured scheduler across the
     // device pool, overlapped vs serial-tail all-reduce, so the comm time
     // the overlap hides is visible next to the single-GPU matrix above.
-    let gpus = cli.cfg.cluster.gpus;
+    // An explicit --devices list fixes the replica count to its length;
+    // otherwise --gpus replicates the --device preset.
+    let gpus = if cli.cfg.cluster.devices.trim().is_empty() {
+        cli.cfg.cluster.gpus
+    } else {
+        devices.len()
+    };
     let mut cluster_trace = None;
     if gpus > 1 {
+        let members = if devices.len() == gpus {
+            devices.clone()
+        } else {
+            PoolSpec::homogeneous(devices.device(0).clone(), gpus)
+        };
         let link = LinkModel {
             latency_us: cli.cfg.cluster.link_latency_us,
             gb_per_s: cli.cfg.cluster.link_gb_per_s,
         };
         println!(
-            "\ndata-parallel x{gpus} (ring all-reduce, {} us/hop + {} GB/s \
-             per link; configured: {}):",
+            "\ndata-parallel x{gpus} over {members} (ring all-reduce, \
+             {} us/hop + {} GB/s per link; configured: {}):",
             link.latency_us,
             link.gb_per_s,
             if cli.cfg.cluster.overlap {
@@ -681,13 +730,11 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
             [("overlapped", true), ("serial_tail", false)]
         {
             let mut pool = DevicePool::new(
-                dev.clone(),
-                schedule_config(&cli.cfg)?,
-                ClusterConfig {
-                    replicas: gpus,
-                    link,
-                    overlap,
-                },
+                PoolOptions::new(members.clone())
+                    .schedule(schedule_config(&cli.cfg)?)
+                    .link(link)
+                    .overlap(overlap)
+                    .planner(planner),
             );
             pool.set_executor(exec);
             let r = pool.run_training(&fwd);
@@ -831,11 +878,12 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
 }
 
 fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
-    let dev = device(&cli.cfg)?;
+    let devices = pool(&cli.cfg)?;
+    let planner = planner_kind(&cli.cfg)?;
     let net = network(&cli.cfg)?;
     let dag = net.build(cli.cfg.batch);
     let cfg = schedule_config(&cli.cfg)?;
-    let session = Session::new(dev.clone(), cfg);
+    let session = Session::with_planner(devices.clone(), cfg, planner);
     let plan = session.plan_labeled(&dag, net.name());
     let out = cli.out.clone().unwrap_or_else(|| "plan.json".into());
     std::fs::write(&out, plan.to_json())?;
@@ -843,7 +891,7 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
     // Round-trip guard (the CI `plan-roundtrip` step relies on this):
     // reload from disk and require the digest and the replayed makespan —
     // under BOTH executors — to match bit-for-bit, so serialization drift
-    // in the v2 schema (steps or nodes) fails loudly.
+    // in the v5 schema (steps, nodes, or the device pool) fails loudly.
     let reloaded = Plan::from_json(&std::fs::read_to_string(&out)?)?;
     anyhow::ensure!(
         reloaded.digest() == plan.digest(),
@@ -852,8 +900,9 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
         plan.digest(),
         reloaded.digest()
     );
-    let direct = plan.execute(&dag, &dev)?;
-    let replayed = reloaded.execute(&dag, &dev)?;
+    let direct = plan.execute_on(&dag, &devices, ExecutorKind::Event)?;
+    let replayed =
+        reloaded.execute_on(&dag, &devices, ExecutorKind::Event)?;
     anyhow::ensure!(
         direct.makespan_us == replayed.makespan_us,
         "reloaded plan executes differently (event): {} vs {} us",
@@ -861,9 +910,9 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
         replayed.makespan_us
     );
     let direct_barrier =
-        plan.execute_with(&dag, &dev, ExecutorKind::Barrier)?;
+        plan.execute_on(&dag, &devices, ExecutorKind::Barrier)?;
     let replayed_barrier =
-        reloaded.execute_with(&dag, &dev, ExecutorKind::Barrier)?;
+        reloaded.execute_on(&dag, &devices, ExecutorKind::Barrier)?;
     anyhow::ensure!(
         direct_barrier.makespan_us == replayed_barrier.makespan_us,
         "reloaded plan executes differently (barrier): {} vs {} us",
@@ -872,13 +921,14 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
     );
 
     println!(
-        "plan — {} batch {} on {} ({}/{}/k={})\n",
+        "plan — {} batch {} on {} ({}/{}/k={}, {} planner)\n",
         net.name(),
         cli.cfg.batch,
-        dev.name,
+        devices,
         plan.meta.policy.name(),
         plan.meta.partition.name(),
         plan.meta.streams,
+        plan.meta.planner,
     );
     println!(
         "  schema:             v{} ({} scheduling nodes w/ deps + lanes \
@@ -916,6 +966,7 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
 
 fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     let dev = device(&cli.cfg)?;
+    let planner = planner_kind(&cli.cfg)?;
     let sched = schedule_config(&cli.cfg)?;
     let sv = &cli.cfg.serve;
     let arrival = ArrivalKind::parse(&sv.arrival).ok_or_else(|| {
@@ -945,6 +996,12 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
         mix,
         seed: cli.cfg.seed,
     };
+    // --devices overrides the homogeneous --serve-gpus pool
+    let devices = if cli.cfg.cluster.devices.trim().is_empty() {
+        PoolSpec::homogeneous(dev, sv.gpus.max(1))
+    } else {
+        PoolSpec::parse(&cli.cfg.cluster.devices)?
+    };
     let report = if let Some(path) = &cli.trace_in {
         // replay: the trace dictates both the arrivals and the mix
         let (requests, trace_mix) =
@@ -955,9 +1012,10 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
             "replaying {} arrivals from {path}\n",
             requests.len()
         );
-        ServeDriver::new(dev, sched, cfg).run_trace(&requests)
+        ServeDriver::with_pool(devices, sched, planner, cfg)
+            .run_trace(&requests)
     } else {
-        let driver = ServeDriver::new(dev, sched, cfg);
+        let driver = ServeDriver::with_pool(devices, sched, planner, cfg);
         let requests = driver.generate_workload();
         if let Some(path) = &cli.trace_out {
             std::fs::write(

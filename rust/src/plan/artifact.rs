@@ -21,8 +21,13 @@
 //! per-parameter `GradReduce` interconnect ops among their nodes. Schema
 //! v4 additionally marks each member the planner already downgraded to
 //! fit the workspace budget (`fallback`), so replay-time fallback
-//! accounting cannot double-count those ops.
+//! accounting cannot double-count those ops. Schema v5 generalizes the
+//! single recorded device into a per-device spec-name list (`pool`) —
+//! plans may now be built for *heterogeneous* pools by any of the
+//! planner family (`planner` records which one) — and `spec_digest`
+//! covers every member spec in device order.
 
+use crate::cluster::PoolSpec;
 use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
 use crate::coordinator::{
     non_conv_time_us, OpExec, PriorityPolicy, ScheduleConfig, ScheduleResult,
@@ -36,18 +41,21 @@ use crate::util::digest::{hex16, parse_hex16, Fnv64};
 
 use super::json::{escape, JsonValue};
 
-/// Version tag of the plan JSON layout. Version 4 adds the per-member
-/// `fallback` flag — whether the planner already downgraded that op's
-/// algorithm to fit the workspace budget — so executors can tell a
-/// re-taken fallback from a fresh runtime one and count each op once.
-/// Version 3 added per-node device assignments and the `replicas` count
-/// (multi-GPU data-parallel plans whose `nodes` include `GradReduce`
-/// ops), plus a self-`digest` field the reader verifies; version 2 added
-/// the `nodes` array — per-op dependency edges and stream-lane
-/// assignments — which the event-driven executor schedules from. Plans
-/// of version 3 and earlier are refused with
-/// [`PlanError::UnsupportedVersion`].
-pub const PLAN_FORMAT_VERSION: u32 = 4;
+/// Version tag of the plan JSON layout. Version 5 generalizes the device
+/// binding from one spec to a per-device `pool` of spec names (mixed
+/// K40/P100/V100/A100 pools) and records which `planner` built the plan
+/// (greedy/heft/peft/lookahead); `spec_digest` now covers every member
+/// spec in device order. Version 4 added the per-member `fallback` flag —
+/// whether the planner already downgraded that op's algorithm to fit the
+/// workspace budget — so executors can tell a re-taken fallback from a
+/// fresh runtime one and count each op once. Version 3 added per-node
+/// device assignments and the `replicas` count (multi-GPU data-parallel
+/// plans whose `nodes` include `GradReduce` ops), plus a self-`digest`
+/// field the reader verifies; version 2 added the `nodes` array — per-op
+/// dependency edges and stream-lane assignments — which the event-driven
+/// executor schedules from. Plans of version 4 and earlier are refused
+/// with [`PlanError::UnsupportedVersion`].
+pub const PLAN_FORMAT_VERSION: u32 = 5;
 
 /// Errors from plan execution or deserialization.
 #[derive(Clone, Debug, PartialEq, thiserror::Error)]
@@ -71,11 +79,12 @@ pub enum PlanError {
     Unsupported { algo: Algorithm, op: usize },
     #[error(
         "unsupported plan schema version {found}: this build reads \
-         version 4 (v4 plans record per-member workspace-fallback flags \
-         so replay never double-counts a downgrade, on top of v3's \
-         per-node device assignments, gradient-reduce ops, and verified \
-         digest; v3 and earlier layouts lack one or more of these) — \
-         regenerate the plan with `parconv plan`"
+         version 5 (v5 plans record the per-device spec-name pool and \
+         the planner that built them, on top of v4's per-member \
+         workspace-fallback flags, v3's per-node device assignments, \
+         gradient-reduce ops, and verified digest; v4 and earlier \
+         layouts lack one or more of these) — regenerate the plan with \
+         `parconv plan`"
     )]
     UnsupportedVersion { found: u32 },
     #[error("plan nodes disagree with the plan steps or DAG: {0}")]
@@ -103,9 +112,16 @@ pub struct PlanMeta {
     /// Human label, usually the network name ("" when planned from a raw
     /// DAG).
     pub label: String,
-    /// Device the plan was built for (display name; `spec_digest` is the
-    /// binding check).
+    /// Display name of device 0 (legacy convenience; `pool` is the full
+    /// per-device list and `spec_digest` the binding check).
     pub device: String,
+    /// Per-device spec names, ordered by device id (schema v5). Length
+    /// equals `replicas`; heterogeneous pools list different names.
+    pub pool: Vec<String>,
+    /// Name of the scheduler that built the plan (schema v5:
+    /// `greedy`/`heft`/`peft`/`lookahead`). Informational provenance —
+    /// replay never consults it.
+    pub planner: String,
     /// Batch size, read off the first convolution (0 if the DAG has none).
     pub batch: usize,
     /// Op count of the source DAG.
@@ -287,6 +303,20 @@ pub fn spec_digest(spec: &DeviceSpec) -> u64 {
     h.finish()
 }
 
+/// Digest of a whole device pool: the member count plus every member's
+/// [`spec_digest`] in device order. This is what `PlanMeta::spec_digest`
+/// records under schema v5 — a single-device plan's pool digest differs
+/// from the bare spec digest, which is intentional: a plan is bound to a
+/// *pool shape*, not just to one spec.
+pub fn pool_digest(pool: &PoolSpec) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_usize(pool.len());
+    for spec in pool.members() {
+        h.write_u64(spec_digest(spec));
+    }
+    h.finish()
+}
+
 /// Digest of a scheduler configuration.
 pub fn config_digest(cfg: &ScheduleConfig) -> u64 {
     let mut h = Fnv64::new();
@@ -317,6 +347,11 @@ impl Plan {
         h.write_u32(m.version);
         h.write_str(&m.label);
         h.write_str(&m.device);
+        h.write_usize(m.pool.len());
+        for name in &m.pool {
+            h.write_str(name);
+        }
+        h.write_str(&m.planner);
         h.write_usize(m.batch);
         h.write_usize(m.ops);
         h.write_u64(m.dag_digest);
@@ -383,6 +418,10 @@ impl Plan {
     /// descriptors are rebuilt from the DAG's parameters.
     ///
     /// Fails if `dag` or `spec` differ from what the plan was built for.
+    /// The single-spec signature is the homogeneous convenience: `spec`
+    /// is expanded to a pool of `meta.replicas` identical devices (all
+    /// pre-v5 plans were built that way). Heterogeneous plans replay
+    /// through [`Plan::execute_on`].
     pub fn execute(
         &self,
         dag: &Dag,
@@ -400,9 +439,24 @@ impl Plan {
         spec: &DeviceSpec,
         executor: ExecutorKind,
     ) -> Result<ScheduleResult, PlanError> {
+        let pool = PoolSpec::homogeneous(
+            spec.clone(),
+            self.meta.replicas.max(1),
+        );
+        self.execute_on(dag, &pool, executor)
+    }
+
+    /// Execute against an explicit (possibly heterogeneous) device pool.
+    /// The pool must digest-match the one the plan was built for.
+    pub fn execute_on(
+        &self,
+        dag: &Dag,
+        pool: &PoolSpec,
+        executor: ExecutorKind,
+    ) -> Result<ScheduleResult, PlanError> {
         self.execute_with_memory(
             dag,
-            spec,
+            pool,
             DeviceMemory::new(self.meta.workspace_limit),
             executor,
         )
@@ -413,7 +467,7 @@ impl Plan {
     pub(crate) fn execute_with_memory(
         &self,
         dag: &Dag,
-        spec: &DeviceSpec,
+        pool: &PoolSpec,
         mem: DeviceMemory,
         executor: ExecutorKind,
     ) -> Result<ScheduleResult, PlanError> {
@@ -424,11 +478,11 @@ impl Plan {
                 got,
             });
         }
-        let got_spec = spec_digest(spec);
-        if got_spec != self.meta.spec_digest {
+        let got_pool = pool_digest(pool);
+        if got_pool != self.meta.spec_digest {
             return Err(PlanError::SpecMismatch {
-                expected: self.meta.device.clone(),
-                got: spec.name.clone(),
+                expected: self.meta.pool.join(" + "),
+                got: pool.names().join(" + "),
             });
         }
         // v2 integrity: the node list must agree with the step sequence
@@ -437,9 +491,9 @@ impl Plan {
         self.validate_nodes(dag)?;
         match executor {
             ExecutorKind::Event => {
-                crate::sim::execute_event(self, dag, spec, mem)
+                crate::sim::execute_event(self, dag, pool, mem)
             }
-            ExecutorKind::Barrier => self.replay_barrier(dag, spec, mem),
+            ExecutorKind::Barrier => self.replay_barrier(dag, pool, mem),
         }
     }
 
@@ -450,11 +504,23 @@ impl Plan {
     /// silently diverge.
     pub(crate) fn validate_nodes(&self, dag: &Dag) -> Result<(), PlanError> {
         let n = dag.len();
-        if self.meta.replicas != dag.num_devices() {
+        // A single-device DAG may be *placed* across a wider pool by the
+        // list schedulers (the plan is the placement authority); a DAG
+        // that already spans devices (data-parallel replicas) must match
+        // the pool width exactly and keep its own device map.
+        let placed = dag.num_devices() == 1 && self.meta.replicas > 1;
+        if !placed && self.meta.replicas != dag.num_devices() {
             return Err(PlanError::NodeMismatch(format!(
                 "plan built for {} replicas, DAG spans {} devices",
                 self.meta.replicas,
                 dag.num_devices()
+            )));
+        }
+        if self.meta.pool.len() != self.meta.replicas {
+            return Err(PlanError::NodeMismatch(format!(
+                "plan lists {} pool members for {} replicas",
+                self.meta.pool.len(),
+                self.meta.replicas
             )));
         }
         let mut flat: Vec<(usize, Option<usize>)> = Vec::with_capacity(n);
@@ -486,7 +552,14 @@ impl Plan {
                     node.op
                 )));
             }
-            if node.device != dag.device_of(node.op) {
+            if placed {
+                if node.device >= self.meta.replicas {
+                    return Err(PlanError::NodeMismatch(format!(
+                        "op {} placed on device {} of a {}-device pool",
+                        node.op, node.device, self.meta.replicas
+                    )));
+                }
+            } else if node.device != dag.device_of(node.op) {
                 return Err(PlanError::NodeMismatch(format!(
                     "op {} assigned to device {} but the DAG places it \
                      on device {}",
@@ -523,6 +596,24 @@ impl Plan {
                 ops: n,
             });
         }
+        // A co-execution group shares one device's SMs: its members must
+        // never span devices, whichever scheduler placed them.
+        let mut dev_of = vec![0usize; n];
+        for node in &self.nodes {
+            dev_of[node.op] = node.device;
+        }
+        for step in &self.steps {
+            if let PlanStep::Group(g) = step {
+                if let Some(first) = g.members.first() {
+                    let d0 = dev_of[first.op];
+                    if g.members.iter().any(|m| dev_of[m.op] != d0) {
+                        return Err(PlanError::NodeMismatch(
+                            "co-execution group spans devices".into(),
+                        ));
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
@@ -534,9 +625,19 @@ impl Plan {
     fn replay_barrier(
         &self,
         dag: &Dag,
-        spec: &DeviceSpec,
+        pool: &PoolSpec,
         mut mem: DeviceMemory,
     ) -> Result<ScheduleResult, PlanError> {
+        // Device routing: the plan's node list is the placement
+        // authority (a single-device DAG may have been placed across the
+        // pool by a list scheduler); each op's cost model comes from its
+        // device's spec.
+        let mut op_dev = vec![0usize; dag.len()];
+        for node in &self.nodes {
+            if node.op < dag.len() {
+                op_dev[node.op] = node.device;
+            }
+        }
         let mut clock = 0.0f64;
         let mut ops: Vec<OpExec> = Vec::with_capacity(dag.len());
         let mut ws_fallbacks = self.meta.planned_ws_fallbacks;
@@ -565,7 +666,7 @@ impl Plan {
                 PlanStep::Host { op } => {
                     check_op(*op)?;
                     let kind = &dag.ops[*op].kind;
-                    let dur = non_conv_time_us(kind, spec);
+                    let dur = non_conv_time_us(kind, pool.device(op_dev[*op]));
                     if kind.is_grad_reduce() {
                         // the barrier replay serializes reductions with
                         // everything else — it IS the serial tail
@@ -585,13 +686,17 @@ impl Plan {
                         device: if kind.is_grad_reduce() {
                             None
                         } else {
-                            Some(dag.device_of(*op))
+                            Some(op_dev[*op])
                         },
                     });
                     clock += dur;
                 }
                 PlanStep::Group(g) => {
                     rounds += 1;
+                    // validate_nodes guarantees the group sits on one
+                    // device; its spec prices every member kernel
+                    let gdev = g.members.first().map_or(0, |m| op_dev[m.op]);
+                    let spec = pool.device(gdev);
                     let mut descs: Vec<KernelDesc> =
                         Vec::with_capacity(g.members.len());
                     for m in &g.members {
@@ -657,7 +762,7 @@ impl Plan {
                             end_us: clock + rec.end_us,
                             workspace_bytes: desc.workspace_bytes,
                             stream: Some(i),
-                            device: Some(dag.device_of(m.op)),
+                            device: Some(op_dev[m.op]),
                         });
                     }
                     conv_overlap_us += sim.overlap_us();
@@ -697,6 +802,16 @@ impl Plan {
         s.push_str(&format!("  \"version\": {},\n", m.version));
         s.push_str(&format!("  \"label\": \"{}\",\n", escape(&m.label)));
         s.push_str(&format!("  \"device\": \"{}\",\n", escape(&m.device)));
+        let pool: Vec<String> = m
+            .pool
+            .iter()
+            .map(|p| format!("\"{}\"", escape(p)))
+            .collect();
+        s.push_str(&format!("  \"pool\": [{}],\n", pool.join(", ")));
+        s.push_str(&format!(
+            "  \"planner\": \"{}\",\n",
+            escape(&m.planner)
+        ));
         s.push_str(&format!("  \"batch\": {},\n", m.batch));
         s.push_str(&format!("  \"ops\": {},\n", m.ops));
         s.push_str(&format!(
@@ -820,6 +935,8 @@ impl Plan {
             "version",
             "label",
             "device",
+            "pool",
+            "planner",
             "batch",
             "ops",
             "dag_digest",
@@ -865,9 +982,10 @@ impl Plan {
         if version >= 1 && version < PLAN_FORMAT_VERSION {
             // v1 plans recorded ordered groups only; v2 plans lack device
             // assignments, the replica count, and the verified digest; v3
-            // plans lack the per-member fallback flags. A dedicated error
-            // (rather than a generic parse failure) tells the operator
-            // exactly what to do.
+            // plans lack the per-member fallback flags; v4 plans lack
+            // the per-device pool and planner provenance. A dedicated
+            // error (rather than a generic parse failure) tells the
+            // operator exactly what to do.
             return Err(PlanError::UnsupportedVersion { found: version });
         }
         if version != PLAN_FORMAT_VERSION {
@@ -882,10 +1000,19 @@ impl Plan {
             .ok_or_else(|| bad("partition"))?;
         let priority = PriorityPolicy::parse(&str_field("priority")?)
             .ok_or_else(|| bad("priority"))?;
+        let mut pool = Vec::new();
+        for p in field("pool")?.as_arr().ok_or_else(|| bad("pool"))? {
+            pool.push(p.as_str().ok_or_else(|| bad("pool"))?.to_string());
+        }
+        if pool.is_empty() {
+            return Err(bad("pool"));
+        }
         let meta = PlanMeta {
             version,
             label: str_field("label")?,
             device: str_field("device")?,
+            pool,
+            planner: str_field("planner")?,
             batch: u64_field("batch")? as usize,
             ops: u64_field("ops")? as usize,
             dag_digest: digest_field("dag_digest")?,

@@ -1,0 +1,659 @@
+//! List schedulers over heterogeneous pools: HEFT, PEFT, and a one-step
+//! lookahead variant of HEFT.
+//!
+//! Where the greedy packer honors the DAG's device map and optimizes
+//! *packing* (co-execution groups on one device's SMs), the list
+//! schedulers optimize *placement*: on a single-device DAG over a
+//! multi-member pool they are free to put every op on any member, and on
+//! a mixed K40/P100/V100/A100 pool that freedom is worth far more than
+//! packing — per-algorithm costs shift across GPU generations (Chetlur
+//! et al.), so the fitted-kernel cost table differs per device and the
+//! classic heterogeneous list heuristics apply directly:
+//!
+//! - **HEFT** (Topcuoglu et al.): upward-rank priority (mean cost plus
+//!   the most expensive downstream chain), earliest-finish-time
+//!   placement with insertion-based slotting into per-device idle gaps.
+//! - **PEFT** (Arabnejad & Barbosa): an optimistic cost table
+//!   (`OCT[op][dev]` = cheapest achievable downstream chain if `op` ran
+//!   on `dev`) replaces the single upward rank, and placement minimizes
+//!   `EFT + OCT` instead of EFT alone.
+//! - **lookahead**: HEFT's ranks, but a placement is scored by
+//!   tentatively committing it and replanning each child's best
+//!   earliest-finish on the updated timelines — one step of the
+//!   lookahead family (Bittencourt et al.).
+//!
+//! Scope and honesty notes, fixed by design:
+//!
+//! - On a multi-device DAG (data-parallel replicas) placement is already
+//!   pinned by the device map, so these schedulers only reorder; the
+//!   interesting case is a single-device DAG over a heterogeneous pool.
+//! - The cross-device transfer term (`COMM_LAT_US`/`COMM_GB_PER_S`,
+//!   PCIe3-ish) prices edges between differently-placed ops during
+//!   *ranking and placement only*; the executors do not simulate those
+//!   transfers, so it acts as a placement-dispersion penalty, not a
+//!   replayed cost.
+//! - Every conv is planned as a singleton serial group: list scheduling
+//!   trades intra-device packing for placement. The greedy packer
+//!   remains the default precisely because on homogeneous pools packing
+//!   wins.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::cluster::PoolSpec;
+use crate::convlib::{ConvParams, KernelDesc};
+use crate::coordinator::{
+    non_conv_time_us, select_solo, selector_invocations, ScheduleConfig,
+    SelectionPolicy,
+};
+use crate::gpusim::{isolated_time_us, natural_residency, PartitionMode};
+use crate::graph::{Dag, OpKind};
+
+use super::artifact::{
+    spec_digest, GroupPlan, OpPlan, Plan, PlanNode, PlanStep,
+};
+use super::scheduler::{plan_meta, Scheduler};
+
+/// Latency of one cross-device activation transfer (placement model
+/// only; see the module docs).
+const COMM_LAT_US: f64 = 5.0;
+/// Bandwidth of the placement model's transfer term, in GB/s (PCIe3-ish,
+/// matching `LinkModel`'s default ballpark).
+const COMM_GB_PER_S: f64 = 12.0;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum ListKind {
+    Heft,
+    Peft,
+    Lookahead,
+}
+
+/// The shared machinery behind `heft`/`peft`/`lookahead`: a per-device
+/// fitted-kernel cost table plus rank-ordered earliest-finish placement.
+pub struct ListScheduler {
+    kind: ListKind,
+    /// Unconstrained solo choices, memoized across plans per
+    /// (shape, policy, device).
+    solo_cache: RefCell<HashMap<(ConvParams, SelectionPolicy, u64), KernelDesc>>,
+}
+
+impl ListScheduler {
+    pub fn heft() -> Self {
+        Self::of(ListKind::Heft)
+    }
+    pub fn peft() -> Self {
+        Self::of(ListKind::Peft)
+    }
+    pub fn lookahead() -> Self {
+        Self::of(ListKind::Lookahead)
+    }
+    fn of(kind: ListKind) -> Self {
+        Self {
+            kind,
+            solo_cache: RefCell::new(HashMap::new()),
+        }
+    }
+}
+
+/// One op's cost on one device: duration plus, for convs, the fitted
+/// kernel and whether fitting was a workspace downgrade.
+#[derive(Clone)]
+struct OpCost {
+    us: f64,
+    desc: Option<KernelDesc>,
+    fallback: bool,
+}
+
+/// Per-device busy intervals, kept sorted; supports insertion-based
+/// earliest-slot queries (HEFT's gap filling).
+#[derive(Clone, Default)]
+struct Timeline {
+    busy: Vec<(f64, f64)>,
+}
+
+impl Timeline {
+    /// Earliest start `>= ready` of a `dur`-long slot, using idle gaps.
+    fn earliest_slot(&self, ready: f64, dur: f64) -> f64 {
+        let mut start = ready;
+        for &(s, e) in &self.busy {
+            if start + dur <= s {
+                break;
+            }
+            if e > start {
+                start = e;
+            }
+        }
+        start
+    }
+
+    fn insert(&mut self, start: f64, dur: f64) {
+        let at = self
+            .busy
+            .partition_point(|&(s, _)| s <= start);
+        self.busy.insert(at, (start, start + dur));
+    }
+}
+
+/// Everything the placement loop needs, built once per `plan` call.
+struct Tables {
+    ndev: usize,
+    /// Free placement (single-device DAG over a multi-member pool)?
+    free: bool,
+    /// `cost[op][dev]`; pinned ops only fill their own device's entry.
+    cost: Vec<Vec<OpCost>>,
+    /// Bytes a successor must pull if placed on another device.
+    edge_bytes: Vec<f64>,
+    pin: Vec<usize>,
+}
+
+impl Tables {
+    fn allowed(&self, op: usize) -> std::ops::Range<usize> {
+        if self.free {
+            0..self.ndev
+        } else {
+            self.pin[op]..self.pin[op] + 1
+        }
+    }
+
+    /// Transfer term between a scheduled pred and a candidate placement.
+    fn comm(&self, pred: usize, from: usize, to: usize) -> f64 {
+        if !self.free || from == to {
+            return 0.0;
+        }
+        COMM_LAT_US + self.edge_bytes[pred] / (COMM_GB_PER_S * 1e3)
+    }
+
+    /// Rank-time transfer average: the chance a free edge crosses
+    /// devices under uniform placement.
+    fn comm_mean(&self, pred: usize) -> f64 {
+        if !self.free || self.ndev <= 1 {
+            return 0.0;
+        }
+        let full =
+            COMM_LAT_US + self.edge_bytes[pred] / (COMM_GB_PER_S * 1e3);
+        full * (self.ndev as f64 - 1.0) / self.ndev as f64
+    }
+
+    fn mean_cost(&self, op: usize) -> f64 {
+        let r = self.allowed(op);
+        let n = r.len() as f64;
+        r.map(|d| self.cost[op][d].us).sum::<f64>() / n
+    }
+}
+
+impl ListScheduler {
+    fn name_str(&self) -> &'static str {
+        match self.kind {
+            ListKind::Heft => "heft",
+            ListKind::Peft => "peft",
+            ListKind::Lookahead => "lookahead",
+        }
+    }
+
+    fn build_tables(
+        &self,
+        dag: &Dag,
+        pool: &PoolSpec,
+        cfg: &ScheduleConfig,
+    ) -> Tables {
+        let ndev = pool.len();
+        let free = dag.num_devices() == 1 && ndev > 1;
+        let keys: Vec<u64> =
+            pool.members().iter().map(spec_digest).collect();
+        // Solo ops take the fastest fitting algorithm (complementarity is
+        // meaningless without a co-resident partner), mirroring the
+        // greedy packer's solo path.
+        let policy = match cfg.policy {
+            SelectionPolicy::ProfileGuided => SelectionPolicy::FastestOnly,
+            p => p,
+        };
+        let empty = OpCost {
+            us: 0.0,
+            desc: None,
+            fallback: false,
+        };
+        let mut cost = vec![vec![empty; ndev]; dag.len()];
+        let mut edge_bytes = vec![0.0f64; dag.len()];
+        let mut pin = vec![0usize; dag.len()];
+        for i in 0..dag.len() {
+            pin[i] = dag.device_of(i);
+            let devs = if free { 0..ndev } else { pin[i]..pin[i] + 1 };
+            match &dag.ops[i].kind {
+                OpKind::Conv(p) => {
+                    edge_bytes[i] = p.output_bytes() as f64;
+                    for d in devs {
+                        let spec = pool.device(d);
+                        let unconstrained = {
+                            let key = (p.clone(), policy, keys[d]);
+                            if let Some(k) =
+                                self.solo_cache.borrow().get(&key)
+                            {
+                                k.clone()
+                            } else {
+                                let k =
+                                    select_solo(policy, p, spec, u64::MAX)
+                                        .expect(
+                                            "some algorithm always \
+                                             supported",
+                                        );
+                                self.solo_cache
+                                    .borrow_mut()
+                                    .insert(key, k.clone());
+                                k
+                            }
+                        };
+                        let fitted = if unconstrained.workspace_bytes
+                            <= cfg.workspace_limit
+                        {
+                            unconstrained.clone()
+                        } else {
+                            select_solo(
+                                policy,
+                                p,
+                                spec,
+                                cfg.workspace_limit,
+                            )
+                            .expect("GEMM fallback always fits")
+                        };
+                        cost[i][d] = OpCost {
+                            us: isolated_time_us(&fitted, spec),
+                            fallback: fitted.algo != unconstrained.algo,
+                            desc: Some(fitted),
+                        };
+                    }
+                }
+                kind => {
+                    edge_bytes[i] = match kind {
+                        OpKind::Input => 0.0,
+                        k => k.dram_bytes() / 2.0,
+                    };
+                    for d in devs {
+                        cost[i][d] = OpCost {
+                            us: non_conv_time_us(kind, pool.device(d)),
+                            desc: None,
+                            fallback: false,
+                        };
+                    }
+                }
+            }
+        }
+        Tables {
+            ndev,
+            free,
+            cost,
+            edge_bytes,
+            pin,
+        }
+    }
+
+    /// HEFT upward ranks: mean cost plus the most expensive downstream
+    /// chain (mean transfer term on free edges). Reverse topological.
+    fn upward_ranks(&self, dag: &Dag, t: &Tables) -> Vec<f64> {
+        let order = topo_order(dag);
+        let mut rank = vec![0.0f64; dag.len()];
+        for &i in order.iter().rev() {
+            let tail = dag
+                .succs(i)
+                .iter()
+                .map(|&s| t.comm_mean(i) + rank[s])
+                .fold(0.0f64, f64::max);
+            rank[i] = t.mean_cost(i) + tail;
+        }
+        rank
+    }
+
+    /// PEFT's optimistic cost table: `oct[i][d]` = the cheapest possible
+    /// downstream completion if `i` runs on `d` and every descendant gets
+    /// its own best device.
+    fn oct(&self, dag: &Dag, t: &Tables) -> Vec<Vec<f64>> {
+        let order = topo_order(dag);
+        let mut oct = vec![vec![0.0f64; t.ndev]; dag.len()];
+        for &i in order.iter().rev() {
+            for d in t.allowed(i) {
+                let mut worst = 0.0f64;
+                for &s in dag.succs(i) {
+                    let best = t
+                        .allowed(s)
+                        .map(|sd| {
+                            oct[s][sd]
+                                + t.cost[s][sd].us
+                                + t.comm(i, d, sd)
+                        })
+                        .fold(f64::INFINITY, f64::min);
+                    worst = worst.max(best);
+                }
+                oct[i][d] = worst;
+            }
+        }
+        oct
+    }
+
+    /// Earliest start/finish of `op` on `dev` given the scheduled preds
+    /// and the device timeline (insertion-based).
+    #[allow(clippy::too_many_arguments)]
+    fn eft_on(
+        &self,
+        dag: &Dag,
+        t: &Tables,
+        lines: &[Timeline],
+        aft: &[f64],
+        place: &[usize],
+        done: &[bool],
+        op: usize,
+        dev: usize,
+    ) -> (f64, f64) {
+        let mut ready = 0.0f64;
+        for &p in dag.preds(op) {
+            if done[p] {
+                let r = aft[p] + t.comm(p, place[p], dev);
+                ready = ready.max(r);
+            }
+        }
+        let dur = t.cost[op][dev].us;
+        let start = lines[dev].earliest_slot(ready, dur);
+        (start, start + dur)
+    }
+}
+
+fn topo_order(dag: &Dag) -> Vec<usize> {
+    let mut indeg: Vec<usize> =
+        (0..dag.len()).map(|i| dag.preds(i).len()).collect();
+    let mut stack: Vec<usize> =
+        (0..dag.len()).rev().filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(dag.len());
+    while let Some(i) = stack.pop() {
+        order.push(i);
+        for &s in dag.succs(i) {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                stack.push(s);
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), dag.len(), "cyclic DAG");
+    order
+}
+
+impl Scheduler for ListScheduler {
+    fn name(&self) -> &'static str {
+        self.name_str()
+    }
+
+    fn plan(
+        &self,
+        dag: &Dag,
+        pool: &PoolSpec,
+        cfg: &ScheduleConfig,
+    ) -> Plan {
+        let selector_before = selector_invocations();
+        let t = self.build_tables(dag, pool, cfg);
+        let oct = if self.kind == ListKind::Peft {
+            Some(self.oct(dag, &t))
+        } else {
+            None
+        };
+        // Priority: PEFT ranks by mean OCT + mean cost, HEFT/lookahead by
+        // the upward rank. Ties break toward the lower op id — every
+        // comparison in this scheduler is total, so plans are
+        // deterministic for a given (dag, pool, cfg).
+        let rank: Vec<f64> = match &oct {
+            Some(oct) => (0..dag.len())
+                .map(|i| {
+                    let r = t.allowed(i);
+                    let n = r.len() as f64;
+                    t.mean_cost(i)
+                        + r.map(|d| oct[i][d]).sum::<f64>() / n
+                })
+                .collect(),
+            None => self.upward_ranks(dag, &t),
+        };
+        let mut by_rank: Vec<usize> = (0..dag.len()).collect();
+        by_rank.sort_by(|&a, &b| {
+            rank[b].partial_cmp(&rank[a]).unwrap().then(a.cmp(&b))
+        });
+
+        let mut lines: Vec<Timeline> = vec![Timeline::default(); t.ndev];
+        let mut place = vec![0usize; dag.len()];
+        let mut ast = vec![0.0f64; dag.len()];
+        let mut aft = vec![0.0f64; dag.len()];
+        let mut done = vec![false; dag.len()];
+        let mut sched_pos = vec![0usize; dag.len()];
+
+        for step in 0..dag.len() {
+            // Highest-rank op whose preds are all scheduled (rank order
+            // alone is not topological when ranks tie across an edge).
+            let op = *by_rank
+                .iter()
+                .find(|&&i| {
+                    !done[i] && dag.preds(i).iter().all(|&p| done[p])
+                })
+                .expect("acyclic DAG always has a ready op");
+            // Score every allowed device; lower is better. The scoring
+            // rule is the only thing the three variants disagree on.
+            let mut best: Option<(f64, f64, f64, usize)> = None;
+            for d in t.allowed(op) {
+                let (s, f) = self.eft_on(
+                    dag, &t, &lines, &aft, &place, &done, op, d,
+                );
+                let score = match self.kind {
+                    ListKind::Heft => f,
+                    ListKind::Peft => {
+                        f + oct.as_ref().unwrap()[op][d]
+                    }
+                    ListKind::Lookahead => {
+                        // Commit tentatively, then charge the placement
+                        // with the worst child's best achievable EFT.
+                        let mut trial = lines.to_vec();
+                        trial[d].insert(s, t.cost[op][d].us);
+                        let mut tp = place.to_vec();
+                        let mut ta = aft.to_vec();
+                        let mut td = done.to_vec();
+                        tp[op] = d;
+                        ta[op] = f;
+                        td[op] = true;
+                        let mut worst = f;
+                        for &c in dag.succs(op) {
+                            let bc = t
+                                .allowed(c)
+                                .map(|cd| {
+                                    self.eft_on(
+                                        dag, &t, &trial, &ta, &tp,
+                                        &td, c, cd,
+                                    )
+                                    .1
+                                })
+                                .fold(f64::INFINITY, f64::min);
+                            worst = worst.max(bc);
+                        }
+                        worst
+                    }
+                };
+                let cand = (score, f, s, d);
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        (cand.0, cand.1, cand.3)
+                            .partial_cmp(&(b.0, b.1, b.3))
+                            .unwrap()
+                            .is_lt()
+                    }
+                };
+                if better {
+                    best = Some(cand);
+                }
+            }
+            let (_, f, s, d) = best.expect("at least one allowed device");
+            lines[d].insert(s, t.cost[op][d].us);
+            place[op] = d;
+            ast[op] = s;
+            aft[op] = f;
+            done[op] = true;
+            sched_pos[op] = step;
+        }
+
+        // Emit in start-time order (scheduling-position tie-break keeps
+        // zero-duration chains topological: a child's start can equal but
+        // never precede its pred's). Convs become singleton serial groups
+        // on their placed device; the executors serialize per-device in
+        // node order, so start-time order *is* the execution order.
+        let mut emit: Vec<usize> = (0..dag.len()).collect();
+        emit.sort_by(|&a, &b| {
+            ast[a]
+                .partial_cmp(&ast[b])
+                .unwrap()
+                .then(sched_pos[a].cmp(&sched_pos[b]))
+        });
+        let mut steps = Vec::with_capacity(dag.len());
+        let mut nodes = Vec::with_capacity(dag.len());
+        let mut planned_ws_fallbacks = 0u64;
+        for &op in &emit {
+            let d = place[op];
+            match &dag.ops[op].kind {
+                OpKind::Conv(_) => {
+                    let c = &t.cost[op][d];
+                    let desc =
+                        c.desc.as_ref().expect("conv cost has a kernel");
+                    if c.fallback {
+                        planned_ws_fallbacks += 1;
+                    }
+                    let spec = pool.device(d);
+                    steps.push(PlanStep::Group(GroupPlan {
+                        members: vec![OpPlan {
+                            op,
+                            algo: desc.algo,
+                            workspace_bytes: desc.workspace_bytes,
+                            fallback: c.fallback,
+                        }],
+                        partition: PartitionMode::Serial,
+                        quotas: vec![natural_residency(
+                            &desc.launch,
+                            spec,
+                        )],
+                        est_us: isolated_time_us(desc, spec),
+                    }));
+                    nodes.push(PlanNode {
+                        op,
+                        lane: Some(0),
+                        device: d,
+                        deps: dag.preds(op).to_vec(),
+                    });
+                }
+                _ => {
+                    steps.push(PlanStep::Host { op });
+                    nodes.push(PlanNode {
+                        op,
+                        lane: None,
+                        device: d,
+                        deps: dag.preds(op).to_vec(),
+                    });
+                }
+            }
+        }
+        let predicted =
+            aft.iter().copied().fold(0.0f64, f64::max);
+
+        Plan {
+            meta: plan_meta(
+                dag,
+                pool,
+                cfg,
+                self.name_str(),
+                planned_ws_fallbacks,
+                selector_invocations().wrapping_sub(selector_before),
+            ),
+            steps,
+            nodes,
+            predicted_makespan_us: predicted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::DeviceSpec;
+    use crate::graph::Network;
+
+    fn hetero() -> PoolSpec {
+        PoolSpec::new(vec![DeviceSpec::k40(), DeviceSpec::v100()])
+    }
+
+    #[test]
+    fn heft_places_onto_the_fast_device() {
+        let dag = Network::GoogleNet.build(8);
+        let cfg = ScheduleConfig::default();
+        let plan =
+            ListScheduler::heft().plan(&dag, &hetero(), &cfg);
+        // the slow K40 is device 0: free placement must use the V100 for
+        // the bulk of the compute
+        let on_v100 = plan
+            .nodes
+            .iter()
+            .filter(|n| n.device == 1)
+            .count();
+        assert!(
+            on_v100 > plan.nodes.len() / 2,
+            "{on_v100}/{} ops on the V100",
+            plan.nodes.len()
+        );
+        assert_eq!(plan.meta.planner, "heft");
+        assert_eq!(plan.meta.replicas, 2);
+    }
+
+    #[test]
+    fn pinned_dags_keep_their_device_map() {
+        use crate::cluster::{
+            data_parallel_dag, reduce_sites, ClusterConfig,
+        };
+        use crate::graph::training_dag;
+        let fwd = Network::AlexNet.build(4);
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        let dag = data_parallel_dag(
+            &train,
+            &sites,
+            &ClusterConfig {
+                replicas: 2,
+                ..Default::default()
+            },
+        );
+        let pool =
+            PoolSpec::homogeneous(DeviceSpec::v100(), 2);
+        let cfg = ScheduleConfig::default();
+        for sched in [
+            ListScheduler::heft(),
+            ListScheduler::peft(),
+            ListScheduler::lookahead(),
+        ] {
+            let plan = sched.plan(&dag, &pool, &cfg);
+            for n in &plan.nodes {
+                assert_eq!(n.device, dag.device_of(n.op));
+            }
+        }
+    }
+
+    #[test]
+    fn emission_order_is_topological() {
+        let dag = Network::ResNet50.build(8);
+        let cfg = ScheduleConfig::default();
+        for sched in [
+            ListScheduler::heft(),
+            ListScheduler::peft(),
+            ListScheduler::lookahead(),
+        ] {
+            let plan = sched.plan(&dag, &hetero(), &cfg);
+            let mut pos = vec![usize::MAX; dag.len()];
+            for (i, n) in plan.nodes.iter().enumerate() {
+                pos[n.op] = i;
+            }
+            for i in 0..dag.len() {
+                for &p in dag.preds(i) {
+                    assert!(
+                        pos[p] < pos[i],
+                        "op {i} emitted before pred {p}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -18,9 +18,14 @@
 //!   lanes. `Plan::execute_with` selects the legacy barrier-synchronous
 //!   group replay (`sim::ExecutorKind::Barrier`), kept as the regression
 //!   oracle.
-//! - [`Session`] owns a device + config + keyed plan cache and exposes
-//!   `run` (plan-on-miss then replay), `plan`, and `set_executor`;
-//!   `Coordinator` is now a thin compatibility shim over it.
+//! - [`Session`] owns a device pool + config + keyed plan cache and
+//!   exposes `run` (plan-on-miss then replay), `plan`, and
+//!   `set_executor`; `Coordinator` is a deprecated alias of it.
+//! - [`Scheduler`] is the plan-construction trait behind [`Planner`]:
+//!   the default [`GreedyPacker`] (the original CP-priority packer,
+//!   bit-identical) plus the heterogeneous list schedulers
+//!   (HEFT/PEFT/lookahead) selected via [`PlannerKind`], all planning
+//!   against a per-device [`crate::cluster::PoolSpec`].
 //!
 //! ```no_run
 //! use parconv::coordinator::ScheduleConfig;
@@ -42,12 +47,17 @@
 
 mod artifact;
 pub mod json;
+mod list_sched;
 mod planner;
+mod scheduler;
 mod session;
 
 pub use artifact::{
-    config_digest, dag_digest, spec_digest, GroupPlan, OpPlan, Plan,
-    PlanError, PlanMeta, PlanNode, PlanStep, PLAN_FORMAT_VERSION,
+    config_digest, dag_digest, pool_digest, spec_digest, GroupPlan,
+    OpPlan, Plan, PlanError, PlanMeta, PlanNode, PlanStep,
+    PLAN_FORMAT_VERSION,
 };
+pub use list_sched::ListScheduler;
 pub use planner::Planner;
+pub use scheduler::{GreedyPacker, PlannerKind, Scheduler};
 pub use session::{Session, SessionStats};

@@ -1,401 +1,140 @@
-//! The offline planner: one selection + grouping + quota-planning sweep
-//! over a DAG, emitting an immutable [`Plan`].
+//! The offline planner facade: resolve the device pool against the DAG's
+//! device map, run the configured [`Scheduler`], stamp the label.
 //!
-//! This is the expensive half of the old `Coordinator::execute_dag` loop,
-//! split out so it runs *once* per (DAG, device, config): critical-path
-//! priorities, ready-queue rounds, k-wide group packing via the selector,
-//! and workspace budget fitting. The cheap half — driving the simulator —
-//! lives in [`Plan::execute`]. The planning order is kept bit-identical to
-//! the legacy inline scheduler (the pair-equivalence and monotonicity
-//! regressions pin it), which is possible because none of the planning
-//! decisions ever depended on simulation results: group admission uses the
-//! analytic fluid estimate, and every workspace allocation is released at
-//! the end of its batch, so each batch is planned against the full budget.
+//! This used to *be* the CP-priority greedy scheduler; that algorithm now
+//! lives behind [`super::scheduler::GreedyPacker`] (bit-identical, still
+//! the default) alongside the heterogeneous list schedulers in
+//! [`super::list_sched`]. What remains here is the policy glue every
+//! scheduler shares:
+//!
+//! - **Pool resolution.** A raw [`PoolSpec`] is matched against the DAG:
+//!   equal lengths pass through; a one-member pool expands homogeneously
+//!   to the DAG's device count (the legacy single-spec behavior); a
+//!   multi-member pool over a single-device DAG grants the scheduler free
+//!   placement across the whole pool. Anything else (an N-device DAG over
+//!   an unrelated M-member pool) is a caller bug and panics.
+//! - **Provenance.** The human-readable label and the planner name land
+//!   in the plan meta; [`Session`](super::Session) keys its cache and
+//!   adoption checks off the digests stamped here.
 
-use std::cell::RefCell;
-use std::collections::{HashMap, VecDeque};
+use crate::cluster::PoolSpec;
+use crate::coordinator::ScheduleConfig;
+use crate::gpusim::DeviceSpec;
+use crate::graph::Dag;
 
-use crate::convlib::{ConvParams, KernelDesc, LaunchConfig};
-use crate::coordinator::{
-    non_conv_time_us, select_group, select_solo, selector_invocations,
-    PriorityPolicy, ScheduleConfig, SelectionPolicy,
-};
-use crate::gpusim::partition::plan_intra_sm;
-use crate::gpusim::{
-    isolated_time_us, natural_residency, DeviceSpec, PartitionMode,
-};
-use crate::graph::{Dag, OpKind};
+use super::artifact::Plan;
+use super::scheduler::{PlannerKind, Scheduler};
 
-use super::artifact::{
-    config_digest, dag_digest, spec_digest, GroupPlan, OpPlan, Plan,
-    PlanMeta, PlanNode, PlanStep, PLAN_FORMAT_VERSION,
-};
-
-/// Builds [`Plan`]s: owns the device spec, the scheduler configuration,
-/// and the memoized solo-selection cache (repeated convolution shapes
-/// probe the seven-algorithm space once).
+/// Builds [`Plan`]s: owns the device pool, the scheduler configuration,
+/// and the scheduling algorithm (with its warm-across-plans selection
+/// caches).
 pub struct Planner {
-    spec: DeviceSpec,
+    pool: PoolSpec,
     cfg: ScheduleConfig,
-    solo_cache: RefCell<HashMap<(ConvParams, SelectionPolicy), KernelDesc>>,
+    kind: PlannerKind,
+    scheduler: Box<dyn Scheduler>,
 }
 
 impl Planner {
+    /// The legacy constructor: a homogeneous pool of `spec` under the
+    /// default greedy packer. Bit-identical plans to the pre-trait API.
     pub fn new(spec: DeviceSpec, cfg: ScheduleConfig) -> Self {
-        Self {
-            spec,
+        Self::with_scheduler(
+            PoolSpec::single(spec),
             cfg,
-            solo_cache: RefCell::new(HashMap::new()),
+            PlannerKind::Greedy,
+        )
+    }
+
+    /// Full-control constructor: an explicit (possibly heterogeneous)
+    /// pool and a member of the planner family.
+    pub fn with_scheduler(
+        pool: PoolSpec,
+        cfg: ScheduleConfig,
+        kind: PlannerKind,
+    ) -> Self {
+        Self {
+            pool,
+            cfg,
+            kind,
+            scheduler: kind.build(),
         }
     }
 
+    /// The first member's spec — the legacy accessor; heterogeneous-aware
+    /// callers should use [`Planner::pool`].
     pub fn spec(&self) -> &DeviceSpec {
-        &self.spec
+        self.pool.device(0)
+    }
+
+    pub fn pool(&self) -> &PoolSpec {
+        &self.pool
     }
 
     pub fn config(&self) -> &ScheduleConfig {
         &self.cfg
     }
 
+    pub fn kind(&self) -> PlannerKind {
+        self.kind
+    }
+
+    /// The pool a plan spanning `replicas` devices executes on, resolved
+    /// the same way planning resolved it: matching lengths pass through,
+    /// a one-member pool expands homogeneously. `None` means this
+    /// planner's pool cannot have produced (and cannot execute) such a
+    /// plan.
+    pub fn pool_for_replicas(
+        &self,
+        replicas: usize,
+    ) -> Option<PoolSpec> {
+        let replicas = replicas.max(1);
+        if self.pool.len() == replicas {
+            Some(self.pool.clone())
+        } else if self.pool.len() == 1 {
+            Some(PoolSpec::homogeneous(
+                self.pool.device(0).clone(),
+                replicas,
+            ))
+        } else {
+            None
+        }
+    }
+
     /// Plan a DAG: the full selection sweep, no simulation. `label` is a
     /// human-readable provenance tag (usually the network name).
     pub fn plan(&self, dag: &Dag, label: &str) -> Plan {
-        let selector_before = selector_invocations();
-        let mut indeg: Vec<usize> =
-            (0..dag.len()).map(|i| dag.preds(i).len()).collect();
-        let mut ready: VecDeque<usize> =
-            (0..dag.len()).filter(|&i| indeg[i] == 0).collect();
-        // Critical-path (bottom-level) priorities, computed once per DAG
-        // from the fastest-solo cost model (Fifo never reads them, so it
-        // skips the cost-model sweep).
-        let bl = if self.cfg.priority == PriorityPolicy::CriticalPath {
-            self.bottom_levels(dag)
-        } else {
-            Vec::new()
-        };
-        let mut steps: Vec<PlanStep> = Vec::with_capacity(dag.len());
-        // The v2 scheduling graph, built alongside the steps: node order
-        // is the dispatch-priority order, each node carrying its DAG
-        // dependency edges and planned stream lane.
-        let mut nodes: Vec<PlanNode> = Vec::with_capacity(dag.len());
-        let mut predicted = 0.0f64;
-        let mut planned_ws_fallbacks = 0u64;
-        let mut done = vec![false; dag.len()];
-
         let ndev = dag.num_devices();
-        while !ready.is_empty() {
-            // Partition the ready set into convs and cheap ops.
-            let round: Vec<usize> = ready.drain(..).collect();
-            let mut convs: Vec<usize> = Vec::new();
-            for &id in &round {
-                match &dag.ops[id].kind {
-                    OpKind::Conv(_) => convs.push(id),
-                    kind => {
-                        // bandwidth-bound ops run back-to-back (negligible
-                        // concurrency value; cuDNN launches them serially)
-                        steps.push(PlanStep::Host { op: id });
-                        nodes.push(PlanNode {
-                            op: id,
-                            lane: None,
-                            device: dag.device_of(id),
-                            deps: dag.preds(id).to_vec(),
-                        });
-                        predicted += non_conv_time_us(kind, &self.spec);
-                    }
-                }
-            }
-
-            // Order ready convs by the configured priority, then pack
-            // them into co-execution groups of at most `streams` ops.
-            if self.cfg.priority == PriorityPolicy::CriticalPath {
-                convs.sort_by(|&a, &b| {
-                    bl[b]
-                        .partial_cmp(&bl[a])
-                        .unwrap()
-                        .then(a.cmp(&b))
-                });
-            }
-            // Replica-aware packing: a co-execution group shares one
-            // device's SMs, so ready convs are packed per device
-            // (ascending device id, priority order preserved within each
-            // device). Single-device DAGs take the one-queue path
-            // unchanged.
-            let mut by_dev: Vec<VecDeque<usize>> =
-                vec![VecDeque::new(); ndev];
-            for id in convs {
-                by_dev[dag.device_of(id)].push_back(id);
-            }
-            for mut pending in by_dev {
-                while !pending.is_empty() {
-                    let g = self.plan_batch(
-                        dag,
-                        &mut pending,
-                        &mut planned_ws_fallbacks,
-                    );
-                    predicted += g.est_us;
-                    for (lane, m) in g.members.iter().enumerate() {
-                        nodes.push(PlanNode {
-                            op: m.op,
-                            lane: Some(lane),
-                            device: dag.device_of(m.op),
-                            deps: dag.preds(m.op).to_vec(),
-                        });
-                    }
-                    steps.push(PlanStep::Group(g));
-                }
-            }
-
-            // Mark round done, release successors.
-            for &id in &round {
-                done[id] = true;
-            }
-            for &id in &round {
-                for &s in dag.succs(id) {
-                    indeg[s] -= 1;
-                    if indeg[s] == 0 && !done[s] {
-                        ready.push_back(s);
-                    }
-                }
-            }
-        }
-        debug_assert!(done.iter().all(|&d| d), "unplanned ops (cycle?)");
-
-        let batch = dag
-            .conv_ids()
-            .first()
-            .map(|&i| match &dag.ops[i].kind {
-                OpKind::Conv(p) => p.n,
-                _ => unreachable!("conv_ids returned a non-conv"),
-            })
-            .unwrap_or(0);
-        Plan {
-            meta: PlanMeta {
-                version: PLAN_FORMAT_VERSION,
-                label: label.to_string(),
-                device: self.spec.name.clone(),
-                batch,
-                ops: dag.len(),
-                dag_digest: dag_digest(dag),
-                spec_digest: spec_digest(&self.spec),
-                config_digest: config_digest(&self.cfg),
-                policy: self.cfg.policy,
-                partition: self.cfg.partition,
-                streams: self.cfg.streams,
-                workspace_limit: self.cfg.workspace_limit,
-                priority: self.cfg.priority,
-                replicas: ndev,
-                planned_ws_fallbacks,
-                selector_calls: selector_invocations()
-                    .wrapping_sub(selector_before),
-            },
-            steps,
-            nodes,
-            predicted_makespan_us: predicted,
-        }
-    }
-
-    /// Memoized `select_solo` with an unlimited budget.
-    fn solo_unconstrained(
-        &self,
-        policy: SelectionPolicy,
-        p: &ConvParams,
-    ) -> KernelDesc {
-        if let Some(d) =
-            self.solo_cache.borrow().get(&(p.clone(), policy))
-        {
-            return d.clone();
-        }
-        let d = select_solo(policy, p, &self.spec, u64::MAX)
-            .expect("some algorithm always supported");
-        self.solo_cache
-            .borrow_mut()
-            .insert((p.clone(), policy), d.clone());
-        d
-    }
-
-    /// Bottom-level priority of every op: longest cost-weighted path to a
-    /// sink under the fastest-solo cost model (convs) / bandwidth model
-    /// (everything else). One reverse topological sweep per DAG.
-    fn bottom_levels(&self, dag: &Dag) -> Vec<f64> {
-        let cost: Vec<f64> = (0..dag.len())
-            .map(|i| match &dag.ops[i].kind {
-                OpKind::Conv(p) => {
-                    let d = self
-                        .solo_unconstrained(SelectionPolicy::FastestOnly, p);
-                    isolated_time_us(&d, &self.spec)
-                }
-                kind => non_conv_time_us(kind, &self.spec),
-            })
-            .collect();
-        dag.bottom_levels(&cost)
-    }
-
-    /// Take the next co-execution batch off the priority-ordered pending
-    /// conv queue and fix its algorithms, partition mode, and quota plan.
-    ///
-    /// `ProfileGuided` packs a k-wide group via [`select_group`]: the
-    /// highest-priority conv seeds the group and partners join only when
-    /// the fluid-model estimate beats serializing them. When no partner
-    /// pays, the seed runs solo on its fastest fitting algorithm, so
-    /// guided scheduling can never regress. Other policies chunk up to
-    /// `streams` convs in priority order and let the partition mode decide
-    /// the concurrency (the TensorFlow-style baseline). Every batch plans
-    /// against the full workspace budget because execution releases all
-    /// workspace at batch boundaries.
-    fn plan_batch(
-        &self,
-        dag: &Dag,
-        pending: &mut VecDeque<usize>,
-        ws_fallbacks: &mut u64,
-    ) -> GroupPlan {
-        let conv_params = |id: usize| match &dag.ops[id].kind {
-            OpKind::Conv(p) => p,
-            _ => unreachable!("pending contains non-conv"),
-        };
-        let budget = self.cfg.workspace_limit;
-        let k = self.cfg.streams.max(1);
-        if self.cfg.policy == SelectionPolicy::ProfileGuided
-            && k >= 2
-            && pending.len() >= 2
-        {
-            let ids: Vec<usize> = pending.iter().copied().collect();
-            let params: Vec<&ConvParams> =
-                ids.iter().map(|&id| conv_params(id)).collect();
-            if let Some(g) = select_group(&params, k, &self.spec, budget) {
-                if g.members.len() >= 2 {
-                    let batch: Vec<usize> =
-                        g.members.iter().map(|&m| ids[m]).collect();
-                    pending.retain(|id| !batch.contains(id));
-                    // group selection fits the budget by construction —
-                    // nothing here is a workspace downgrade
-                    let no_fallback = vec![false; batch.len()];
-                    return self.group_plan(
-                        &batch,
-                        g.descs,
-                        &no_fallback,
-                        self.cfg.partition,
-                        Some(g.est_us),
-                    );
-                }
-            }
-            // no partner pays off: the seed runs alone, serially
-            let id = pending.pop_front().expect("pending non-empty");
-            let (descs, fallbacks) =
-                self.solo_batch(&[conv_params(id)], budget, ws_fallbacks);
-            return self.group_plan(
-                &[id],
-                descs,
-                &fallbacks,
-                PartitionMode::Serial,
-                None,
-            );
-        }
-        let take = k.min(pending.len());
-        let batch: Vec<usize> = pending.drain(..take).collect();
-        let params: Vec<&ConvParams> =
-            batch.iter().map(|&id| conv_params(id)).collect();
-        let (descs, fallbacks) =
-            self.solo_batch(&params, budget, ws_fallbacks);
-        self.group_plan(&batch, descs, &fallbacks, self.cfg.partition, None)
-    }
-
-    /// Returns the fitted descriptors plus a per-member flag marking
-    /// which of them are workspace downgrades (fitted algorithm differs
-    /// from the unconstrained choice). The flags land in
-    /// [`OpPlan::fallback`] so executors can tell a fallback they are
-    /// *re-taking* from a fresh runtime one and count each op once.
-    fn solo_batch(
-        &self,
-        params: &[&ConvParams],
-        mut budget: u64,
-        ws_fallbacks: &mut u64,
-    ) -> (Vec<KernelDesc>, Vec<bool>) {
-        // Sequential admission: each op's workspace shrinks the budget the
-        // next sees (launch-time memory check, paper §2 footnote 1).
-        // ProfileGuided ops running solo take the fastest fitting algorithm
-        // (complementarity is meaningless without a partner).
-        let policy = match self.cfg.policy {
-            SelectionPolicy::ProfileGuided => SelectionPolicy::FastestOnly,
-            p => p,
-        };
-        let mut out = Vec::with_capacity(params.len());
-        let mut flags = Vec::with_capacity(params.len());
-        for p in params {
-            let unconstrained = self.solo_unconstrained(policy, p);
-            let fitted = if unconstrained.workspace_bytes <= budget {
-                unconstrained.clone()
-            } else {
-                select_solo(policy, p, &self.spec, budget)
-                    .expect("GEMM fallback always fits")
-            };
-            let is_fallback = fitted.algo != unconstrained.algo;
-            if is_fallback {
-                *ws_fallbacks += 1;
-            }
-            flags.push(is_fallback);
-            budget = budget.saturating_sub(fitted.workspace_bytes);
-            out.push(fitted);
-        }
-        (out, flags)
-    }
-
-    /// Freeze one batch into a [`GroupPlan`]: record the algorithm per
-    /// member, the partition mode it will run under (singletons always run
-    /// serially), the per-SM quota plan, and the fluid estimate.
-    fn group_plan(
-        &self,
-        ids: &[usize],
-        descs: Vec<KernelDesc>,
-        fallbacks: &[bool],
-        partition: PartitionMode,
-        est: Option<f64>,
-    ) -> GroupPlan {
-        debug_assert_eq!(ids.len(), fallbacks.len());
-        let partition = if descs.len() <= 1 {
-            PartitionMode::Serial
+        let eff = if self.pool.len() == ndev {
+            self.pool.clone()
+        } else if self.pool.len() == 1 {
+            // legacy homogeneous expansion: one spec, N replicas
+            PoolSpec::homogeneous(self.pool.device(0).clone(), ndev)
+        } else if ndev == 1 {
+            // single-device DAG over a multi-member pool: the scheduler
+            // may place ops anywhere in the pool
+            self.pool.clone()
         } else {
-            partition
+            panic!(
+                "cannot plan a {ndev}-device DAG on a {}-member pool \
+                 ({}): counts must match, or one side must be 1",
+                self.pool.len(),
+                self.pool
+            );
         };
-        let est_us = est.unwrap_or_else(|| {
-            descs.iter().map(|d| isolated_time_us(d, &self.spec)).sum()
-        });
-        let quotas = match partition {
-            PartitionMode::IntraSm if descs.len() >= 2 => {
-                let launches: Vec<&LaunchConfig> =
-                    descs.iter().map(|d| &d.launch).collect();
-                let utils: Vec<f64> =
-                    descs.iter().map(|d| d.alu_util).collect();
-                plan_intra_sm(&launches, &utils, &self.spec)
-            }
-            _ => descs
-                .iter()
-                .map(|d| natural_residency(&d.launch, &self.spec))
-                .collect(),
-        };
-        let members = ids
-            .iter()
-            .zip(&descs)
-            .zip(fallbacks)
-            .map(|((&op, d), &fallback)| OpPlan {
-                op,
-                algo: d.algo,
-                workspace_bytes: d.workspace_bytes,
-                fallback,
-            })
-            .collect();
-        GroupPlan {
-            members,
-            partition,
-            quotas,
-            est_us,
-        }
+        let mut plan = self.scheduler.plan(dag, &eff, &self.cfg);
+        plan.meta.label = label.to_string();
+        plan
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::SelectionPolicy;
+    use crate::gpusim::PartitionMode;
     use crate::graph::Network;
+    use crate::plan::PlanStep;
 
     fn planner(streams: usize) -> Planner {
         Planner::new(
@@ -426,6 +165,8 @@ mod tests {
         assert_eq!(plan.meta.ops, dag.len());
         assert_eq!(plan.meta.batch, 8);
         assert_eq!(plan.meta.label, "googlenet");
+        assert_eq!(plan.meta.planner, "greedy");
+        assert_eq!(plan.meta.pool, vec!["Tesla K40".to_string()]);
     }
 
     #[test]
@@ -533,6 +274,7 @@ mod tests {
         );
         let plan = planner(4).plan(&dag, "dp2");
         assert_eq!(plan.meta.replicas, 2);
+        assert_eq!(plan.meta.pool.len(), 2);
         // a co-execution group shares one device's SMs: members must
         // never span devices
         for step in &plan.steps {
@@ -607,5 +349,64 @@ mod tests {
                 assert_eq!(g.members.len(), 1, "linear net grouped convs");
             }
         }
+    }
+
+    #[test]
+    fn pool_resolution_expands_and_frees() {
+        // one-member pool + 2-device DAG: homogeneous expansion
+        use crate::cluster::{
+            data_parallel_dag, reduce_sites, ClusterConfig,
+        };
+        use crate::graph::training_dag;
+        let fwd = Network::AlexNet.build(4);
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        let dag2 = data_parallel_dag(
+            &train,
+            &sites,
+            &ClusterConfig {
+                replicas: 2,
+                ..Default::default()
+            },
+        );
+        let p = planner(2);
+        let plan = p.plan(&dag2, "");
+        assert_eq!(plan.meta.replicas, 2);
+        assert_eq!(plan.meta.pool.len(), 2);
+        assert!(p.pool_for_replicas(2).is_some());
+        // multi-member pool + single-device DAG: free placement
+        let hp = Planner::with_scheduler(
+            PoolSpec::new(vec![
+                DeviceSpec::k40(),
+                DeviceSpec::v100(),
+            ]),
+            ScheduleConfig::default(),
+            PlannerKind::Heft,
+        );
+        let dag1 = Network::AlexNet.build(4);
+        let plan = hp.plan(&dag1, "");
+        assert_eq!(plan.meta.replicas, 2);
+        assert_eq!(hp.pool_for_replicas(3), None);
+    }
+
+    #[test]
+    fn greedy_solo_cache_is_per_device() {
+        // the same conv shapes planned on two different specs must not
+        // share memoized selections
+        let dag = Network::AlexNet.build(8);
+        let hp = Planner::with_scheduler(
+            PoolSpec::new(vec![
+                DeviceSpec::k40(),
+                DeviceSpec::v100(),
+            ]),
+            ScheduleConfig {
+                policy: SelectionPolicy::FastestOnly,
+                ..Default::default()
+            },
+            PlannerKind::Greedy,
+        );
+        let a = hp.plan(&dag, "");
+        let b = hp.plan(&dag, "");
+        assert_eq!(a.digest(), b.digest());
     }
 }

@@ -1,0 +1,594 @@
+//! The [`Scheduler`] trait — the plan-construction step behind
+//! [`super::Planner`] — and its default implementation, the CP-priority
+//! greedy packer that used to *be* the planner.
+//!
+//! A scheduler turns `(dag, pool, cfg)` into a [`Plan`]: per-op algorithm
+//! choices, co-execution groups, device placement, and the dispatch-order
+//! node list. Four implementations exist:
+//!
+//! - [`GreedyPacker`] (`greedy`, the default) — the original planner,
+//!   bit-identical: critical-path priorities, ready-queue rounds, k-wide
+//!   group packing via the selector. It honors the DAG's device map and
+//!   never *places* — which is exactly why it visibly loses on a
+//!   heterogeneous pool, where every op of a single-device DAG lands on
+//!   device 0 whatever that device is.
+//! - `heft` / `peft` / `lookahead` (in [`super::list_sched`]) — list
+//!   schedulers with per-device cost tables and free placement.
+//!
+//! [`PlannerKind`] is the CLI/config-facing name of the family
+//! (`--planner greedy|heft|peft|lookahead`).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+
+use crate::cluster::PoolSpec;
+use crate::convlib::{ConvParams, KernelDesc, LaunchConfig};
+use crate::coordinator::{
+    non_conv_time_us, select_group, select_solo, selector_invocations,
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
+use crate::gpusim::partition::plan_intra_sm;
+use crate::gpusim::{
+    isolated_time_us, natural_residency, DeviceSpec, PartitionMode,
+};
+use crate::graph::{Dag, OpKind};
+
+use super::artifact::{
+    config_digest, dag_digest, pool_digest, GroupPlan, OpPlan, Plan,
+    PlanMeta, PlanNode, PlanStep, PLAN_FORMAT_VERSION,
+};
+
+/// One plan-construction algorithm. Implementations must be
+/// deterministic: the same `(dag, pool, cfg)` must produce the same plan
+/// (the digest-keyed session cache and the CI round-trip guard both rely
+/// on it).
+pub trait Scheduler {
+    /// The family name recorded in `PlanMeta::planner`
+    /// (`greedy`/`heft`/`peft`/`lookahead`).
+    fn name(&self) -> &'static str;
+
+    /// Build a plan for `dag` on `pool` under `cfg`. `pool` is the
+    /// *effective* pool: its length is the device count the plan spans
+    /// (the [`super::Planner`] facade resolves a raw pool against the
+    /// DAG's device map before calling this).
+    fn plan(&self, dag: &Dag, pool: &PoolSpec, cfg: &ScheduleConfig)
+        -> Plan;
+}
+
+/// The planner family, by CLI/config name.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum PlannerKind {
+    /// The CP-priority greedy packer (the legacy planner; the default).
+    #[default]
+    Greedy,
+    /// Heterogeneous-Earliest-Finish-Time: upward-rank priority,
+    /// earliest-finish placement with insertion-based slotting.
+    Heft,
+    /// Predict-Earliest-Finish-Time: optimistic-cost-table ranks.
+    Peft,
+    /// HEFT with one-step lookahead: a placement is scored by the best
+    /// earliest-finish its children could then achieve.
+    Lookahead,
+}
+
+impl PlannerKind {
+    pub const ALL: &'static [PlannerKind] = &[
+        PlannerKind::Greedy,
+        PlannerKind::Heft,
+        PlannerKind::Peft,
+        PlannerKind::Lookahead,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlannerKind::Greedy => "greedy",
+            PlannerKind::Heft => "heft",
+            PlannerKind::Peft => "peft",
+            PlannerKind::Lookahead => "lookahead",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "greedy" => Some(PlannerKind::Greedy),
+            "heft" => Some(PlannerKind::Heft),
+            "peft" => Some(PlannerKind::Peft),
+            "lookahead" => Some(PlannerKind::Lookahead),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the scheduler (with its own warm-across-plans caches).
+    pub fn build(self) -> Box<dyn Scheduler> {
+        match self {
+            PlannerKind::Greedy => Box::new(GreedyPacker::new()),
+            PlannerKind::Heft => {
+                Box::new(super::list_sched::ListScheduler::heft())
+            }
+            PlannerKind::Peft => {
+                Box::new(super::list_sched::ListScheduler::peft())
+            }
+            PlannerKind::Lookahead => {
+                Box::new(super::list_sched::ListScheduler::lookahead())
+            }
+        }
+    }
+}
+
+/// Assemble the v5 meta block every scheduler stamps onto its plan.
+pub(crate) fn plan_meta(
+    dag: &Dag,
+    pool: &PoolSpec,
+    cfg: &ScheduleConfig,
+    planner: &str,
+    planned_ws_fallbacks: u64,
+    selector_calls: u64,
+) -> PlanMeta {
+    let batch = dag
+        .conv_ids()
+        .first()
+        .map(|&i| match &dag.ops[i].kind {
+            OpKind::Conv(p) => p.n,
+            _ => unreachable!("conv_ids returned a non-conv"),
+        })
+        .unwrap_or(0);
+    PlanMeta {
+        version: PLAN_FORMAT_VERSION,
+        label: String::new(),
+        device: pool.device(0).name.clone(),
+        pool: pool.names(),
+        planner: planner.to_string(),
+        batch,
+        ops: dag.len(),
+        dag_digest: dag_digest(dag),
+        spec_digest: pool_digest(pool),
+        config_digest: config_digest(cfg),
+        policy: cfg.policy,
+        partition: cfg.partition,
+        streams: cfg.streams,
+        workspace_limit: cfg.workspace_limit,
+        priority: cfg.priority,
+        replicas: pool.len(),
+        planned_ws_fallbacks,
+        selector_calls,
+    }
+}
+
+/// Memo key of a solo selection: the conv shape, the policy, and the
+/// device (by spec digest — heterogeneous pools select per device).
+type SoloKey = (ConvParams, SelectionPolicy, u64);
+
+/// The CP-priority greedy packer: the original planning algorithm, moved
+/// verbatim behind the [`Scheduler`] trait. One selection + grouping +
+/// quota-planning sweep per DAG; group admission uses the analytic fluid
+/// estimate and every workspace allocation is released at the end of its
+/// batch, so each batch plans against the full budget. Placement is the
+/// DAG's own device map (data-parallel replicas); on a single-device DAG
+/// the whole plan lands on device 0.
+pub struct GreedyPacker {
+    solo_cache: RefCell<HashMap<SoloKey, KernelDesc>>,
+}
+
+impl Default for GreedyPacker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GreedyPacker {
+    pub fn new() -> Self {
+        Self {
+            solo_cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Memoized `select_solo` with an unlimited budget.
+    fn solo_unconstrained(
+        &self,
+        policy: SelectionPolicy,
+        p: &ConvParams,
+        spec: &DeviceSpec,
+        spec_key: u64,
+    ) -> KernelDesc {
+        if let Some(d) = self
+            .solo_cache
+            .borrow()
+            .get(&(p.clone(), policy, spec_key))
+        {
+            return d.clone();
+        }
+        let d = select_solo(policy, p, spec, u64::MAX)
+            .expect("some algorithm always supported");
+        self.solo_cache
+            .borrow_mut()
+            .insert((p.clone(), policy, spec_key), d.clone());
+        d
+    }
+
+    /// Bottom-level priority of every op: longest cost-weighted path to a
+    /// sink under the fastest-solo cost model (convs) / bandwidth model
+    /// (everything else), each op priced on its own device. One reverse
+    /// topological sweep per DAG.
+    fn bottom_levels(&self, dag: &Dag, pool: &PoolSpec) -> Vec<f64> {
+        let keys: Vec<u64> = pool
+            .members()
+            .iter()
+            .map(super::artifact::spec_digest)
+            .collect();
+        let cost: Vec<f64> = (0..dag.len())
+            .map(|i| {
+                let d = dag.device_of(i).min(pool.len() - 1);
+                let spec = pool.device(d);
+                match &dag.ops[i].kind {
+                    OpKind::Conv(p) => {
+                        let desc = self.solo_unconstrained(
+                            SelectionPolicy::FastestOnly,
+                            p,
+                            spec,
+                            keys[d],
+                        );
+                        isolated_time_us(&desc, spec)
+                    }
+                    kind => non_conv_time_us(kind, spec),
+                }
+            })
+            .collect();
+        dag.bottom_levels(&cost)
+    }
+
+    /// Take the next co-execution batch off the priority-ordered pending
+    /// conv queue and fix its algorithms, partition mode, and quota plan.
+    ///
+    /// `ProfileGuided` packs a k-wide group via [`select_group`]: the
+    /// highest-priority conv seeds the group and partners join only when
+    /// the fluid-model estimate beats serializing them. When no partner
+    /// pays, the seed runs solo on its fastest fitting algorithm, so
+    /// guided scheduling can never regress. Other policies chunk up to
+    /// `streams` convs in priority order and let the partition mode decide
+    /// the concurrency (the TensorFlow-style baseline). Every batch plans
+    /// against the full workspace budget because execution releases all
+    /// workspace at batch boundaries.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_batch(
+        &self,
+        dag: &Dag,
+        cfg: &ScheduleConfig,
+        spec: &DeviceSpec,
+        spec_key: u64,
+        pending: &mut VecDeque<usize>,
+        ws_fallbacks: &mut u64,
+    ) -> GroupPlan {
+        let conv_params = |id: usize| match &dag.ops[id].kind {
+            OpKind::Conv(p) => p,
+            _ => unreachable!("pending contains non-conv"),
+        };
+        let budget = cfg.workspace_limit;
+        let k = cfg.streams.max(1);
+        if cfg.policy == SelectionPolicy::ProfileGuided
+            && k >= 2
+            && pending.len() >= 2
+        {
+            let ids: Vec<usize> = pending.iter().copied().collect();
+            let params: Vec<&ConvParams> =
+                ids.iter().map(|&id| conv_params(id)).collect();
+            if let Some(g) = select_group(&params, k, spec, budget) {
+                if g.members.len() >= 2 {
+                    let batch: Vec<usize> =
+                        g.members.iter().map(|&m| ids[m]).collect();
+                    pending.retain(|id| !batch.contains(id));
+                    // group selection fits the budget by construction —
+                    // nothing here is a workspace downgrade
+                    let no_fallback = vec![false; batch.len()];
+                    return self.group_plan(
+                        cfg,
+                        spec,
+                        &batch,
+                        g.descs,
+                        &no_fallback,
+                        cfg.partition,
+                        Some(g.est_us),
+                    );
+                }
+            }
+            // no partner pays off: the seed runs alone, serially
+            let id = pending.pop_front().expect("pending non-empty");
+            let (descs, fallbacks) = self.solo_batch(
+                cfg,
+                spec,
+                spec_key,
+                &[conv_params(id)],
+                budget,
+                ws_fallbacks,
+            );
+            return self.group_plan(
+                cfg,
+                spec,
+                &[id],
+                descs,
+                &fallbacks,
+                PartitionMode::Serial,
+                None,
+            );
+        }
+        let take = k.min(pending.len());
+        let batch: Vec<usize> = pending.drain(..take).collect();
+        let params: Vec<&ConvParams> =
+            batch.iter().map(|&id| conv_params(id)).collect();
+        let (descs, fallbacks) = self.solo_batch(
+            cfg,
+            spec,
+            spec_key,
+            &params,
+            budget,
+            ws_fallbacks,
+        );
+        self.group_plan(
+            cfg,
+            spec,
+            &batch,
+            descs,
+            &fallbacks,
+            cfg.partition,
+            None,
+        )
+    }
+
+    /// Returns the fitted descriptors plus a per-member flag marking
+    /// which of them are workspace downgrades (fitted algorithm differs
+    /// from the unconstrained choice). The flags land in
+    /// [`OpPlan::fallback`] so executors can tell a fallback they are
+    /// *re-taking* from a fresh runtime one and count each op once.
+    fn solo_batch(
+        &self,
+        cfg: &ScheduleConfig,
+        spec: &DeviceSpec,
+        spec_key: u64,
+        params: &[&ConvParams],
+        mut budget: u64,
+        ws_fallbacks: &mut u64,
+    ) -> (Vec<KernelDesc>, Vec<bool>) {
+        // Sequential admission: each op's workspace shrinks the budget the
+        // next sees (launch-time memory check, paper §2 footnote 1).
+        // ProfileGuided ops running solo take the fastest fitting algorithm
+        // (complementarity is meaningless without a partner).
+        let policy = match cfg.policy {
+            SelectionPolicy::ProfileGuided => SelectionPolicy::FastestOnly,
+            p => p,
+        };
+        let mut out = Vec::with_capacity(params.len());
+        let mut flags = Vec::with_capacity(params.len());
+        for p in params {
+            let unconstrained =
+                self.solo_unconstrained(policy, p, spec, spec_key);
+            let fitted = if unconstrained.workspace_bytes <= budget {
+                unconstrained.clone()
+            } else {
+                select_solo(policy, p, spec, budget)
+                    .expect("GEMM fallback always fits")
+            };
+            let is_fallback = fitted.algo != unconstrained.algo;
+            if is_fallback {
+                *ws_fallbacks += 1;
+            }
+            flags.push(is_fallback);
+            budget = budget.saturating_sub(fitted.workspace_bytes);
+            out.push(fitted);
+        }
+        (out, flags)
+    }
+
+    /// Freeze one batch into a [`GroupPlan`]: record the algorithm per
+    /// member, the partition mode it will run under (singletons always run
+    /// serially), the per-SM quota plan, and the fluid estimate.
+    #[allow(clippy::too_many_arguments)]
+    fn group_plan(
+        &self,
+        _cfg: &ScheduleConfig,
+        spec: &DeviceSpec,
+        ids: &[usize],
+        descs: Vec<KernelDesc>,
+        fallbacks: &[bool],
+        partition: PartitionMode,
+        est: Option<f64>,
+    ) -> GroupPlan {
+        debug_assert_eq!(ids.len(), fallbacks.len());
+        let partition = if descs.len() <= 1 {
+            PartitionMode::Serial
+        } else {
+            partition
+        };
+        let est_us = est.unwrap_or_else(|| {
+            descs.iter().map(|d| isolated_time_us(d, spec)).sum()
+        });
+        let quotas = match partition {
+            PartitionMode::IntraSm if descs.len() >= 2 => {
+                let launches: Vec<&LaunchConfig> =
+                    descs.iter().map(|d| &d.launch).collect();
+                let utils: Vec<f64> =
+                    descs.iter().map(|d| d.alu_util).collect();
+                plan_intra_sm(&launches, &utils, spec)
+            }
+            _ => descs
+                .iter()
+                .map(|d| natural_residency(&d.launch, spec))
+                .collect(),
+        };
+        let members = ids
+            .iter()
+            .zip(&descs)
+            .zip(fallbacks)
+            .map(|((&op, d), &fallback)| OpPlan {
+                op,
+                algo: d.algo,
+                workspace_bytes: d.workspace_bytes,
+                fallback,
+            })
+            .collect();
+        GroupPlan {
+            members,
+            partition,
+            quotas,
+            est_us,
+        }
+    }
+}
+
+impl Scheduler for GreedyPacker {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn plan(
+        &self,
+        dag: &Dag,
+        pool: &PoolSpec,
+        cfg: &ScheduleConfig,
+    ) -> Plan {
+        let selector_before = selector_invocations();
+        let spec_keys: Vec<u64> = pool
+            .members()
+            .iter()
+            .map(super::artifact::spec_digest)
+            .collect();
+        let mut indeg: Vec<usize> =
+            (0..dag.len()).map(|i| dag.preds(i).len()).collect();
+        let mut ready: VecDeque<usize> =
+            (0..dag.len()).filter(|&i| indeg[i] == 0).collect();
+        // Critical-path (bottom-level) priorities, computed once per DAG
+        // from the fastest-solo cost model (Fifo never reads them, so it
+        // skips the cost-model sweep).
+        let bl = if cfg.priority == PriorityPolicy::CriticalPath {
+            self.bottom_levels(dag, pool)
+        } else {
+            Vec::new()
+        };
+        let mut steps: Vec<PlanStep> = Vec::with_capacity(dag.len());
+        // The v2 scheduling graph, built alongside the steps: node order
+        // is the dispatch-priority order, each node carrying its DAG
+        // dependency edges and planned stream lane.
+        let mut nodes: Vec<PlanNode> = Vec::with_capacity(dag.len());
+        let mut predicted = 0.0f64;
+        let mut planned_ws_fallbacks = 0u64;
+        let mut done = vec![false; dag.len()];
+
+        let ndev = dag.num_devices();
+        while !ready.is_empty() {
+            // Partition the ready set into convs and cheap ops.
+            let round: Vec<usize> = ready.drain(..).collect();
+            let mut convs: Vec<usize> = Vec::new();
+            for &id in &round {
+                match &dag.ops[id].kind {
+                    OpKind::Conv(_) => convs.push(id),
+                    kind => {
+                        // bandwidth-bound ops run back-to-back (negligible
+                        // concurrency value; cuDNN launches them serially)
+                        let d = dag.device_of(id);
+                        steps.push(PlanStep::Host { op: id });
+                        nodes.push(PlanNode {
+                            op: id,
+                            lane: None,
+                            device: d,
+                            deps: dag.preds(id).to_vec(),
+                        });
+                        predicted +=
+                            non_conv_time_us(kind, pool.device(d));
+                    }
+                }
+            }
+
+            // Order ready convs by the configured priority, then pack
+            // them into co-execution groups of at most `streams` ops.
+            if cfg.priority == PriorityPolicy::CriticalPath {
+                convs.sort_by(|&a, &b| {
+                    bl[b]
+                        .partial_cmp(&bl[a])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+            }
+            // Replica-aware packing: a co-execution group shares one
+            // device's SMs, so ready convs are packed per device
+            // (ascending device id, priority order preserved within each
+            // device). Single-device DAGs take the one-queue path
+            // unchanged.
+            let mut by_dev: Vec<VecDeque<usize>> =
+                vec![VecDeque::new(); ndev];
+            for id in convs {
+                by_dev[dag.device_of(id)].push_back(id);
+            }
+            for (d, mut pending) in by_dev.into_iter().enumerate() {
+                let spec = pool.device(d);
+                while !pending.is_empty() {
+                    let g = self.plan_batch(
+                        dag,
+                        cfg,
+                        spec,
+                        spec_keys[d],
+                        &mut pending,
+                        &mut planned_ws_fallbacks,
+                    );
+                    predicted += g.est_us;
+                    for (lane, m) in g.members.iter().enumerate() {
+                        nodes.push(PlanNode {
+                            op: m.op,
+                            lane: Some(lane),
+                            device: dag.device_of(m.op),
+                            deps: dag.preds(m.op).to_vec(),
+                        });
+                    }
+                    steps.push(PlanStep::Group(g));
+                }
+            }
+
+            // Mark round done, release successors.
+            for &id in &round {
+                done[id] = true;
+            }
+            for &id in &round {
+                for &s in dag.succs(id) {
+                    indeg[s] -= 1;
+                    if indeg[s] == 0 && !done[s] {
+                        ready.push_back(s);
+                    }
+                }
+            }
+        }
+        debug_assert!(done.iter().all(|&d| d), "unplanned ops (cycle?)");
+
+        Plan {
+            meta: plan_meta(
+                dag,
+                pool,
+                cfg,
+                "greedy",
+                planned_ws_fallbacks,
+                selector_invocations().wrapping_sub(selector_before),
+            ),
+            steps,
+            nodes,
+            predicted_makespan_us: predicted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planner_kind_round_trips_names() {
+        for &k in PlannerKind::ALL {
+            assert_eq!(PlannerKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PlannerKind::parse("HEFT"), Some(PlannerKind::Heft));
+        assert_eq!(PlannerKind::parse("nope"), None);
+        assert_eq!(PlannerKind::default(), PlannerKind::Greedy);
+    }
+
+    #[test]
+    fn built_schedulers_report_their_kind_name() {
+        for &k in PlannerKind::ALL {
+            assert_eq!(k.build().name(), k.name());
+        }
+    }
+}

@@ -18,6 +18,7 @@ use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use crate::cluster::PoolSpec;
 use crate::coordinator::{ScheduleConfig, ScheduleResult};
 use crate::gpusim::DeviceSpec;
 use crate::graph::Dag;
@@ -26,6 +27,7 @@ use crate::sim::ExecutorKind;
 
 use super::artifact::{dag_digest, Plan, PlanError};
 use super::planner::Planner;
+use super::scheduler::PlannerKind;
 
 /// Cache counters of one session.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -66,8 +68,22 @@ pub struct Session {
 
 impl Session {
     pub fn new(spec: DeviceSpec, cfg: ScheduleConfig) -> Self {
+        Self::with_planner(
+            PoolSpec::single(spec),
+            cfg,
+            PlannerKind::Greedy,
+        )
+    }
+
+    /// Full-control constructor: an explicit (possibly heterogeneous)
+    /// device pool and a member of the planner family.
+    pub fn with_planner(
+        pool: PoolSpec,
+        cfg: ScheduleConfig,
+        kind: PlannerKind,
+    ) -> Self {
         Self {
-            planner: Planner::new(spec, cfg),
+            planner: Planner::with_scheduler(pool, cfg, kind),
             cache: RefCell::new(HashMap::new()),
             plans_built: Cell::new(0),
             cache_hits: Cell::new(0),
@@ -103,8 +119,20 @@ impl Session {
         s
     }
 
+    /// Enable workspace-allocation failure injection on an existing
+    /// session (the pool-aware spelling of
+    /// [`Session::with_failure_injection`]).
+    pub fn inject_failures(&mut self, rate: f64, seed: u64) {
+        self.failure_injection = Some((rate, seed));
+    }
+
     pub fn spec(&self) -> &DeviceSpec {
         self.planner.spec()
+    }
+
+    /// The per-device spec pool this session plans and executes on.
+    pub fn pool(&self) -> &PoolSpec {
+        self.planner.pool()
     }
 
     pub fn config(&self) -> &ScheduleConfig {
@@ -144,8 +172,14 @@ impl Session {
     /// from JSON). Returns `false` — without inserting — when the plan was
     /// built for a different device or configuration than this session's.
     pub fn adopt(&self, plan: Plan) -> bool {
-        if plan.meta.spec_digest
-            != super::artifact::spec_digest(self.planner.spec())
+        let pool_matches = self
+            .planner
+            .pool_for_replicas(plan.meta.replicas)
+            .is_some_and(|pool| {
+                plan.meta.spec_digest
+                    == super::artifact::pool_digest(&pool)
+            });
+        if !pool_matches
             || plan.meta.config_digest
                 != super::artifact::config_digest(self.planner.config())
         {
@@ -188,7 +222,14 @@ impl Session {
             }
             None => DeviceMemory::new(limit),
         };
-        plan.execute_with_memory(dag, self.planner.spec(), mem, self.executor)
+        let pool = self
+            .planner
+            .pool_for_replicas(plan.meta.replicas)
+            .ok_or_else(|| PlanError::SpecMismatch {
+                expected: plan.meta.pool.join(" + "),
+                got: self.planner.pool().to_string(),
+            })?;
+        plan.execute_with_memory(dag, &pool, mem, self.executor)
     }
 }
 

@@ -211,17 +211,13 @@ mod tests {
 
     #[test]
     fn multi_gpu_trace_has_per_device_and_interconnect_tracks() {
-        use crate::cluster::{ClusterConfig, DevicePool, LinkModel};
+        use crate::cluster::{DevicePool, LinkModel, PoolOptions};
         use crate::coordinator::ScheduleConfig;
         use crate::graph::Network;
         let pool = DevicePool::new(
-            DeviceSpec::k40(),
-            ScheduleConfig::default(),
-            ClusterConfig {
-                replicas: 2,
-                link: LinkModel::pcie3(),
-                overlap: true,
-            },
+            PoolOptions::homogeneous(DeviceSpec::k40(), 2)
+                .schedule(ScheduleConfig::default())
+                .link(LinkModel::pcie3()),
         );
         let r = pool.run_training(&Network::GoogleNet.build(4));
         let json = schedule_chrome_trace_json(&r);

@@ -22,11 +22,11 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::cluster::{ClusterConfig, DevicePool, LinkModel};
+use crate::cluster::{DevicePool, PoolOptions, PoolSpec};
 use crate::coordinator::ScheduleConfig;
 use crate::gpusim::DeviceSpec;
 use crate::graph::{Dag, Network};
-use crate::plan::Plan;
+use crate::plan::{Plan, PlannerKind};
 use crate::util::{Prng, Summary};
 
 use super::queue::BatchQueue;
@@ -178,15 +178,28 @@ impl ServeDriver {
         sched: ScheduleConfig,
         cfg: ServeConfig,
     ) -> Self {
-        assert!(!cfg.mix.is_empty(), "serving needs at least one model");
-        let pool = DevicePool::new(
-            spec,
+        let gpus = cfg.gpus.max(1);
+        Self::with_pool(
+            PoolSpec::homogeneous(spec, gpus),
             sched,
-            ClusterConfig {
-                replicas: cfg.gpus.max(1),
-                link: LinkModel::default(),
-                overlap: true,
-            },
+            PlannerKind::Greedy,
+            cfg,
+        )
+    }
+
+    /// A driver over an explicit (possibly mixed-generation) device
+    /// pool, planned by `planner`. The pool size overrides `cfg.gpus`
+    /// so the dispatcher's free-device list always matches the pool.
+    pub fn with_pool(
+        devices: PoolSpec,
+        sched: ScheduleConfig,
+        planner: PlannerKind,
+        mut cfg: ServeConfig,
+    ) -> Self {
+        assert!(!cfg.mix.is_empty(), "serving needs at least one model");
+        cfg.gpus = devices.len();
+        let pool = DevicePool::new(
+            PoolOptions::new(devices).schedule(sched).planner(planner),
         );
         Self { cfg, pool }
     }
@@ -337,7 +350,7 @@ impl ServeDriver {
         let dag = &dags[&(m, bucket)];
         let session = self.pool.session();
         let result = plan
-            .execute_with(dag, session.spec(), session.executor())
+            .execute_on(dag, session.pool(), session.executor())
             .expect("freshly planned DAG replays against itself");
         let service = result.makespan_us;
         free[g] = start + service;

@@ -8,8 +8,10 @@
 //! device's running mix (the engine re-plans per-SM quotas for the new
 //! mix through the existing `plan_intra_sm` dispatch path).
 //!
-//! Multi-device plans (schema v4, built by `cluster::DevicePool`) add two
-//! things on top of the single-GPU machinery:
+//! Multi-device plans (schema v5: per-node device assignments over a
+//! per-device [`PoolSpec`], built by `cluster::DevicePool` or placed by
+//! the list schedulers) add two things on top of the single-GPU
+//! machinery:
 //!
 //! - every device owns its own engine, stream lanes, host lane, and
 //!   workspace allocator — replicas never contend for each other's SMs or
@@ -48,12 +50,13 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::cluster::PoolSpec;
 use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
 use crate::coordinator::{
     non_conv_time_us, OpExec, ScheduleResult, SelectionPolicy,
 };
 use crate::gpusim::{
-    isolated_time_us, overlap_us_of_spans, DeviceSpec, Engine, KernelId,
+    isolated_time_us, overlap_us_of_spans, Engine, KernelId,
     PartitionMode,
 };
 use crate::graph::{Dag, OpKind};
@@ -83,8 +86,13 @@ type ReadyHeap = BinaryHeap<Reverse<(usize, usize)>>;
 
 struct EventRun<'a> {
     dag: &'a Dag,
-    spec: &'a DeviceSpec,
+    pool: &'a PoolSpec,
     policy: SelectionPolicy,
+    /// Executing device per op, from the plan's node records — the plan
+    /// is the placement authority (list schedulers place single-device
+    /// DAGs freely across the pool; the DAG's own map only covers
+    /// data-parallel replication).
+    op_dev: Vec<usize>,
     /// One engine per device (index = device id).
     engines: Vec<Engine>,
     /// Per-device stream lanes.
@@ -187,7 +195,7 @@ impl<'a> EventRun<'a> {
         self.clock = self.clock.max(t);
         let (op, start, device) = match ev {
             SimEvent::HostDone { op, start } => {
-                let d = self.dag.device_of(op);
+                let d = self.op_dev[op];
                 self.host_busy[d] = false;
                 (op, start, Some(d))
             }
@@ -255,7 +263,7 @@ impl<'a> EventRun<'a> {
 
     fn enqueue_ready(&mut self, op: usize) {
         let rank = self.rank[op];
-        let dev = self.dag.device_of(op);
+        let dev = self.op_dev[op];
         let is_conv = self.decision[op].is_some();
         let is_comm = !is_conv && self.dag.ops[op].kind.is_grad_reduce();
         let heap: &mut ReadyHeap = if is_conv {
@@ -272,6 +280,7 @@ impl<'a> EventRun<'a> {
     /// it after the mix? Same fluid model and margin as offline group
     /// admission, evaluated over the mix's *remaining* work.
     fn join_is_profitable(&self, device: usize, cand: &KernelDesc) -> bool {
+        let spec = self.pool.device(device);
         let mut descs: Vec<&KernelDesc> = Vec::new();
         let mut lefts: Vec<f64> = Vec::new();
         for (_, _, kid) in self.lanes[device].running() {
@@ -282,16 +291,16 @@ impl<'a> EventRun<'a> {
                 continue;
             }
             descs.push(&info.desc);
-            lefts.push(frac * isolated_time_us(&info.desc, self.spec));
+            lefts.push(frac * isolated_time_us(&info.desc, spec));
         }
         if descs.is_empty() {
             return true;
         }
-        let est_alone = fluid_makespan(&descs, &lefts, self.spec);
-        let iso_c = isolated_time_us(cand, self.spec);
+        let est_alone = fluid_makespan(&descs, &lefts, spec);
+        let iso_c = isolated_time_us(cand, spec);
         descs.push(cand);
         lefts.push(iso_c);
-        let est_join = fluid_makespan(&descs, &lefts, self.spec);
+        let est_join = fluid_makespan(&descs, &lefts, spec);
         est_join < (est_alone + iso_c) * JOIN_GAIN_MARGIN
     }
 
@@ -306,8 +315,10 @@ impl<'a> EventRun<'a> {
             if !self.host_busy[d] {
                 if let Some(Reverse((_, op))) = self.host_ready[d].pop() {
                     let dag = self.dag;
-                    let dur =
-                        non_conv_time_us(&dag.ops[op].kind, self.spec);
+                    let dur = non_conv_time_us(
+                        &dag.ops[op].kind,
+                        self.pool.device(d),
+                    );
                     self.events
                         .push(t + dur, SimEvent::HostDone { op, start: t });
                     self.host_busy[d] = true;
@@ -354,7 +365,7 @@ impl<'a> EventRun<'a> {
                             let fb = kernel_desc(
                                 Algorithm::Gemm,
                                 &base.params,
-                                self.spec,
+                                self.pool.device(d),
                             )
                             .expect("GEMM supports every convolution");
                             debug_assert_eq!(fb.workspace_bytes, 0);
@@ -397,7 +408,12 @@ impl<'a> EventRun<'a> {
         if !self.comm_busy {
             if let Some(Reverse((_, op))) = self.comm_ready.pop() {
                 let dag = self.dag;
-                let dur = non_conv_time_us(&dag.ops[op].kind, self.spec);
+                // GradReduce pricing embeds its own link parameters; the
+                // spec argument is unused for it, so device 0 stands in
+                let dur = non_conv_time_us(
+                    &dag.ops[op].kind,
+                    self.pool.device(0),
+                );
                 self.events
                     .push(t + dur, SimEvent::CommDone { op, start: t });
                 self.comm_busy = true;
@@ -420,10 +436,12 @@ fn conv_overlap(ops: &[OpExec]) -> f64 {
     overlap_us_of_spans(&spans)
 }
 
-/// Execute a plan event-driven. Provenance (DAG/device digests) and the
-/// v4 node list have already been checked by `Plan::execute_with_memory`
+/// Execute a plan event-driven. Provenance (DAG/pool digests) and the
+/// v5 node list have already been checked by `Plan::execute_with_memory`
 /// (`Plan::validate_nodes` runs for both executors); this builds the
 /// scheduling state off the nodes and drives the discrete-event loop.
+/// The node records are the placement authority: each op runs on the
+/// device its plan node names, priced by that member's spec.
 ///
 /// `mem` seeds device 0's workspace allocator; devices 1..N get identical
 /// independent clones (each GPU has its own memory, and under failure
@@ -432,13 +450,21 @@ fn conv_overlap(ops: &[OpExec]) -> f64 {
 pub(crate) fn execute_event(
     plan: &Plan,
     dag: &Dag,
-    spec: &DeviceSpec,
+    pool: &PoolSpec,
     mem: DeviceMemory,
 ) -> Result<ScheduleResult, PlanError> {
     let n = dag.len();
     let devices = plan.meta.replicas.max(1);
+    debug_assert_eq!(pool.len(), devices, "pool/replica mismatch");
+    let mut op_dev = vec![0usize; n];
+    for node in &plan.nodes {
+        if node.op < n {
+            op_dev[node.op] = node.device.min(devices - 1);
+        }
+    }
     // Rebuild each convolution's kernel descriptor from the recorded
-    // (op, algorithm) decision — the same pure function the planner used.
+    // (op, algorithm) decision — the same pure function the planner used,
+    // against the spec of the device the op is placed on.
     let mut decision: Vec<Option<KernelDesc>> = vec![None; n];
     let mut planned_fallback = vec![false; n];
     for step in &plan.steps {
@@ -447,6 +473,7 @@ pub(crate) fn execute_event(
                 let OpKind::Conv(p) = &dag.ops[m.op].kind else {
                     return Err(PlanError::NotAConv { op: m.op });
                 };
+                let spec = pool.device(op_dev[m.op]);
                 let d = kernel_desc(m.algo, p, spec).ok_or(
                     PlanError::Unsupported {
                         algo: m.algo,
@@ -482,10 +509,13 @@ pub(crate) fn execute_event(
     };
     let mut run = EventRun {
         dag,
-        spec,
+        pool,
         policy: plan.meta.policy,
+        op_dev,
         engines: (0..devices)
-            .map(|_| Engine::new(spec.clone(), plan.meta.partition))
+            .map(|d| {
+                Engine::new(pool.device(d).clone(), plan.meta.partition)
+            })
             .collect(),
         lanes: (0..devices).map(|_| Lanes::new(width)).collect(),
         events: EventQueue::new(),
@@ -549,6 +579,7 @@ pub(crate) fn execute_event(
 mod tests {
     use super::*;
     use crate::coordinator::{PriorityPolicy, ScheduleConfig};
+    use crate::gpusim::DeviceSpec;
     use crate::graph::Network;
     use crate::plan::Planner;
     use crate::sim::ExecutorKind;
@@ -571,7 +602,7 @@ mod tests {
         let r = execute_event(
             &plan,
             &dag,
-            &spec,
+            &PoolSpec::single(spec),
             DeviceMemory::new(plan.meta.workspace_limit),
         )
         .unwrap();
@@ -618,17 +649,18 @@ mod tests {
         let dag = Network::ResNet50.build(8);
         let spec = DeviceSpec::k40();
         let plan = Planner::new(spec.clone(), config(2)).plan(&dag, "");
+        let pool = PoolSpec::single(spec);
         let a = execute_event(
             &plan,
             &dag,
-            &spec,
+            &pool,
             DeviceMemory::new(plan.meta.workspace_limit),
         )
         .unwrap();
         let b = execute_event(
             &plan,
             &dag,
-            &spec,
+            &pool,
             DeviceMemory::new(plan.meta.workspace_limit),
         )
         .unwrap();
@@ -658,7 +690,7 @@ mod tests {
         let r = execute_event(
             &plan,
             &dag,
-            &spec,
+            &PoolSpec::homogeneous(spec, 2),
             DeviceMemory::new(plan.meta.workspace_limit),
         )
         .unwrap();

@@ -12,7 +12,7 @@
 //!   defer-to-solo → zero-workspace GEMM) holds under the event executor
 //!   with reduce ops concurrently in flight.
 
-use parconv::cluster::{ClusterConfig, DevicePool, LinkModel};
+use parconv::cluster::{DevicePool, LinkModel, PoolOptions};
 use parconv::coordinator::{
     PriorityPolicy, ScheduleConfig, ScheduleResult, SelectionPolicy,
 };
@@ -33,12 +33,18 @@ fn config(streams: usize, budget: u64) -> ScheduleConfig {
     }
 }
 
-fn cluster(replicas: usize, overlap: bool) -> ClusterConfig {
-    ClusterConfig {
-        replicas,
-        link: LinkModel::pcie3(),
-        overlap,
-    }
+/// Options for a homogeneous K40 pool — the builder-lite constructor
+/// the whole suite goes through.
+fn opts(
+    streams: usize,
+    budget: u64,
+    replicas: usize,
+    overlap: bool,
+) -> PoolOptions {
+    PoolOptions::homogeneous(DeviceSpec::k40(), replicas)
+        .schedule(config(streams, budget))
+        .link(LinkModel::pcie3())
+        .overlap(overlap)
 }
 
 /// Bit-exact ScheduleResult comparison: every counter and timestamp.
@@ -78,11 +84,8 @@ fn one_replica_pool_is_bit_identical_to_the_single_gpu_session() {
             let fwd = net.build(4);
             let train = training_dag(&fwd);
             for exec in [ExecutorKind::Event, ExecutorKind::Barrier] {
-                let mut pool = DevicePool::new(
-                    DeviceSpec::k40(),
-                    config(streams, GB4),
-                    cluster(1, true),
-                );
+                let mut pool =
+                    DevicePool::new(opts(streams, GB4, 1, true));
                 pool.set_executor(exec);
                 let pooled = pool.run_training(&fwd);
                 let mut session = Session::new(
@@ -115,12 +118,8 @@ fn overlapped_reduction_strictly_beats_the_serial_tail() {
         let fwd = net.build(8);
         for replicas in [2usize, 4, 8] {
             let run = |overlap: bool| {
-                DevicePool::new(
-                    DeviceSpec::k40(),
-                    config(2, GB4),
-                    cluster(replicas, overlap),
-                )
-                .run_training(&fwd)
+                DevicePool::new(opts(2, GB4, replicas, overlap))
+                    .run_training(&fwd)
             };
             let ov = run(true);
             let st = run(false);
@@ -149,11 +148,7 @@ fn overlapped_reduction_strictly_beats_the_serial_tail() {
 #[test]
 fn reduces_overlap_compute_and_serialize_on_the_ring() {
     let fwd = Network::GoogleNet.build(8);
-    let pool = DevicePool::new(
-        DeviceSpec::k40(),
-        config(2, GB4),
-        cluster(4, true),
-    );
+    let pool = DevicePool::new(opts(2, GB4, 4, true));
     let r = pool.run_training(&fwd);
     let reduces: Vec<_> = r
         .ops
@@ -185,22 +180,14 @@ fn oom_fallback_chain_survives_with_reduces_in_flight() {
     // zero-workspace GEMM, under the event executor, while gradient
     // reductions ride the interconnect lane concurrently.
     let fwd = Network::GoogleNet.build(16);
-    let cdag = DevicePool::new(
-        DeviceSpec::k40(),
-        config(4, GB4),
-        cluster(2, true),
-    )
-    .training_dag(&fwd);
+    let cdag =
+        DevicePool::new(opts(4, GB4, 2, true)).training_dag(&fwd);
 
     // (a) spurious refusals at two rates: execution always completes,
     // dependencies hold, reduces still happen
     for rate in [0.3f64, 0.9] {
-        let pool = DevicePool::with_failure_injection(
-            DeviceSpec::k40(),
-            config(4, GB4),
-            cluster(2, true),
-            rate,
-            42,
+        let pool = DevicePool::new(
+            opts(4, GB4, 2, true).failure_injection(rate, 42),
         );
         let r = pool.run_training(&fwd);
         assert_eq!(r.ops.len(), cdag.len(), "rate {rate}: coverage");
@@ -250,11 +237,7 @@ fn oom_fallback_chain_survives_with_reduces_in_flight() {
     // (b) a tight real budget (16 MB per device): serialize-on-OOM must
     // respect the cap while the comm lane stays busy
     let cap = 16 * 1024 * 1024;
-    let pool = DevicePool::new(
-        DeviceSpec::k40(),
-        config(4, cap),
-        cluster(2, true),
-    );
+    let pool = DevicePool::new(opts(4, cap, 2, true));
     let r = pool.run_training(&fwd);
     assert_eq!(r.ops.len(), cdag.len(), "tight budget: coverage");
     assert!(
@@ -272,27 +255,15 @@ fn weak_scaling_keeps_overlapped_makespan_near_flat() {
     // only exposed comm (and minor plan-priority jitter) can grow it —
     // while the serial tail pays strictly more than overlapped.
     let fwd = Network::GoogleNet.build(8);
-    let base = DevicePool::new(
-        DeviceSpec::k40(),
-        config(2, GB4),
-        cluster(1, true),
-    )
-    .run_training(&fwd)
-    .makespan_us;
-    let ov = DevicePool::new(
-        DeviceSpec::k40(),
-        config(2, GB4),
-        cluster(4, true),
-    )
-    .run_training(&fwd)
-    .makespan_us;
-    let st = DevicePool::new(
-        DeviceSpec::k40(),
-        config(2, GB4),
-        cluster(4, false),
-    )
-    .run_training(&fwd)
-    .makespan_us;
+    let base = DevicePool::new(opts(2, GB4, 1, true))
+        .run_training(&fwd)
+        .makespan_us;
+    let ov = DevicePool::new(opts(2, GB4, 4, true))
+        .run_training(&fwd)
+        .makespan_us;
+    let st = DevicePool::new(opts(2, GB4, 4, false))
+        .run_training(&fwd)
+        .makespan_us;
     assert!(
         ov >= base * 0.95,
         "N=4 overlapped {ov} below the N=1 compute baseline {base}"

@@ -1,0 +1,196 @@
+//! Planner-family contracts (the CI `planner-matrix` step):
+//!
+//! - every member of the family (`greedy`, `heft`, `peft`, `lookahead`)
+//!   is deterministic: planning the same DAG on the same pool twice
+//!   yields byte-identical JSON and equal digests;
+//! - plan validity invariants hold across all four planners x two pool
+//!   mixes (homogeneous, mixed K40+V100): every op is scheduled exactly
+//!   once, node dependency edges mirror the DAG, executed timestamps
+//!   respect dependency order, and no co-execution group spans devices;
+//! - the headline heterogeneity result: HEFT strictly beats the greedy
+//!   packer's executed makespan on a mixed pool, because greedy honours
+//!   the DAG's device map (everything stays pinned on the K40) while
+//!   HEFT owns placement and routes the critical path onto the V100.
+
+use std::collections::HashMap;
+
+use parconv::cluster::PoolSpec;
+use parconv::coordinator::{
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, PartitionMode};
+use parconv::graph::{Dag, Network};
+use parconv::plan::{Plan, Planner, PlannerKind};
+use parconv::sim::ExecutorKind;
+
+const GB4: u64 = 4 * 1024 * 1024 * 1024;
+
+fn config() -> ScheduleConfig {
+    ScheduleConfig {
+        policy: SelectionPolicy::ProfileGuided,
+        partition: PartitionMode::IntraSm,
+        streams: 2,
+        workspace_limit: GB4,
+        priority: PriorityPolicy::CriticalPath,
+    }
+}
+
+fn pools() -> Vec<(&'static str, PoolSpec)> {
+    vec![
+        ("homogeneous k40", PoolSpec::single(DeviceSpec::k40())),
+        (
+            "mixed k40+v100",
+            PoolSpec::parse("k40,v100").expect("valid preset list"),
+        ),
+    ]
+}
+
+fn build_plan(pool: &PoolSpec, kind: PlannerKind, dag: &Dag) -> Plan {
+    Planner::with_scheduler(pool.clone(), config(), kind).plan(dag, "t")
+}
+
+#[test]
+fn every_planner_is_deterministic() {
+    let dag = Network::GoogleNet.build(8);
+    for (mix, pool) in pools() {
+        for &kind in PlannerKind::ALL {
+            let a = build_plan(&pool, kind, &dag);
+            let b = build_plan(&pool, kind, &dag);
+            let what = format!("{} on {mix}", kind.name());
+            assert_eq!(a.digest(), b.digest(), "{what}: digest");
+            assert_eq!(a.to_json(), b.to_json(), "{what}: json");
+            assert_eq!(a.meta.planner, kind.name(), "{what}: provenance");
+        }
+    }
+}
+
+#[test]
+fn plans_are_valid_across_planners_and_pool_mixes() {
+    let dag = Network::GoogleNet.build(8);
+    for (mix, pool) in pools() {
+        for &kind in PlannerKind::ALL {
+            let what = format!("{} on {mix}", kind.name());
+            let plan = build_plan(&pool, kind, &dag);
+
+            // every op exactly once, in steps and in nodes
+            let mut step_seen = vec![0usize; dag.len()];
+            for step in &plan.steps {
+                match step {
+                    parconv::plan::PlanStep::Host { op } => {
+                        step_seen[*op] += 1
+                    }
+                    parconv::plan::PlanStep::Group(g) => {
+                        for m in &g.members {
+                            step_seen[m.op] += 1;
+                        }
+                    }
+                }
+            }
+            assert!(
+                step_seen.iter().all(|&n| n == 1),
+                "{what}: steps must cover every op exactly once"
+            );
+            assert_eq!(plan.nodes.len(), dag.len(), "{what}: node count");
+            let mut node_dev = HashMap::new();
+            for node in &plan.nodes {
+                assert!(
+                    node_dev.insert(node.op, node.device).is_none(),
+                    "{what}: op {} planned twice",
+                    node.op
+                );
+                // dependency edges mirror the DAG
+                let mut deps = node.deps.clone();
+                deps.sort_unstable();
+                let mut preds = dag.preds(node.op).to_vec();
+                preds.sort_unstable();
+                assert_eq!(deps, preds, "{what}: op {} deps", node.op);
+                assert!(
+                    node.device < pool.len(),
+                    "{what}: op {} on out-of-pool device {}",
+                    node.op,
+                    node.device
+                );
+            }
+
+            // no co-execution group spans devices
+            for step in &plan.steps {
+                if let parconv::plan::PlanStep::Group(g) = step {
+                    let d0 = node_dev[&g.members[0].op];
+                    for m in &g.members {
+                        assert_eq!(
+                            node_dev[&m.op], d0,
+                            "{what}: group spans devices"
+                        );
+                    }
+                }
+            }
+
+            // executed timestamps respect dependency order, under both
+            // executors
+            for exec in [ExecutorKind::Event, ExecutorKind::Barrier] {
+                let r = plan
+                    .execute_on(&dag, &pool, exec)
+                    .unwrap_or_else(|e| {
+                        panic!("{what}: replay failed: {e}")
+                    });
+                assert_eq!(r.ops.len(), dag.len(), "{what}: coverage");
+                let mut start = vec![0.0f64; dag.len()];
+                let mut end = vec![0.0f64; dag.len()];
+                for o in &r.ops {
+                    start[o.op_id] = o.start_us;
+                    end[o.op_id] = o.end_us;
+                }
+                for i in 0..dag.len() {
+                    for &p in dag.preds(i) {
+                        assert!(
+                            end[p] <= start[i] + 1e-6,
+                            "{what} ({}): op {i} started before pred {p}",
+                            exec.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn heft_strictly_beats_greedy_on_a_heterogeneous_pool() {
+    // The pinned heterogeneity case. Greedy is placement-blind: a
+    // single-device GoogleNet stays on device 0, the K40. HEFT ranks ops
+    // by upward rank and places each on the device minimizing its
+    // earliest finish time — on a K40+V100 pool the critical path lands
+    // on the V100 and the executed makespan must drop.
+    let dag = Network::GoogleNet.build(8);
+    let pool = PoolSpec::parse("k40,v100").unwrap();
+    let greedy = build_plan(&pool, PlannerKind::Greedy, &dag)
+        .execute_on(&dag, &pool, ExecutorKind::Event)
+        .unwrap()
+        .makespan_us;
+    let heft = build_plan(&pool, PlannerKind::Heft, &dag)
+        .execute_on(&dag, &pool, ExecutorKind::Event)
+        .unwrap()
+        .makespan_us;
+    assert!(
+        heft < greedy,
+        "HEFT ({heft} us) must strictly beat greedy ({greedy} us) on \
+         the mixed pool"
+    );
+}
+
+#[test]
+fn greedy_on_a_homogeneous_pool_is_bit_identical_to_the_default_path() {
+    // The api_redesign regression oracle: moving the packer behind the
+    // Scheduler trait must not change a single byte of the plans the
+    // default path produces.
+    let dag = Network::GoogleNet.build(8);
+    let via_trait = build_plan(
+        &PoolSpec::single(DeviceSpec::k40()),
+        PlannerKind::Greedy,
+        &dag,
+    );
+    let via_default =
+        Planner::new(DeviceSpec::k40(), config()).plan(&dag, "t");
+    assert_eq!(via_trait.digest(), via_default.digest());
+    assert_eq!(via_trait.to_json(), via_default.to_json());
+}

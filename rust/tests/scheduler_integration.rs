@@ -1,13 +1,15 @@
-//! Coordinator integration: full networks through the scheduler under every
+//! Scheduler integration: full networks through a [`Session`] under every
 //! policy x partition combination, checking the paper's qualitative claims
-//! and the scheduler's safety invariants.
+//! and the scheduler's safety invariants. Also pins the deprecation
+//! surface of the retired `Coordinator` facade (now an alias of
+//! `Session`).
 
 use parconv::coordinator::{
-    Coordinator, PriorityPolicy, ScheduleConfig, ScheduleResult,
-    SelectionPolicy,
+    PriorityPolicy, ScheduleConfig, ScheduleResult, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::Network;
+use parconv::plan::Session;
 
 const GB4: u64 = 4 * 1024 * 1024 * 1024;
 
@@ -19,7 +21,7 @@ fn run(
     streams: usize,
     ws: u64,
 ) -> ScheduleResult {
-    Coordinator::new(
+    Session::new(
         DeviceSpec::k40(),
         ScheduleConfig {
             policy,
@@ -29,7 +31,7 @@ fn run(
             priority: PriorityPolicy::CriticalPath,
         },
     )
-    .execute_dag(&net.build(batch))
+    .run(&net.build(batch))
 }
 
 fn check_invariants(net: Network, batch: usize, r: &ScheduleResult) {
@@ -243,7 +245,7 @@ fn survives_workspace_allocation_failures() {
     // The scheduler must complete every op (degrading to workspace-free
     // algorithms) and still respect dependencies.
     let dag = Network::GoogleNet.build(16);
-    let coord = Coordinator::with_failure_injection(
+    let session = Session::with_failure_injection(
         DeviceSpec::k40(),
         ScheduleConfig {
             policy: SelectionPolicy::FastestOnly,
@@ -255,7 +257,7 @@ fn survives_workspace_allocation_failures() {
         0.3,
         42,
     );
-    let r = coord.execute_dag(&dag);
+    let r = session.run(&dag);
     check_invariants(Network::GoogleNet, 16, &r);
     // injected refusals must not inflate the makespan unboundedly: the
     // GEMM fallback costs time but finishes
@@ -275,7 +277,7 @@ fn training_graph_schedules_and_every_net_gains() {
     use parconv::graph::training_dag;
     for &net in &[Network::AlexNet, Network::GoogleNet] {
         let train = training_dag(&net.build(16));
-        let serial = Coordinator::new(
+        let serial = Session::new(
             DeviceSpec::k40(),
             ScheduleConfig {
                 policy: SelectionPolicy::FastestOnly,
@@ -285,8 +287,8 @@ fn training_graph_schedules_and_every_net_gains() {
                 priority: PriorityPolicy::CriticalPath,
             },
         )
-        .execute_dag(&train);
-        let conc = Coordinator::new(
+        .run(&train);
+        let conc = Session::new(
             DeviceSpec::k40(),
             ScheduleConfig {
                 policy: SelectionPolicy::ProfileGuided,
@@ -296,7 +298,7 @@ fn training_graph_schedules_and_every_net_gains() {
                 priority: PriorityPolicy::CriticalPath,
             },
         )
-        .execute_dag(&train);
+        .run(&train);
         assert_eq!(conc.ops.len(), train.len());
         assert!(
             conc.makespan_us < serial.makespan_us,
@@ -306,4 +308,25 @@ fn training_graph_schedules_and_every_net_gains() {
             serial.makespan_us
         );
     }
+}
+
+#[test]
+#[allow(deprecated)]
+fn coordinator_alias_still_compiles_and_matches_session() {
+    // The retired facade survives as `pub type Coordinator = Session`:
+    // old code keeps compiling (behind a deprecation warning) and gets
+    // bit-identical results, because the alias *is* the session.
+    use parconv::coordinator::Coordinator;
+    let cfg = ScheduleConfig {
+        policy: SelectionPolicy::ProfileGuided,
+        partition: PartitionMode::IntraSm,
+        streams: 2,
+        workspace_limit: GB4,
+        priority: PriorityPolicy::CriticalPath,
+    };
+    let dag = Network::GoogleNet.build(8);
+    let legacy = Coordinator::new(DeviceSpec::k40(), cfg.clone()).run(&dag);
+    let modern = Session::new(DeviceSpec::k40(), cfg).run(&dag);
+    assert_eq!(legacy.makespan_us, modern.makespan_us);
+    assert_eq!(legacy.rounds, modern.rounds);
 }

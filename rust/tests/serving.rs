@@ -6,7 +6,7 @@
 //! per-request execution, the exact cache-hit-rate accounting, and the
 //! zero-bandwidth link guard on the serving pool's training path.
 
-use parconv::cluster::{ClusterConfig, DevicePool, LinkModel};
+use parconv::cluster::{DevicePool, LinkModel, PoolOptions};
 use parconv::coordinator::ScheduleConfig;
 use parconv::gpusim::DeviceSpec;
 use parconv::graph::Network;
@@ -135,16 +135,12 @@ fn zero_bandwidth_link_keeps_serving_pool_time_finite() {
     // link must clamp to the bandwidth floor instead of pushing an
     // infinite CommDone timestamp into the (hard-asserting) event queue
     let pool = DevicePool::new(
-        DeviceSpec::k40(),
-        ScheduleConfig::default(),
-        ClusterConfig {
-            replicas: 2,
-            link: LinkModel {
+        PoolOptions::homogeneous(DeviceSpec::k40(), 2)
+            .schedule(ScheduleConfig::default())
+            .link(LinkModel {
                 latency_us: 10.0,
                 gb_per_s: 0.0,
-            },
-            overlap: true,
-        },
+            }),
     );
     let r = pool.run_training(&Network::GoogleNet.build(4));
     assert!(
