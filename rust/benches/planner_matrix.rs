@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use parconv::cluster::PoolSpec;
 use parconv::graph::Network;
+use parconv::ingest::TransformerSpec;
 use parconv::plan::PlannerKind;
 use parconv::plan::Planner;
 use parconv::coordinator::ScheduleConfig;
@@ -30,14 +31,28 @@ fn main() {
         ("k40,v100", true),
         ("k40,p100,v100,a100", true),
     ];
-    let networks = [Network::AlexNet, Network::GoogleNet, Network::ResNet50];
+    // the three CNN archetypes plus a generated transformer block — the
+    // ingest path's GEMM-as-1x1-conv workload rides the same matrix
+    let tf = TransformerSpec { batch, ..TransformerSpec::default() };
+    let workloads: Vec<(String, _)> = [
+        Network::AlexNet,
+        Network::GoogleNet,
+        Network::ResNet50,
+    ]
+    .iter()
+    .map(|net| (net.name().to_string(), net.build(batch)))
+    .chain(std::iter::once((
+        tf.label(),
+        tf.build().expect("default transformer spec is valid"),
+    )))
+    .collect();
     println!(
-        "=== planner matrix: planner x network x pool (batch {batch}, \
+        "=== planner matrix: planner x workload x pool (batch {batch}, \
          executed under the event core) ===\n"
     );
     let mut t = Table::new(vec![
         "Pool",
-        "Network",
+        "Workload",
         "Planner",
         "Plan build",
         "Executed makespan",
@@ -47,8 +62,7 @@ fn main() {
     let mut heft_wins = 0usize;
     for (list, hetero) in &pools {
         let pool = PoolSpec::parse(list).expect("bench pool lists are valid");
-        for net in networks {
-            let dag = net.build(batch);
+        for (label, dag) in &workloads {
             let mut greedy_us = None;
             for &kind in PlannerKind::ALL {
                 let planner = Planner::with_scheduler(
@@ -57,10 +71,10 @@ fn main() {
                     kind,
                 );
                 let b0 = Instant::now();
-                let plan = planner.plan(&dag, net.name());
+                let plan = planner.plan(dag, label);
                 let build_ms = b0.elapsed().as_secs_f64() * 1e3;
                 let r = plan
-                    .execute_on(&dag, &pool, ExecutorKind::Event)
+                    .execute_on(dag, &pool, ExecutorKind::Event)
                     .expect("freshly built plan replays on its own pool");
                 let base = *greedy_us.get_or_insert(r.makespan_us);
                 if *hetero && kind == PlannerKind::Heft {
@@ -71,7 +85,7 @@ fn main() {
                 }
                 t.row(vec![
                     list.to_string(),
-                    net.name().to_string(),
+                    label.clone(),
                     kind.name().to_string(),
                     format!("{build_ms:.1} ms"),
                     fmt_us(r.makespan_us),

@@ -10,4 +10,4 @@ mod parser;
 mod run;
 
 pub use parser::{ConfigError, ParsedConfig, Value};
-pub use run::{RunConfig, SchedulerConfig};
+pub use run::{RunConfig, SchedulerConfig, WorkloadSettings};

@@ -114,6 +114,39 @@ impl Default for ServeSettings {
     }
 }
 
+/// Workload-source knobs (`[workload]` section / `--graph` flag): where
+/// the DAG comes from when it is not a built-in network constructor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSettings {
+    /// External graph source. Empty (the default) builds the top-level
+    /// `network` constructor. A path ending in `.json`/`.dot`/`.gv`
+    /// imports that file (`ingest`); the literal `transformer` (or
+    /// `transformer:LxHxDxS`) generates a transformer stack from the
+    /// fields below.
+    pub graph: String,
+    /// Transformer generator: stacked blocks.
+    pub layers: usize,
+    /// Transformer generator: attention heads (must divide `d_model`).
+    pub heads: usize,
+    /// Transformer generator: model dimension.
+    pub d_model: usize,
+    /// Transformer generator: sequence length.
+    pub seq: usize,
+}
+
+impl Default for WorkloadSettings {
+    fn default() -> Self {
+        let t = crate::ingest::TransformerSpec::default();
+        Self {
+            graph: String::new(),
+            layers: t.layers,
+            heads: t.heads,
+            d_model: t.d_model,
+            seq: t.seq,
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
@@ -130,6 +163,7 @@ pub struct RunConfig {
     pub scheduler: SchedulerConfig,
     pub cluster: ClusterSettings,
     pub serve: ServeSettings,
+    pub workload: WorkloadSettings,
     /// Directory holding AOT artifacts (`manifest.txt`, `*.hlo.txt`).
     pub artifacts_dir: String,
 }
@@ -144,6 +178,7 @@ impl Default for RunConfig {
             scheduler: SchedulerConfig::default(),
             cluster: ClusterSettings::default(),
             serve: ServeSettings::default(),
+            workload: WorkloadSettings::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -167,6 +202,10 @@ const SCHEDULER_KEYS: &[&str] = &[
 /// Keys accepted inside `[cluster]`.
 const CLUSTER_KEYS: &[&str] =
     &["gpus", "devices", "link_latency_us", "link_gb_per_s", "overlap"];
+
+/// Keys accepted inside `[workload]`.
+const WORKLOAD_KEYS: &[&str] =
+    &["graph", "layers", "heads", "d_model", "seq"];
 
 /// Keys accepted inside `[serve]`.
 const SERVE_KEYS: &[&str] = &[
@@ -193,6 +232,7 @@ impl RunConfig {
         let sd = SchedulerConfig::default();
         let cd = ClusterSettings::default();
         let vd = ServeSettings::default();
+        let wd = WorkloadSettings::default();
         Ok(RunConfig {
             device: p.str_or("", "device", &d.device),
             network: p.str_or("", "network", &d.network),
@@ -254,6 +294,21 @@ impl RunConfig {
                     .max(1) as usize,
                 mix: p.str_or("serve", "mix", &vd.mix),
             },
+            workload: WorkloadSettings {
+                graph: p.str_or("workload", "graph", &wd.graph),
+                layers: p
+                    .uint_or("workload", "layers", wd.layers as u64)
+                    .max(1) as usize,
+                heads: p
+                    .uint_or("workload", "heads", wd.heads as u64)
+                    .max(1) as usize,
+                d_model: p
+                    .uint_or("workload", "d_model", wd.d_model as u64)
+                    .max(1) as usize,
+                seq: p
+                    .uint_or("workload", "seq", wd.seq as u64)
+                    .max(1) as usize,
+            },
         })
     }
 
@@ -273,12 +328,13 @@ impl RunConfig {
                 "scheduler" => (SCHEDULER_KEYS, "[scheduler]".to_string()),
                 "cluster" => (CLUSTER_KEYS, "[cluster]".to_string()),
                 "serve" => (SERVE_KEYS, "[serve]".to_string()),
+                "workload" => (WORKLOAD_KEYS, "[workload]".to_string()),
                 other => {
                     return Err(ConfigError {
                         line: locate_line(text, other, None),
                         msg: format!(
                             "unknown section [{other}]; valid sections: \
-                             [scheduler], [cluster], [serve]"
+                             [scheduler], [cluster], [serve], [workload]"
                         ),
                     })
                 }
@@ -450,6 +506,39 @@ priority = "fifo"
         assert_eq!(z.serve.requests, 1);
         assert_eq!(z.serve.max_batch, 1);
         assert_eq!(z.serve.gpus, 1);
+    }
+
+    #[test]
+    fn workload_section_parses_and_defaults() {
+        let d = RunConfig::from_text("").unwrap();
+        assert_eq!(d.workload, WorkloadSettings::default());
+        assert_eq!(d.workload.graph, "");
+        assert_eq!(d.workload.layers, 2);
+        assert_eq!(d.workload.heads, 8);
+        assert_eq!(d.workload.d_model, 512);
+        assert_eq!(d.workload.seq, 128);
+        let c = RunConfig::from_text(
+            "[workload]\ngraph = \"examples/graphs/resnet.json\"\n\
+             layers = 4\nheads = 16\nd_model = 1024\nseq = 256\n",
+        )
+        .unwrap();
+        assert_eq!(c.workload.graph, "examples/graphs/resnet.json");
+        assert_eq!(c.workload.layers, 4);
+        assert_eq!(c.workload.heads, 16);
+        assert_eq!(c.workload.d_model, 1024);
+        assert_eq!(c.workload.seq, 256);
+    }
+
+    #[test]
+    fn unknown_workload_key_rejected() {
+        let err = RunConfig::from_text(
+            "[workload]\ngrpah = \"x.json\"\n",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("grpah"), "{msg}");
+        assert!(msg.contains("graph"), "error must list valid keys: {msg}");
+        assert_eq!(err.line, 2);
     }
 
     #[test]

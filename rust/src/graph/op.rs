@@ -26,6 +26,9 @@ pub enum OpKind {
     Lrn { bytes: u64 },
     /// Batch normalization.
     BatchNorm { bytes: u64 },
+    /// Row-wise softmax over attention scores (transformer blocks):
+    /// bandwidth-bound like the other elementwise ops.
+    Softmax { bytes: u64 },
     /// Fully connected layer: M x K x N GEMM.
     FullyConnected { m: usize, k: usize, n: usize },
     /// Cross-device ring all-reduce of one parameter-gradient tensor,
@@ -76,7 +79,8 @@ impl OpKind {
             OpKind::Relu { bytes }
             | OpKind::Concat { bytes }
             | OpKind::Lrn { bytes }
-            | OpKind::BatchNorm { bytes } => 2.0 * *bytes as f64,
+            | OpKind::BatchNorm { bytes }
+            | OpKind::Softmax { bytes } => 2.0 * *bytes as f64,
             OpKind::Add { bytes } => 3.0 * *bytes as f64,
             OpKind::FullyConnected { m, k, n } => {
                 4.0 * ((*m * *k) + (*k * *n) + (*m * *n)) as f64
@@ -106,6 +110,7 @@ impl OpKind {
             OpKind::Add { .. } => "add",
             OpKind::Lrn { .. } => "lrn",
             OpKind::BatchNorm { .. } => "batchnorm",
+            OpKind::Softmax { .. } => "softmax",
             OpKind::FullyConnected { .. } => "fc",
             OpKind::GradReduce { .. } => "grad_reduce",
         }
@@ -147,6 +152,15 @@ mod tests {
         assert_eq!(OpKind::Concat { bytes: 100 }.flops(), 0.0);
         assert_eq!(OpKind::Pool { bytes_in: 8, bytes_out: 4 }.flops(), 0.0);
         assert!(OpKind::Concat { bytes: 100 }.dram_bytes() > 0.0);
+    }
+
+    #[test]
+    fn softmax_is_a_bandwidth_op() {
+        let s = OpKind::Softmax { bytes: 1 << 20 };
+        assert!(!s.is_conv());
+        assert_eq!(s.kind_name(), "softmax");
+        assert_eq!(s.flops(), 0.0);
+        assert_eq!(s.dram_bytes(), 2.0 * (1u64 << 20) as f64);
     }
 
     #[test]

@@ -1,0 +1,446 @@
+//! DOT digraph importer: `digraph name { a -> b; ... }` with node
+//! attributes carrying the same op kinds and shape fields as the JSON
+//! format.
+//!
+//! ```text
+//! digraph tiny {
+//!   in    [kind=input]
+//!   conv1 [kind=conv, n=8, c=3, h=32, w=32, k=16, r=3, s=3,
+//!          stride="1,1", padding="1,1"]
+//!   relu1 [kind=relu, bytes=65536]
+//!   in -> conv1 -> relu1
+//! }
+//! ```
+//!
+//! Supported surface: `digraph` (never `graph` — edges are
+//! dependencies), optional graph name, node statements with
+//! `[key=value, ...]` attribute lists, edge chains `a -> b -> c`,
+//! optional semicolons, `//` and `#` line comments, quoted identifiers
+//! and values. Pair-valued shapes are quoted: `stride="2,2"`. Nodes are
+//! created in declaration order and edges in statement order, so a DOT
+//! graph's digest is stable across imports. Attribute keys outside
+//! `kind`/`name`/`device`/`flops` + the kind's shape fields are rejected
+//! by name, same as the JSON importer.
+
+use crate::graph::Dag;
+
+use super::{
+    check_flops, ensure_acyclic, kind_shape_keys, op_kind_from, IngestError,
+    RawValue, TaskFields,
+};
+
+/// Node-attribute keys every kind accepts, alongside its shape fields.
+const NODE_KEYS: &[&str] = &["kind", "name", "device", "flops"];
+
+/// Import a DOT digraph. Returns the graph name (the identifier after
+/// `digraph`, or `"dot"` if anonymous) plus the built [`Dag`].
+pub fn dag_from_dot(text: &str) -> Result<(String, Dag), IngestError> {
+    let toks = tokenize(text)?;
+    Parser { toks: &toks, pos: 0 }.parse()
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    /// Bare identifier or number (DOT does not distinguish).
+    Ident(String),
+    /// Double-quoted string.
+    Str(String),
+    /// One of `{ } [ ] = , ;`.
+    Sym(char),
+    /// The edge operator `->`.
+    Arrow,
+}
+
+fn tokenize(text: &str) -> Result<Vec<(Tok, usize)>, IngestError> {
+    let mut toks = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    let mut line = 1;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '{' | '}' | '[' | ']' | '=' | ',' | ';' => {
+                toks.push((Tok::Sym(c), line));
+                i += 1;
+            }
+            '-' if bytes.get(i + 1) == Some(&b'>') => {
+                toks.push((Tok::Arrow, line));
+                i += 2;
+            }
+            '"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'"' {
+                    if bytes[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                if j == bytes.len() {
+                    return Err(IngestError::Syntax(format!(
+                        "line {line}: unterminated string"
+                    )));
+                }
+                toks.push((
+                    Tok::Str(text[start..j].to_string()),
+                    line,
+                ));
+                i = j + 1;
+            }
+            c if c.is_ascii_alphanumeric() || c == '_' || c == '.' => {
+                let start = i;
+                while i < bytes.len() {
+                    let c = bytes[i] as char;
+                    if c.is_ascii_alphanumeric() || c == '_' || c == '.' {
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push((Tok::Ident(text[start..i].to_string()), line));
+            }
+            other => {
+                return Err(IngestError::Syntax(format!(
+                    "line {line}: unexpected character {other:?}"
+                )))
+            }
+        }
+    }
+    Ok(toks)
+}
+
+struct Parser<'a> {
+    toks: &'a [(Tok, usize)],
+    pos: usize,
+}
+
+/// One parsed statement, collected before any ops are built so edge
+/// statements may reference nodes declared later in the file.
+enum Stmt {
+    Node { id: String, attrs: Vec<(String, String)> },
+    Edges(Vec<String>),
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(t, _)| t)
+    }
+
+    fn line(&self) -> usize {
+        self.toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|(_, l)| *l)
+            .unwrap_or(0)
+    }
+
+    fn next(&mut self) -> Option<&Tok> {
+        let t = self.toks.get(self.pos).map(|(t, _)| t);
+        self.pos += 1;
+        t
+    }
+
+    fn syntax(&self, msg: &str) -> IngestError {
+        IngestError::Syntax(format!("line {}: {msg}", self.line()))
+    }
+
+    fn expect_sym(&mut self, sym: char) -> Result<(), IngestError> {
+        let err = self.syntax(&format!("expected {sym:?}"));
+        match self.next() {
+            Some(Tok::Sym(c)) if *c == sym => Ok(()),
+            _ => Err(err),
+        }
+    }
+
+    /// An identifier or quoted string (DOT treats them interchangeably
+    /// as names and values).
+    fn name(&mut self, what: &str) -> Result<String, IngestError> {
+        let err = self.syntax(&format!("expected {what}"));
+        match self.next() {
+            Some(Tok::Ident(s)) | Some(Tok::Str(s)) => Ok(s.clone()),
+            _ => Err(err),
+        }
+    }
+
+    fn parse(mut self) -> Result<(String, Dag), IngestError> {
+        match self.next() {
+            Some(Tok::Ident(kw)) if kw == "digraph" => {}
+            Some(Tok::Ident(kw)) if kw == "graph" => {
+                return Err(IngestError::Schema(
+                    "undirected \"graph\" cannot carry dependencies; \
+                     use \"digraph\""
+                        .into(),
+                ))
+            }
+            _ => return Err(self.syntax("expected \"digraph\"")),
+        }
+        let name = match self.peek() {
+            Some(Tok::Ident(_)) | Some(Tok::Str(_)) => self.name("name")?,
+            _ => "dot".to_string(),
+        };
+        self.expect_sym('{')?;
+        let mut stmts = Vec::new();
+        loop {
+            match self.peek() {
+                Some(Tok::Sym('}')) => {
+                    self.pos += 1;
+                    break;
+                }
+                Some(Tok::Sym(';')) => {
+                    self.pos += 1;
+                }
+                Some(_) => stmts.push(self.statement()?),
+                None => return Err(self.syntax("unbalanced braces: missing '}'")),
+            }
+        }
+        if self.pos != self.toks.len() {
+            return Err(self.syntax("trailing tokens after '}'"));
+        }
+        build(&name, &stmts)
+    }
+
+    fn statement(&mut self) -> Result<Stmt, IngestError> {
+        let first = self.name("a node identifier")?;
+        if self.peek() == Some(&Tok::Arrow) {
+            let mut chain = vec![first];
+            while self.peek() == Some(&Tok::Arrow) {
+                self.pos += 1;
+                chain.push(self.name("a node identifier after \"->\"")?);
+            }
+            if self.peek() == Some(&Tok::Sym('[')) {
+                return Err(IngestError::Schema(
+                    "edge attributes are not supported; put kind/shape \
+                     attributes on the nodes"
+                        .into(),
+                ));
+            }
+            return Ok(Stmt::Edges(chain));
+        }
+        let mut attrs = Vec::new();
+        if self.peek() == Some(&Tok::Sym('[')) {
+            self.pos += 1;
+            loop {
+                match self.peek() {
+                    Some(Tok::Sym(']')) => {
+                        self.pos += 1;
+                        break;
+                    }
+                    Some(Tok::Sym(',')) => {
+                        self.pos += 1;
+                    }
+                    Some(_) => {
+                        let key = self.name("an attribute key")?;
+                        self.expect_sym('=')?;
+                        let val = self.name("an attribute value")?;
+                        attrs.push((key, val));
+                    }
+                    None => {
+                        return Err(
+                            self.syntax("unbalanced brackets: missing ']'")
+                        )
+                    }
+                }
+            }
+        }
+        Ok(Stmt::Node { id: first, attrs })
+    }
+}
+
+fn build(name: &str, stmts: &[Stmt]) -> Result<(String, Dag), IngestError> {
+    let mut dag = Dag::new();
+    let mut ids: Vec<String> = Vec::new();
+
+    // pass 1: node declarations, in file order
+    for stmt in stmts {
+        let Stmt::Node { id, attrs } = stmt else { continue };
+        if ids.contains(id) {
+            return Err(IngestError::DuplicateId { id: id.clone() });
+        }
+        let task_err = |msg: String| IngestError::Task {
+            task: id.clone(),
+            msg,
+        };
+        let kind_name = attrs
+            .iter()
+            .find(|(k, _)| k == "kind")
+            .map(|(_, v)| v.as_str())
+            .ok_or_else(|| task_err("missing \"kind\" attribute".into()))?;
+        let shape_keys = kind_shape_keys(kind_name).ok_or_else(|| {
+            IngestError::UnknownKind {
+                task: id.clone(),
+                kind: kind_name.to_string(),
+            }
+        })?;
+        let mut fields: Vec<(String, RawValue)> = Vec::new();
+        for (key, val) in attrs {
+            if NODE_KEYS.contains(&key.as_str()) {
+                continue;
+            }
+            if !shape_keys.contains(&key.as_str()) {
+                return Err(task_err(format!(
+                    "unknown attribute {key:?} for kind {kind_name:?} \
+                     (valid: {}, {})",
+                    NODE_KEYS.join(", "),
+                    shape_keys.join(", ")
+                )));
+            }
+            let raw = match val.split_once(',') {
+                Some((a, b)) => {
+                    RawValue::Pair(a.trim().into(), b.trim().into())
+                }
+                None => RawValue::Num(val.clone()),
+            };
+            fields.push((key.clone(), raw));
+        }
+        let tf = TaskFields { task: id, fields: &fields };
+        let kind = op_kind_from(kind_name, &tf)?;
+        if let Some((_, v)) = attrs.iter().find(|(k, _)| k == "flops") {
+            let declared = v.parse::<f64>().map_err(|_| {
+                task_err(format!("\"flops\" is not a number: {v:?}"))
+            })?;
+            check_flops(id, &kind, declared)?;
+        }
+        let display = attrs
+            .iter()
+            .find(|(k, _)| k == "name")
+            .map(|(_, v)| v.clone())
+            .unwrap_or_else(|| id.clone());
+        let op = dag.add(display, kind);
+        if let Some((_, v)) = attrs.iter().find(|(k, _)| k == "device") {
+            let dev = v.parse::<usize>().map_err(|_| {
+                task_err(format!(
+                    "\"device\" is not a non-negative integer: {v:?}"
+                ))
+            })?;
+            dag.set_device(op, dev);
+        }
+        ids.push(id.clone());
+    }
+
+    // pass 2: edge chains, in file order
+    for stmt in stmts {
+        let Stmt::Edges(chain) = stmt else { continue };
+        for pair in chain.windows(2) {
+            let resolve = |node: &str| {
+                ids.iter().position(|id| id == node).ok_or_else(|| {
+                    IngestError::UnknownDep {
+                        task: pair[1].clone(),
+                        dep: node.to_string(),
+                    }
+                })
+            };
+            let (src, dst) = (resolve(&pair[0])?, resolve(&pair[1])?);
+            if src == dst {
+                return Err(IngestError::SelfDep { task: pair[0].clone() });
+            }
+            dag.add_edge(src, dst);
+        }
+    }
+    ensure_acyclic(&dag)?;
+    Ok((name.to_string(), dag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    const TINY: &str = r#"
+        digraph tiny {
+          // a three-op chain with a conv in the middle
+          in    [kind=input]
+          conv1 [kind=conv, n=8, c=3, h=32, w=32, k=16, r=3, s=3,
+                 stride="1,1", padding="1,1"]
+          relu1 [kind=relu, bytes=65536]
+          # edges as one chain
+          in -> conv1 -> relu1
+        }
+    "#;
+
+    #[test]
+    fn tiny_digraph_imports() {
+        let (name, dag) = dag_from_dot(TINY).unwrap();
+        assert_eq!(name, "tiny");
+        assert_eq!(dag.len(), 3);
+        assert!(dag.ops[1].kind.is_conv());
+        assert_eq!(dag.preds(1), &[0]);
+        assert_eq!(dag.preds(2), &[1]);
+        assert_eq!(dag.ops[2].kind, OpKind::Relu { bytes: 65536 });
+    }
+
+    #[test]
+    fn cycles_are_rejected_with_a_witness() {
+        let text = r#"digraph c {
+            a [kind=relu, bytes=4]
+            b [kind=relu, bytes=4]
+            a -> b
+            b -> a
+        }"#;
+        let err = dag_from_dot(text).unwrap_err();
+        assert!(matches!(err, IngestError::Cyclic(_)), "{err}");
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kinds_attrs_and_nodes_fail_loudly() {
+        let bad_kind = "digraph g { a [kind=attention] }";
+        assert!(matches!(
+            dag_from_dot(bad_kind),
+            Err(IngestError::UnknownKind { .. })
+        ));
+        let bad_attr = "digraph g { a [kind=relu, bytes=4, color=red] }";
+        let err = dag_from_dot(bad_attr).unwrap_err();
+        assert!(err.to_string().contains("color"), "{err}");
+        let ghost = "digraph g { a [kind=input] a -> b }";
+        assert!(matches!(
+            dag_from_dot(ghost),
+            Err(IngestError::UnknownDep { .. })
+        ));
+        let dup = "digraph g { a [kind=input] a [kind=input] }";
+        assert!(matches!(
+            dag_from_dot(dup),
+            Err(IngestError::DuplicateId { .. })
+        ));
+    }
+
+    #[test]
+    fn syntax_errors_carry_line_numbers() {
+        let text = "digraph g {\n  a [kind=input\n}";
+        let err = dag_from_dot(text).unwrap_err();
+        assert!(matches!(err, IngestError::Syntax(_)), "{err}");
+        assert!(err.to_string().contains("line"), "{err}");
+        assert!(dag_from_dot("graph g { }").is_err(), "undirected");
+        assert!(dag_from_dot("digraph g {").is_err(), "unclosed");
+    }
+
+    #[test]
+    fn quoted_names_devices_and_forward_edges_work() {
+        let text = r#"digraph g {
+            "first stage" [kind=input]
+            sink -> done
+            sink [kind=pool, bytes_in=64, bytes_out=16, device=1]
+            done [kind=relu, bytes=16]
+            "first stage" -> sink
+        }"#;
+        // `sink -> done` precedes both node declarations — must resolve
+        let (_, dag) = dag_from_dot(text).unwrap();
+        assert_eq!(dag.ops[0].name, "first stage");
+        assert_eq!(dag.device_of(1), 1);
+        assert_eq!(dag.preds(2), &[1]);
+        assert_eq!(dag.preds(1), &[0]);
+    }
+}

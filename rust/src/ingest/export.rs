@@ -1,0 +1,172 @@
+//! Exporter: any [`Dag`] out as the WfCommons-style JSON the [`json`]
+//! importer reads back.
+//!
+//! The export is canonical: tasks in op-id order, each task's `deps` in
+//! stored predecessor order, so import → export → import is the
+//! identity on [`dag_digest`]. Built-in constructors add edges at
+//! successor-creation time (`Dag::add_after`), which is exactly the
+//! order the importer replays — an exported built-in network re-imports
+//! bit-identically, and its cached plans are shared with the
+//! constructor-built DAG.
+//!
+//! [`json`]: super::json
+//! [`dag_digest`]: crate::plan::dag_digest
+
+use crate::graph::{Dag, OpKind};
+use crate::plan::json::escape;
+
+/// Serialize `dag` as a parconv-dag v1 JSON document named `name`.
+pub fn dag_to_json(dag: &Dag, name: &str) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"format\": \"parconv-dag\",\n");
+    out.push_str("  \"version\": 1,\n");
+    out.push_str(&format!("  \"name\": \"{}\",\n", escape(name)));
+    out.push_str("  \"tasks\": [\n");
+    for (i, op) in dag.ops.iter().enumerate() {
+        out.push_str("    {");
+        out.push_str(&format!("\"id\": \"t{i}\", "));
+        out.push_str(&format!("\"name\": \"{}\", ", escape(&op.name)));
+        out.push_str(&format!("\"kind\": \"{}\"", op.kind.kind_name()));
+        push_shape_fields(&mut out, &op.kind);
+        let flops = op.kind.flops();
+        if flops > 0.0 {
+            out.push_str(&format!(", \"flops\": {flops}"));
+        }
+        if dag.device_of(i) != 0 {
+            out.push_str(&format!(", \"device\": {}", dag.device_of(i)));
+        }
+        out.push_str(", \"deps\": [");
+        for (j, &p) in dag.preds(i).iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("\"t{p}\""));
+        }
+        out.push_str("]}");
+        if i + 1 < dag.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+fn push_shape_fields(out: &mut String, kind: &OpKind) {
+    match kind {
+        OpKind::Input => {}
+        OpKind::Conv(p) => {
+            out.push_str(&format!(
+                ", \"n\": {}, \"c\": {}, \"h\": {}, \"w\": {}, \"k\": {}, \
+                 \"r\": {}, \"s\": {}, \"stride\": [{}, {}], \
+                 \"padding\": [{}, {}]",
+                p.n,
+                p.c,
+                p.h,
+                p.w,
+                p.k,
+                p.r,
+                p.s,
+                p.stride.0,
+                p.stride.1,
+                p.padding.0,
+                p.padding.1
+            ));
+        }
+        OpKind::Pool { bytes_in, bytes_out } => {
+            out.push_str(&format!(
+                ", \"bytes_in\": {bytes_in}, \"bytes_out\": {bytes_out}"
+            ));
+        }
+        OpKind::Relu { bytes }
+        | OpKind::Concat { bytes }
+        | OpKind::Add { bytes }
+        | OpKind::Lrn { bytes }
+        | OpKind::BatchNorm { bytes }
+        | OpKind::Softmax { bytes } => {
+            out.push_str(&format!(", \"bytes\": {bytes}"));
+        }
+        OpKind::FullyConnected { m, k, n } => {
+            out.push_str(&format!(", \"m\": {m}, \"k\": {k}, \"n\": {n}"));
+        }
+        OpKind::GradReduce {
+            bytes,
+            replicas,
+            link_latency_us,
+            link_gb_per_s,
+        } => {
+            // floats use Rust's shortest-roundtrip formatting, which the
+            // JSON layer pins as parse-exact (plan::json tests)
+            out.push_str(&format!(
+                ", \"bytes\": {bytes}, \"replicas\": {replicas}, \
+                 \"link_latency_us\": {link_latency_us}, \
+                 \"link_gb_per_s\": {link_gb_per_s}"
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dag_from_json;
+    use super::*;
+    use crate::graph::Network;
+    use crate::plan::dag_digest;
+
+    #[test]
+    fn exported_builtin_reimports_bit_identically() {
+        let dag = Network::GoogleNet.build(8);
+        let text = dag_to_json(&dag, "googlenet");
+        let (name, back) = dag_from_json(&text).unwrap();
+        assert_eq!(name, "googlenet");
+        assert_eq!(dag_digest(&back), dag_digest(&dag));
+    }
+
+    #[test]
+    fn every_kind_survives_a_round_trip() {
+        use crate::convlib::ConvParams;
+        let mut g = Dag::new();
+        let i = g.add("in", OpKind::Input);
+        let c = g.add_after(
+            "conv",
+            OpKind::Conv(ConvParams::new(2, 3, 8, 8, 4, 3, 3, (2, 2), (1, 1))),
+            &[i],
+        );
+        let p = g.add_after(
+            "pool",
+            OpKind::Pool { bytes_in: 64, bytes_out: 16 },
+            &[c],
+        );
+        let r = g.add_after("relu", OpKind::Relu { bytes: 16 }, &[p]);
+        let l = g.add_after("lrn", OpKind::Lrn { bytes: 16 }, &[r]);
+        let b = g.add_after("bn", OpKind::BatchNorm { bytes: 16 }, &[l]);
+        let s = g.add_after("soft", OpKind::Softmax { bytes: 16 }, &[b]);
+        let a = g.add_after("add", OpKind::Add { bytes: 16 }, &[s, r]);
+        let f = g.add_after(
+            "fc",
+            OpKind::FullyConnected { m: 2, k: 3, n: 4 },
+            &[a],
+        );
+        let cat = g.add_after("cat", OpKind::Concat { bytes: 8 }, &[f, a]);
+        let gr = g.add_after(
+            "reduce",
+            OpKind::GradReduce {
+                bytes: 1000,
+                replicas: 4,
+                link_latency_us: 2.5,
+                link_gb_per_s: 12.25,
+            },
+            &[cat],
+        );
+        g.set_device(gr, 1);
+        let (_, back) = dag_to_json_roundtrip(&g);
+        assert_eq!(dag_digest(&back), dag_digest(&g));
+        assert_eq!(back.device_of(gr), 1);
+    }
+
+    fn dag_to_json_roundtrip(g: &Dag) -> (String, Dag) {
+        dag_from_json(&dag_to_json(g, "kinds")).unwrap()
+    }
+}

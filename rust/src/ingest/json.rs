@@ -1,0 +1,330 @@
+//! WfCommons-style JSON importer (`format: "parconv-dag"`, version 1).
+//!
+//! Document shape (exactly what [`super::export::dag_to_json`] writes):
+//!
+//! ```json
+//! {
+//!   "format": "parconv-dag",
+//!   "version": 1,
+//!   "name": "googlenet",
+//!   "tasks": [
+//!     {"id": "t0", "name": "in", "kind": "input", "deps": []},
+//!     {"id": "t1", "name": "conv1", "kind": "conv",
+//!      "n": 8, "c": 3, "h": 224, "w": 224, "k": 64, "r": 7, "s": 7,
+//!      "stride": [2, 2], "padding": [3, 3],
+//!      "flops": 4816896.0, "deps": ["t0"]}
+//!   ]
+//! }
+//! ```
+//!
+//! Per-task keys: `id` and `kind` are required; `name` defaults to the
+//! id; `deps` defaults to none; `device` places the op on a pool device;
+//! `flops` is an optional cross-check against the cost model. Shape
+//! fields per kind come from [`super::kind_shape_keys`]. Unknown keys
+//! are rejected by name, listing the valid set — the same strict posture
+//! as `plan::json`'s plan reader and `config::run`'s key allowlists.
+//! Edges are replayed in task order, so an exported DAG re-imports with
+//! an identical `dag_digest`.
+
+use crate::graph::Dag;
+use crate::plan::json::JsonValue;
+
+use super::{
+    check_flops, ensure_acyclic, kind_shape_keys, op_kind_from, IngestError,
+    RawValue, TaskFields,
+};
+
+/// Common per-task keys every kind accepts, alongside its shape fields.
+const TASK_KEYS: &[&str] = &["id", "name", "kind", "deps", "device", "flops"];
+
+/// Import a parconv-dag v1 JSON document. Returns the workload name plus
+/// the built [`Dag`].
+pub fn dag_from_json(text: &str) -> Result<(String, Dag), IngestError> {
+    let doc = JsonValue::parse(text).map_err(IngestError::Syntax)?;
+
+    for key in doc.keys() {
+        if !matches!(key, "format" | "version" | "name" | "tasks") {
+            return Err(IngestError::Schema(format!(
+                "unknown top-level field {key:?} (valid: format, version, \
+                 name, tasks)"
+            )));
+        }
+    }
+    match doc.get("format").and_then(|v| v.as_str()) {
+        Some("parconv-dag") => {}
+        Some(other) => {
+            return Err(IngestError::Schema(format!(
+                "format {other:?} is not \"parconv-dag\""
+            )))
+        }
+        None => {
+            return Err(IngestError::Schema(
+                "missing \"format\": \"parconv-dag\"".into(),
+            ))
+        }
+    }
+    match doc.get("version").and_then(|v| v.as_u64()) {
+        Some(1) => {}
+        Some(v) => {
+            return Err(IngestError::Schema(format!(
+                "unsupported version {v} (this reader understands 1)"
+            )))
+        }
+        None => {
+            return Err(IngestError::Schema(
+                "missing integer \"version\"".into(),
+            ))
+        }
+    }
+    let name = doc
+        .get("name")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| IngestError::Schema("missing string \"name\"".into()))?
+        .to_string();
+    let tasks = doc
+        .get("tasks")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| IngestError::Schema("missing array \"tasks\"".into()))?;
+
+    // pass 1: build every op (ids resolve forward references in `deps`)
+    let mut dag = Dag::new();
+    let mut ids: Vec<String> = Vec::with_capacity(tasks.len());
+    for (i, task) in tasks.iter().enumerate() {
+        let id = task
+            .get("id")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| {
+                IngestError::Schema(format!(
+                    "task #{i} is missing a string \"id\""
+                ))
+            })?
+            .to_string();
+        if ids.contains(&id) {
+            return Err(IngestError::DuplicateId { id });
+        }
+        let task_err = |msg: String| IngestError::Task {
+            task: id.clone(),
+            msg,
+        };
+        let kind_name = task
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| task_err("missing string \"kind\"".into()))?;
+        let shape_keys = kind_shape_keys(kind_name).ok_or_else(|| {
+            IngestError::UnknownKind {
+                task: id.clone(),
+                kind: kind_name.to_string(),
+            }
+        })?;
+        for key in task.keys() {
+            if !TASK_KEYS.contains(&key) && !shape_keys.contains(&key) {
+                return Err(task_err(format!(
+                    "unknown field {key:?} for kind {kind_name:?} (valid: \
+                     {}, {})",
+                    TASK_KEYS.join(", "),
+                    shape_keys.join(", ")
+                )));
+            }
+        }
+        let mut fields: Vec<(String, RawValue)> =
+            Vec::with_capacity(shape_keys.len());
+        for &key in shape_keys {
+            if let Some(v) = task.get(key) {
+                fields.push((key.to_string(), lower_value(&id, key, v)?));
+            }
+        }
+        let tf = TaskFields { task: &id, fields: &fields };
+        let kind = op_kind_from(kind_name, &tf)?;
+        if let Some(v) = task.get("flops") {
+            let declared = v.as_f64().ok_or_else(|| {
+                task_err("\"flops\" is not a finite number".into())
+            })?;
+            check_flops(&id, &kind, declared)?;
+        }
+        let display = task
+            .get("name")
+            .map(|v| {
+                v.as_str().map(str::to_string).ok_or_else(|| {
+                    task_err("\"name\" must be a string".into())
+                })
+            })
+            .transpose()?
+            .unwrap_or_else(|| id.clone());
+        let op = dag.add(display, kind);
+        if let Some(v) = task.get("device") {
+            let dev = v.as_usize().ok_or_else(|| {
+                task_err("\"device\" must be a non-negative integer".into())
+            })?;
+            dag.set_device(op, dev);
+        }
+        ids.push(id);
+    }
+
+    // pass 2: edges, in task order (= `add_after` order in the builders)
+    for (i, task) in tasks.iter().enumerate() {
+        let Some(deps) = task.get("deps") else { continue };
+        let deps = deps.as_arr().ok_or_else(|| IngestError::Task {
+            task: ids[i].clone(),
+            msg: "\"deps\" must be an array of task ids".into(),
+        })?;
+        for dep in deps {
+            let dep = dep.as_str().ok_or_else(|| IngestError::Task {
+                task: ids[i].clone(),
+                msg: "\"deps\" entries must be task-id strings".into(),
+            })?;
+            let p = ids.iter().position(|id| id == dep).ok_or_else(|| {
+                IngestError::UnknownDep {
+                    task: ids[i].clone(),
+                    dep: dep.to_string(),
+                }
+            })?;
+            if p == i {
+                return Err(IngestError::SelfDep { task: ids[i].clone() });
+            }
+            dag.add_edge(p, i);
+        }
+    }
+    ensure_acyclic(&dag)?;
+    Ok((name, dag))
+}
+
+/// Lower a JSON shape value to the importer-neutral [`RawValue`]:
+/// numbers keep source text, two-element numeric arrays become pairs.
+fn lower_value(
+    task: &str,
+    key: &str,
+    v: &JsonValue,
+) -> Result<RawValue, IngestError> {
+    let err = |msg: String| IngestError::Task { task: task.to_string(), msg };
+    match v {
+        JsonValue::Num(s) => Ok(RawValue::Num(s.clone())),
+        JsonValue::Arr(items) => match items.as_slice() {
+            [JsonValue::Num(a), JsonValue::Num(b)] => {
+                Ok(RawValue::Pair(a.clone(), b.clone()))
+            }
+            _ => Err(err(format!(
+                "{key:?} must be a two-element numeric array"
+            ))),
+        },
+        _ => Err(err(format!("{key:?} must be a number or numeric pair"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    fn doc(tasks: &str) -> String {
+        format!(
+            "{{\"format\": \"parconv-dag\", \"version\": 1, \
+             \"name\": \"t\", \"tasks\": [{tasks}]}}"
+        )
+    }
+
+    #[test]
+    fn minimal_chain_imports() {
+        let text = doc(
+            "{\"id\": \"a\", \"kind\": \"input\"}, \
+             {\"id\": \"b\", \"kind\": \"relu\", \"bytes\": 64, \
+              \"deps\": [\"a\"]}",
+        );
+        let (name, dag) = dag_from_json(&text).unwrap();
+        assert_eq!(name, "t");
+        assert_eq!(dag.len(), 2);
+        assert_eq!(dag.preds(1), &[0]);
+        assert_eq!(dag.ops[1].kind, OpKind::Relu { bytes: 64 });
+        // display name defaults to the id
+        assert_eq!(dag.ops[0].name, "a");
+    }
+
+    #[test]
+    fn truncated_document_is_a_syntax_error() {
+        let text = doc("{\"id\": \"a\", \"kind\": \"input\"}");
+        let cut = &text[..text.len() - 4];
+        assert!(matches!(
+            dag_from_json(cut),
+            Err(IngestError::Syntax(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_format_version_and_top_level_keys_are_rejected() {
+        let bad_fmt = "{\"format\": \"wf\", \"version\": 1, \
+                       \"name\": \"x\", \"tasks\": []}";
+        assert!(matches!(
+            dag_from_json(bad_fmt),
+            Err(IngestError::Schema(_))
+        ));
+        let bad_ver = "{\"format\": \"parconv-dag\", \"version\": 2, \
+                       \"name\": \"x\", \"tasks\": []}";
+        assert!(matches!(
+            dag_from_json(bad_ver),
+            Err(IngestError::Schema(_))
+        ));
+        let extra = "{\"format\": \"parconv-dag\", \"version\": 1, \
+                     \"name\": \"x\", \"tasks\": [], \"author\": \"me\"}";
+        let err = dag_from_json(extra).unwrap_err();
+        assert!(err.to_string().contains("author"), "{err}");
+    }
+
+    #[test]
+    fn unknown_task_field_names_the_valid_set() {
+        let text = doc(
+            "{\"id\": \"a\", \"kind\": \"relu\", \"bytes\": 4, \
+             \"width\": 7}",
+        );
+        let err = dag_from_json(&text).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("width"), "{msg}");
+        assert!(msg.contains("bytes"), "must list valid keys: {msg}");
+    }
+
+    #[test]
+    fn duplicate_unknown_and_self_deps_are_specific_errors() {
+        let dup = doc(
+            "{\"id\": \"a\", \"kind\": \"input\"}, \
+             {\"id\": \"a\", \"kind\": \"input\"}",
+        );
+        assert_eq!(
+            dag_from_json(&dup).unwrap_err(),
+            IngestError::DuplicateId { id: "a".into() }
+        );
+        let ghost = doc(
+            "{\"id\": \"a\", \"kind\": \"input\", \"deps\": [\"zz\"]}",
+        );
+        assert_eq!(
+            dag_from_json(&ghost).unwrap_err(),
+            IngestError::UnknownDep { task: "a".into(), dep: "zz".into() }
+        );
+        let own = doc(
+            "{\"id\": \"a\", \"kind\": \"input\", \"deps\": [\"a\"]}",
+        );
+        assert_eq!(
+            dag_from_json(&own).unwrap_err(),
+            IngestError::SelfDep { task: "a".into() }
+        );
+    }
+
+    #[test]
+    fn flops_disagreement_is_rejected() {
+        let text = doc(
+            "{\"id\": \"a\", \"kind\": \"fc\", \"m\": 2, \"k\": 3, \
+             \"n\": 4, \"flops\": 50.0}",
+        );
+        let err = dag_from_json(&text).unwrap_err();
+        assert!(err.to_string().contains("disagrees"), "{err}");
+    }
+
+    #[test]
+    fn forward_deps_resolve() {
+        // a task may depend on one declared later in the array
+        let text = doc(
+            "{\"id\": \"b\", \"kind\": \"relu\", \"bytes\": 4, \
+              \"deps\": [\"a\"]}, \
+             {\"id\": \"a\", \"kind\": \"input\"}",
+        );
+        let (_, dag) = dag_from_json(&text).unwrap();
+        assert_eq!(dag.preds(0), &[1]);
+    }
+}

@@ -1,0 +1,422 @@
+//! Workload ingestion: turn external graph descriptions into first-class
+//! [`Dag`] values — and write ours back out as replayable fixtures.
+//!
+//! All seven built-in networks are hand-coded constructors, which caps
+//! the topology diversity every bench, planner, and serving experiment
+//! sees. This module opens the pipeline to graphs we did *not* hand-code:
+//!
+//! - [`json`] — a WfCommons-style JSON importer (`format:
+//!   "parconv-dag"`): named tasks with per-op kind/shape fields and
+//!   dependency edges, with strict unknown-field rejection in the house
+//!   style of `plan/json.rs` (a typo must fail loudly, not silently
+//!   reshape the workload);
+//! - [`dot`] — a DOT digraph importer (`digraph { a -> b; ... }`) whose
+//!   node attributes carry the same op kinds and shapes;
+//! - [`export`] — the inverse: serialize any `Dag` (built-in, imported,
+//!   or generated) as the JSON format, so generated workloads become
+//!   checked-in, replayable fixtures;
+//! - [`transformer`] — a parameterized transformer-block generator
+//!   (attention as batched GEMMs + softmax + residual fan-in — the
+//!   dominant serving workload), emitting the same branchy structure the
+//!   paper exploits in CNNs;
+//! - [`random`] — the property harness's seeded layered-DAG generator,
+//!   promoted to the library so fixtures can be produced and replayed
+//!   from the CLI (`parconv export --random SEED`).
+//!
+//! Imported DAGs flow through `Session`/`Planner`/`ServeDriver`
+//! untouched: every consumer keys on [`dag_digest`], so plan caching and
+//! schema-v5 provenance work identically for a graph loaded from disk
+//! and the constructor it round-tripped from. The importers replay
+//! edges in task/declaration order, which matches the `add_after` order
+//! every builder uses — an export → import round trip preserves the
+//! digest bit-for-bit (pinned by `rust/tests/ingest.rs`).
+//!
+//! [`dag_digest`]: crate::plan::dag_digest
+
+pub mod dot;
+pub mod export;
+pub mod json;
+pub mod random;
+pub mod transformer;
+
+pub use dot::dag_from_dot;
+pub use export::dag_to_json;
+pub use json::dag_from_json;
+pub use random::random_layered_dag;
+pub use transformer::{transformer, TransformerSpec};
+
+use crate::convlib::ConvParams;
+use crate::graph::{Dag, OpKind};
+
+/// Everything that can go wrong turning an external description into a
+/// `Dag`. Importers fail loudly and specifically: a truncated document,
+/// an unknown op kind, or a cycle must name itself, not degrade into a
+/// half-imported graph.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum IngestError {
+    /// The document does not parse at all (truncated JSON, unbalanced
+    /// DOT braces, a malformed token).
+    #[error("syntax error: {0}")]
+    Syntax(String),
+    /// The document parses but its structure is not the expected schema
+    /// (missing sections, wrong types, unknown top-level fields).
+    #[error("schema error: {0}")]
+    Schema(String),
+    /// A task/node-level field problem (missing shape field, unknown
+    /// attribute, bad value).
+    #[error("task {task:?}: {msg}")]
+    Task { task: String, msg: String },
+    /// An op kind the cost model has no entry for.
+    #[error("task {task:?}: unknown op kind {kind:?} (valid: {})", KIND_NAMES.join(", "))]
+    UnknownKind { task: String, kind: String },
+    /// Two tasks/nodes share an id.
+    #[error("duplicate task id {id:?}")]
+    DuplicateId { id: String },
+    /// A dependency names a task that does not exist.
+    #[error("task {task:?}: unknown dependency {dep:?}")]
+    UnknownDep { task: String, dep: String },
+    /// A task depends on itself.
+    #[error("task {task:?}: depends on itself")]
+    SelfDep { task: String },
+    /// The dependency edges form a cycle — not a DAG.
+    #[error("graph is cyclic: {0}")]
+    Cyclic(String),
+    /// A generator parameter out of range (`transformer(...)`).
+    #[error("bad workload spec: {0}")]
+    BadSpec(String),
+}
+
+/// Every op kind the importers accept, in the spelling `kind_name()`
+/// emits (so export → import is closed over the taxonomy).
+pub(crate) const KIND_NAMES: &[&str] = &[
+    "input",
+    "conv",
+    "pool",
+    "relu",
+    "concat",
+    "add",
+    "lrn",
+    "batchnorm",
+    "softmax",
+    "fc",
+    "grad_reduce",
+];
+
+/// Shape fields each kind requires beyond the common task keys. The
+/// importers use this both to build the op and to reject unknown keys.
+pub(crate) fn kind_shape_keys(kind: &str) -> Option<&'static [&'static str]> {
+    Some(match kind {
+        "input" => &[],
+        "conv" => &["n", "c", "h", "w", "k", "r", "s", "stride", "padding"],
+        "pool" => &["bytes_in", "bytes_out"],
+        "relu" | "concat" | "add" | "lrn" | "batchnorm" | "softmax" => {
+            &["bytes"]
+        }
+        "fc" => &["m", "k", "n"],
+        "grad_reduce" => {
+            &["bytes", "replicas", "link_latency_us", "link_gb_per_s"]
+        }
+        _ => return None,
+    })
+}
+
+/// One attribute value, normalized by the importers (JSON numbers and
+/// arrays, DOT tokens) so kind construction lives in one place.
+#[derive(Clone, Debug)]
+pub(crate) enum RawValue {
+    /// Numeric text (kept as source text — same lossless-u64 rationale
+    /// as `plan::json::JsonValue::Num`).
+    Num(String),
+    /// A two-element numeric pair (`"stride": [2, 2]` / `stride="2,2"`).
+    Pair(String, String),
+}
+
+/// A task's shape attributes plus its display id, for error messages.
+pub(crate) struct TaskFields<'a> {
+    pub task: &'a str,
+    pub fields: &'a [(String, RawValue)],
+}
+
+impl TaskFields<'_> {
+    fn err(&self, msg: impl Into<String>) -> IngestError {
+        IngestError::Task {
+            task: self.task.to_string(),
+            msg: msg.into(),
+        }
+    }
+
+    fn get(&self, key: &str) -> Result<&RawValue, IngestError> {
+        self.fields
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| self.err(format!("missing field {key:?}")))
+    }
+
+    fn usize_field(&self, key: &str) -> Result<usize, IngestError> {
+        match self.get(key)? {
+            RawValue::Num(s) => s.parse().map_err(|_| {
+                self.err(format!("{key:?} is not a non-negative integer: {s:?}"))
+            }),
+            RawValue::Pair(..) => {
+                Err(self.err(format!("{key:?} must be a single integer")))
+            }
+        }
+    }
+
+    fn u64_field(&self, key: &str) -> Result<u64, IngestError> {
+        match self.get(key)? {
+            RawValue::Num(s) => s.parse().map_err(|_| {
+                self.err(format!("{key:?} is not a non-negative integer: {s:?}"))
+            }),
+            RawValue::Pair(..) => {
+                Err(self.err(format!("{key:?} must be a single integer")))
+            }
+        }
+    }
+
+    fn f64_field(&self, key: &str) -> Result<f64, IngestError> {
+        let v = match self.get(key)? {
+            RawValue::Num(s) => s.parse::<f64>().ok(),
+            RawValue::Pair(..) => None,
+        };
+        match v {
+            Some(x) if x.is_finite() => Ok(x),
+            _ => Err(self.err(format!("{key:?} is not a finite number"))),
+        }
+    }
+
+    fn pair_field(&self, key: &str) -> Result<(usize, usize), IngestError> {
+        match self.get(key)? {
+            RawValue::Pair(a, b) => {
+                let bad = || {
+                    self.err(format!(
+                        "{key:?} must be a pair of non-negative integers"
+                    ))
+                };
+                Ok((
+                    a.trim().parse().map_err(|_| bad())?,
+                    b.trim().parse().map_err(|_| bad())?,
+                ))
+            }
+            RawValue::Num(_) => Err(self.err(format!(
+                "{key:?} must be a two-element pair (e.g. [1, 1])"
+            ))),
+        }
+    }
+}
+
+/// Build an [`OpKind`] from a kind name plus shape fields. Shared by
+/// both importers; the caller has already rejected unknown field names
+/// against [`kind_shape_keys`].
+pub(crate) fn op_kind_from(
+    kind: &str,
+    f: &TaskFields,
+) -> Result<OpKind, IngestError> {
+    Ok(match kind {
+        "input" => OpKind::Input,
+        "conv" => OpKind::Conv(checked_conv(f)?),
+        "pool" => OpKind::Pool {
+            bytes_in: f.u64_field("bytes_in")?,
+            bytes_out: f.u64_field("bytes_out")?,
+        },
+        "relu" => OpKind::Relu { bytes: f.u64_field("bytes")? },
+        "concat" => OpKind::Concat { bytes: f.u64_field("bytes")? },
+        "add" => OpKind::Add { bytes: f.u64_field("bytes")? },
+        "lrn" => OpKind::Lrn { bytes: f.u64_field("bytes")? },
+        "batchnorm" => OpKind::BatchNorm { bytes: f.u64_field("bytes")? },
+        "softmax" => OpKind::Softmax { bytes: f.u64_field("bytes")? },
+        "fc" => OpKind::FullyConnected {
+            m: f.usize_field("m")?,
+            k: f.usize_field("k")?,
+            n: f.usize_field("n")?,
+        },
+        "grad_reduce" => {
+            let replicas = f.usize_field("replicas")?;
+            if replicas == 0 {
+                return Err(f.err("\"replicas\" must be at least 1"));
+            }
+            OpKind::GradReduce {
+                bytes: f.u64_field("bytes")?,
+                replicas,
+                link_latency_us: f.f64_field("link_latency_us")?,
+                link_gb_per_s: f.f64_field("link_gb_per_s")?,
+            }
+        }
+        other => {
+            return Err(IngestError::UnknownKind {
+                task: f.task.to_string(),
+                kind: other.to_string(),
+            })
+        }
+    })
+}
+
+/// Convolution shape with the `ConvParams::new` invariants checked as
+/// errors instead of panics — an importer must never abort the process
+/// on hostile input.
+fn checked_conv(f: &TaskFields) -> Result<ConvParams, IngestError> {
+    let (n, c, h, w) = (
+        f.usize_field("n")?,
+        f.usize_field("c")?,
+        f.usize_field("h")?,
+        f.usize_field("w")?,
+    );
+    let (k, r, s) = (
+        f.usize_field("k")?,
+        f.usize_field("r")?,
+        f.usize_field("s")?,
+    );
+    let stride = f.pair_field("stride")?;
+    let padding = f.pair_field("padding")?;
+    for (name, v) in
+        [("n", n), ("c", c), ("h", h), ("w", w), ("k", k), ("r", r), ("s", s)]
+    {
+        if v == 0 {
+            return Err(f.err(format!("conv field {name:?} must be >= 1")));
+        }
+    }
+    if stride.0 == 0 || stride.1 == 0 {
+        return Err(f.err("conv stride must be >= 1 in both dims"));
+    }
+    if h + 2 * padding.0 < r || w + 2 * padding.1 < s {
+        return Err(f.err(format!(
+            "conv filter {r}x{s} larger than padded input \
+             {}x{}",
+            h + 2 * padding.0,
+            w + 2 * padding.1
+        )));
+    }
+    Ok(ConvParams::new(n, c, h, w, k, r, s, stride, padding))
+}
+
+/// Optional per-task `flops` cross-check: external formats often carry a
+/// work estimate, and silently disagreeing with our cost model would
+/// make every downstream number quietly wrong. 1e-6 relative tolerance
+/// absorbs decimal round-tripping.
+pub(crate) fn check_flops(
+    task: &str,
+    kind: &OpKind,
+    declared: f64,
+) -> Result<(), IngestError> {
+    let computed = kind.flops();
+    let tol = 1e-6 * computed.abs().max(1.0);
+    if (declared - computed).abs() > tol {
+        return Err(IngestError::Task {
+            task: task.to_string(),
+            msg: format!(
+                "declared flops {declared} disagrees with the cost model \
+                 ({computed})"
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// Shared final step of both importers: verify acyclicity, naming an
+/// offending op for the error message.
+pub(crate) fn ensure_acyclic(dag: &Dag) -> Result<(), IngestError> {
+    if dag.topo_order().is_some() {
+        return Ok(());
+    }
+    // name one op on a cycle: any op not reachable in a Kahn sweep
+    let mut indeg: Vec<usize> =
+        (0..dag.len()).map(|i| dag.preds(i).len()).collect();
+    let mut q: Vec<usize> =
+        (0..dag.len()).filter(|&i| indeg[i] == 0).collect();
+    let mut removed = vec![false; dag.len()];
+    while let Some(i) = q.pop() {
+        removed[i] = true;
+        for &s in dag.succs(i) {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                q.push(s);
+            }
+        }
+    }
+    let witness = (0..dag.len())
+        .find(|&i| !removed[i])
+        .map(|i| dag.ops[i].name.clone())
+        .unwrap_or_default();
+    Err(IngestError::Cyclic(format!(
+        "op {witness:?} sits on a dependency cycle"
+    )))
+}
+
+/// Load a graph from a path, dispatching on the file extension
+/// (`.json` → WfCommons-style importer, `.dot`/`.gv` → DOT importer).
+/// Returns the workload label (the document's name) plus the DAG.
+pub fn load_graph_file(
+    path: &std::path::Path,
+) -> anyhow::Result<(String, Dag)> {
+    let ext = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .unwrap_or("")
+        .to_ascii_lowercase();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    let parsed = match ext.as_str() {
+        "json" => dag_from_json(&text),
+        "dot" | "gv" => dag_from_dot(&text),
+        other => anyhow::bail!(
+            "unsupported graph format {other:?} for {} (expected .json, \
+             .dot, or .gv)",
+            path.display()
+        ),
+    };
+    let (name, dag) =
+        parsed.map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    Ok((name, dag))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_name_has_shape_keys() {
+        for kind in KIND_NAMES {
+            assert!(
+                kind_shape_keys(kind).is_some(),
+                "{kind} missing from the shape-key table"
+            );
+        }
+        assert!(kind_shape_keys("attention").is_none());
+    }
+
+    #[test]
+    fn unknown_kind_error_lists_the_taxonomy() {
+        let f = TaskFields { task: "t1", fields: &[] };
+        let err = op_kind_from("attention", &f).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("attention"), "{msg}");
+        assert!(msg.contains("softmax"), "must list valid kinds: {msg}");
+    }
+
+    #[test]
+    fn conv_invariants_are_errors_not_panics() {
+        let fields = vec![
+            ("n".into(), RawValue::Num("1".into())),
+            ("c".into(), RawValue::Num("1".into())),
+            ("h".into(), RawValue::Num("2".into())),
+            ("w".into(), RawValue::Num("2".into())),
+            ("k".into(), RawValue::Num("1".into())),
+            ("r".into(), RawValue::Num("5".into())),
+            ("s".into(), RawValue::Num("5".into())),
+            ("stride".into(), RawValue::Pair("1".into(), "1".into())),
+            ("padding".into(), RawValue::Pair("0".into(), "0".into())),
+        ];
+        let f = TaskFields { task: "t", fields: &fields };
+        let err = op_kind_from("conv", &f).unwrap_err();
+        assert!(err.to_string().contains("larger than padded input"));
+    }
+
+    #[test]
+    fn flops_check_accepts_exact_and_rejects_drift() {
+        let kind = OpKind::FullyConnected { m: 2, k: 3, n: 4 };
+        assert!(check_flops("t", &kind, 48.0).is_ok());
+        assert!(check_flops("t", &kind, 48.0 + 1e-9).is_ok());
+        assert!(check_flops("t", &kind, 50.0).is_err());
+    }
+}

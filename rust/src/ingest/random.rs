@@ -1,0 +1,81 @@
+//! Seeded random layered-DAG generator.
+//!
+//! This is the property harness's adversarial graph generator
+//! (`rust/tests/executor_properties.rs`), promoted to the library so the
+//! same graphs can be exported as fixtures (`parconv export --random
+//! SEED`) and replayed by path. The construction is frozen: fixtures
+//! checked in under `examples/graphs/` embed digests of these exact
+//! graphs, so any change here is a fixture-breaking change and the
+//! round-trip tests will say so.
+
+use crate::convlib::ConvParams;
+use crate::graph::{Dag, OpKind};
+use crate::util::Prng;
+
+/// A random convolution from a small shape pool (kept small so the
+/// planner's memo cache carries most of a multi-case sweep).
+fn random_conv(prng: &mut Prng) -> ConvParams {
+    let c = *prng.choose(&[16usize, 32, 64, 128]);
+    let k = *prng.choose(&[16usize, 32, 64]);
+    let hw = *prng.choose(&[14usize, 28]);
+    let (r, pad) = *prng.choose(&[(1usize, 0usize), (3, 1), (5, 2)]);
+    ConvParams::new(4, c, hw, hw, k, r, r, (1, 1), (pad, pad))
+}
+
+/// A random layered non-linear DAG: an input, 3–6 levels of width 1–4
+/// (each node a conv or a bandwidth op picking 1–2 predecessors from the
+/// previous level — forks and joins arise from the fan-in choices), and a
+/// concat sink joining the last level. Deterministic per seed.
+pub fn random_layered_dag(seed: u64) -> Dag {
+    let mut prng = Prng::new(seed);
+    let mut g = Dag::new();
+    let input = g.add("in", OpKind::Input);
+    let mut prev = vec![input];
+    let levels = prng.range_u64(3, 6);
+    for level in 0..levels {
+        let width = prng.range_u64(1, 4) as usize;
+        let mut cur = Vec::with_capacity(width);
+        for w in 0..width {
+            let mut preds = Vec::new();
+            let fan_in = (prng.range_u64(1, 2) as usize).min(prev.len());
+            let mut pool = prev.clone();
+            for _ in 0..fan_in {
+                let i = prng.below(pool.len() as u64) as usize;
+                preds.push(pool.swap_remove(i));
+            }
+            let kind = if prng.next_f64() < 0.7 {
+                OpKind::Conv(random_conv(&mut prng))
+            } else if prng.next_f64() < 0.5 {
+                OpKind::Relu { bytes: 1 << 20 }
+            } else {
+                OpKind::Pool {
+                    bytes_in: 1 << 20,
+                    bytes_out: 1 << 18,
+                }
+            };
+            cur.push(g.add_after(format!("l{level}n{w}"), kind, &preds));
+        }
+        prev = cur;
+    }
+    g.add_after("sink", OpKind::Concat { bytes: 1 << 20 }, &prev);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_acyclic_and_conv_bearing() {
+        for seed in [0u64, 7, 41] {
+            let a = random_layered_dag(seed);
+            let b = random_layered_dag(seed);
+            assert_eq!(a.len(), b.len(), "seed {seed}");
+            for i in 0..a.len() {
+                assert_eq!(a.preds(i), b.preds(i), "seed {seed} op {i}");
+            }
+            assert!(a.is_acyclic(), "seed {seed}");
+            assert!(!a.conv_ids().is_empty(), "seed {seed}");
+        }
+    }
+}

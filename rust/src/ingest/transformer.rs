@@ -1,0 +1,295 @@
+//! Parameterized transformer-block generator.
+//!
+//! Attention is batched GEMMs + softmax + residual fan-in — and a
+//! batched GEMM *is* a 1×1 convolution (`ConvParams::gemm_dims`: a conv
+//! with `r = s = 1`, `w = 1` maps to M = k, N = n·h, K = c). Emitting
+//! the projections and attention products as 1×1 convs rather than
+//! `FullyConnected` host ops puts them on the paper's scheduling path:
+//! the planner can profile-select algorithms for them, pack independent
+//! heads into co-execution groups, and the event executor can overlap
+//! one head's score GEMM with another's softmax. The generated block is
+//! exactly the branchy fork/join structure the paper exploits in
+//! inception modules, at serving's dominant 2026 workload shape:
+//!
+//! ```text
+//! x ─ ln1 ─┬─ q_proj ─┐      per head h:
+//!          ├─ k_proj ─┼─→ scores_h ─ softmax_h ─ attnout_h ─┐
+//!          └─ v_proj ─┘      (S×dh GEMMs, H independent chains)
+//!   concat(H) ─ out_proj ─ add1(+x) ─ ln2 ─ fc1 ─ gelu ─ fc2 ─ add2(+add1)
+//! ```
+
+use crate::convlib::ConvParams;
+use crate::graph::{Dag, OpKind};
+
+use super::IngestError;
+
+/// Shape of a generated transformer stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerSpec {
+    /// Number of stacked blocks (serial; parallelism lives inside each).
+    pub layers: usize,
+    /// Attention heads per block. Must divide `d_model`.
+    pub heads: usize,
+    /// Model (embedding) dimension.
+    pub d_model: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Batch size (sequences per step).
+    pub batch: usize,
+}
+
+impl Default for TransformerSpec {
+    fn default() -> Self {
+        Self { layers: 2, heads: 8, d_model: 512, seq: 128, batch: 32 }
+    }
+}
+
+impl TransformerSpec {
+    /// Parse the compact CLI spelling `L x H x D x S` (e.g.
+    /// `"2x8x512x128"`); the batch rides in from the top-level `--batch`.
+    pub fn parse(spec: &str, batch: usize) -> Result<Self, IngestError> {
+        let parts: Vec<&str> = spec.split('x').collect();
+        let bad = || {
+            IngestError::BadSpec(format!(
+                "transformer spec {spec:?} must be LAYERSxHEADSxD_MODELxSEQ \
+                 (e.g. 2x8x512x128)"
+            ))
+        };
+        if parts.len() != 4 {
+            return Err(bad());
+        }
+        let nums: Vec<usize> = parts
+            .iter()
+            .map(|p| p.trim().parse().map_err(|_| bad()))
+            .collect::<Result<_, _>>()?;
+        let s = Self {
+            layers: nums[0],
+            heads: nums[1],
+            d_model: nums[2],
+            seq: nums[3],
+            batch,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Workload label used by plans, traces, and reports.
+    pub fn label(&self) -> String {
+        format!(
+            "transformer_l{}h{}d{}s{}",
+            self.layers, self.heads, self.d_model, self.seq
+        )
+    }
+
+    pub fn validate(&self) -> Result<(), IngestError> {
+        for (name, v) in [
+            ("layers", self.layers),
+            ("heads", self.heads),
+            ("d_model", self.d_model),
+            ("seq", self.seq),
+            ("batch", self.batch),
+        ] {
+            if v == 0 {
+                return Err(IngestError::BadSpec(format!(
+                    "transformer {name} must be >= 1"
+                )));
+            }
+        }
+        if self.d_model % self.heads != 0 {
+            return Err(IngestError::BadSpec(format!(
+                "d_model {} is not divisible by heads {}",
+                self.d_model, self.heads
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build the DAG.
+    pub fn build(&self) -> Result<Dag, IngestError> {
+        transformer(self.layers, self.heads, self.d_model, self.seq, self.batch)
+    }
+}
+
+/// A GEMM `[M x K] · [K x N-per-token]` over `batch · seq` tokens as the
+/// equivalent 1×1 convolution: channels carry the contraction dim,
+/// output channels carry M, and the spatial extent carries the tokens.
+fn gemm_conv(batch: usize, seq: usize, m: usize, k: usize) -> ConvParams {
+    ConvParams::new(batch, k, seq, 1, m, 1, 1, (1, 1), (0, 0))
+}
+
+/// Generate `layers` stacked transformer blocks (pre-norm, multi-head
+/// attention + a 4x MLP) as a schedulable [`Dag`]. See the module docs
+/// for the structure; all GEMMs are 1×1 convolutions so the scheduler
+/// treats them exactly like the paper's conv workloads.
+pub fn transformer(
+    layers: usize,
+    heads: usize,
+    d_model: usize,
+    seq: usize,
+    batch: usize,
+) -> Result<Dag, IngestError> {
+    let spec = TransformerSpec { layers, heads, d_model, seq, batch };
+    spec.validate()?;
+    let d_head = d_model / heads;
+    // f32 bytes of one (batch, seq, d_model) activation tensor
+    let act = (batch * seq * d_model * 4) as u64;
+    // one head's (batch, seq, seq) attention-score tensor
+    let scores = (batch * seq * seq * 4) as u64;
+
+    let mut g = Dag::new();
+    let mut x = g.add("in", OpKind::Input);
+    for l in 0..layers {
+        let ln1 = g.add_after(
+            format!("l{l}_ln1"),
+            OpKind::BatchNorm { bytes: act },
+            &[x],
+        );
+        // fused-per-tensor QKV projections: three independent d×d GEMMs
+        let q = g.add_after(
+            format!("l{l}_q_proj"),
+            OpKind::Conv(gemm_conv(batch, seq, d_model, d_model)),
+            &[ln1],
+        );
+        let k = g.add_after(
+            format!("l{l}_k_proj"),
+            OpKind::Conv(gemm_conv(batch, seq, d_model, d_model)),
+            &[ln1],
+        );
+        let v = g.add_after(
+            format!("l{l}_v_proj"),
+            OpKind::Conv(gemm_conv(batch, seq, d_model, d_model)),
+            &[ln1],
+        );
+        // H independent attention chains — the inter-op parallelism
+        let mut head_outs = Vec::with_capacity(heads);
+        for h in 0..heads {
+            // Q_h · K_hᵀ: [seq x d_head] · [d_head x seq] per sequence
+            let score = g.add_after(
+                format!("l{l}_h{h}_scores"),
+                OpKind::Conv(gemm_conv(batch, seq, seq, d_head)),
+                &[q, k],
+            );
+            let soft = g.add_after(
+                format!("l{l}_h{h}_softmax"),
+                OpKind::Softmax { bytes: scores },
+                &[score],
+            );
+            // softmax(QKᵀ) · V_h: [seq x seq] · [seq x d_head]
+            let out = g.add_after(
+                format!("l{l}_h{h}_attnout"),
+                OpKind::Conv(gemm_conv(batch, seq, d_head, seq)),
+                &[soft, v],
+            );
+            head_outs.push(out);
+        }
+        let concat = g.add_after(
+            format!("l{l}_concat"),
+            OpKind::Concat { bytes: act },
+            &head_outs,
+        );
+        let proj = g.add_after(
+            format!("l{l}_out_proj"),
+            OpKind::Conv(gemm_conv(batch, seq, d_model, d_model)),
+            &[concat],
+        );
+        // residual fan-in 1: attention output + block input
+        let add1 = g.add_after(
+            format!("l{l}_add1"),
+            OpKind::Add { bytes: act },
+            &[x, proj],
+        );
+        let ln2 = g.add_after(
+            format!("l{l}_ln2"),
+            OpKind::BatchNorm { bytes: act },
+            &[add1],
+        );
+        // 4x MLP: d -> 4d -> d
+        let fc1 = g.add_after(
+            format!("l{l}_fc1"),
+            OpKind::Conv(gemm_conv(batch, seq, 4 * d_model, d_model)),
+            &[ln2],
+        );
+        let gelu = g.add_after(
+            format!("l{l}_gelu"),
+            OpKind::Relu { bytes: 4 * act },
+            &[fc1],
+        );
+        let fc2 = g.add_after(
+            format!("l{l}_fc2"),
+            OpKind::Conv(gemm_conv(batch, seq, d_model, 4 * d_model)),
+            &[gelu],
+        );
+        // residual fan-in 2: MLP output + attention residual
+        x = g.add_after(
+            format!("l{l}_add2"),
+            OpKind::Add { bytes: act },
+            &[add1, fc2],
+        );
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_structure_is_branchy_and_acyclic() {
+        let g = transformer(2, 8, 512, 128, 8).unwrap();
+        assert!(g.is_acyclic());
+        // per layer: 3 QKV + 2 per head + out_proj + fc1 + fc2
+        assert_eq!(g.conv_ids().len(), 2 * (3 + 2 * 8 + 3));
+        let s = g.stats();
+        assert!(!s.is_linear(), "attention must fork");
+        // all H score GEMMs are mutually independent
+        assert!(s.max_conv_width >= 8, "conv width {}", s.max_conv_width);
+        assert!(s.independent_conv_pairs >= 8 * 7 / 2);
+    }
+
+    #[test]
+    fn gemm_conv_recovers_the_gemm_dims() {
+        // M=512, K=64 GEMM over 32x128 tokens
+        let p = gemm_conv(32, 128, 512, 64);
+        assert_eq!(p.gemm_dims(), (512, 32 * 128, 64));
+        assert_eq!(p.naive_flops(), 2.0 * (512 * 64) as f64 * (32 * 128) as f64);
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        assert!(transformer(0, 8, 512, 64, 8).is_err());
+        assert!(transformer(1, 0, 512, 64, 8).is_err());
+        assert!(transformer(1, 7, 512, 64, 8).is_err(), "7 ∤ 512");
+        assert!(transformer(1, 8, 512, 0, 8).is_err());
+        assert!(transformer(1, 8, 512, 64, 0).is_err());
+    }
+
+    #[test]
+    fn spec_parses_the_compact_spelling() {
+        let s = TransformerSpec::parse("4x16x1024x256", 8).unwrap();
+        assert_eq!(
+            s,
+            TransformerSpec {
+                layers: 4,
+                heads: 16,
+                d_model: 1024,
+                seq: 256,
+                batch: 8
+            }
+        );
+        assert_eq!(s.label(), "transformer_l4h16d1024s256");
+        assert!(TransformerSpec::parse("4x16x1024", 8).is_err());
+        assert!(TransformerSpec::parse("axbxcxd", 8).is_err());
+        assert!(TransformerSpec::parse("1x3x512x64", 8).is_err(), "3 ∤ 512");
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let a = TransformerSpec::default().build().unwrap();
+        let b = TransformerSpec::default().build().unwrap();
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert_eq!(a.ops[i].name, b.ops[i].name);
+            assert_eq!(a.preds(i), b.preds(i));
+        }
+    }
+}

@@ -47,6 +47,14 @@
 //!   of the backward pass (plan schema v5 records per-node device
 //!   assignments over a per-device [`cluster::PoolSpec`], which may mix
 //!   GPU generations).
+//! - [`ingest`] — workload ingestion: a WfCommons-style JSON importer
+//!   and a DOT digraph importer turn external graph descriptions into
+//!   first-class DAGs (strict unknown-field rejection, digest-stable
+//!   edge order), an exporter writes any DAG back out as a replayable
+//!   fixture, and parameterized generators emit transformer blocks
+//!   (attention as batched 1×1-conv GEMMs) and the property harness's
+//!   seeded layered DAGs. Imported graphs flow through
+//!   `Session`/`Planner`/`ServeDriver` unchanged.
 //! - [`serve`] — trace-driven multi-tenant inference serving on the
 //!   event core: open-loop workload generation (Poisson / bursty /
 //!   diurnal, replayable text traces), per-model queues with windowed
@@ -100,6 +108,7 @@ pub mod convlib;
 pub mod coordinator;
 pub mod gpusim;
 pub mod graph;
+pub mod ingest;
 pub mod memory;
 pub mod plan;
 pub mod profiler;
@@ -118,6 +127,7 @@ pub use coordinator::Coordinator;
 pub use coordinator::SelectionPolicy;
 pub use gpusim::{DeviceSpec, PartitionMode};
 pub use graph::Network;
+pub use ingest::{IngestError, TransformerSpec};
 pub use plan::{Plan, Planner, PlannerKind, Session};
 pub use serve::{ServeConfig, ServeDriver, ServeReport};
 pub use sim::ExecutorKind;

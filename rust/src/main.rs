@@ -17,7 +17,20 @@
 //! parconv trace      [--out F]         # chrome-trace of one iteration
 //! parconv serve      [--requests N]    # trace-driven multi-tenant serving
 //!                                      #   (latency percentiles, goodput)
+//! parconv export     [--out F]         # write a DAG as parconv-dag JSON
+//!                                      #   (--network, --graph, or
+//!                                      #   --random SEED)
 //! ```
+//!
+//! Workload source (`end2end`/`training`/`plan`/`serve`/`export`):
+//! `--graph SRC` (also `[workload] graph`) replaces the built-in
+//! `--network` constructor. `SRC` is a `.json` file (WfCommons-style
+//! `parconv-dag` format), a `.dot`/`.gv` digraph, or the literal
+//! `transformer` / `transformer:LxHxDxS` — a generated transformer
+//! stack whose shape comes from `--layers/--heads/--d-model/--seq`
+//! (`[workload] layers|heads|d_model|seq`) or the compact spelling.
+//! Imported DAGs flow through the same planner/session/serving paths as
+//! built-ins; `export` is the inverse (any workload out as JSON).
 //!
 //! Global flags: `--config FILE`, `--device k40|p100|v100|a100`,
 //! `--devices k40,v100x2,a100` (explicit — possibly mixed-generation —
@@ -62,13 +75,17 @@ use parconv::coordinator::{
     discover_pairs, PriorityPolicy, ScheduleConfig, SelectionPolicy,
 };
 use parconv::gpusim::{isolated_time_us, DeviceSpec, Engine, PartitionMode};
-use parconv::graph::Network;
+use parconv::graph::{Dag, Network};
+use parconv::ingest::{
+    dag_to_json, load_graph_file, random_layered_dag, TransformerSpec,
+};
 use parconv::plan::{Plan, PlannerKind, Session};
 use parconv::profiler::{
     chrome_trace_json, schedule_chrome_trace_json, table1_report, table1_row,
 };
 use parconv::serve::{
-    trace_from_text, trace_to_text, ArrivalKind, ServeConfig, ServeDriver,
+    trace_from_text, trace_to_text, ArrivalKind, ModelSpec, ServeConfig,
+    ServeDriver,
 };
 use parconv::sim::ExecutorKind;
 use parconv::trainer::Trainer;
@@ -95,6 +112,7 @@ struct Cli {
     trace: Option<String>,
     trace_in: Option<String>,
     trace_out: Option<String>,
+    random: Option<u64>,
 }
 
 fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
@@ -112,6 +130,7 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
     let mut trace = None;
     let mut trace_in = None;
     let mut trace_out = None;
+    let mut random = None;
     while let Some(flag) = it.next() {
         let mut val = || -> anyhow::Result<String> {
             it.next()
@@ -164,6 +183,18 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
                 cfg.serve.gpus = val()?.parse::<usize>()?.max(1)
             }
             "--mix" => cfg.serve.mix = val()?,
+            "--graph" => cfg.workload.graph = val()?,
+            "--layers" => {
+                cfg.workload.layers = val()?.parse::<usize>()?.max(1)
+            }
+            "--heads" => {
+                cfg.workload.heads = val()?.parse::<usize>()?.max(1)
+            }
+            "--d-model" => {
+                cfg.workload.d_model = val()?.parse::<usize>()?.max(1)
+            }
+            "--seq" => cfg.workload.seq = val()?.parse::<usize>()?.max(1),
+            "--random" => random = Some(val()?.parse()?),
             "--trace-in" => trace_in = Some(val()?),
             "--trace-out" => trace_out = Some(val()?),
             "--min-speedup" => min_speedup = val()?.parse()?,
@@ -182,6 +213,7 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
         trace,
         trace_in,
         trace_out,
+        random,
     })
 }
 
@@ -215,6 +247,42 @@ fn planner_kind(cfg: &RunConfig) -> anyhow::Result<PlannerKind> {
 fn network(cfg: &RunConfig) -> anyhow::Result<Network> {
     Network::parse(&cfg.network)
         .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", cfg.network))
+}
+
+/// The transformer generator spec described by `--graph transformer`
+/// (shape from `[workload]` fields) or `--graph transformer:LxHxDxS`.
+fn transformer_spec(cfg: &RunConfig) -> anyhow::Result<TransformerSpec> {
+    let g = cfg.workload.graph.trim();
+    let spec = if let Some(rest) = g.strip_prefix("transformer:") {
+        TransformerSpec::parse(rest, cfg.batch)?
+    } else {
+        TransformerSpec {
+            layers: cfg.workload.layers,
+            heads: cfg.workload.heads,
+            d_model: cfg.workload.d_model,
+            seq: cfg.workload.seq,
+            batch: cfg.batch,
+        }
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// The workload DAG the run targets, with its label: `--graph` /
+/// `[workload] graph` when given (a `.json`/`.dot`/`.gv` file or the
+/// `transformer` generator), otherwise the built-in `--network`
+/// constructor at `--batch`.
+fn workload(cfg: &RunConfig) -> anyhow::Result<(String, Dag)> {
+    let g = cfg.workload.graph.trim();
+    if g.is_empty() {
+        let net = network(cfg)?;
+        return Ok((net.name().to_string(), net.build(cfg.batch)));
+    }
+    if g == "transformer" || g.starts_with("transformer:") {
+        let spec = transformer_spec(cfg)?;
+        return Ok((spec.label(), spec.build()?));
+    }
+    load_graph_file(Path::new(g))
 }
 
 fn priority(cfg: &RunConfig) -> anyhow::Result<PriorityPolicy> {
@@ -273,6 +341,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "plan" => cmd_plan(&cli),
         "trace" => cmd_trace(&cli),
         "serve" => cmd_serve(&cli),
+        "export" => cmd_export(&cli),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())
@@ -282,10 +351,14 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "parconv — concurrent CNN ops on a simulated GPU (SPAA'20 reproduction)
-commands: table1 table2 networks serialization discover end2end training validate train plan trace serve help
+commands: table1 table2 networks serialization discover end2end training validate train plan trace serve export help
 global flags: --config FILE --device D --network N --batch B --policy P
               --partition M --streams K --priority Q --workspace-mb MB
               --artifacts DIR --min-speedup X --seed S
+end2end/training/plan/serve/export also take:
+  --graph SRC   (workload source replacing --network: a .json or
+                 .dot/.gv graph file, or transformer[:LxHxDxS] with
+                 --layers N --heads H --d-model D --seq S)
 end2end/training/plan/serve also take:
   --planner greedy|heft|peft|lookahead   (planning algorithm)
   --devices D1,D2xN,...   (device pool, e.g. k40,v100x2,a100;
@@ -295,7 +368,12 @@ training also takes: --gpus N --link-latency-us X --link-gbps X
                      --reduce overlapped|serial_tail  (data parallelism)
 serve takes: --requests N --arrival poisson|bursty|diurnal --rate R
              --window-us W --max-batch B --slo-us S --serve-gpus N
-             --mix net1,net2,... --trace-out F --trace-in F";
+             --mix net1,net2,... --trace-out F --trace-in F
+             (--graph serves the imported DAG as a single-model mix;
+              --trace-in resolves its name against that mix)
+export takes: --out F (default NAME.json) and one source:
+              --network N | --graph SRC | --random SEED (the property
+              harness's seeded layered DAG)";
 
 // --------------------------------------------------------------------------
 
@@ -497,13 +575,12 @@ fn cmd_discover(cli: &Cli) -> anyhow::Result<()> {
 fn cmd_end2end(cli: &Cli) -> anyhow::Result<()> {
     let devices = pool(&cli.cfg)?;
     let planner = planner_kind(&cli.cfg)?;
-    let net = network(&cli.cfg)?;
     let exec = executor_kind(&cli.cfg)?;
-    let dag = net.build(cli.cfg.batch);
+    let (label, dag) = workload(&cli.cfg)?;
     println!(
         "E6 — one {} iteration (batch {}) under policy x partition \
          ({} executor, {} planner, pool: {})\n",
-        net.name(),
+        label,
         cli.cfg.batch,
         exec.name(),
         planner.name(),
@@ -621,14 +698,13 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
     use parconv::graph::training_dag;
     let devices = pool(&cli.cfg)?;
     let planner = planner_kind(&cli.cfg)?;
-    let net = network(&cli.cfg)?;
     let exec = executor_kind(&cli.cfg)?;
-    let fwd = net.build(cli.cfg.batch);
+    let (label, fwd) = workload(&cli.cfg)?;
     let train = training_dag(&fwd);
     println!(
         "E9 — {} training iteration (fwd+bwd), batch {}: {} ops, {} convs, \
          {} independent conv pairs (fwd alone: {}; {} executor)\n",
-        net.name(),
+        label,
         cli.cfg.batch,
         train.len(),
         train.conv_ids().len(),
@@ -880,11 +956,10 @@ fn cmd_train(cli: &Cli) -> anyhow::Result<()> {
 fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
     let devices = pool(&cli.cfg)?;
     let planner = planner_kind(&cli.cfg)?;
-    let net = network(&cli.cfg)?;
-    let dag = net.build(cli.cfg.batch);
+    let (label, dag) = workload(&cli.cfg)?;
     let cfg = schedule_config(&cli.cfg)?;
     let session = Session::with_planner(devices.clone(), cfg, planner);
-    let plan = session.plan_labeled(&dag, net.name());
+    let plan = session.plan_labeled(&dag, &label);
     let out = cli.out.clone().unwrap_or_else(|| "plan.json".into());
     std::fs::write(&out, plan.to_json())?;
 
@@ -922,7 +997,7 @@ fn cmd_plan(cli: &Cli) -> anyhow::Result<()> {
 
     println!(
         "plan — {} batch {} on {} ({}/{}/k={}, {} planner)\n",
-        net.name(),
+        label,
         cli.cfg.batch,
         devices,
         plan.meta.policy.name(),
@@ -975,15 +1050,25 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
             sv.arrival
         )
     })?;
-    let mut mix = Vec::new();
-    for name in sv.mix.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        mix.push(Network::parse(name).ok_or_else(|| {
-            anyhow::anyhow!("unknown network {name:?} in serving mix")
-        })?);
-    }
+    // --graph serves the imported/generated DAG as a single-model mix;
+    // otherwise --mix names built-in networks
+    let mix: Vec<ModelSpec> = if !cli.cfg.workload.graph.trim().is_empty() {
+        let (label, dag) = workload(&cli.cfg)?;
+        vec![ModelSpec::external(label, dag)]
+    } else {
+        let mut mix = Vec::new();
+        for name in
+            sv.mix.split(',').map(str::trim).filter(|s| !s.is_empty())
+        {
+            mix.push(ModelSpec::Builtin(Network::parse(name).ok_or_else(
+                || anyhow::anyhow!("unknown network {name:?} in serving mix"),
+            )?));
+        }
+        mix
+    };
     anyhow::ensure!(
         !mix.is_empty(),
-        "serving mix must name at least one network"
+        "serving mix must name at least one model"
     );
     let mut cfg = ServeConfig {
         requests: sv.requests,
@@ -1004,8 +1089,9 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
     };
     let report = if let Some(path) = &cli.trace_in {
         // replay: the trace dictates both the arrivals and the mix
+        // (external model names resolve against the configured mix)
         let (requests, trace_mix) =
-            trace_from_text(&std::fs::read_to_string(path)?)?;
+            trace_from_text(&std::fs::read_to_string(path)?, &cfg.mix)?;
         cfg.mix = trace_mix;
         cfg.requests = requests.len();
         println!(
@@ -1027,6 +1113,25 @@ fn cmd_serve(cli: &Cli) -> anyhow::Result<()> {
         driver.run_trace(&requests)
     };
     println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_export(cli: &Cli) -> anyhow::Result<()> {
+    // source precedence: --random SEED, then --graph / --network
+    let (name, dag) = match cli.random {
+        Some(seed) => (format!("random_{seed}"), random_layered_dag(seed)),
+        None => workload(&cli.cfg)?,
+    };
+    let out = cli
+        .out
+        .clone()
+        .unwrap_or_else(|| format!("{name}.json"));
+    std::fs::write(&out, dag_to_json(&dag, &name))?;
+    let s = dag.stats();
+    println!(
+        "exported {name} ({} ops, {} convs, {} forks, {} joins) to {out}",
+        s.ops, s.convs, s.forks, s.joins
+    );
     Ok(())
 }
 

@@ -32,6 +32,58 @@ use crate::util::{Prng, Summary};
 use super::queue::BatchQueue;
 use super::workload::{generate, ArrivalKind, Request};
 
+/// One model in the serving mix: either a built-in network constructor
+/// (rebuilt at each batch bucket) or an external DAG imported via
+/// `ingest` (served at its fixed shape — every bucket replays the same
+/// digest, so the plan cache collapses them to one plan).
+#[derive(Clone, Debug)]
+pub enum ModelSpec {
+    /// Built-in constructor, parameterized by batch bucket.
+    Builtin(Network),
+    /// Imported or generated DAG with its workload label.
+    External { name: String, dag: Arc<Dag> },
+}
+
+impl ModelSpec {
+    /// Wrap an imported/generated DAG as a servable model.
+    pub fn external(name: impl Into<String>, dag: Dag) -> Self {
+        Self::External { name: name.into(), dag: Arc::new(dag) }
+    }
+
+    /// The mix/report/trace label.
+    pub fn name(&self) -> &str {
+        match self {
+            Self::Builtin(net) => net.name(),
+            Self::External { name, .. } => name,
+        }
+    }
+
+    /// The DAG one dispatch at `bucket` requests executes. External
+    /// models carry their batch dimension in the imported graph, so the
+    /// bucket only affects built-in constructors.
+    pub fn build(&self, bucket: usize) -> Dag {
+        match self {
+            Self::Builtin(net) => net.build(bucket),
+            Self::External { dag, .. } => (**dag).clone(),
+        }
+    }
+}
+
+/// Equality by what a trace can name: the variant and the model name
+/// (an external DAG is identified by its label, as in the trace format).
+impl PartialEq for ModelSpec {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Self::Builtin(a), Self::Builtin(b)) => a == b,
+            (
+                Self::External { name: a, .. },
+                Self::External { name: b, .. },
+            ) => a == b,
+            _ => false,
+        }
+    }
+}
+
 /// Serving-run shape: workload, batching, SLO, and pool size.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -50,7 +102,7 @@ pub struct ServeConfig {
     /// GPUs in the pool.
     pub gpus: usize,
     /// Model mix; requests draw uniformly from it.
-    pub mix: Vec<Network>,
+    pub mix: Vec<ModelSpec>,
     /// Workload seed.
     pub seed: u64,
 }
@@ -66,9 +118,9 @@ impl Default for ServeConfig {
             slo_us: 1_000_000.0,
             gpus: 2,
             mix: vec![
-                Network::GoogleNet,
-                Network::ResNet50,
-                Network::AlexNet,
+                ModelSpec::Builtin(Network::GoogleNet),
+                ModelSpec::Builtin(Network::ResNet50),
+                ModelSpec::Builtin(Network::AlexNet),
             ],
             seed: 0,
         }

@@ -27,7 +27,7 @@ pub mod driver;
 pub mod queue;
 pub mod workload;
 
-pub use driver::{ServeConfig, ServeDriver, ServeReport};
+pub use driver::{ModelSpec, ServeConfig, ServeDriver, ServeReport};
 pub use queue::BatchQueue;
 pub use workload::{
     generate, trace_from_text, trace_to_text, ArrivalKind, Request,

@@ -29,6 +29,8 @@
 use crate::graph::Network;
 use crate::util::Prng;
 
+use super::driver::ModelSpec;
+
 /// One inference request: which model, and when it arrived (virtual µs).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Request {
@@ -139,7 +141,7 @@ pub fn generate(
 }
 
 /// Serialize a workload as the replayable text trace format.
-pub fn trace_to_text(requests: &[Request], models: &[Network]) -> String {
+pub fn trace_to_text(requests: &[Request], models: &[ModelSpec]) -> String {
     let mut out = String::from("# parconv serving trace v1\n");
     out.push_str("# arrival_us,model\n");
     for r in requests {
@@ -153,15 +155,18 @@ pub fn trace_to_text(requests: &[Request], models: &[Network]) -> String {
 }
 
 /// Parse a text trace back into requests plus the model mix it uses
-/// (distinct model names, in order of first appearance). Rejects
-/// unknown model names, malformed lines, non-finite or time-travelling
-/// arrival stamps — a replayed trace must mean what the original run
-/// meant, or fail loudly.
+/// (distinct model names, in order of first appearance). A name is
+/// resolved first against `known` (external models a trace cannot
+/// rebuild from the name alone — e.g. `--graph` imports), then against
+/// the built-in networks. Rejects unknown model names, malformed lines,
+/// non-finite or time-travelling arrival stamps — a replayed trace must
+/// mean what the original run meant, or fail loudly.
 pub fn trace_from_text(
     text: &str,
-) -> anyhow::Result<(Vec<Request>, Vec<Network>)> {
+    known: &[ModelSpec],
+) -> anyhow::Result<(Vec<Request>, Vec<ModelSpec>)> {
     let mut requests = Vec::new();
-    let mut models: Vec<Network> = Vec::new();
+    let mut models: Vec<ModelSpec> = Vec::new();
     let mut last = 0.0f64;
     for (idx, raw) in text.lines().enumerate() {
         let line = raw.trim();
@@ -186,16 +191,21 @@ pub fn trace_from_text(
              earlier than the previous line ({last})"
         );
         last = arrival_us;
-        let net = Network::parse(name.trim()).ok_or_else(|| {
-            anyhow::anyhow!(
-                "trace line {lineno}: unknown model {:?}",
-                name.trim()
-            )
-        })?;
-        let model = match models.iter().position(|m| *m == net) {
+        let name = name.trim();
+        let spec = known
+            .iter()
+            .find(|m| m.name() == name)
+            .cloned()
+            .or_else(|| Network::parse(name).map(ModelSpec::Builtin))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "trace line {lineno}: unknown model {name:?}"
+                )
+            })?;
+        let model = match models.iter().position(|m| *m == spec) {
             Some(i) => i,
             None => {
-                models.push(net);
+                models.push(spec);
                 models.len() - 1
             }
         };
@@ -282,11 +292,14 @@ mod tests {
     #[test]
     fn trace_round_trips_requests_and_mix() {
         let mut prng = Prng::new(21);
-        let models = [Network::GoogleNet, Network::AlexNet];
+        let models = [
+            ModelSpec::Builtin(Network::GoogleNet),
+            ModelSpec::Builtin(Network::AlexNet),
+        ];
         let xs = generate(ArrivalKind::Poisson, 200, 400.0, 2, &mut prng);
         let text = trace_to_text(&xs, &models);
         assert!(text.starts_with("# parconv serving trace v1\n"));
-        let (ys, mix) = trace_from_text(&text).unwrap();
+        let (ys, mix) = trace_from_text(&text, &[]).unwrap();
         assert_eq!(ys.len(), xs.len());
         for (x, y) in xs.iter().zip(&ys) {
             assert_eq!(models[x.model], mix[y.model]);
@@ -296,21 +309,32 @@ mod tests {
     }
 
     #[test]
+    fn trace_resolves_external_models_from_the_known_mix() {
+        use crate::graph::{Dag, OpKind};
+        let mut g = Dag::new();
+        g.add("in", OpKind::Input);
+        let ext = ModelSpec::external("mygraph", g);
+        let text = "10.0,mygraph\n20.0,googlenet\n";
+        // without the known mix, the external name is unknown
+        assert!(trace_from_text(text, &[]).is_err());
+        let (ys, mix) =
+            trace_from_text(text, std::slice::from_ref(&ext)).unwrap();
+        assert_eq!(ys.len(), 2);
+        assert_eq!(mix[0].name(), "mygraph");
+        assert_eq!(mix[1], ModelSpec::Builtin(Network::GoogleNet));
+    }
+
+    #[test]
     fn malformed_traces_are_refused() {
-        assert!(trace_from_text("").is_err(), "empty trace");
+        let t = |text: &str| trace_from_text(text, &[]);
+        assert!(t("").is_err(), "empty trace");
+        assert!(t("10.0,nosuchnet\n").is_err(), "unknown model");
+        assert!(t("10.0 googlenet\n").is_err(), "no comma");
+        assert!(t("xyz,googlenet\n").is_err(), "bad stamp");
         assert!(
-            trace_from_text("10.0,nosuchnet\n").is_err(),
-            "unknown model"
-        );
-        assert!(trace_from_text("10.0 googlenet\n").is_err(), "no comma");
-        assert!(trace_from_text("xyz,googlenet\n").is_err(), "bad stamp");
-        assert!(
-            trace_from_text("10.0,googlenet\n5.0,googlenet\n").is_err(),
+            t("10.0,googlenet\n5.0,googlenet\n").is_err(),
             "time travel"
         );
-        assert!(
-            trace_from_text("inf,googlenet\n").is_err(),
-            "non-finite stamp"
-        );
+        assert!(t("inf,googlenet\n").is_err(), "non-finite stamp");
     }
 }

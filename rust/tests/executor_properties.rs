@@ -17,12 +17,12 @@
 //!   exactly once.
 
 use parconv::cluster::{data_parallel_dag, ClusterConfig, LinkModel};
-use parconv::convlib::ConvParams;
 use parconv::coordinator::{
     PriorityPolicy, ScheduleConfig, ScheduleResult, SelectionPolicy,
 };
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::{Dag, OpKind};
+use parconv::ingest::random_layered_dag as random_dag;
 use parconv::plan::Session;
 use parconv::sim::ExecutorKind;
 use parconv::util::Prng;
@@ -38,55 +38,6 @@ fn config(streams: usize, budget: u64) -> ScheduleConfig {
         workspace_limit: budget,
         priority: PriorityPolicy::CriticalPath,
     }
-}
-
-/// A random convolution from a small shape pool (kept small so the
-/// planner's memo cache carries most of the 64 cases).
-fn random_conv(prng: &mut Prng) -> ConvParams {
-    let c = *prng.choose(&[16usize, 32, 64, 128]);
-    let k = *prng.choose(&[16usize, 32, 64]);
-    let hw = *prng.choose(&[14usize, 28]);
-    let (r, pad) = *prng.choose(&[(1usize, 0usize), (3, 1), (5, 2)]);
-    ConvParams::new(4, c, hw, hw, k, r, r, (1, 1), (pad, pad))
-}
-
-/// A random layered non-linear DAG: an input, 3–6 levels of width 1–4
-/// (each node a conv or a bandwidth op picking 1–2 predecessors from the
-/// previous level — forks and joins arise from the fan-in choices), and a
-/// concat sink joining the last level.
-fn random_dag(seed: u64) -> Dag {
-    let mut prng = Prng::new(seed);
-    let mut g = Dag::new();
-    let input = g.add("in", OpKind::Input);
-    let mut prev = vec![input];
-    let levels = prng.range_u64(3, 6);
-    for level in 0..levels {
-        let width = prng.range_u64(1, 4) as usize;
-        let mut cur = Vec::with_capacity(width);
-        for w in 0..width {
-            let mut preds = Vec::new();
-            let fan_in = (prng.range_u64(1, 2) as usize).min(prev.len());
-            let mut pool = prev.clone();
-            for _ in 0..fan_in {
-                let i = prng.below(pool.len() as u64) as usize;
-                preds.push(pool.swap_remove(i));
-            }
-            let kind = if prng.next_f64() < 0.7 {
-                OpKind::Conv(random_conv(&mut prng))
-            } else if prng.next_f64() < 0.5 {
-                OpKind::Relu { bytes: 1 << 20 }
-            } else {
-                OpKind::Pool {
-                    bytes_in: 1 << 20,
-                    bytes_out: 1 << 18,
-                }
-            };
-            cur.push(g.add_after(format!("l{level}n{w}"), kind, &preds));
-        }
-        prev = cur;
-    }
-    g.add_after("sink", OpKind::Concat { bytes: 1 << 20 }, &prev);
-    g
 }
 
 /// Random reduce sites over the DAG's convolutions (weight-tensor bytes),
@@ -262,6 +213,40 @@ fn random_dags_satisfy_executor_invariants_on_one_and_two_gpus() {
                 "seed {seed}: reduce sites but no wire time"
             );
         }
+    }
+}
+
+#[test]
+fn checked_in_fixtures_replay_through_the_invariant_battery() {
+    // the exported fixtures are the same graphs the generator produces:
+    // loading one by path must reproduce the generator's DAG bit-for-bit
+    // (digest equality) and satisfy every executor invariant
+    use parconv::ingest::load_graph_file;
+    use parconv::plan::dag_digest;
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    for seed in [1u64, 7, 13, 41] {
+        let path = root.join(format!("examples/graphs/random_{seed}.json"));
+        let (name, dag) = load_graph_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(name, format!("random_{seed}"));
+        assert_eq!(
+            dag_digest(&dag),
+            dag_digest(&random_dag(seed)),
+            "fixture random_{seed}.json drifted from the generator"
+        );
+        let mut session =
+            Session::new(DeviceSpec::k40(), config(2, GB4));
+        let event = session.run(&dag);
+        check_schedule(&dag, &event, 2, GB4, &format!("fixture {seed}"));
+        session.set_executor(ExecutorKind::Barrier);
+        let barrier = session.run(&dag);
+        check_schedule(
+            &dag,
+            &barrier,
+            2,
+            GB4,
+            &format!("fixture {seed} barrier"),
+        );
     }
 }
 

@@ -1,0 +1,252 @@
+//! Integration tests for the workload-ingestion subsystem
+//! (`parconv::ingest`): importer error paths, export → import digest
+//! identity on the checked-in fixtures, plan bit-identity between an
+//! imported graph and the constructor it was exported from, and the
+//! transformer generator's inter-op parallelism payoff.
+
+use std::path::{Path, PathBuf};
+
+use parconv::coordinator::{
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, PartitionMode};
+use parconv::graph::Network;
+use parconv::ingest::{
+    dag_from_dot, dag_from_json, dag_to_json, load_graph_file,
+    random_layered_dag, IngestError, TransformerSpec,
+};
+use parconv::plan::{dag_digest, Session};
+use parconv::sim::ExecutorKind;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/graphs")
+        .join(name)
+}
+
+fn config(
+    policy: SelectionPolicy,
+    partition: PartitionMode,
+    streams: usize,
+) -> ScheduleConfig {
+    ScheduleConfig {
+        policy,
+        partition,
+        streams,
+        workspace_limit: 4 * 1024 * 1024 * 1024,
+        priority: PriorityPolicy::CriticalPath,
+    }
+}
+
+// ---------------------------------------------------------------------
+// importer error paths
+// ---------------------------------------------------------------------
+
+#[test]
+fn truncated_json_is_a_syntax_error() {
+    let full = dag_to_json(&random_layered_dag(3), "r3");
+    for cut in [1, full.len() / 2, full.len() - 2] {
+        let err = dag_from_json(&full[..cut]).unwrap_err();
+        assert!(
+            matches!(err, IngestError::Syntax(_)),
+            "cut at {cut}: {err}"
+        );
+    }
+}
+
+#[test]
+fn cyclic_graphs_are_rejected_in_both_formats() {
+    let dot = r#"digraph loopy {
+        a [kind=relu, bytes=8]
+        b [kind=relu, bytes=8]
+        c [kind=relu, bytes=8]
+        a -> b -> c
+        c -> a
+    }"#;
+    let err = dag_from_dot(dot).unwrap_err();
+    assert!(matches!(err, IngestError::Cyclic(_)), "{err}");
+
+    let json = r#"{
+      "format": "parconv-dag", "version": 1, "name": "loopy",
+      "tasks": [
+        {"id": "a", "kind": "relu", "bytes": 8, "deps": ["b"]},
+        {"id": "b", "kind": "relu", "bytes": 8, "deps": ["a"]}
+      ]
+    }"#;
+    let err = dag_from_json(json).unwrap_err();
+    assert!(matches!(err, IngestError::Cyclic(_)), "{err}");
+}
+
+#[test]
+fn unknown_op_kinds_fail_loudly_in_both_formats() {
+    let json = r#"{
+      "format": "parconv-dag", "version": 1, "name": "g",
+      "tasks": [{"id": "t0", "kind": "attention", "deps": []}]
+    }"#;
+    let err = dag_from_json(json).unwrap_err();
+    assert!(
+        matches!(err, IngestError::UnknownKind { .. }),
+        "{err}"
+    );
+    assert!(err.to_string().contains("conv"), "lists taxonomy: {err}");
+
+    let err =
+        dag_from_dot("digraph g { a [kind=attention] }").unwrap_err();
+    assert!(matches!(err, IngestError::UnknownKind { .. }), "{err}");
+}
+
+#[test]
+fn duplicate_task_ids_fail_loudly_in_both_formats() {
+    let json = r#"{
+      "format": "parconv-dag", "version": 1, "name": "g",
+      "tasks": [
+        {"id": "t0", "kind": "input", "deps": []},
+        {"id": "t0", "kind": "relu", "bytes": 8, "deps": []}
+      ]
+    }"#;
+    assert!(matches!(
+        dag_from_json(json),
+        Err(IngestError::DuplicateId { .. })
+    ));
+    assert!(matches!(
+        dag_from_dot("digraph g { a [kind=input] a [kind=input] }"),
+        Err(IngestError::DuplicateId { .. })
+    ));
+}
+
+// ---------------------------------------------------------------------
+// fixtures: round trips and generator pins
+// ---------------------------------------------------------------------
+
+#[test]
+fn checked_in_json_fixtures_round_trip_bit_identically() {
+    // import → export must reproduce each fixture byte-for-byte: the
+    // files are in canonical export form, so any drift in either the
+    // importer or the exporter shows up as a diff here
+    for name in [
+        "resnet.json",
+        "transformer.json",
+        "random_1.json",
+        "random_7.json",
+        "random_13.json",
+        "random_41.json",
+    ] {
+        let path = fixture(name);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let (label, dag) = dag_from_json(&text).unwrap();
+        assert_eq!(dag_to_json(&dag, &label), text, "{name}");
+        let (label2, back) = dag_from_json(&dag_to_json(&dag, &label))
+            .unwrap();
+        assert_eq!(label2, label, "{name}");
+        assert_eq!(dag_digest(&back), dag_digest(&dag), "{name}");
+    }
+}
+
+#[test]
+fn fixtures_match_the_builders_they_were_exported_from() {
+    let (name, dag) = load_graph_file(&fixture("resnet.json")).unwrap();
+    assert_eq!(name, "resnet50");
+    assert_eq!(
+        dag_digest(&dag),
+        dag_digest(&Network::ResNet50.build(32)),
+        "resnet.json drifted from Network::ResNet50.build(32)"
+    );
+
+    let (name, dag) =
+        load_graph_file(&fixture("transformer.json")).unwrap();
+    let spec = TransformerSpec::default();
+    assert_eq!(name, spec.label());
+    assert_eq!(
+        dag_digest(&dag),
+        dag_digest(&spec.build().unwrap()),
+        "transformer.json drifted from TransformerSpec::default()"
+    );
+}
+
+#[test]
+fn tiny_dot_fixture_loads_and_has_conv_parallelism() {
+    let (name, dag) = load_graph_file(&fixture("tiny.dot")).unwrap();
+    assert_eq!(name, "tiny");
+    assert_eq!(dag.len(), 6);
+    assert_eq!(dag.conv_ids().len(), 2);
+    assert_eq!(dag.independent_conv_pairs().len(), 1);
+}
+
+// ---------------------------------------------------------------------
+// end-to-end: imported graphs are first-class workloads
+// ---------------------------------------------------------------------
+
+#[test]
+fn imported_builtin_plans_bit_identically_to_the_constructor() {
+    // the PR's acceptance bar: exporting a built-in network and loading
+    // it back must produce the same plan, bit for bit — digest-keyed
+    // caching treats the two DAGs as one
+    let built = Network::ResNet50.build(32);
+    let (_, imported) =
+        load_graph_file(&fixture("resnet.json")).unwrap();
+    assert_eq!(dag_digest(&imported), dag_digest(&built));
+
+    let session = Session::new(
+        DeviceSpec::k40(),
+        config(SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 2),
+    );
+    let from_ctor = session.plan_labeled(&built, "resnet50");
+    let from_file = session.plan_labeled(&imported, "resnet50");
+    assert_eq!(from_ctor.digest(), from_file.digest());
+    // same session: the second request must be a cache hit, not a build
+    let stats = session.stats();
+    assert_eq!(stats.plans_built, 1);
+    assert_eq!(stats.cache_hits, 1);
+
+    // fresh sessions agree too (no cache assistance)
+    let fresh = Session::new(
+        DeviceSpec::k40(),
+        config(SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 2),
+    );
+    assert_eq!(
+        fresh.plan_labeled(&imported, "resnet50").digest(),
+        from_ctor.digest()
+    );
+}
+
+#[test]
+fn transformer_gains_from_inter_op_parallelism() {
+    // the generated block's H independent head chains must actually buy
+    // a speedup when the scheduler may overlap convs, vs the fully
+    // serial single-stream baseline — under the event executor
+    let dag = TransformerSpec {
+        layers: 1,
+        heads: 8,
+        d_model: 512,
+        seq: 128,
+        batch: 8,
+    }
+    .build()
+    .unwrap();
+
+    let mut serial = Session::new(
+        DeviceSpec::k40(),
+        config(SelectionPolicy::FastestOnly, PartitionMode::Serial, 1),
+    );
+    serial.set_executor(ExecutorKind::Event);
+    let base = serial.run(&dag);
+
+    let mut packed = Session::new(
+        DeviceSpec::k40(),
+        config(SelectionPolicy::ProfileGuided, PartitionMode::IntraSm, 4),
+    );
+    packed.set_executor(ExecutorKind::Event);
+    let over = packed.run(&dag);
+
+    assert!(
+        over.makespan_us < base.makespan_us,
+        "co-execution must beat serial: {} vs {}",
+        over.makespan_us,
+        base.makespan_us
+    );
+    assert!(
+        over.conv_overlap_us > 0.0,
+        "the head chains never overlapped"
+    );
+}

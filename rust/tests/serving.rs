@@ -10,7 +10,7 @@ use parconv::cluster::{DevicePool, LinkModel, PoolOptions};
 use parconv::coordinator::ScheduleConfig;
 use parconv::gpusim::DeviceSpec;
 use parconv::graph::Network;
-use parconv::serve::{ArrivalKind, ServeConfig, ServeDriver};
+use parconv::serve::{ArrivalKind, ModelSpec, ServeConfig, ServeDriver};
 
 fn driver(cfg: ServeConfig) -> ServeDriver {
     ServeDriver::new(DeviceSpec::k40(), ScheduleConfig::default(), cfg)
@@ -43,7 +43,7 @@ fn shedding_grows_with_offered_load() {
         window_us: 0.0,
         max_batch: 1,
         slo_us: 0.0,
-        mix: vec![Network::GoogleNet],
+        mix: vec![ModelSpec::Builtin(Network::GoogleNet)],
         ..ServeConfig::default()
     };
     let probe = driver(base.clone()).run();
