@@ -10,20 +10,63 @@
 //! placement and route work onto the faster generations. CI greps the
 //! `RESULT:` line — HEFT must strictly beat greedy on at least one
 //! heterogeneous cell, or this bench exits non-zero.
+//!
+//! `--jobs N` spreads cells over N worker threads (default 1). Every
+//! cell is a pure function of its (pool, workload, planner) inputs, so
+//! the table, the `RESULT:` line, and the exit code are identical at any
+//! job count — only wall time changes.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use parconv::cluster::PoolSpec;
-use parconv::graph::Network;
-use parconv::ingest::TransformerSpec;
-use parconv::plan::PlannerKind;
-use parconv::plan::Planner;
 use parconv::coordinator::ScheduleConfig;
+use parconv::graph::{Dag, Network};
+use parconv::ingest::TransformerSpec;
+use parconv::plan::Planner;
+use parconv::plan::PlannerKind;
 use parconv::sim::ExecutorKind;
 use parconv::util::{fmt_us, Table};
 
+struct CellRes {
+    build_ms: f64,
+    makespan_us: f64,
+}
+
+fn run_cell(pool: &PoolSpec, dag: &Dag, label: &str, kind: PlannerKind) -> CellRes {
+    let planner =
+        Planner::with_scheduler(pool.clone(), ScheduleConfig::default(), kind);
+    let b0 = Instant::now();
+    let plan = planner.plan(dag, label);
+    let build_ms = b0.elapsed().as_secs_f64() * 1e3;
+    let r = plan
+        .execute_on(dag, pool, ExecutorKind::Event)
+        .expect("freshly built plan replays on its own pool");
+    CellRes { build_ms, makespan_us: r.makespan_us }
+}
+
 fn main() {
     let t0 = Instant::now();
+    let mut jobs = 1usize;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--jobs" => {
+                jobs = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| {
+                        eprintln!("--jobs needs an integer");
+                        std::process::exit(2);
+                    })
+            }
+            other => {
+                eprintln!("unknown flag {other}");
+                std::process::exit(2);
+            }
+        }
+    }
     let batch = 32;
     let pools: Vec<(&str, bool)> = vec![
         // (member list, heterogeneous?)
@@ -31,6 +74,10 @@ fn main() {
         ("k40,v100", true),
         ("k40,p100,v100,a100", true),
     ];
+    let parsed: Vec<PoolSpec> = pools
+        .iter()
+        .map(|(list, _)| PoolSpec::parse(list).expect("bench pool lists are valid"))
+        .collect();
     // the three CNN archetypes plus a generated transformer block — the
     // ingest path's GEMM-as-1x1-conv workload rides the same matrix
     let tf = TransformerSpec { batch, ..TransformerSpec::default() };
@@ -48,8 +95,58 @@ fn main() {
     .collect();
     println!(
         "=== planner matrix: planner x workload x pool (batch {batch}, \
-         executed under the event core) ===\n"
+         executed under the event core, {} jobs) ===\n",
+        jobs.max(1)
     );
+
+    // flatten the grid so cells can run on worker threads; the report
+    // below walks it in order, so output is identical at any job count
+    let cells: Vec<(usize, usize, PlannerKind)> = (0..pools.len())
+        .flat_map(|pi| {
+            (0..workloads.len()).flat_map(move |wi| {
+                PlannerKind::ALL.iter().map(move |&kind| (pi, wi, kind))
+            })
+        })
+        .collect();
+
+    let results: Vec<CellRes> = if jobs <= 1 {
+        cells
+            .iter()
+            .map(|&(pi, wi, kind)| {
+                run_cell(&parsed[pi], &workloads[wi].1, &workloads[wi].0, kind)
+            })
+            .collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<CellRes>>> =
+            Mutex::new(cells.iter().map(|_| None).collect());
+        std::thread::scope(|s| {
+            for _ in 0..jobs.min(cells.len()) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let (pi, wi, kind) = cells[i];
+                    let out = run_cell(
+                        &parsed[pi],
+                        &workloads[wi].1,
+                        &workloads[wi].0,
+                        kind,
+                    );
+                    slots.lock().expect("no panics hold the lock")[i] =
+                        Some(out);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .expect("workers joined")
+            .into_iter()
+            .map(|o| o.expect("every cell ran"))
+            .collect()
+    };
+
     let mut t = Table::new(vec![
         "Pool",
         "Workload",
@@ -60,39 +157,30 @@ fn main() {
     ]);
     let mut hetero_cells = 0usize;
     let mut heft_wins = 0usize;
-    for (list, hetero) in &pools {
-        let pool = PoolSpec::parse(list).expect("bench pool lists are valid");
-        for (label, dag) in &workloads {
-            let mut greedy_us = None;
-            for &kind in PlannerKind::ALL {
-                let planner = Planner::with_scheduler(
-                    pool.clone(),
-                    ScheduleConfig::default(),
-                    kind,
-                );
-                let b0 = Instant::now();
-                let plan = planner.plan(dag, label);
-                let build_ms = b0.elapsed().as_secs_f64() * 1e3;
-                let r = plan
-                    .execute_on(dag, &pool, ExecutorKind::Event)
-                    .expect("freshly built plan replays on its own pool");
-                let base = *greedy_us.get_or_insert(r.makespan_us);
-                if *hetero && kind == PlannerKind::Heft {
-                    hetero_cells += 1;
-                    if r.makespan_us < base {
-                        heft_wins += 1;
-                    }
-                }
-                t.row(vec![
-                    list.to_string(),
-                    label.clone(),
-                    kind.name().to_string(),
-                    format!("{build_ms:.1} ms"),
-                    fmt_us(r.makespan_us),
-                    format!("{:.2}x", base / r.makespan_us.max(1e-9)),
-                ]);
+    let mut greedy_us = None;
+    let mut last_group = usize::MAX;
+    for (&(pi, wi, kind), res) in cells.iter().zip(&results) {
+        let group = pi * workloads.len() + wi;
+        if group != last_group {
+            greedy_us = None;
+            last_group = group;
+        }
+        let base = *greedy_us.get_or_insert(res.makespan_us);
+        let (list, hetero) = pools[pi];
+        if hetero && kind == PlannerKind::Heft {
+            hetero_cells += 1;
+            if res.makespan_us < base {
+                heft_wins += 1;
             }
         }
+        t.row(vec![
+            list.to_string(),
+            workloads[wi].0.clone(),
+            kind.name().to_string(),
+            format!("{:.1} ms", res.build_ms),
+            fmt_us(res.makespan_us),
+            format!("{:.2}x", base / res.makespan_us.max(1e-9)),
+        ]);
     }
     println!("{}", t.render());
     println!(

@@ -4,6 +4,9 @@
 //! measures what the Plan/Execute split buys: replay latency with
 //! selection amortized away, and the session cache hit rate under
 //! repeated traffic.
+//!
+//! `--json OUT` writes the headline numbers as a flat metrics object in
+//! the `BENCH_simcore.json` shape shared with `sim_scale`.
 
 use std::time::Instant;
 
@@ -14,10 +17,28 @@ use parconv::coordinator::{
 use parconv::gpusim::{DeviceSpec, Engine, PartitionMode};
 use parconv::graph::Network;
 use parconv::plan::Session;
-use parconv::sim::ExecutorKind;
+use parconv::sim::{last_event_run_events, ExecutorKind};
 use parconv::util::fmt_bytes;
 
 fn main() {
+    let mut json_out: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => {
+                json_out = Some(args.next().unwrap_or_else(|| {
+                    eprintln!("--json needs a path");
+                    std::process::exit(2);
+                }))
+            }
+            other => {
+                eprintln!("unknown flag {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let mut metrics: Vec<(&'static str, f64)> = Vec::new();
+
     let dev = DeviceSpec::k40();
 
     // 1. engine block throughput: many medium kernels back to back
@@ -39,6 +60,7 @@ fn main() {
         total_blocks as f64 / dt / 1e6,
         r.makespan_us / 1e3
     );
+    metrics.push(("engine_blocks_per_sec", total_blocks as f64 / dt));
 
     // 2. full-network scheduling wall time
     for net in [Network::GoogleNet, Network::ResNet50] {
@@ -63,6 +85,13 @@ fn main() {
             r.makespan_us / 1e3,
             r.rounds
         );
+        metrics.push((
+            match net {
+                Network::GoogleNet => "googlenet_sched_wall_ms",
+                _ => "resnet50_sched_wall_ms",
+            },
+            wall,
+        ));
     }
 
     // 3. discovery throughput
@@ -77,6 +106,7 @@ fn main() {
         pairs as f64 * 49.0 / (wall / 1e3),
         f.len()
     );
+    metrics.push(("discovery_pair_evals_per_sec", pairs as f64 * 49.0 / (wall / 1e3)));
 
     // 4. plan/replay split: planning cost vs replay latency. Replay skips
     //    selection entirely (pinned by rust/tests/session_cache.rs), so
@@ -110,6 +140,8 @@ fn main() {
         plan.meta.selector_calls,
         (plan_ms + replay_ms) / replay_ms
     );
+    metrics.push(("plan_build_ms", plan_ms));
+    metrics.push(("replay_ms_per_iter", replay_ms));
 
     // 5. session cache hit rate under repeated mixed traffic: 4 networks
     //    x 16 requests each, one shared serving session
@@ -138,6 +170,11 @@ fn main() {
         stats.hit_rate() * 100.0,
         total_ms / (stats.plans_built + stats.cache_hits) as f64
     );
+    metrics.push(("session_cache_hit_rate", stats.hit_rate()));
+    metrics.push((
+        "session_ms_per_request",
+        total_ms / (stats.plans_built + stats.cache_hits) as f64,
+    ));
 
     // 6. executor comparison: what the group barrier costs, and the
     //    corrected workspace high-watermark. The barrier path holds every
@@ -173,5 +210,28 @@ fn main() {
             r.rounds,
             wall
         );
+        if exec == ExecutorKind::Event {
+            metrics.push(("event_replay_ms", wall));
+            metrics.push((
+                "event_events_per_sec",
+                last_event_run_events() as f64 / (wall / 1e3).max(1e-9),
+            ));
+        } else {
+            metrics.push(("barrier_replay_ms", wall));
+        }
+    }
+
+    if let Some(path) = &json_out {
+        let mut s =
+            String::from("{\n  \"bench\": \"sim_perf\",\n  \"metrics\": {\n");
+        for (i, (k, v)) in metrics.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{k}\": {v:.3}{}",
+                if i + 1 == metrics.len() { "\n" } else { ",\n" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        std::fs::write(path, s).expect("write --json output");
+        println!("wrote {path}");
     }
 }

@@ -1,0 +1,339 @@
+//! Bench — `sim_scale`: event-core throughput at 1k/10k/100k-node scale.
+//!
+//! ROADMAP item 3 made scale a first-class target: the ingestion pipeline
+//! (random/transformer/imported DAGs) and data-parallel replication can
+//! produce graphs orders of magnitude beyond the hand-coded CNNs, and the
+//! simulator's own throughput decides whether sweeping them is feasible.
+//! One cell per (graph, devices): plan-build wall time, execute wall
+//! time, events processed (engine kernel events + op events) and
+//! events/sec through the event core, plus the process-wide peak RSS at
+//! the end.
+//!
+//! Two graph families:
+//! - **layered** — `random_layered_dag_sized` fork/join DAGs at
+//!   1k/10k/100k ops; multi-device cells are placed across a homogeneous
+//!   pool by the HEFT list scheduler (the plan is the placement
+//!   authority).
+//! - **replicated** — GoogleNet data-parallel training DAGs at 2/4/8
+//!   replicas (per-replica graphs plus ring all-reduce ops), the
+//!   cluster-layer path.
+//!
+//! Flags:
+//! - `--json OUT` write a `BENCH_simcore.json`-style report to OUT
+//! - `--jobs N` run cells on N worker threads (default 1; cells stay
+//!   deterministic and are reported in grid order, but wall-clock
+//!   metrics share cores — keep `--jobs 1` when enforcing a floor)
+//! - `--max-nodes N` / `--max-devices D` trim the grid (CI runs the
+//!   10k-node single-device cell only)
+//! - `--min-events-per-sec F` exit non-zero if the 10k-node x 1-device
+//!   layered cell falls below F events/sec — the pinned CI floor
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use parconv::cluster::{DevicePool, LinkModel, PoolOptions, PoolSpec};
+use parconv::coordinator::{
+    PriorityPolicy, ScheduleConfig, SelectionPolicy,
+};
+use parconv::gpusim::{DeviceSpec, PartitionMode};
+use parconv::graph::Network;
+use parconv::ingest::random_layered_dag_sized;
+use parconv::plan::{Planner, PlannerKind};
+use parconv::sim::{last_event_run_events, ExecutorKind};
+use parconv::util::{fmt_bytes, fmt_us, peak_rss_bytes, Table};
+
+#[derive(Clone, Copy)]
+enum Cell {
+    Layered { nodes: usize, devices: usize },
+    Replicated { replicas: usize },
+}
+
+impl Cell {
+    fn devices(&self) -> usize {
+        match *self {
+            Cell::Layered { devices, .. } => devices,
+            Cell::Replicated { replicas } => replicas,
+        }
+    }
+
+    fn nodes_hint(&self) -> usize {
+        match *self {
+            Cell::Layered { nodes, .. } => nodes,
+            Cell::Replicated { .. } => 0, // decided by the training DAG
+        }
+    }
+}
+
+struct CellOut {
+    label: String,
+    nodes: usize,
+    devices: usize,
+    plan_ms: f64,
+    exec_ms: f64,
+    events: u64,
+    events_per_sec: f64,
+    makespan_us: f64,
+}
+
+fn sched() -> ScheduleConfig {
+    ScheduleConfig {
+        policy: SelectionPolicy::ProfileGuided,
+        partition: PartitionMode::IntraSm,
+        streams: 2,
+        workspace_limit: 4 * 1024 * 1024 * 1024,
+        priority: PriorityPolicy::CriticalPath,
+    }
+}
+
+fn run_cell(cell: &Cell) -> CellOut {
+    match *cell {
+        Cell::Layered { nodes, devices } => {
+            let dag = random_layered_dag_sized(0x5eed ^ nodes as u64, nodes);
+            let pool =
+                PoolSpec::homogeneous(DeviceSpec::k40(), devices);
+            // single-device cells take the default greedy packer; wider
+            // pools need a list scheduler to own placement
+            let kind = if devices > 1 {
+                PlannerKind::Heft
+            } else {
+                PlannerKind::Greedy
+            };
+            let planner =
+                Planner::with_scheduler(pool.clone(), sched(), kind);
+            let label = format!("layered {nodes} x{devices}dev");
+            let t0 = Instant::now();
+            let plan = planner.plan(&dag, &label);
+            let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let t0 = Instant::now();
+            let r = plan
+                .execute_on(&dag, &pool, ExecutorKind::Event)
+                .expect("freshly built plan replays on its own pool");
+            let exec_s = t0.elapsed().as_secs_f64();
+            let events = last_event_run_events();
+            CellOut {
+                label,
+                nodes: dag.len(),
+                devices,
+                plan_ms,
+                exec_ms: exec_s * 1e3,
+                events,
+                events_per_sec: events as f64 / exec_s.max(1e-9),
+                makespan_us: r.makespan_us,
+            }
+        }
+        Cell::Replicated { replicas } => {
+            let fwd = Network::GoogleNet.build(16);
+            let pool = DevicePool::new(
+                PoolOptions::homogeneous(DeviceSpec::k40(), replicas)
+                    .schedule(sched())
+                    .link(LinkModel::pcie3())
+                    .overlap(true),
+            );
+            let dag = pool.training_dag(&fwd);
+            let label = format!("googlenet-train x{replicas}dev");
+            let t0 = Instant::now();
+            let _plan = pool.session().plan(&dag);
+            let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let t0 = Instant::now();
+            let r = pool.session().run(&dag); // cache hit: replay only
+            let exec_s = t0.elapsed().as_secs_f64();
+            let events = last_event_run_events();
+            CellOut {
+                label,
+                nodes: dag.len(),
+                devices: replicas,
+                plan_ms,
+                exec_ms: exec_s * 1e3,
+                events,
+                events_per_sec: events as f64 / exec_s.max(1e-9),
+                makespan_us: r.makespan_us,
+            }
+        }
+    }
+}
+
+fn main() {
+    let t_start = Instant::now();
+    let mut json_out: Option<String> = None;
+    let mut jobs = 1usize;
+    let mut max_nodes = usize::MAX;
+    let mut max_devices = usize::MAX;
+    let mut min_eps: Option<f64> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let mut val = |flag: &str| {
+            args.next().unwrap_or_else(|| {
+                eprintln!("{flag} needs a value");
+                std::process::exit(2);
+            })
+        };
+        match a.as_str() {
+            "--json" => json_out = Some(val("--json")),
+            "--jobs" => {
+                jobs = val("--jobs").parse().unwrap_or_else(|_| {
+                    eprintln!("--jobs needs an integer");
+                    std::process::exit(2);
+                })
+            }
+            "--max-nodes" => {
+                max_nodes = val("--max-nodes").parse().unwrap_or_else(|_| {
+                    eprintln!("--max-nodes needs an integer");
+                    std::process::exit(2);
+                })
+            }
+            "--max-devices" => {
+                max_devices =
+                    val("--max-devices").parse().unwrap_or_else(|_| {
+                        eprintln!("--max-devices needs an integer");
+                        std::process::exit(2);
+                    })
+            }
+            "--min-events-per-sec" => {
+                min_eps = Some(val("--min-events-per-sec").parse().unwrap_or_else(
+                    |_| {
+                        eprintln!("--min-events-per-sec needs a number");
+                        std::process::exit(2);
+                    },
+                ))
+            }
+            other => {
+                eprintln!("unknown flag {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let cells: Vec<Cell> = [
+        Cell::Layered { nodes: 1_000, devices: 1 },
+        Cell::Layered { nodes: 10_000, devices: 1 },
+        Cell::Layered { nodes: 10_000, devices: 2 },
+        Cell::Layered { nodes: 100_000, devices: 1 },
+        Cell::Layered { nodes: 100_000, devices: 4 },
+        Cell::Layered { nodes: 100_000, devices: 8 },
+        Cell::Replicated { replicas: 2 },
+        Cell::Replicated { replicas: 4 },
+        Cell::Replicated { replicas: 8 },
+    ]
+    .into_iter()
+    .filter(|c| c.nodes_hint() <= max_nodes && c.devices() <= max_devices)
+    .collect();
+
+    println!(
+        "=== sim_scale: event-core throughput, {} cells ({} jobs) ===\n",
+        cells.len(),
+        jobs.max(1)
+    );
+
+    let results: Vec<CellOut> = if jobs <= 1 {
+        cells.iter().map(run_cell).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<CellOut>>> =
+            Mutex::new(cells.iter().map(|_| None).collect());
+        std::thread::scope(|s| {
+            for _ in 0..jobs.min(cells.len()) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let out = run_cell(&cells[i]);
+                    slots.lock().expect("no panics hold the lock")[i] =
+                        Some(out);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .expect("workers joined")
+            .into_iter()
+            .map(|o| o.expect("every cell ran"))
+            .collect()
+    };
+
+    let mut t = Table::new(vec![
+        "Cell",
+        "Nodes",
+        "Devices",
+        "Plan build",
+        "Execute",
+        "Events",
+        "Events/s",
+        "Sim makespan",
+    ]);
+    for r in &results {
+        t.row(vec![
+            r.label.clone(),
+            format!("{}", r.nodes),
+            format!("{}", r.devices),
+            format!("{:.1} ms", r.plan_ms),
+            format!("{:.1} ms", r.exec_ms),
+            format!("{}", r.events),
+            format!("{:.2} M/s", r.events_per_sec / 1e6),
+            fmt_us(r.makespan_us),
+        ]);
+    }
+    println!("{}", t.render());
+    let rss = peak_rss_bytes();
+    println!(
+        "\npeak RSS: {}",
+        rss.map_or("n/a".to_string(), fmt_bytes)
+    );
+    println!("bench wall time: {:.2} s", t_start.elapsed().as_secs_f64());
+
+    if let Some(path) = &json_out {
+        let mut s = String::from("{\n  \"bench\": \"sim_scale\",\n");
+        s.push_str(&format!(
+            "  \"peak_rss_bytes\": {},\n  \"cells\": [\n",
+            rss.unwrap_or(0)
+        ));
+        for (i, r) in results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"label\": \"{}\", \"nodes\": {}, \"devices\": {}, \
+                 \"plan_build_ms\": {:.3}, \"exec_ms\": {:.3}, \
+                 \"events\": {}, \"events_per_sec\": {:.1}, \
+                 \"makespan_us\": {:.3}}}{}",
+                r.label,
+                r.nodes,
+                r.devices,
+                r.plan_ms,
+                r.exec_ms,
+                r.events,
+                r.events_per_sec,
+                r.makespan_us,
+                if i + 1 == results.len() { "\n" } else { ",\n" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s).expect("write --json output");
+        println!("wrote {path}");
+    }
+
+    if let Some(floor) = min_eps {
+        let cell = results.iter().find(|r| {
+            r.label.starts_with("layered 10000 ") && r.devices == 1
+        });
+        match cell {
+            Some(c) if c.events_per_sec >= floor => println!(
+                "floor ok: {:.2} M events/s >= {:.2} M events/s",
+                c.events_per_sec / 1e6,
+                floor / 1e6
+            ),
+            Some(c) => {
+                eprintln!(
+                    "FAIL: 10k-node cell ran {:.0} events/s, floor {floor:.0}",
+                    c.events_per_sec
+                );
+                std::process::exit(1);
+            }
+            None => {
+                eprintln!(
+                    "FAIL: --min-events-per-sec set but the 10k-node \
+                     single-device cell was filtered out of the grid"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+}

@@ -66,7 +66,7 @@ pub type ReduceSite = (usize, u64);
 /// from; `train` is `training_dag(fwd)`.
 pub fn reduce_sites(fwd: &Dag, train: &Dag) -> Vec<ReduceSite> {
     let position = |name: &str| -> Option<usize> {
-        train.ops.iter().position(|o| o.name == name)
+        train.ops.iter().position(|o| &*o.name == name)
     };
     let mut sites = Vec::new();
     for op in &fwd.ops {

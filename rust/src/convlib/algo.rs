@@ -123,9 +123,14 @@ pub struct IssueProfile {
 
 /// Everything the simulator / scheduler needs to know about one kernel
 /// launch of one convolution under one algorithm.
+///
+/// `name` and `_device` are interned `Arc<str>`s: the executors clone a
+/// `KernelDesc` per launch (and per kernel record), and at 100k-node
+/// scale per-clone `String` heap traffic dominated the event loop.
+/// Cloning the whole descriptor is now allocation-free.
 #[derive(Clone, Debug)]
 pub struct KernelDesc {
-    pub name: String,
+    pub name: std::sync::Arc<str>,
     pub algo: Algorithm,
     /// The convolution this kernel computes (cost-model parameters).
     pub params: super::ConvParams,
@@ -141,7 +146,7 @@ pub struct KernelDesc {
     pub mem_stall_frac: f64,
     /// Sustained fraction of device peak FLOP/s when running alone.
     pub time_efficiency: f64,
-    pub(crate) _device: String,
+    pub(crate) _device: std::sync::Arc<str>,
 }
 
 impl KernelDesc {

@@ -73,7 +73,9 @@ pub fn bwd_kernel_desc(
         BwdKind::Filter => wgrad_params(p),
     };
     let mut d = kernel_desc(algo, &eq, dev)?;
-    d.name = format!("{}_{}[{}]", algo.kernel_name(), kind.name(), p.short());
+    d.name =
+        format!("{}_{}[{}]", algo.kernel_name(), kind.name(), p.short())
+            .into();
     Some(d)
 }
 

@@ -104,7 +104,7 @@ pub fn kernel_desc(
     let launch = m.launch(p);
     let profile = m.issue_profile(p);
     Some(KernelDesc {
-        name: format!("{}[{}]", algo.kernel_name(), p.short()),
+        name: format!("{}[{}]", algo.kernel_name(), p.short()).into(),
         algo,
         params: p.clone(),
         launch,
@@ -114,7 +114,7 @@ pub fn kernel_desc(
         alu_util: profile.alu_util,
         mem_stall_frac: profile.mem_stall_frac,
         time_efficiency: m.time_efficiency(p),
-        _device: dev.name.clone(),
+        _device: dev.name.as_str().into(),
     })
 }
 

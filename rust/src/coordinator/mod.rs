@@ -5,10 +5,10 @@
 //!   profile-guided multi-metric selection, including the k-wide
 //!   [`selector::select_group`] packing.
 //! - [`scheduler`] — the scheduler vocabulary ([`ScheduleConfig`],
-//!   [`ScheduleResult`], priorities, the non-conv duration model); the
-//!   retired `Coordinator` facade survives only as a deprecated alias of
-//!   [`crate::plan::Session`]. Planning itself lives in
-//!   [`crate::plan::Planner`]; replay in [`crate::plan::Plan`].
+//!   [`ScheduleResult`], priorities, the non-conv duration model).
+//!   Planning itself lives in [`crate::plan::Planner`]; replay in
+//!   [`crate::plan::Plan`]; the serving facade is
+//!   [`crate::plan::Session`].
 //! - [`pairing`] — discovery of complementary convolution pairs and
 //!   k-wide groups (the paper's "27 similar cases" analysis).
 
@@ -17,8 +17,6 @@ pub mod scheduler;
 pub mod selector;
 
 pub use pairing::{discover_groups, discover_pairs, GroupFinding, PairFinding};
-#[allow(deprecated)]
-pub use scheduler::Coordinator;
 pub use scheduler::{
     non_conv_time_us, OpExec, PriorityPolicy, ScheduleConfig,
     ScheduleResult,

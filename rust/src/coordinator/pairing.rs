@@ -64,8 +64,8 @@ pub fn discover_pairs(
             findings.push(PairFinding {
                 op_a: a,
                 op_b: b,
-                name_a: dag.ops[a].name.clone(),
-                name_b: dag.ops[b].name.clone(),
+                name_a: dag.ops[a].name.to_string(),
+                name_b: dag.ops[b].name.to_string(),
                 algo_a: da.algo,
                 algo_b: db.algo,
                 serial_us: serial,
@@ -183,7 +183,7 @@ pub fn discover_groups(
             findings.push(GroupFinding {
                 names: ops
                     .iter()
-                    .map(|&i| dag.ops[i].name.clone())
+                    .map(|&i| dag.ops[i].name.to_string())
                     .collect(),
                 algos: g.descs.iter().map(|d| d.algo).collect(),
                 serial_us: g.serial_us,

@@ -1,4 +1,4 @@
-//! Scheduler types and the legacy [`Coordinator`] compatibility shim.
+//! Scheduler types: the shared scheduling vocabulary.
 //!
 //! "Selecting independent operations from the ready queue for concurrent
 //! execution is a challenging scheduling problem that highly depends on the
@@ -8,15 +8,14 @@
 //! [`crate::plan::Plan`] is replayed per request by
 //! [`crate::plan::Session`]. This module keeps the shared vocabulary —
 //! [`ScheduleConfig`], [`PriorityPolicy`], [`OpExec`], [`ScheduleResult`],
-//! the non-convolution duration model — plus `Coordinator`, now a
-//! deprecated type alias of [`Session`]: the shim's `execute_dag` was
-//! exactly `Session::run`, so the alias is the whole compatibility
-//! surface. New code should name `Session` directly.
+//! the non-convolution duration model. (The retired `Coordinator` alias of
+//! `Session` is gone; name `Session` directly.)
+
+use std::sync::Arc;
 
 use crate::convlib::Algorithm;
 use crate::gpusim::{DeviceSpec, PartitionMode};
 use crate::graph::OpKind;
-use crate::plan::Session;
 
 use super::selector::SelectionPolicy;
 
@@ -80,7 +79,9 @@ impl Default for ScheduleConfig {
 #[derive(Clone, Debug)]
 pub struct OpExec {
     pub op_id: usize,
-    pub name: String,
+    /// Interned op name (an `Arc<str>` clone of [`crate::graph::Op::name`]
+    /// — a refcount bump per record, not a heap copy).
+    pub name: Arc<str>,
     pub kind: &'static str,
     pub algo: Option<Algorithm>,
     pub start_us: f64,
@@ -120,17 +121,6 @@ pub struct ScheduleResult {
     pub comm_us: f64,
 }
 
-/// Retired legacy facade, kept as a one-line alias so old code and docs
-/// still resolve. `Coordinator::execute_dag` was exactly
-/// [`Session::run`]; call that. Every constructor (`new`,
-/// `with_failure_injection`) and accessor already lives on [`Session`]
-/// under the same name.
-#[deprecated(
-    since = "0.7.0",
-    note = "use plan::Session (Coordinator::execute_dag is Session::run)"
-)]
-pub type Coordinator = Session;
-
 /// Duration model for non-convolution ops: bandwidth-bound on the
 /// device, except gradient reductions, which are priced by the ring
 /// all-reduce formula of the link model they carry (the interconnect,
@@ -165,6 +155,7 @@ pub fn non_conv_time_us(kind: &OpKind, spec: &DeviceSpec) -> f64 {
 mod tests {
     use super::*;
     use crate::graph::Network;
+    use crate::plan::Session;
 
     fn coord(
         policy: SelectionPolicy,

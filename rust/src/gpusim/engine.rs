@@ -19,11 +19,13 @@
 //! `InterSm`/`IntraSm` implement the paper's proposed partitioning.
 
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 
-use crate::convlib::KernelDesc;
+use crate::convlib::{KernelDesc, LaunchConfig};
 
-use super::partition::{plan_intra_sm, split_sms, PartitionMode};
+use super::partition::{
+    plan_intra_sm_into, split_sms_into, PartitionMode, PlanScratch,
+};
 use super::sm::{max_additional_blocks, natural_residency, SmUsage};
 use super::timing::{full_rate_bw_demand, natural_wave_time_us};
 use super::DeviceSpec;
@@ -54,11 +56,22 @@ struct Wave {
 #[derive(Clone, Debug, Default)]
 struct SmState {
     usage: SmUsage,
-    // Keyed by a stable unique wave id; several waves of the same kernel
-    // may coexist on one SM (residency top-up after a co-resident kernel
-    // frees resources). BTreeMap: deterministic iteration (event order
-    // must not depend on hasher state).
-    waves: BTreeMap<u64, (KernelId, Wave)>,
+    // In-flight wave chunks as `(wid, kernel, wave)`, kept sorted by the
+    // globally monotonic wave id: several waves of the same kernel may
+    // coexist on one SM (residency top-up after a co-resident kernel
+    // frees resources). New waves always carry the largest wid so insert
+    // is a push; lookup/removal binary-search. A sorted Vec keeps the
+    // BTreeMap's deterministic wid-ascending iteration (event order must
+    // not depend on hasher state) without its per-insert node
+    // allocations — waves churn on every dispatch, and the Vec's
+    // capacity is reused for the whole run.
+    waves: Vec<(u64, KernelId, Wave)>,
+}
+
+impl SmState {
+    fn wave_index(&self, wid: u64) -> Option<usize> {
+        self.waves.binary_search_by_key(&wid, |&(w, _, _)| w).ok()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -197,6 +210,31 @@ pub struct Engine {
     /// Kernels completed since the last [`Engine::step_until`] drain — the
     /// stepping API's channel back to an external event-driven controller.
     finished_buf: Vec<KernelId>,
+    /// Events handled since construction/reset (pokes, stale skips and
+    /// wave completions alike) — the `sim_scale` bench's events/sec
+    /// numerator.
+    events_processed: u64,
+    /// IntraSm quota-plan cache: the plan is a pure function of the
+    /// runnable-kernel membership, so re-planning is skipped while the
+    /// mix is unchanged (`mix_key` is the membership the cached
+    /// `mix_plan` was computed for). Dispatch pokes between completions
+    /// then cost O(changed lanes), not a fresh water-fill per event.
+    mix_key: Vec<KernelId>,
+    mix_plan: Vec<u32>,
+    plan_scratch: PlanScratch,
+    // Dispatch-path scratch buffers, reused across events so the steady
+    // state loop performs no heap allocation (pinned by the
+    // `alloc_steady` test via a counting allocator).
+    scratch_heads: Vec<KernelId>,
+    scratch_ready: Vec<KernelId>,
+    scratch_with_blocks: Vec<KernelId>,
+    scratch_launches: Vec<LaunchConfig>,
+    scratch_utils: Vec<f64>,
+    scratch_plan: Vec<u32>,
+    scratch_owner: Vec<usize>,
+    scratch_remaining: Vec<u64>,
+    scratch_phi: Vec<f64>,
+    scratch_pushes: Vec<Ev>,
 }
 
 impl Engine {
@@ -214,11 +252,61 @@ impl Engine {
             gen_counter: 0,
             stream_masks: Vec::new(),
             finished_buf: Vec::new(),
+            events_processed: 0,
+            mix_key: Vec::new(),
+            mix_plan: Vec::new(),
+            plan_scratch: PlanScratch::default(),
+            scratch_heads: Vec::new(),
+            scratch_ready: Vec::new(),
+            scratch_with_blocks: Vec::new(),
+            scratch_launches: Vec::new(),
+            scratch_utils: Vec::new(),
+            scratch_plan: Vec::new(),
+            scratch_owner: Vec::new(),
+            scratch_remaining: Vec::new(),
+            scratch_phi: Vec::new(),
+            scratch_pushes: Vec::new(),
         }
+    }
+
+    /// Return the engine to its just-constructed state for a new `spec` /
+    /// `mode`, keeping every buffer's capacity: the event executor reuses
+    /// one engine per device slot across `run` calls, so a warm engine's
+    /// steady state allocates nothing.
+    pub fn reset(&mut self, spec: DeviceSpec, mode: PartitionMode) {
+        self.spec = spec;
+        self.mode = mode;
+        self.time = 0.0;
+        self.kernels.clear();
+        for sm in &mut self.sms {
+            sm.usage = SmUsage::default();
+            sm.waves.clear();
+        }
+        self.sms
+            .resize_with(self.spec.num_sms as usize, SmState::default);
+        for q in &mut self.streams {
+            q.clear();
+        }
+        self.heap.clear();
+        self.seq = 0;
+        self.gen_counter = 0;
+        self.stream_masks.clear();
+        self.finished_buf.clear();
+        self.events_processed = 0;
+        // kernel ids restart at 0: the membership cache must not match a
+        // previous run's mix
+        self.mix_key.clear();
+        self.mix_plan.clear();
     }
 
     pub fn spec(&self) -> &DeviceSpec {
         &self.spec
+    }
+
+    /// Events handled (dispatch pokes, stale skips, wave completions)
+    /// since construction or the last [`Engine::reset`].
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
     }
 
     /// Restrict a stream to a set of SMs (ROCm `cu_mask` analog). Bit i of
@@ -276,7 +364,7 @@ impl Engine {
             .kernels
             .iter()
             .map(|k| KernelRecord {
-                name: k.desc.name.clone(),
+                name: k.desc.name.to_string(),
                 stream: k.stream,
                 start_us: k.started.unwrap_or(0.0),
                 end_us: k.finished.unwrap_or(makespan),
@@ -339,6 +427,17 @@ impl Engine {
     /// completion happens within the bound — the caller's next event is
     /// then earlier than any of this engine's).
     pub fn step_until(&mut self, t_bound: f64) -> Vec<KernelId> {
+        let mut out = Vec::new();
+        self.step_until_into(t_bound, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Engine::step_until`]: completed kernel
+    /// ids are appended to `out` (cleared first), so a driver looping over
+    /// many engines reuses one buffer instead of heap-allocating a fresh
+    /// `Vec` per step.
+    pub fn step_until_into(&mut self, t_bound: f64, out: &mut Vec<KernelId>) {
+        out.clear();
         while let Some(top) = self.heap.peek() {
             if top.0.time > t_bound {
                 break;
@@ -350,7 +449,7 @@ impl Engine {
                 break;
             }
         }
-        std::mem::take(&mut self.finished_buf)
+        out.append(&mut self.finished_buf);
     }
 
     /// Start time of a kernel (None until its first wave launches).
@@ -374,7 +473,7 @@ impl Engine {
         }
         let mut blocks = k.blocks_left as f64;
         for sm in &self.sms {
-            for (kid, w) in sm.waves.values() {
+            for (_, kid, w) in &sm.waves {
                 if *kid != id {
                     continue;
                 }
@@ -393,6 +492,7 @@ impl Engine {
     /// the poke/stale/completion logic, re-dispatch. Shared verbatim by
     /// [`Engine::run`] and [`Engine::step_until`].
     fn handle_event(&mut self, ev: Ev) {
+        self.events_processed += 1;
         self.time = self.time.max(ev.time);
         if ev.sm == usize::MAX {
             // poke: launch-overhead elapsed
@@ -400,8 +500,8 @@ impl Engine {
             return;
         }
         // wave completion — skip stale generations
-        let stale = match self.sms[ev.sm].waves.get(&ev.wid) {
-            Some((_, w)) => w.gen != ev.gen,
+        let stale = match self.sms[ev.sm].wave_index(ev.wid) {
+            Some(i) => self.sms[ev.sm].waves[i].2.gen != ev.gen,
             None => true,
         };
         if stale {
@@ -412,8 +512,8 @@ impl Engine {
     }
 
     fn complete_wave(&mut self, sm: usize, wid: u64) {
-        let (kid, wave) =
-            self.sms[sm].waves.remove(&wid).expect("wave exists");
+        let idx = self.sms[sm].wave_index(wid).expect("wave exists");
+        let (_, kid, wave) = self.sms[sm].waves.remove(idx);
         let usage = SmUsage::of(&self.kernels[kid].desc.launch, wave.r);
         self.sms[sm].usage.sub(&usage);
         let k = &mut self.kernels[kid];
@@ -429,32 +529,34 @@ impl Engine {
         }
     }
 
-    /// Kernels currently allowed to hold blocks, per the partition mode.
-    fn eligible(&self) -> Vec<KernelId> {
+    /// Kernels currently allowed to hold blocks, per the partition mode,
+    /// written into `out` (cleared first) in launch-order priority.
+    fn eligible_into(&self, out: &mut Vec<KernelId>) {
         // stream heads that are unfinished
-        let heads: Vec<KernelId> = self
-            .streams
-            .iter()
-            .filter_map(|q| q.front().copied())
-            .filter(|&k| self.kernels[k].finished.is_none())
-            .collect();
+        out.clear();
+        out.extend(
+            self.streams
+                .iter()
+                .filter_map(|q| q.front().copied())
+                .filter(|&k| self.kernels[k].finished.is_none()),
+        );
         match self.mode {
             PartitionMode::Serial => {
                 // strict launch order, one at a time
-                heads.into_iter().min().into_iter().collect()
+                let first = out.iter().copied().min();
+                out.clear();
+                out.extend(first);
             }
-            _ => {
-                let mut h = heads;
-                h.sort_unstable(); // launch order priority
-                h
-            }
+            _ => out.sort_unstable(), // launch order priority
         }
     }
 
     fn dispatch(&mut self) {
-        let eligible = self.eligible();
+        let mut eligible = std::mem::take(&mut self.scratch_heads);
+        self.eligible_into(&mut eligible);
         // launch-overhead gating
-        let mut ready: Vec<KernelId> = Vec::new();
+        let mut ready = std::mem::take(&mut self.scratch_ready);
+        ready.clear();
         for &kid in &eligible {
             let k = &mut self.kernels[kid];
             let at = *k.eligible_at.get_or_insert(self.time);
@@ -474,64 +576,86 @@ impl Engine {
             }
         }
         self.start_waves(&ready);
+        self.scratch_heads = eligible;
+        self.scratch_ready = ready;
         self.recompute_rates();
     }
 
     /// Start new waves for ready kernels according to the partition plan.
     fn start_waves(&mut self, ready: &[KernelId]) {
-        let with_blocks: Vec<KernelId> = ready
-            .iter()
-            .copied()
-            .filter(|&k| self.kernels[k].blocks_left > 0)
-            .collect();
+        let mut with_blocks = std::mem::take(&mut self.scratch_with_blocks);
+        with_blocks.clear();
+        with_blocks.extend(
+            ready
+                .iter()
+                .copied()
+                .filter(|&k| self.kernels[k].blocks_left > 0),
+        );
         if with_blocks.is_empty() {
+            self.scratch_with_blocks = with_blocks;
             return;
         }
-        // Per-mode advisory residency plan.
-        let launches: Vec<&crate::convlib::LaunchConfig> = with_blocks
-            .iter()
-            .map(|&k| &self.kernels[k].desc.launch)
-            .collect();
-        let plan: Vec<u32> = match self.mode {
-            PartitionMode::Serial | PartitionMode::StreamsOnly => with_blocks
-                .iter()
-                .map(|&k| self.kernels[k].r_nat)
-                .collect(),
-            PartitionMode::InterSm => with_blocks
-                .iter()
-                .map(|&k| self.kernels[k].r_nat)
-                .collect(),
+        // Per-mode advisory residency plan, built in a reused buffer.
+        let mut plan = std::mem::take(&mut self.scratch_plan);
+        plan.clear();
+        match self.mode {
+            PartitionMode::Serial
+            | PartitionMode::StreamsOnly
+            | PartitionMode::InterSm => {
+                for &k in &with_blocks {
+                    plan.push(self.kernels[k].r_nat);
+                }
+            }
             PartitionMode::IntraSm => {
                 // plan_intra_sm handles any group width: exhaustive quota
                 // search for pairs, normalized water-filling for k > 2 —
-                // the k-wide admission path of the group scheduler.
-                let utils: Vec<f64> = with_blocks
-                    .iter()
-                    .map(|&k| self.kernels[k].desc.alu_util)
-                    .collect();
-                plan_intra_sm(&launches, &utils, &self.spec)
+                // the k-wide admission path of the group scheduler. The
+                // plan is a pure function of the runnable membership, so
+                // it is cached across dispatch pokes: only a membership
+                // change (kernel finished / became runnable) re-plans.
+                if self.mix_key != with_blocks {
+                    self.scratch_launches.clear();
+                    self.scratch_utils.clear();
+                    for &k in &with_blocks {
+                        self.scratch_launches
+                            .push(self.kernels[k].desc.launch);
+                        self.scratch_utils.push(self.kernels[k].desc.alu_util);
+                    }
+                    plan_intra_sm_into(
+                        &self.scratch_launches,
+                        &self.scratch_utils,
+                        &self.spec,
+                        &mut self.plan_scratch,
+                        &mut self.mix_plan,
+                    );
+                    self.mix_key.clear();
+                    self.mix_key.extend_from_slice(&with_blocks);
+                }
+                plan.extend_from_slice(&self.mix_plan);
             }
-        };
+        }
         // Inter-SM ownership map (only used in InterSm mode).
-        let owner: Option<Vec<usize>> = if self.mode == PartitionMode::InterSm {
-            let remaining: Vec<u64> = with_blocks
-                .iter()
-                .map(|&k| {
+        let use_owner = self.mode == PartitionMode::InterSm;
+        let mut owner = std::mem::take(&mut self.scratch_owner);
+        if use_owner {
+            self.scratch_remaining.clear();
+            for &k in &with_blocks {
+                self.scratch_remaining.push(
                     self.kernels[k].blocks_left
-                        + self.kernels[k].active_waves as u64
-                })
-                .collect();
-            Some(split_sms(self.spec.num_sms, &remaining))
-        } else {
-            None
-        };
+                        + self.kernels[k].active_waves as u64,
+                );
+            }
+            split_sms_into(
+                self.spec.num_sms,
+                &self.scratch_remaining,
+                &mut owner,
+            );
+        }
 
         for sm_idx in 0..self.sms.len() {
             for (pos, &kid) in with_blocks.iter().enumerate() {
-                if let Some(own) = &owner {
-                    if own[sm_idx] != pos {
-                        continue;
-                    }
+                if use_owner && owner[sm_idx] != pos {
+                    continue;
                 }
                 // ROCm-style CU mask: the stream may be pinned to a subset
                 // of SMs regardless of the partition mode.
@@ -545,9 +669,9 @@ impl Engine {
                 // residency already held by in-flight waves of this kernel
                 let r_held: u32 = self.sms[sm_idx]
                     .waves
-                    .values()
-                    .filter(|(k, _)| *k == kid)
-                    .map(|(_, w)| w.r)
+                    .iter()
+                    .filter(|(_, k, _)| *k == kid)
+                    .map(|(_, _, w)| w.r)
                     .sum();
                 if r_held >= plan[pos] {
                     continue; // at (or above) planned residency
@@ -592,23 +716,25 @@ impl Engine {
                 self.sms[sm_idx].usage.add(&SmUsage::of(&launch, r));
                 self.gen_counter += 1;
                 let wid = self.gen_counter;
-                self.sms[sm_idx].waves.insert(
+                // wid is globally monotonic, so a push keeps `waves` sorted
+                self.sms[sm_idx].waves.push((
                     wid,
-                    (
-                        kid,
-                        Wave {
-                            r,
-                            n_waves,
-                            chunk_blocks,
-                            frac_left: 1.0,
-                            rate: 0.0, // set by recompute_rates
-                            last_update: self.time,
-                            gen: wid,
-                        },
-                    ),
-                );
+                    kid,
+                    Wave {
+                        r,
+                        n_waves,
+                        chunk_blocks,
+                        frac_left: 1.0,
+                        rate: 0.0, // set by recompute_rates
+                        last_update: self.time,
+                        gen: wid,
+                    },
+                ));
             }
         }
+        self.scratch_with_blocks = with_blocks;
+        self.scratch_plan = plan;
+        self.scratch_owner = owner;
     }
 
     /// Recompute every active wave's rate (issue + bandwidth contention)
@@ -619,10 +745,12 @@ impl Engine {
     fn recompute_rates(&mut self) {
         let now = self.time;
         // Pass 1: per-SM issue factor (pure read).
-        let mut phi_per_sm = vec![1.0f64; self.sms.len()];
+        let mut phi_per_sm = std::mem::take(&mut self.scratch_phi);
+        phi_per_sm.clear();
+        phi_per_sm.resize(self.sms.len(), 1.0);
         for (si, sm) in self.sms.iter().enumerate() {
             let mut u_total = 0.0;
-            for (kid, wave) in sm.waves.values() {
+            for (_, kid, wave) in &sm.waves {
                 let k = &self.kernels[*kid];
                 u_total +=
                     k.desc.alu_util * (wave.r as f64 / k.r_nat as f64).min(1.0);
@@ -632,7 +760,7 @@ impl Engine {
         // Pass 2: global bandwidth factor.
         let mut demand = 0.0; // bytes per us
         for (si, sm) in self.sms.iter().enumerate() {
-            for (kid, wave) in sm.waves.values() {
+            for (_, kid, wave) in &sm.waves {
                 let k = &self.kernels[*kid];
                 demand += k.bw_full * phi_per_sm[si]
                     * (wave.r as f64
@@ -642,11 +770,11 @@ impl Engine {
         let bw_limit = self.spec.effective_bw() / 1e6; // bytes per us
         let mu = if demand > bw_limit { bw_limit / demand } else { 1.0 };
         // Pass 3: reprice only dirty waves.
-        let mut pushes: Vec<Ev> = Vec::new();
+        let mut pushes = std::mem::take(&mut self.scratch_pushes);
+        pushes.clear();
         let gen_counter = &mut self.gen_counter;
         for (si, sm) in self.sms.iter_mut().enumerate() {
-            for (&wid, (kid, wave)) in sm.waves.iter_mut() {
-                let _ = wid;
+            for (wid, kid, wave) in sm.waves.iter_mut() {
                 let k = &self.kernels[*kid];
                 let new_rate =
                     phi_per_sm[si] * mu / (k.tau_nat_us * wave.n_waves as f64);
@@ -674,16 +802,18 @@ impl Engine {
                     time: eta.max(now),
                     seq: 0,
                     sm: si,
-                    wid,
+                    wid: *wid,
                     gen: wave.gen,
                 });
             }
         }
-        for mut ev in pushes {
+        for mut ev in pushes.drain(..) {
             ev.seq = self.seq;
             self.seq += 1;
             self.heap.push(Reverse(ev));
         }
+        self.scratch_phi = phi_per_sm;
+        self.scratch_pushes = pushes;
     }
 }
 

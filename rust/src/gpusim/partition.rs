@@ -13,6 +13,8 @@
 //!   ISCA'16; Dai et al., HPCA'18]: per-kernel block quotas are chosen so
 //!   blocks of complementary kernels co-reside on every SM.
 
+use std::borrow::Borrow;
+
 use crate::convlib::LaunchConfig;
 
 use super::sm::{can_host, max_additional_blocks, natural_residency, SmUsage};
@@ -51,6 +53,14 @@ impl PartitionMode {
 /// A per-SM residency plan: `quota[i]` blocks of runnable kernel `i`.
 pub type ResidencyPlan = Vec<u32>;
 
+/// Reusable workspace for [`plan_intra_sm_into`] / [`water_fill_into`].
+/// Holding one of these across calls keeps quota re-planning
+/// allocation-free on the simulator's hot dispatch path.
+#[derive(Clone, Debug, Default)]
+pub struct PlanScratch {
+    rnat: Vec<u32>,
+}
+
 /// Compute the per-SM residency split for the runnable kernels (in launch
 /// order) under a partitioning mode.
 ///
@@ -60,23 +70,49 @@ pub type ResidencyPlan = Vec<u32>;
 /// water-filling ([`water_fill`]) — the k-wide generalization that keeps
 /// every group member co-resident. `utils[i]` is kernel i's standalone
 /// ALU utilization (issue-slot demand) used by the pairwise objective.
-pub fn plan_intra_sm(
-    launches: &[&LaunchConfig],
+///
+/// Generic over owned or borrowed launch configs so callers can pass
+/// `&[LaunchConfig]` (scratch arenas) or `&[&LaunchConfig]` alike.
+pub fn plan_intra_sm<L: Borrow<LaunchConfig>>(
+    launches: &[L],
     utils: &[f64],
     spec: &DeviceSpec,
 ) -> ResidencyPlan {
+    let mut out = Vec::new();
+    plan_intra_sm_into(
+        launches,
+        utils,
+        spec,
+        &mut PlanScratch::default(),
+        &mut out,
+    );
+    out
+}
+
+/// Allocation-free form of [`plan_intra_sm`]: writes the plan into `out`
+/// (cleared first), using `scratch` for intermediates.
+pub fn plan_intra_sm_into<L: Borrow<LaunchConfig>>(
+    launches: &[L],
+    utils: &[f64],
+    spec: &DeviceSpec,
+    scratch: &mut PlanScratch,
+    out: &mut ResidencyPlan,
+) {
     assert_eq!(launches.len(), utils.len());
+    out.clear();
     match launches.len() {
-        0 => Vec::new(),
-        1 => vec![natural_residency(launches[0], spec)],
+        0 => {}
+        1 => out.push(natural_residency(launches[0].borrow(), spec)),
         2 => {
-            let r0_nat = natural_residency(launches[0], spec).max(1);
-            let r1_nat = natural_residency(launches[1], spec).max(1);
-            let mut best = (0.0f64, vec![r0_nat, 0]);
+            let l0 = launches[0].borrow();
+            let l1 = launches[1].borrow();
+            let r0_nat = natural_residency(l0, spec).max(1);
+            let r1_nat = natural_residency(l1, spec).max(1);
+            let mut best = (0.0f64, r0_nat, 0u32);
             for r0 in 0..=r0_nat {
-                let used = SmUsage::of(launches[0], r0);
+                let used = SmUsage::of(l0, r0);
                 let r1 =
-                    max_additional_blocks(launches[1], spec, &used).min(r1_nat);
+                    max_additional_blocks(l1, spec, &used).min(r1_nat);
                 // Warped-Slicer-style objective: combined *normalized
                 // progress* (fraction of each kernel's standalone rate),
                 // scaled down when the issue capacity is oversubscribed.
@@ -88,12 +124,13 @@ pub fn plan_intra_sm(
                     // tie-break: prefer actually co-resident plans
                     + 0.001 * ((r0 > 0) as u32 + (r1 > 0) as u32) as f64;
                 if score > best.0 {
-                    best = (score, vec![r0, r1]);
+                    best = (score, r0, r1);
                 }
             }
-            best.1
+            out.push(best.1);
+            out.push(best.2);
         }
-        _ => water_fill(launches, spec),
+        _ => water_fill_into(launches, spec, scratch, out),
     }
 }
 
@@ -106,29 +143,45 @@ pub fn plan_intra_sm(
 /// fractions; a kernel whose blocks no longer fit simply stops growing.
 /// Unlike [`greedy_fill`] (CUDA's leftover policy), later kernels are not
 /// starved by earlier ones, so a k-wide group keeps all members resident.
-pub fn water_fill(
-    launches: &[&LaunchConfig],
+pub fn water_fill<L: Borrow<LaunchConfig>>(
+    launches: &[L],
     spec: &DeviceSpec,
 ) -> ResidencyPlan {
-    let rnat: Vec<u32> = launches
-        .iter()
-        .map(|l| natural_residency(l, spec).max(1))
-        .collect();
-    let mut quota = vec![0u32; launches.len()];
+    let mut out = Vec::new();
+    water_fill_into(launches, spec, &mut PlanScratch::default(), &mut out);
+    out
+}
+
+/// Allocation-free form of [`water_fill`].
+pub fn water_fill_into<L: Borrow<LaunchConfig>>(
+    launches: &[L],
+    spec: &DeviceSpec,
+    scratch: &mut PlanScratch,
+    out: &mut ResidencyPlan,
+) {
+    let rnat = &mut scratch.rnat;
+    rnat.clear();
+    rnat.extend(
+        launches
+            .iter()
+            .map(|l| natural_residency(l.borrow(), spec).max(1)),
+    );
+    out.clear();
+    out.resize(launches.len(), 0);
     let mut used = SmUsage::default();
     loop {
         let mut pick: Option<usize> = None;
         for i in 0..launches.len() {
-            if quota[i] >= rnat[i] {
+            if out[i] >= rnat[i] {
                 continue;
             }
-            if !can_host(launches[i], spec, &used) {
+            if !can_host(launches[i].borrow(), spec, &used) {
                 continue;
             }
-            let frac = quota[i] as f64 / rnat[i] as f64;
+            let frac = out[i] as f64 / rnat[i] as f64;
             let better = match pick {
                 None => true,
-                Some(p) => frac < quota[p] as f64 / rnat[p] as f64,
+                Some(p) => frac < out[p] as f64 / rnat[p] as f64,
             };
             if better {
                 pick = Some(i);
@@ -136,20 +189,23 @@ pub fn water_fill(
         }
         match pick {
             Some(i) => {
-                quota[i] += 1;
-                used.add(&SmUsage::of(launches[i], 1));
+                out[i] += 1;
+                used.add(&SmUsage::of(launches[i].borrow(), 1));
             }
             None => break,
         }
     }
-    quota
 }
 
 /// CUDA leftover policy: fill in launch order.
-pub fn greedy_fill(launches: &[&LaunchConfig], spec: &DeviceSpec) -> ResidencyPlan {
+pub fn greedy_fill<L: Borrow<LaunchConfig>>(
+    launches: &[L],
+    spec: &DeviceSpec,
+) -> ResidencyPlan {
     let mut used = SmUsage::default();
     let mut plan = Vec::with_capacity(launches.len());
     for l in launches {
+        let l = l.borrow();
         let r = max_additional_blocks(l, spec, &used)
             .min(natural_residency(l, spec));
         used.add(&SmUsage::of(l, r));
@@ -162,10 +218,25 @@ pub fn greedy_fill(launches: &[&LaunchConfig], spec: &DeviceSpec) -> ResidencyPl
 /// proportionally to their remaining block counts (at least one SM each
 /// while SMs last).
 pub fn split_sms(num_sms: u32, blocks_remaining: &[u64]) -> Vec<usize> {
+    let mut owner = Vec::new();
+    split_sms_into(num_sms, blocks_remaining, &mut owner);
+    owner
+}
+
+/// Buffer-reusing form of [`split_sms`]: writes the owner map into `out`
+/// (cleared first), so the per-SM map itself is not reallocated per
+/// dispatch.
+pub fn split_sms_into(
+    num_sms: u32,
+    blocks_remaining: &[u64],
+    out: &mut Vec<usize>,
+) {
     let k = blocks_remaining.len();
-    let mut owner = vec![usize::MAX; num_sms as usize];
+    out.clear();
+    out.resize(num_sms as usize, usize::MAX);
+    let owner = out;
     if k == 0 {
-        return owner;
+        return;
     }
     let total: u64 = blocks_remaining.iter().sum::<u64>().max(1);
     // Largest-remainder apportionment with a 1-SM floor for nonzero kernels.
@@ -230,7 +301,6 @@ pub fn split_sms(num_sms: u32, blocks_remaining: &[u64]) -> Vec<usize> {
             *slot = big;
         }
     }
-    owner
 }
 
 #[cfg(test)]

@@ -127,7 +127,7 @@ mod tests {
         // after block1: 96 + 128 = 224 -> 112
         // after block2: 112 + 128 = 240
         let g = densenet_lite(1);
-        let fc = g.ops.iter().find(|o| o.name == "fc").unwrap();
+        let fc = g.ops.iter().find(|o| &*o.name == "fc").unwrap();
         match fc.kind {
             OpKind::FullyConnected { k, .. } => assert_eq!(k, 240),
             _ => panic!(),

@@ -193,8 +193,8 @@ mod tests {
     fn table1_convs_present() {
         // The 3a module contains the exact Table 1 convolutions.
         let g = googlenet(32);
-        let b3 = g.ops.iter().find(|o| o.name == "incep3a_b3").unwrap();
-        let b5 = g.ops.iter().find(|o| o.name == "incep3a_b5").unwrap();
+        let b3 = g.ops.iter().find(|o| &*o.name == "incep3a_b3").unwrap();
+        let b5 = g.ops.iter().find(|o| &*o.name == "incep3a_b5").unwrap();
         match (&b3.kind, &b5.kind) {
             (OpKind::Conv(p3), OpKind::Conv(p5)) => {
                 assert_eq!(p3, &ConvParams::incep3a_3x3(32));
@@ -207,13 +207,13 @@ mod tests {
     #[test]
     fn independent_pairs_within_module() {
         let g = googlenet(4);
-        let b3 = g.ops.iter().position(|o| o.name == "incep3a_b3").unwrap();
-        let b5 = g.ops.iter().position(|o| o.name == "incep3a_b5").unwrap();
-        let b1 = g.ops.iter().position(|o| o.name == "incep3a_b1").unwrap();
+        let b3 = g.ops.iter().position(|o| &*o.name == "incep3a_b3").unwrap();
+        let b5 = g.ops.iter().position(|o| &*o.name == "incep3a_b5").unwrap();
+        let b1 = g.ops.iter().position(|o| &*o.name == "incep3a_b1").unwrap();
         assert!(g.independent(b3, b5));
         assert!(g.independent(b1, b3));
         // but 3x3 depends on its own reduce
-        let b3r = g.ops.iter().position(|o| o.name == "incep3a_b3r").unwrap();
+        let b3r = g.ops.iter().position(|o| &*o.name == "incep3a_b3r").unwrap();
         assert!(!g.independent(b3r, b3));
     }
 }

@@ -62,11 +62,11 @@ mod tests {
     #[test]
     fn paths_within_layer_independent() {
         let g = pathnet(2, 3, 2);
-        let a = g.ops.iter().position(|o| o.name == "l0p0").unwrap();
-        let b = g.ops.iter().position(|o| o.name == "l0p2").unwrap();
+        let a = g.ops.iter().position(|o| &*o.name == "l0p0").unwrap();
+        let b = g.ops.iter().position(|o| &*o.name == "l0p2").unwrap();
         assert!(g.independent(a, b));
         // across layers: dependent
-        let c = g.ops.iter().position(|o| o.name == "l1p0").unwrap();
+        let c = g.ops.iter().position(|o| &*o.name == "l1p0").unwrap();
         assert!(!g.independent(a, c));
     }
 

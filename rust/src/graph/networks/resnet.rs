@@ -131,8 +131,8 @@ mod tests {
     #[test]
     fn projection_parallel_to_bottleneck_path() {
         let g = resnet50(2);
-        let a = g.ops.iter().position(|o| o.name == "res2a_1x1a").unwrap();
-        let p = g.ops.iter().position(|o| o.name == "res2a_proj").unwrap();
+        let a = g.ops.iter().position(|o| &*o.name == "res2a_1x1a").unwrap();
+        let p = g.ops.iter().position(|o| &*o.name == "res2a_proj").unwrap();
         assert!(g.independent(a, p));
     }
 }

@@ -81,7 +81,7 @@ mod tests {
         let fc = g
             .ops
             .iter()
-            .find(|o| o.name == "fc1")
+            .find(|o| &*o.name == "fc1")
             .unwrap();
         match fc.kind {
             OpKind::FullyConnected { k, .. } => assert_eq!(k, 512 * 49),

@@ -1,5 +1,7 @@
 //! Network operations: the node payload of a model DAG.
 
+use std::sync::Arc;
+
 use crate::convlib::ConvParams;
 
 /// One network operation, at the granularity DL-framework GPU backends
@@ -123,10 +125,16 @@ impl OpKind {
 }
 
 /// A node in the network DAG.
+///
+/// `name` is an interned `Arc<str>`: execution records (`OpExec`, trace
+/// rows) clone it per event, and at 100k-node scale a `String` clone per
+/// event dominated the executor's allocation profile. Cloning an
+/// `Arc<str>` is a refcount bump — no heap traffic in the steady-state
+/// event loop.
 #[derive(Clone, Debug)]
 pub struct Op {
     pub id: usize,
-    pub name: String,
+    pub name: Arc<str>,
     pub kind: OpKind,
 }
 

@@ -121,12 +121,12 @@ mod tests {
         let d = tr
             .ops
             .iter()
-            .position(|o| o.name == "incep3a_b3_bwd")
+            .position(|o| &*o.name == "incep3a_b3_bwd")
             .unwrap();
         let w = tr
             .ops
             .iter()
-            .position(|o| o.name == "incep3a_b3_wgrad")
+            .position(|o| &*o.name == "incep3a_b3_wgrad")
             .unwrap();
         assert!(tr.independent(d, w));
     }
@@ -138,12 +138,12 @@ mod tests {
         let b3 = tr
             .ops
             .iter()
-            .position(|o| o.name == "incep3a_b3_bwd")
+            .position(|o| &*o.name == "incep3a_b3_bwd")
             .unwrap();
         let b5 = tr
             .ops
             .iter()
-            .position(|o| o.name == "incep3a_b5_bwd")
+            .position(|o| &*o.name == "incep3a_b5_bwd")
             .unwrap();
         assert!(tr.independent(b3, b5));
     }
@@ -152,11 +152,11 @@ mod tests {
     fn grad_flows_from_loss_to_stem() {
         let fwd = Network::AlexNet.build(2);
         let tr = training_dag(&fwd);
-        let loss = tr.ops.iter().position(|o| o.name == "loss").unwrap();
+        let loss = tr.ops.iter().position(|o| &*o.name == "loss").unwrap();
         let stem_wgrad = tr
             .ops
             .iter()
-            .position(|o| o.name == "conv1_wgrad")
+            .position(|o| &*o.name == "conv1_wgrad")
             .unwrap();
         assert!(tr.reaches(loss, stem_wgrad));
     }

@@ -438,7 +438,7 @@ mod tests {
         }"#;
         // `sink -> done` precedes both node declarations — must resolve
         let (_, dag) = dag_from_dot(text).unwrap();
-        assert_eq!(dag.ops[0].name, "first stage");
+        assert_eq!(&*dag.ops[0].name, "first stage");
         assert_eq!(dag.device_of(1), 1);
         assert_eq!(dag.preds(2), &[1]);
         assert_eq!(dag.preds(1), &[0]);

@@ -235,7 +235,7 @@ mod tests {
         assert_eq!(dag.preds(1), &[0]);
         assert_eq!(dag.ops[1].kind, OpKind::Relu { bytes: 64 });
         // display name defaults to the id
-        assert_eq!(dag.ops[0].name, "a");
+        assert_eq!(&*dag.ops[0].name, "a");
     }
 
     #[test]

@@ -42,7 +42,7 @@ pub mod transformer;
 pub use dot::dag_from_dot;
 pub use export::dag_to_json;
 pub use json::dag_from_json;
-pub use random::random_layered_dag;
+pub use random::{random_layered_dag, random_layered_dag_sized};
 pub use transformer::{transformer, TransformerSpec};
 
 use crate::convlib::ConvParams;
@@ -336,7 +336,7 @@ pub(crate) fn ensure_acyclic(dag: &Dag) -> Result<(), IngestError> {
     }
     let witness = (0..dag.len())
         .find(|&i| !removed[i])
-        .map(|i| dag.ops[i].name.clone())
+        .map(|i| dag.ops[i].name.to_string())
         .unwrap_or_default();
     Err(IngestError::Cyclic(format!(
         "op {witness:?} sits on a dependency cycle"

@@ -61,9 +61,78 @@ pub fn random_layered_dag(seed: u64) -> Dag {
     g
 }
 
+/// A random layered DAG of approximately `nodes` ops — the scale-sweep
+/// generator behind `benches/sim_scale` and the property harness's
+/// large-graph cell. Same layered fork/join construction as
+/// [`random_layered_dag`], but the level count is derived from the target
+/// size instead of drawn from the seed, and levels are wide (up to 16) so
+/// a 100k-node graph stays reasonably shallow. A separate function keeps
+/// [`random_layered_dag`] frozen — fixtures embed digests of its exact
+/// graphs.
+///
+/// Deterministic per `(seed, nodes)`; panics on `nodes == 0`.
+pub fn random_layered_dag_sized(seed: u64, nodes: usize) -> Dag {
+    assert!(nodes > 0, "empty graph requested");
+    let mut prng = Prng::new(seed);
+    let mut g = Dag::new();
+    let input = g.add("in", OpKind::Input);
+    let mut prev = vec![input];
+    let mut level = 0usize;
+    // +2 accounts for the input and sink bracketing the layers
+    while g.len() + 2 < nodes + 1 {
+        let remaining = nodes.saturating_sub(g.len() + 1);
+        let width = (prng.range_u64(4, 16) as usize).min(remaining.max(1));
+        let mut cur = Vec::with_capacity(width);
+        for w in 0..width {
+            let mut preds = Vec::new();
+            let fan_in = (prng.range_u64(1, 2) as usize).min(prev.len());
+            let mut pool = prev.clone();
+            for _ in 0..fan_in {
+                let i = prng.below(pool.len() as u64) as usize;
+                preds.push(pool.swap_remove(i));
+            }
+            let kind = if prng.next_f64() < 0.7 {
+                OpKind::Conv(random_conv(&mut prng))
+            } else if prng.next_f64() < 0.5 {
+                OpKind::Relu { bytes: 1 << 20 }
+            } else {
+                OpKind::Pool {
+                    bytes_in: 1 << 20,
+                    bytes_out: 1 << 18,
+                }
+            };
+            cur.push(g.add_after(format!("l{level}n{w}"), kind, &preds));
+        }
+        prev = cur;
+        level += 1;
+    }
+    g.add_after("sink", OpKind::Concat { bytes: 1 << 20 }, &prev);
+    g
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sized_generator_hits_target_and_is_deterministic() {
+        for &nodes in &[10usize, 100, 1000] {
+            let a = random_layered_dag_sized(42, nodes);
+            let b = random_layered_dag_sized(42, nodes);
+            assert_eq!(a.len(), b.len(), "nodes {nodes}");
+            for i in 0..a.len() {
+                assert_eq!(a.preds(i), b.preds(i), "nodes {nodes} op {i}");
+            }
+            assert!(a.is_acyclic(), "nodes {nodes}");
+            assert!(!a.conv_ids().is_empty(), "nodes {nodes}");
+            // within one layer's slack of the requested size
+            assert!(
+                a.len() >= nodes && a.len() <= nodes + 16,
+                "nodes {nodes} got {}",
+                a.len()
+            );
+        }
+    }
 
     #[test]
     fn generator_is_deterministic_acyclic_and_conv_bearing() {

@@ -33,7 +33,6 @@
 //!   (HEFT/PEFT/lookahead, `--planner`); [`Session`] caches plans keyed
 //!   by DAG digest and replays them per request with zero selector calls
 //!   (profile-guided selection is an *offline* activity — paper §2).
-//!   `Coordinator` is a deprecated alias of `Session`.
 //! - [`sim`] — the discrete-event execution core behind `Session::run`:
 //!   a virtual-time event queue and per-stream state machines launch each
 //!   op the moment its dependencies resolve, freeing SM quotas and
@@ -122,8 +121,6 @@ pub use cluster::{
     ClusterConfig, DevicePool, LinkModel, PoolOptions, PoolSpec,
 };
 pub use convlib::{Algorithm, ConvParams};
-#[allow(deprecated)]
-pub use coordinator::Coordinator;
 pub use coordinator::SelectionPolicy;
 pub use gpusim::{DeviceSpec, PartitionMode};
 pub use graph::Network;

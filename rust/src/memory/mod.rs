@@ -13,8 +13,6 @@
 //! group member's allocation until the whole group drains, so its peak
 //! over-reports whenever group members finish at different times.
 
-use std::collections::HashMap;
-
 use crate::util::Prng;
 
 /// Why an allocation was refused.
@@ -38,7 +36,12 @@ pub struct DeviceMemory {
     used: u64,
     peak: u64,
     next_id: u64,
-    live: HashMap<u64, u64>, // id -> bytes
+    /// Live allocations as `(id, bytes)`. The live set is small (bounded
+    /// by the device's lane width plus in-flight host ops), so a flat
+    /// vector with linear lookup and `swap_remove` beats a `HashMap`'s
+    /// per-entry allocations and hashing on the executor's per-event
+    /// alloc/free path — and its capacity is reused across runs.
+    live: Vec<(u64, u64)>,
     failed_allocs: u64,
     /// Failure injection: probability of spuriously refusing an allocation
     /// (models fragmentation / transient cudaMalloc failures that real
@@ -55,7 +58,7 @@ impl DeviceMemory {
             used: 0,
             peak: 0,
             next_id: 1,
-            live: HashMap::new(),
+            live: Vec::new(),
             failed_allocs: 0,
             inject: None,
         }
@@ -95,7 +98,7 @@ impl DeviceMemory {
         self.peak = self.peak.max(self.used);
         let id = self.next_id;
         self.next_id += 1;
-        self.live.insert(id, bytes);
+        self.live.push((id, bytes));
         Ok(id)
     }
 
@@ -106,10 +109,12 @@ impl DeviceMemory {
 
     /// Release an allocation.
     pub fn free(&mut self, id: u64) -> Result<(), MemError> {
-        let bytes = self
+        let pos = self
             .live
-            .remove(&id)
+            .iter()
+            .position(|&(i, _)| i == id)
             .ok_or(MemError::UnknownAllocation(id))?;
+        let (_, bytes) = self.live.swap_remove(pos);
         self.used -= bytes;
         Ok(())
     }

@@ -4,8 +4,8 @@
 //! *offline* activity — profiles are gathered once, then reused — yet the
 //! original `Coordinator::execute_dag` re-ran the full k-wide selection,
 //! quota water-filling, and bottom-level computation on every call. This
-//! module redesigns the public API around a two-phase lifecycle (the same
-//! plan-vs-execute distinction as cuDNN's `Find`/`Get` split):
+//! module redesigned the public API around a two-phase lifecycle (the
+//! same plan-vs-execute distinction as cuDNN's `Find`/`Get` split):
 //!
 //! - [`Planner`] runs selection + grouping + partition-quota planning once
 //!   and emits an immutable, JSON-serializable [`Plan`]: per-op algorithm
@@ -20,7 +20,7 @@
 //!   oracle.
 //! - [`Session`] owns a device pool + config + keyed plan cache and
 //!   exposes `run` (plan-on-miss then replay), `plan`, and
-//!   `set_executor`; `Coordinator` is a deprecated alias of it.
+//!   `set_executor`.
 //! - [`Scheduler`] is the plan-construction trait behind [`Planner`]:
 //!   the default [`GreedyPacker`] (the original CP-priority packer,
 //!   bit-identical) plus the heterogeneous list schedulers

@@ -8,7 +8,7 @@
 //! coincidences.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 /// An op-level event.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -49,11 +49,23 @@ impl PartialOrd for Entry {
     }
 }
 
+/// Handle to a pushed event, usable to cancel it later. The token wraps
+/// the entry's generation stamp (its insertion sequence number), which is
+/// unique for the queue's lifetime — a token can never alias a different
+/// entry, even after the original popped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct EventToken(u64);
+
 /// Min-heap of [`SimEvent`]s keyed by virtual time, FIFO on ties.
+///
+/// Cancellation is generation-stamped and lazy: `cancel` records the
+/// entry's stamp and `pop` discards stamped entries as they surface,
+/// so cancelling costs O(1) instead of an O(n) heap rebuild.
 #[derive(Debug, Default)]
 pub(crate) struct EventQueue {
     heap: BinaryHeap<Reverse<Entry>>,
     seq: u64,
+    cancelled: HashSet<u64>,
 }
 
 impl EventQueue {
@@ -61,7 +73,7 @@ impl EventQueue {
         Self::default()
     }
 
-    pub fn push(&mut self, time: f64, payload: SimEvent) {
+    pub fn push(&mut self, time: f64, payload: SimEvent) -> EventToken {
         // A NaN here would otherwise surface as an opaque `partial_cmp`
         // unwrap panic deep inside `BinaryHeap` — and only in debug
         // builds. Reject at the boundary, in every build profile, with a
@@ -73,19 +85,54 @@ impl EventQueue {
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Reverse(Entry { time, seq, payload }));
+        EventToken(seq)
     }
 
-    /// Time of the earliest pending event.
-    pub fn peek_time(&self) -> Option<f64> {
+    /// Cancel a pending event by its token. A token for an event that
+    /// already popped (or was already cancelled) is a silent no-op for
+    /// an in-flight stamp set bounded by the number of live cancels.
+    /// Wired for shed-style controllers (the serving layer retracts
+    /// speculative completions); the unit tests below pin the semantics.
+    #[allow(dead_code)]
+    pub fn cancel(&mut self, token: EventToken) {
+        self.cancelled.insert(token.0);
+    }
+
+    /// Time of the earliest pending (non-cancelled) event.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        self.skip_cancelled();
         self.heap.peek().map(|r| r.0.time)
     }
 
     pub fn pop(&mut self) -> Option<(f64, SimEvent)> {
+        self.skip_cancelled();
         self.heap.pop().map(|Reverse(e)| (e.time, e.payload))
     }
 
-    pub fn is_empty(&self) -> bool {
+    /// Discard cancelled entries sitting at the top of the heap, so
+    /// `peek_time`/`pop` only ever see live events.
+    fn skip_cancelled(&mut self) {
+        while let Some(Reverse(e)) = self.heap.peek() {
+            if self.cancelled.remove(&e.seq) {
+                self.heap.pop();
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn is_empty(&mut self) -> bool {
+        self.skip_cancelled();
         self.heap.is_empty()
+    }
+
+    /// Drop all pending events, keeping the heap's (and the cancel set's)
+    /// capacity for reuse — the executor's run-to-run scratch path.
+    /// Sequence numbers deliberately keep counting: outstanding tokens
+    /// from before the clear must not alias entries pushed after it.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.cancelled.clear();
     }
 }
 
@@ -110,6 +157,49 @@ mod tests {
         assert_eq!(t3, 2.0);
         assert!(q.is_empty());
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cancelled_events_never_surface() {
+        let mut q = EventQueue::new();
+        let t1 = q.push(1.0, SimEvent::HostDone { op: 1, start: 0.0 });
+        let _t2 = q.push(2.0, SimEvent::HostDone { op: 2, start: 0.0 });
+        let t3 = q.push(3.0, SimEvent::HostDone { op: 3, start: 0.0 });
+        q.cancel(t1);
+        // the cancelled head is skipped by peek and pop alike
+        assert_eq!(q.peek_time(), Some(2.0));
+        let (t, e) = q.pop().unwrap();
+        assert_eq!(t, 2.0);
+        assert_eq!(e, SimEvent::HostDone { op: 2, start: 0.0 });
+        // cancelling below the top works too, and double-cancel is a no-op
+        q.cancel(t3);
+        q.cancel(t3);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn stale_token_after_pop_is_a_no_op() {
+        let mut q = EventQueue::new();
+        let t1 = q.push(1.0, SimEvent::HostDone { op: 1, start: 0.0 });
+        assert!(q.pop().is_some());
+        q.cancel(t1); // already popped: must not affect later entries
+        let _t2 = q.push(5.0, SimEvent::CommDone { op: 2, start: 4.0 });
+        assert_eq!(q.pop(), Some((5.0, SimEvent::CommDone { op: 2, start: 4.0 })));
+    }
+
+    #[test]
+    fn clear_keeps_tokens_unique_across_reuse() {
+        let mut q = EventQueue::new();
+        let t1 = q.push(1.0, SimEvent::HostDone { op: 1, start: 0.0 });
+        q.push(2.0, SimEvent::HostDone { op: 2, start: 0.0 });
+        q.clear();
+        assert!(q.is_empty());
+        // a token from before the clear must not cancel a fresh entry
+        let t3 = q.push(3.0, SimEvent::HostDone { op: 3, start: 0.0 });
+        q.cancel(t1);
+        assert_ne!(t1, t3);
+        assert_eq!(q.pop(), Some((3.0, SimEvent::HostDone { op: 3, start: 0.0 })));
     }
 
     #[test]

@@ -47,6 +47,7 @@
 //! execution) and, if still refused standing alone (failure injection),
 //! falls back to the workspace-free GEMM kernel; an op is never aborted.
 
+use std::cell::RefCell;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -64,7 +65,7 @@ use crate::memory::DeviceMemory;
 use crate::plan::{Plan, PlanError, PlanStep};
 
 use super::event::{EventQueue, SimEvent};
-use super::fluid::fluid_makespan;
+use super::fluid::{fluid_makespan_with, FluidScratch};
 use super::streams::Lanes;
 
 /// Join margin: a ready op enters a running mix only when the fluid
@@ -83,6 +84,51 @@ struct RunInfo {
 /// Min-heap of ready ops keyed by `(rank, op)`; ranks are unique, so the
 /// order is total and deterministic.
 type ReadyHeap = BinaryHeap<Reverse<(usize, usize)>>;
+
+/// Warm state carried across `execute_event` calls on one thread: every
+/// engine, lane table, heap and side vector an [`EventRun`] needs,
+/// retained at high-watermark capacity. A serving loop or benchmark
+/// replaying plans back to back therefore reaches a steady state where
+/// the event loop performs no heap allocation (`rust/tests/alloc_steady`
+/// pins this with a counting allocator). Thread-local, so `--jobs`-style
+/// callers on independent threads each warm their own scratch.
+#[derive(Default)]
+struct ExecScratch {
+    engines: Vec<Engine>,
+    lanes: Vec<Lanes>,
+    events: EventQueue,
+    op_dev: Vec<usize>,
+    decision: Vec<Option<KernelDesc>>,
+    planned_fallback: Vec<bool>,
+    rank: Vec<usize>,
+    lane_hint: Vec<Option<usize>>,
+    indeg: Vec<usize>,
+    conv_ready: Vec<ReadyHeap>,
+    host_ready: Vec<ReadyHeap>,
+    comm_ready: ReadyHeap,
+    running: Vec<Vec<Option<RunInfo>>>,
+    host_busy: Vec<bool>,
+    done: Vec<KernelId>,
+    deferred: Vec<(usize, usize)>,
+    join_descs: Vec<KernelDesc>,
+    join_lefts: Vec<f64>,
+    fluid: FluidScratch,
+}
+
+std::thread_local! {
+    static EXEC_SCRATCH: RefCell<ExecScratch> =
+        RefCell::new(ExecScratch::default());
+    static LAST_RUN_EVENTS: std::cell::Cell<u64> =
+        std::cell::Cell::new(0);
+}
+
+/// Events processed by the most recent event-executor run on this thread:
+/// every engine's kernel-level events (wave completions, dispatch pokes,
+/// stale skips) plus the op-level events the executor itself consumed.
+/// Observational only — the `sim_scale` bench's events/sec numerator.
+pub fn last_event_run_events() -> u64 {
+    LAST_RUN_EVENTS.with(|c| c.get())
+}
 
 struct EventRun<'a> {
     dag: &'a Dag,
@@ -133,6 +179,12 @@ struct EventRun<'a> {
     rounds: u64,
     ws_fallbacks: u64,
     comm_us: f64,
+    // Event-loop scratch (from ExecScratch; returned to it afterwards).
+    done: Vec<KernelId>,
+    deferred: Vec<(usize, usize)>,
+    join_descs: Vec<KernelDesc>,
+    join_lefts: Vec<f64>,
+    fluid: FluidScratch,
 }
 
 impl<'a> EventRun<'a> {
@@ -172,17 +224,21 @@ impl<'a> EventRun<'a> {
                         }
                     }
                 }
-                let done = self.engines[d].step_until(bound);
+                let mut done = std::mem::take(&mut self.done);
+                self.engines[d].step_until_into(bound, &mut done);
                 if done.is_empty() {
                     // only internal (non-completion) events were due up to
                     // the bound; re-evaluate the globally earliest source
+                    self.done = done;
                     continue;
                 }
                 let t = self.engines[d].now();
                 self.clock = self.clock.max(t);
-                for kid in done {
+                for &kid in &done {
                     self.complete_conv(d, kid, t);
                 }
+                done.clear();
+                self.done = done;
             } else {
                 self.pop_op_event();
             }
@@ -278,29 +334,42 @@ impl<'a> EventRun<'a> {
 
     /// Would admitting `cand` into `device`'s current mix beat serializing
     /// it after the mix? Same fluid model and margin as offline group
-    /// admission, evaluated over the mix's *remaining* work.
-    fn join_is_profitable(&self, device: usize, cand: &KernelDesc) -> bool {
-        let spec = self.pool.device(device);
-        let mut descs: Vec<&KernelDesc> = Vec::new();
-        let mut lefts: Vec<f64> = Vec::new();
-        for (_, _, kid) in self.lanes[device].running() {
+    /// admission, evaluated over the mix's *remaining* work. `&mut self`
+    /// only for the reused scratch buffers — this runs on every join
+    /// decision, so it must not allocate once warm.
+    fn join_is_profitable(&mut self, device: usize, cand: &KernelDesc) -> bool {
+        let pool = self.pool;
+        let spec = pool.device(device);
+        self.join_descs.clear();
+        self.join_lefts.clear();
+        for (_, _, kid) in self.lanes[device].iter_running() {
             let info =
                 self.running[device][kid].as_ref().expect("running kernel");
             let frac = self.engines[device].remaining_fraction(kid);
             if frac <= 0.0 {
                 continue;
             }
-            descs.push(&info.desc);
-            lefts.push(frac * isolated_time_us(&info.desc, spec));
+            self.join_descs.push(info.desc.clone());
+            self.join_lefts.push(frac * isolated_time_us(&info.desc, spec));
         }
-        if descs.is_empty() {
+        if self.join_descs.is_empty() {
             return true;
         }
-        let est_alone = fluid_makespan(&descs, &lefts, spec);
+        let est_alone = fluid_makespan_with(
+            &self.join_descs,
+            &self.join_lefts,
+            spec,
+            &mut self.fluid,
+        );
         let iso_c = isolated_time_us(cand, spec);
-        descs.push(cand);
-        lefts.push(iso_c);
-        let est_join = fluid_makespan(&descs, &lefts, spec);
+        self.join_descs.push(cand.clone());
+        self.join_lefts.push(iso_c);
+        let est_join = fluid_makespan_with(
+            &self.join_descs,
+            &self.join_lefts,
+            spec,
+            &mut self.fluid,
+        );
         est_join < (est_alone + iso_c) * JOIN_GAIN_MARGIN
     }
 
@@ -330,7 +399,8 @@ impl<'a> EventRun<'a> {
             // the pass — exactly the old sorted-scan's "skip and keep"
             // behavior, where a skipped op was not reconsidered within
             // the same pass.
-            let mut deferred: Vec<(usize, usize)> = Vec::new();
+            let mut deferred = std::mem::take(&mut self.deferred);
+            deferred.clear();
             while self.lanes[d].free_lane(None).is_some() {
                 let Some(Reverse((rank, op))) = self.conv_ready[d].pop()
                 else {
@@ -398,9 +468,10 @@ impl<'a> EventRun<'a> {
                     desc,
                 }));
             }
-            for (rank, op) in deferred {
+            for &(rank, op) in &deferred {
                 self.conv_ready[d].push(Reverse((rank, op)));
             }
+            self.deferred = deferred;
         }
         // Interconnect: one collective at a time on the ring, in rank
         // (dispatch-priority) order — which, reductions being enqueued as
@@ -453,10 +524,28 @@ pub(crate) fn execute_event(
     pool: &PoolSpec,
     mem: DeviceMemory,
 ) -> Result<ScheduleResult, PlanError> {
+    EXEC_SCRATCH.with(|s| {
+        execute_event_with(plan, dag, pool, mem, &mut s.borrow_mut())
+    })
+}
+
+/// The executor body against a caller-held [`ExecScratch`]. Every
+/// per-run structure is rebuilt in place from the scratch's warm buffers;
+/// an early error return leaves some buffers default-empty (losing only
+/// their capacity, never correctness).
+fn execute_event_with(
+    plan: &Plan,
+    dag: &Dag,
+    pool: &PoolSpec,
+    mem: DeviceMemory,
+    s: &mut ExecScratch,
+) -> Result<ScheduleResult, PlanError> {
     let n = dag.len();
     let devices = plan.meta.replicas.max(1);
     debug_assert_eq!(pool.len(), devices, "pool/replica mismatch");
-    let mut op_dev = vec![0usize; n];
+    let mut op_dev = std::mem::take(&mut s.op_dev);
+    op_dev.clear();
+    op_dev.resize(n, 0);
     for node in &plan.nodes {
         if node.op < n {
             op_dev[node.op] = node.device.min(devices - 1);
@@ -465,8 +554,12 @@ pub(crate) fn execute_event(
     // Rebuild each convolution's kernel descriptor from the recorded
     // (op, algorithm) decision — the same pure function the planner used,
     // against the spec of the device the op is placed on.
-    let mut decision: Vec<Option<KernelDesc>> = vec![None; n];
-    let mut planned_fallback = vec![false; n];
+    let mut decision = std::mem::take(&mut s.decision);
+    decision.clear();
+    decision.resize(n, None);
+    let mut planned_fallback = std::mem::take(&mut s.planned_fallback);
+    planned_fallback.clear();
+    planned_fallback.resize(n, false);
     for step in &plan.steps {
         if let PlanStep::Group(g) = step {
             for m in &g.members {
@@ -485,8 +578,12 @@ pub(crate) fn execute_event(
             }
         }
     }
-    let mut rank = vec![0usize; n];
-    let mut lane_hint: Vec<Option<usize>> = vec![None; n];
+    let mut rank = std::mem::take(&mut s.rank);
+    rank.clear();
+    rank.resize(n, 0);
+    let mut lane_hint = std::mem::take(&mut s.lane_hint);
+    lane_hint.clear();
+    lane_hint.resize(n, None);
     for (r, node) in plan.nodes.iter().enumerate() {
         rank[node.op] = r;
         lane_hint[node.op] = node.lane;
@@ -507,35 +604,81 @@ pub(crate) fn execute_event(
         v.insert(0, mem);
         v
     };
+    // Warm per-device structures: shrink/reset what exists, grow only on
+    // a cold (or wider-than-before) run.
+    s.engines.truncate(devices);
+    for (d, e) in s.engines.iter_mut().enumerate() {
+        e.reset(pool.device(d).clone(), plan.meta.partition);
+    }
+    for d in s.engines.len()..devices {
+        s.engines
+            .push(Engine::new(pool.device(d).clone(), plan.meta.partition));
+    }
+    s.lanes.truncate(devices);
+    for l in s.lanes.iter_mut() {
+        l.reset(width);
+    }
+    while s.lanes.len() < devices {
+        s.lanes.push(Lanes::new(width));
+    }
+    s.events.clear();
+    s.conv_ready.truncate(devices);
+    for h in s.conv_ready.iter_mut() {
+        h.clear();
+    }
+    while s.conv_ready.len() < devices {
+        s.conv_ready.push(ReadyHeap::new());
+    }
+    s.host_ready.truncate(devices);
+    for h in s.host_ready.iter_mut() {
+        h.clear();
+    }
+    while s.host_ready.len() < devices {
+        s.host_ready.push(ReadyHeap::new());
+    }
+    s.comm_ready.clear();
+    s.running.truncate(devices);
+    for v in s.running.iter_mut() {
+        v.clear();
+    }
+    while s.running.len() < devices {
+        s.running.push(Vec::new());
+    }
+    s.host_busy.clear();
+    s.host_busy.resize(devices, false);
+    let mut indeg = std::mem::take(&mut s.indeg);
+    indeg.clear();
+    indeg.extend((0..n).map(|i| dag.preds(i).len()));
     let mut run = EventRun {
         dag,
         pool,
         policy: plan.meta.policy,
         op_dev,
-        engines: (0..devices)
-            .map(|d| {
-                Engine::new(pool.device(d).clone(), plan.meta.partition)
-            })
-            .collect(),
-        lanes: (0..devices).map(|_| Lanes::new(width)).collect(),
-        events: EventQueue::new(),
+        engines: std::mem::take(&mut s.engines),
+        lanes: std::mem::take(&mut s.lanes),
+        events: std::mem::take(&mut s.events),
         mems,
         decision,
         rank,
         lane_hint,
         planned_fallback,
-        indeg: (0..n).map(|i| dag.preds(i).len()).collect(),
-        conv_ready: (0..devices).map(|_| ReadyHeap::new()).collect(),
-        host_ready: (0..devices).map(|_| ReadyHeap::new()).collect(),
-        comm_ready: ReadyHeap::new(),
-        running: (0..devices).map(|_| Vec::new()).collect(),
+        indeg,
+        conv_ready: std::mem::take(&mut s.conv_ready),
+        host_ready: std::mem::take(&mut s.host_ready),
+        comm_ready: std::mem::take(&mut s.comm_ready),
+        running: std::mem::take(&mut s.running),
         ops_out: Vec::with_capacity(n),
-        host_busy: vec![false; devices],
+        host_busy: std::mem::take(&mut s.host_busy),
         comm_busy: false,
         clock: 0.0,
         rounds: 0,
         ws_fallbacks: plan.meta.planned_ws_fallbacks,
         comm_us: 0.0,
+        done: std::mem::take(&mut s.done),
+        deferred: std::mem::take(&mut s.deferred),
+        join_descs: std::mem::take(&mut s.join_descs),
+        join_lefts: std::mem::take(&mut s.join_lefts),
+        fluid: std::mem::take(&mut s.fluid),
     };
     for i in 0..n {
         if run.indeg[i] == 0 {
@@ -544,20 +687,72 @@ pub(crate) fn execute_event(
     }
     run.admit_ready();
     run.drive();
-    if run.ops_out.len() != n {
-        return Err(PlanError::IncompleteCoverage {
-            executed: run.ops_out.len(),
-            ops: n,
-        });
-    }
+    let covered = run.ops_out.len();
+    let engine_events: u64 =
+        run.engines.iter().map(Engine::events_processed).sum();
+    LAST_RUN_EVENTS.with(|c| c.set(engine_events + covered as u64));
     let makespan_us = run.clock;
     let peak_workspace =
         run.mems.iter().map(DeviceMemory::peak).max().unwrap_or(0);
     let ws_fallbacks = run.ws_fallbacks;
     let rounds = run.rounds;
     let comm_us = run.comm_us;
-    let mut ops = run.ops_out;
-    ops.sort_by(|a, b| {
+    // Return the warm state to the scratch before the result is built,
+    // error or not.
+    let EventRun {
+        engines,
+        lanes,
+        mut events,
+        op_dev,
+        decision,
+        planned_fallback,
+        rank,
+        lane_hint,
+        indeg,
+        conv_ready,
+        host_ready,
+        comm_ready,
+        mut running,
+        host_busy,
+        done,
+        deferred,
+        join_descs,
+        join_lefts,
+        fluid,
+        ops_out,
+        ..
+    } = run;
+    events.clear();
+    for v in running.iter_mut() {
+        v.clear();
+    }
+    s.engines = engines;
+    s.lanes = lanes;
+    s.events = events;
+    s.op_dev = op_dev;
+    s.decision = decision;
+    s.planned_fallback = planned_fallback;
+    s.rank = rank;
+    s.lane_hint = lane_hint;
+    s.indeg = indeg;
+    s.conv_ready = conv_ready;
+    s.host_ready = host_ready;
+    s.comm_ready = comm_ready;
+    s.running = running;
+    s.host_busy = host_busy;
+    s.done = done;
+    s.deferred = deferred;
+    s.join_descs = join_descs;
+    s.join_lefts = join_lefts;
+    s.fluid = fluid;
+    if covered != n {
+        return Err(PlanError::IncompleteCoverage {
+            executed: covered,
+            ops: n,
+        });
+    }
+    let mut ops = ops_out;
+    ops.sort_unstable_by(|a, b| {
         a.start_us
             .partial_cmp(&b.start_us)
             .unwrap()

@@ -10,11 +10,34 @@
 //! join margin price groups identically by construction — the
 //! `full_work_reduces_to_planner_estimate` test below pins the wrapper's
 //! equivalence.
+//!
+//! The estimator runs on the executor's per-event hot path (every join
+//! decision prices the running mix), so [`fluid_makespan_with`] takes a
+//! caller-held [`FluidScratch`] and performs no heap allocation once the
+//! scratch buffers are warm; [`fluid_makespan`] is the one-shot wrapper.
 
-use crate::convlib::{KernelDesc, LaunchConfig};
-use crate::gpusim::partition::plan_intra_sm;
+use std::borrow::Borrow;
+
+use crate::convlib::KernelDesc;
+use crate::gpusim::partition::{plan_intra_sm_into, PlanScratch};
 use crate::gpusim::timing::full_rate_bw_demand;
 use crate::gpusim::{natural_residency, DeviceSpec};
+
+/// Reusable buffers for [`fluid_makespan_with`]. `Default`-construct once
+/// and keep across calls; every vector retains its high-watermark
+/// capacity.
+#[derive(Debug, Default)]
+pub(crate) struct FluidScratch {
+    left: Vec<f64>,
+    alive: Vec<usize>,
+    next: Vec<usize>,
+    launches: Vec<crate::convlib::LaunchConfig>,
+    utils: Vec<f64>,
+    plan: Vec<u32>,
+    fracs: Vec<f64>,
+    rates: Vec<f64>,
+    part: PlanScratch,
+}
 
 /// Fluid-model makespan of co-running `descs` when member `i` still has
 /// `left_us[i]` microseconds of isolated-time work outstanding. Each phase
@@ -22,10 +45,21 @@ use crate::gpusim::{natural_residency, DeviceSpec};
 /// (issue capacity shared when oversubscribed, DRAM contention applied to
 /// phases of three or more — mirroring the planner's estimator); when a
 /// member finishes, quotas are re-planned for the survivors.
-pub(crate) fn fluid_makespan(
-    descs: &[&KernelDesc],
+pub(crate) fn fluid_makespan<B: Borrow<KernelDesc>>(
+    descs: &[B],
     left_us: &[f64],
     dev: &DeviceSpec,
+) -> f64 {
+    fluid_makespan_with(descs, left_us, dev, &mut FluidScratch::default())
+}
+
+/// Allocation-free form of [`fluid_makespan`]: identical arithmetic, all
+/// intermediates in the caller-held scratch.
+pub(crate) fn fluid_makespan_with<B: Borrow<KernelDesc>>(
+    descs: &[B],
+    left_us: &[f64],
+    dev: &DeviceSpec,
+    s: &mut FluidScratch,
 ) -> f64 {
     assert_eq!(descs.len(), left_us.len());
     match descs.len() {
@@ -33,42 +67,56 @@ pub(crate) fn fluid_makespan(
         1 => return left_us[0].max(0.0),
         _ => {}
     }
-    let mut left: Vec<f64> = left_us.iter().map(|l| l.max(0.0)).collect();
-    let mut alive: Vec<usize> =
-        (0..descs.len()).filter(|&i| left[i] > 1e-9).collect();
+    s.left.clear();
+    for l in left_us {
+        s.left.push(l.max(0.0));
+    }
+    s.alive.clear();
+    for i in 0..descs.len() {
+        if s.left[i] > 1e-9 {
+            s.alive.push(i);
+        }
+    }
     let mut t = 0.0f64;
-    while !alive.is_empty() {
-        if alive.len() == 1 {
-            t += left[alive[0]];
+    while !s.alive.is_empty() {
+        if s.alive.len() == 1 {
+            t += s.left[s.alive[0]];
             break;
         }
-        let launches: Vec<&LaunchConfig> =
-            alive.iter().map(|&i| &descs[i].launch).collect();
-        let utils: Vec<f64> =
-            alive.iter().map(|&i| descs[i].alu_util).collect();
-        let plan = plan_intra_sm(&launches, &utils, dev);
-        let fracs: Vec<f64> = alive
-            .iter()
-            .zip(&plan)
-            .map(|(&i, &q)| {
-                let rn =
-                    natural_residency(&descs[i].launch, dev).max(1) as f64;
-                q as f64 / rn
-            })
-            .collect();
-        let demand: f64 =
-            utils.iter().zip(&fracs).map(|(u, f)| u * f).sum();
+        s.launches.clear();
+        s.utils.clear();
+        for &i in &s.alive {
+            s.launches.push(descs[i].borrow().launch);
+            s.utils.push(descs[i].borrow().alu_util);
+        }
+        plan_intra_sm_into(
+            &s.launches,
+            &s.utils,
+            dev,
+            &mut s.part,
+            &mut s.plan,
+        );
+        s.fracs.clear();
+        for (&i, &q) in s.alive.iter().zip(&s.plan) {
+            let rn = natural_residency(&descs[i].borrow().launch, dev)
+                .max(1) as f64;
+            s.fracs.push(q as f64 / rn);
+        }
+        let mut demand = 0.0f64;
+        for (u, f) in s.utils.iter().zip(&s.fracs) {
+            demand += u * f;
+        }
         let phi = if demand > 1.0 { 1.0 / demand } else { 1.0 };
         // DRAM contention only for phases of three or more live members:
         // two-member phases keep the legacy pair form, exactly like the
         // planner's estimator.
-        let mu = if alive.len() >= 3 {
+        let mu = if s.alive.len() >= 3 {
             let bw_limit = dev.effective_bw() / 1e6; // bytes per us
-            let bw_demand: f64 = alive
-                .iter()
-                .zip(&fracs)
-                .map(|(&i, f)| full_rate_bw_demand(descs[i], dev) * phi * f)
-                .sum();
+            let mut bw_demand = 0.0f64;
+            for (&i, f) in s.alive.iter().zip(&s.fracs) {
+                bw_demand +=
+                    full_rate_bw_demand(descs[i].borrow(), dev) * phi * f;
+            }
             if bw_demand > bw_limit {
                 bw_limit / bw_demand
             } else {
@@ -77,28 +125,35 @@ pub(crate) fn fluid_makespan(
         } else {
             1.0
         };
-        let rates: Vec<f64> = fracs.iter().map(|f| phi * mu * f).collect();
-        if rates.iter().all(|&v| v <= 0.0) {
+        s.rates.clear();
+        for f in &s.fracs {
+            s.rates.push(phi * mu * f);
+        }
+        if s.rates.iter().all(|&v| v <= 0.0) {
             // no member can hold a block: the remainder serializes
-            t += alive.iter().map(|&i| left[i]).sum::<f64>();
+            let mut rest = 0.0f64;
+            for &i in &s.alive {
+                rest += s.left[i];
+            }
+            t += rest;
             break;
         }
         // advance to the first completion among progressing members
         let mut dt = f64::INFINITY;
-        for (pos, &i) in alive.iter().enumerate() {
-            if rates[pos] > 0.0 {
-                dt = dt.min(left[i] / rates[pos]);
+        for (pos, &i) in s.alive.iter().enumerate() {
+            if s.rates[pos] > 0.0 {
+                dt = dt.min(s.left[i] / s.rates[pos]);
             }
         }
         t += dt;
-        let mut next = Vec::with_capacity(alive.len());
-        for (pos, &i) in alive.iter().enumerate() {
-            left[i] -= dt * rates[pos];
-            if left[i] > 1e-9 {
-                next.push(i);
+        s.next.clear();
+        for (pos, &i) in s.alive.iter().enumerate() {
+            s.left[i] -= dt * s.rates[pos];
+            if s.left[i] > 1e-9 {
+                s.next.push(i);
             }
         }
-        alive = next;
+        std::mem::swap(&mut s.alive, &mut s.next);
     }
     t
 }
@@ -139,6 +194,33 @@ mod tests {
     }
 
     #[test]
+    fn scratch_reuse_is_bit_identical_to_one_shot() {
+        // The executor holds one FluidScratch across thousands of join
+        // decisions; a stale buffer leaking state between calls would
+        // silently skew admission. Interleave differently-sized calls
+        // through one scratch and compare against fresh-scratch runs.
+        let dev = k40();
+        let p3 = ConvParams::incep3a_3x3(32);
+        let p5 = ConvParams::incep3a_5x5(32);
+        let descs = [
+            kernel_desc(Algorithm::ImplicitPrecompGemm, &p3, &dev).unwrap(),
+            kernel_desc(Algorithm::FftTiling, &p3, &dev).unwrap(),
+            kernel_desc(Algorithm::Gemm, &p5, &dev).unwrap(),
+        ];
+        let mut shared = FluidScratch::default();
+        for width in [3usize, 2, 3, 2] {
+            let refs: Vec<&KernelDesc> =
+                descs.iter().take(width).collect();
+            let lefts: Vec<f64> =
+                refs.iter().map(|d| isolated_time_us(d, &dev)).collect();
+            let warm =
+                fluid_makespan_with(&refs, &lefts, &dev, &mut shared);
+            let fresh = fluid_makespan(&refs, &lefts, &dev);
+            assert_eq!(warm, fresh, "width {width}");
+        }
+    }
+
+    #[test]
     fn partial_work_shrinks_the_estimate() {
         let dev = k40();
         let p3 = ConvParams::incep3a_3x3(32);
@@ -158,7 +240,8 @@ mod tests {
         let dev = k40();
         let p3 = ConvParams::incep3a_3x3(32);
         let a = kernel_desc(Algorithm::Gemm, &p3, &dev).unwrap();
-        assert_eq!(fluid_makespan(&[], &[], &dev), 0.0);
+        let none: [&KernelDesc; 0] = [];
+        assert_eq!(fluid_makespan(&none, &[], &dev), 0.0);
         assert_eq!(fluid_makespan(&[&a], &[42.0], &dev), 42.0);
         assert_eq!(fluid_makespan(&[&a], &[-1.0], &dev), 0.0);
         // an already-finished member contributes nothing

@@ -43,6 +43,7 @@ pub(crate) mod fluid;
 pub(crate) mod streams;
 
 pub(crate) use executor::execute_event;
+pub use executor::last_event_run_events;
 
 /// Which execution backend replays a `plan::Plan`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]

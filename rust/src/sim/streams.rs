@@ -30,8 +30,16 @@ impl Lanes {
         }
     }
 
+    #[cfg(test)]
     pub fn width(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Re-initialize to `width` idle lanes, keeping the slot buffer's
+    /// capacity — the executor's warm-scratch path.
+    pub fn reset(&mut self, width: usize) {
+        self.slots.clear();
+        self.slots.resize(width.max(1), LaneState::Idle);
     }
 
     /// Number of lanes currently running a kernel.
@@ -72,9 +80,12 @@ impl Lanes {
         None
     }
 
-    /// Snapshot of the running mix: `(lane, op, kernel)` per busy lane, in
-    /// lane order (deterministic).
-    pub fn running(&self) -> Vec<(usize, usize, KernelId)> {
+    /// The running mix, lazily: `(lane, op, kernel)` per busy lane, in
+    /// lane order (deterministic). Allocation-free — this feeds the
+    /// executor's per-event join pricing.
+    pub fn iter_running(
+        &self,
+    ) -> impl Iterator<Item = (usize, usize, KernelId)> + '_ {
         self.slots
             .iter()
             .enumerate()
@@ -82,7 +93,13 @@ impl Lanes {
                 LaneState::Idle => None,
                 LaneState::Busy { op, kernel } => Some((lane, op, kernel)),
             })
-            .collect()
+    }
+
+    /// Snapshot of the running mix as a `Vec` (test convenience; the
+    /// executor uses [`Lanes::iter_running`]).
+    #[cfg(test)]
+    pub fn running(&self) -> Vec<(usize, usize, KernelId)> {
+        self.iter_running().collect()
     }
 }
 

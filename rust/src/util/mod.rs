@@ -32,6 +32,28 @@ pub fn fmt_bytes(bytes: u64) -> String {
     }
 }
 
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). `None` off Linux or if the field is missing —
+/// benches print "n/a" rather than fail.
+pub fn peak_rss_bytes() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 =
+                    rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+                return Some(kb * 1024);
+            }
+        }
+        None
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
 /// Format a duration in microseconds as the most natural unit.
 pub fn fmt_us(us: f64) -> String {
     if us >= 1_000_000.0 {

@@ -1,0 +1,97 @@
+//! Zero-alloc steady-state contract for the event executor
+//! (DESIGN.md §Simulator performance).
+//!
+//! The event core keeps its arenas — engines, lanes, event queue, ready
+//! heaps, fluid scratch — in a thread-local `ExecScratch` that survives
+//! across `run()` calls, so a *warm* replay performs only a small,
+//! constant amount of allocation (the returned `ScheduleResult`, the
+//! per-run memory meters) rather than anything proportional to event
+//! count. This test pins that contract with a counting global allocator:
+//! after warm-up, consecutive replays of the same DAG must allocate
+//! exactly the same number of times and the same number of bytes. A hot
+//! path that regresses to per-event allocation shows up as run-to-run
+//! drift (heap/vec doubling) or a count explosion, and fails here.
+//!
+//! This file holds exactly ONE `#[test]` — the counters are
+//! process-global, and a second concurrent test in this binary would
+//! race them.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use parconv::coordinator::ScheduleConfig;
+use parconv::gpusim::DeviceSpec;
+use parconv::graph::Network;
+use parconv::plan::Session;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warm_event_replays_allocate_a_constant_amount() {
+    let session =
+        Session::new(DeviceSpec::k40(), ScheduleConfig::default());
+    let dag = Network::GoogleNet.build(16);
+
+    // cold run plans and grows every arena; two more replays let any
+    // amortized vec growth finish before we start measuring
+    let cold0 = ALLOCS.load(Ordering::Relaxed);
+    let _ = session.run(&dag);
+    let cold = ALLOCS.load(Ordering::Relaxed) - cold0;
+    let _ = session.run(&dag);
+    let _ = session.run(&dag);
+
+    let mut measured: Vec<(u64, u64)> = Vec::with_capacity(4);
+    for _ in 0..4 {
+        let a0 = ALLOCS.load(Ordering::Relaxed);
+        let b0 = BYTES.load(Ordering::Relaxed);
+        let r = session.run(&dag);
+        let da = ALLOCS.load(Ordering::Relaxed) - a0;
+        let db = BYTES.load(Ordering::Relaxed) - b0;
+        assert!(r.makespan_us > 0.0, "replay produced a real schedule");
+        measured.push((da, db));
+    }
+
+    assert!(
+        measured.windows(2).all(|w| w[0] == w[1]),
+        "steady-state replays must allocate identically \
+         (arena reuse regressed): {measured:?}"
+    );
+    // a warm replay must be far below the cold plan+run path — the
+    // loose 1/4 bound only catches wholesale loss of arena reuse, not
+    // normal jitter in the cold-side count
+    let warm = measured[0].0;
+    assert!(
+        warm < cold / 4,
+        "warm replay allocates {warm} times vs {cold} cold — scratch \
+         reuse is not engaging"
+    );
+}

@@ -23,6 +23,7 @@ use parconv::coordinator::{
 use parconv::gpusim::{DeviceSpec, PartitionMode};
 use parconv::graph::{Dag, OpKind};
 use parconv::ingest::random_layered_dag as random_dag;
+use parconv::ingest::random_layered_dag_sized;
 use parconv::plan::Session;
 use parconv::sim::ExecutorKind;
 use parconv::util::Prng;
@@ -248,6 +249,44 @@ fn checked_in_fixtures_replay_through_the_invariant_battery() {
             &format!("fixture {seed} barrier"),
         );
     }
+}
+
+/// The sim_scale-class cell: a ~10k-op graph (5k-node layered DAG,
+/// data-parallel across 2 devices plus reduce ops) through BOTH
+/// executors and the full invariant battery — the arena'd hot paths must
+/// hold the lane-quota / dependency-order / workspace contracts at
+/// scale, not just on the 64 small cases above. The quadratic
+/// in-flight sweep makes this debug-build-hostile, so it only runs in
+/// release (`cargo test --release`), which is how CI invokes it.
+#[test]
+#[cfg_attr(debug_assertions, ignore)]
+fn ten_thousand_node_dag_satisfies_invariants_on_two_gpus() {
+    let streams = 2usize;
+    let dag = random_layered_dag_sized(0xB16, 5_000);
+    let mut prng = Prng::new(0xB16 ^ 0xD15C0);
+    let sites = random_sites(&dag, &mut prng);
+    let cluster = ClusterConfig {
+        replicas: 2,
+        link: LinkModel::pcie3(),
+        overlap: true,
+    };
+    let cdag = data_parallel_dag(&dag, &sites, &cluster);
+    assert!(cdag.len() >= 10_000, "cell shrank below 10k ops");
+    assert_eq!(cdag.num_devices(), 2);
+
+    let mut session =
+        Session::new(DeviceSpec::k40(), config(streams, GB4));
+    let event = session.run(&cdag);
+    check_schedule(&cdag, &event, streams, GB4, "10k event");
+    session.set_executor(ExecutorKind::Barrier);
+    let barrier = session.run(&cdag);
+    check_schedule(&cdag, &barrier, streams, GB4, "10k barrier");
+    assert!(
+        event.makespan_us <= barrier.makespan_us * 1.005 + 1e-6,
+        "10k cell: event {} > barrier {}",
+        event.makespan_us,
+        barrier.makespan_us
+    );
 }
 
 #[test]

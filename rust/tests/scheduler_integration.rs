@@ -1,8 +1,6 @@
 //! Scheduler integration: full networks through a [`Session`] under every
 //! policy x partition combination, checking the paper's qualitative claims
-//! and the scheduler's safety invariants. Also pins the deprecation
-//! surface of the retired `Coordinator` facade (now an alias of
-//! `Session`).
+//! and the scheduler's safety invariants.
 
 use parconv::coordinator::{
     PriorityPolicy, ScheduleConfig, ScheduleResult, SelectionPolicy,
@@ -308,25 +306,4 @@ fn training_graph_schedules_and_every_net_gains() {
             serial.makespan_us
         );
     }
-}
-
-#[test]
-#[allow(deprecated)]
-fn coordinator_alias_still_compiles_and_matches_session() {
-    // The retired facade survives as `pub type Coordinator = Session`:
-    // old code keeps compiling (behind a deprecation warning) and gets
-    // bit-identical results, because the alias *is* the session.
-    use parconv::coordinator::Coordinator;
-    let cfg = ScheduleConfig {
-        policy: SelectionPolicy::ProfileGuided,
-        partition: PartitionMode::IntraSm,
-        streams: 2,
-        workspace_limit: GB4,
-        priority: PriorityPolicy::CriticalPath,
-    };
-    let dag = Network::GoogleNet.build(8);
-    let legacy = Coordinator::new(DeviceSpec::k40(), cfg.clone()).run(&dag);
-    let modern = Session::new(DeviceSpec::k40(), cfg).run(&dag);
-    assert_eq!(legacy.makespan_us, modern.makespan_us);
-    assert_eq!(legacy.rounds, modern.rounds);
 }
