@@ -82,6 +82,21 @@ impl LinkModel {
             * (self.latency_us
                 + hop_bytes / (self.effective_gb_per_s() * 1e3))
     }
+
+    /// Time for a staged transfer: `steps` pipeline steps, each paying
+    /// this link's latency and moving `hop_bytes`. The generalized form
+    /// of [`Self::ring_allreduce_us`] — `staged_us(2 * (n - 1), s / n)`
+    /// is bit-identical to `ring_allreduce_us(s, n)` — used to price the
+    /// topology-routed collectives, whose step count and hop size depend
+    /// on the collective pattern and routed path.
+    pub fn staged_us(&self, steps: usize, hop_bytes: f64) -> f64 {
+        if steps == 0 || !(hop_bytes > 0.0) {
+            return 0.0;
+        }
+        steps as f64
+            * (self.latency_us
+                + hop_bytes / (self.effective_gb_per_s() * 1e3))
+    }
 }
 
 #[cfg(test)]
@@ -164,5 +179,36 @@ mod tests {
             LinkModel::nvlink().ring_allreduce_us(s, 4)
                 < LinkModel::pcie3().ring_allreduce_us(s, 4)
         );
+    }
+
+    #[test]
+    fn staged_form_is_bit_identical_to_the_ring_formula() {
+        // the topology collectives are priced through staged_us; the
+        // ring-degenerate equivalence guarantee relies on the two forms
+        // agreeing to the last bit, not just approximately.
+        for l in [LinkModel::pcie3(), LinkModel::nvlink()] {
+            for n in [2usize, 3, 4, 8, 16] {
+                for bytes in [1u64, 4096, 24_000_000, 256 << 20] {
+                    let ring = l.ring_allreduce_us(bytes, n);
+                    let staged =
+                        l.staged_us(2 * (n - 1), bytes as f64 / n as f64);
+                    assert_eq!(ring.to_bits(), staged.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_staged_transfers_are_free_and_finite() {
+        let l = LinkModel::pcie3();
+        assert_eq!(l.staged_us(0, 1e6), 0.0);
+        assert_eq!(l.staged_us(4, 0.0), 0.0);
+        assert_eq!(l.staged_us(4, -1.0), 0.0);
+        assert_eq!(l.staged_us(4, f64::NAN), 0.0);
+        let bad = LinkModel {
+            latency_us: 1.0,
+            gb_per_s: 0.0,
+        };
+        assert!(bad.staged_us(2, 1e6).is_finite());
     }
 }

@@ -32,10 +32,12 @@
 mod link;
 mod pool;
 mod poolspec;
+mod topology;
 
 pub use link::LinkModel;
 pub use pool::{
-    data_parallel_dag, reduce_sites, ClusterConfig, DevicePool,
-    PoolOptions, ReduceSite,
+    data_parallel_dag, hierarchical_reduce_dag, pipeline_parallel_dag,
+    reduce_sites, ClusterConfig, DevicePool, PoolOptions, ReduceSite,
 };
 pub use poolspec::PoolSpec;
+pub use topology::{Link, LinkKind, Strategy, Topology, TopologySpec};

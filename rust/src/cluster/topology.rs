@@ -1,0 +1,598 @@
+//! The interconnect *topology*: devices joined by typed links.
+//!
+//! PR 5's cluster model priced every collective with one homogeneous
+//! ring formula and serialized all of them on a single global lane — a
+//! far cruder bottleneck than any real fabric. Here the fabric is an
+//! explicit graph: device nodes (ids `0..devices`) plus optional fabric
+//! nodes (a PCIe switch, a host bridge hub), connected by [`Link`]s that
+//! each carry their own [`LinkModel`]. Transfers are routed along BFS
+//! shortest paths (deterministic lowest-node-id tie-break via sorted
+//! adjacency), and every emitted [`CommDesc`] names the link ids its
+//! path crosses — the executor's contention domain. Transfers whose
+//! link sets are disjoint proceed concurrently; overlapping sets split
+//! bandwidth fairly (see `sim/executor.rs`).
+//!
+//! Three builders cover the shapes the paper's era actually shipped:
+//!
+//! * [`Topology::ring`] — the PR 5 flat ring, kept as the degenerate
+//!   case (data-parallel training on it must reproduce the old
+//!   serialized-lane makespans bit-identically);
+//! * [`Topology::islands`] — NVLink islands (DGX-style): an NVLink ring
+//!   inside each island, island leaders bridged through a host node
+//!   over the configured base link;
+//! * [`Topology::switch`] — one PCIe switch, every device a spoke.
+
+use std::collections::VecDeque;
+
+use crate::graph::{CollectiveKind, CommDesc};
+
+use super::link::LinkModel;
+
+/// What kind of wire a [`Link`] is (labels the trace track; the pricing
+/// lives in the link's [`LinkModel`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Intra-island NVLink-class lane.
+    NvLink,
+    /// PCIe lane (ring segment or switch spoke).
+    PciE,
+    /// Island-leader to host-hub bridge.
+    HostBridge,
+}
+
+impl LinkKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkKind::NvLink => "nvlink",
+            LinkKind::PciE => "pcie",
+            LinkKind::HostBridge => "host_bridge",
+        }
+    }
+}
+
+/// One bidirectional link between two topology nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub a: usize,
+    pub b: usize,
+    pub kind: LinkKind,
+    pub model: LinkModel,
+}
+
+/// The interconnect graph. Nodes `0..devices` are GPUs; nodes
+/// `devices..nodes` are fabric hops (switch, host hub) that never run
+/// compute but do carry traffic.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    devices: usize,
+    nodes: usize,
+    links: Vec<Link>,
+    /// Per node: `(peer, link_id)`, sorted — BFS visits peers in
+    /// ascending node order, which makes routing deterministic.
+    adj: Vec<Vec<(usize, usize)>>,
+}
+
+impl Topology {
+    fn empty(devices: usize, nodes: usize) -> Self {
+        Self {
+            devices,
+            nodes,
+            links: Vec::new(),
+            adj: vec![Vec::new(); nodes],
+        }
+    }
+
+    fn add_link(&mut self, a: usize, b: usize, kind: LinkKind, model: LinkModel) {
+        let id = self.links.len();
+        self.links.push(Link { a, b, kind, model });
+        self.adj[a].push((b, id));
+        self.adj[b].push((a, id));
+    }
+
+    fn finish(&mut self) {
+        for peers in &mut self.adj {
+            peers.sort_unstable();
+        }
+    }
+
+    /// Flat ring of `n` devices over homogeneous `link`s: device `i`
+    /// wired to `(i + 1) % n`. Two devices get a single link (not a
+    /// doubled pair); one device gets none.
+    pub fn ring(n: usize, link: LinkModel) -> Self {
+        let mut t = Self::empty(n, n);
+        if n == 2 {
+            t.add_link(0, 1, LinkKind::PciE, link);
+        } else if n > 2 {
+            for i in 0..n {
+                t.add_link(i, (i + 1) % n, LinkKind::PciE, link);
+            }
+        }
+        t.finish();
+        t
+    }
+
+    /// NVLink islands of `island_size` devices each: an NVLink ring
+    /// inside every island, and (when there is more than one island)
+    /// each island's leader — its lowest device id — bridged to a host
+    /// hub node over `base_link`. Traffic inside disjoint islands never
+    /// shares a link; inter-island traffic funnels through the bridges.
+    pub fn islands(n: usize, island_size: usize, base_link: LinkModel) -> Self {
+        let size = island_size.max(1).min(n.max(1));
+        let count = if n == 0 { 0 } else { (n + size - 1) / size };
+        let nodes = if count > 1 { n + 1 } else { n };
+        let mut t = Self::empty(n, nodes);
+        let nv = LinkModel::nvlink();
+        for k in 0..count {
+            let start = k * size;
+            let end = ((k + 1) * size).min(n);
+            let m = end - start;
+            if m == 2 {
+                t.add_link(start, start + 1, LinkKind::NvLink, nv);
+            } else if m > 2 {
+                for i in start..end {
+                    let next = start + (i - start + 1) % m;
+                    t.add_link(i, next, LinkKind::NvLink, nv);
+                }
+            }
+            if count > 1 {
+                t.add_link(start, n, LinkKind::HostBridge, base_link);
+            }
+        }
+        t.finish();
+        t
+    }
+
+    /// One PCIe switch (node id `n`), every device a spoke over `link`.
+    /// Any two devices are two hops apart; every transfer in or out of
+    /// device `i` crosses spoke `i`.
+    pub fn switch(n: usize, link: LinkModel) -> Self {
+        let nodes = if n > 1 { n + 1 } else { n };
+        let mut t = Self::empty(n, nodes);
+        if n > 1 {
+            for i in 0..n {
+                t.add_link(i, n, LinkKind::PciE, link);
+            }
+        }
+        t.finish();
+        t
+    }
+
+    /// GPU count (fabric nodes excluded).
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Total node count including fabric hops.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    /// BFS shortest path `from -> to`, returned as the link ids crossed
+    /// in path order. Deterministic: ties broken toward the lowest peer
+    /// node id (adjacency is sorted). Empty when `from == to`.
+    ///
+    /// Panics if the nodes are disconnected — the builders only produce
+    /// connected graphs, so a disconnect is a construction bug.
+    pub fn route(&self, from: usize, to: usize) -> Vec<usize> {
+        assert!(from < self.nodes && to < self.nodes, "node out of range");
+        if from == to {
+            return Vec::new();
+        }
+        let mut prev: Vec<Option<(usize, usize)>> = vec![None; self.nodes];
+        let mut seen = vec![false; self.nodes];
+        let mut queue = VecDeque::new();
+        seen[from] = true;
+        queue.push_back(from);
+        'bfs: while let Some(u) = queue.pop_front() {
+            for &(v, link) in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    prev[v] = Some((u, link));
+                    if v == to {
+                        break 'bfs;
+                    }
+                    queue.push_back(v);
+                }
+            }
+        }
+        let mut path = Vec::new();
+        let mut cur = to;
+        while cur != from {
+            let (p, link) =
+                prev[cur].expect("disconnected topology: no route");
+            path.push(link);
+            cur = p;
+        }
+        path.reverse();
+        path
+    }
+
+    /// The link set a ring-style group collective occupies: the union of
+    /// the routes between consecutive group members (as a cycle),
+    /// sorted and deduplicated. This is the collective's contention
+    /// domain.
+    pub fn group_links(&self, group: &[usize]) -> Vec<usize> {
+        let mut links = Vec::new();
+        if group.len() >= 2 {
+            for i in 0..group.len() {
+                let a = group[i];
+                let b = group[(i + 1) % group.len()];
+                links.extend(self.route(a, b));
+            }
+            links.sort_unstable();
+            links.dedup();
+        }
+        links
+    }
+
+    /// `(max latency, bottleneck bandwidth)` over a link set. An empty
+    /// set (degenerate single-member group) prices to zero downstream,
+    /// so it reports a zero/zero model rather than infinities that
+    /// would poison plan JSON.
+    fn path_model(&self, links: &[usize]) -> (f64, f64) {
+        let mut lat: f64 = 0.0;
+        let mut gb = f64::INFINITY;
+        for &l in links {
+            let m = self.links[l].model;
+            lat = lat.max(m.latency_us);
+            gb = gb.min(m.effective_gb_per_s());
+        }
+        if !gb.is_finite() {
+            gb = 0.0;
+        }
+        (lat, gb)
+    }
+
+    fn group_desc(
+        &self,
+        coll: CollectiveKind,
+        group: &[usize],
+        bytes: u64,
+    ) -> CommDesc {
+        let mut group = group.to_vec();
+        group.sort_unstable();
+        group.dedup();
+        debug_assert!(
+            group.iter().all(|&d| d < self.devices),
+            "collective group names a non-device node"
+        );
+        let links = self.group_links(&group);
+        let (step_latency_us, gb_per_s) = self.path_model(&links);
+        let g = group.len();
+        let (steps, hop_bytes) = if g <= 1 || bytes == 0 {
+            (0, 0.0)
+        } else {
+            let steps = match coll {
+                CollectiveKind::AllReduce => 2 * (g - 1),
+                CollectiveKind::AllGather | CollectiveKind::ReduceScatter => {
+                    g - 1
+                }
+                CollectiveKind::Send => 0,
+            };
+            (steps, bytes as f64 / g as f64)
+        };
+        CommDesc {
+            coll,
+            bytes,
+            group,
+            steps,
+            step_latency_us,
+            hop_bytes,
+            gb_per_s,
+            links,
+        }
+    }
+
+    /// Ring all-reduce over `group`: `2 (g-1)` steps of `bytes / g`,
+    /// priced at the bottleneck of the group's link cycle. On the flat
+    /// ring with the full device set this is bit-identical to
+    /// [`LinkModel::ring_allreduce_us`].
+    pub fn allreduce_desc(&self, group: &[usize], bytes: u64) -> CommDesc {
+        self.group_desc(CollectiveKind::AllReduce, group, bytes)
+    }
+
+    /// Ring all-gather over `group`: `g - 1` steps of `bytes / g`.
+    pub fn allgather_desc(&self, group: &[usize], bytes: u64) -> CommDesc {
+        self.group_desc(CollectiveKind::AllGather, group, bytes)
+    }
+
+    /// Ring reduce-scatter over `group`: `g - 1` steps of `bytes / g`.
+    pub fn reduce_scatter_desc(
+        &self,
+        group: &[usize],
+        bytes: u64,
+    ) -> CommDesc {
+        self.group_desc(CollectiveKind::ReduceScatter, group, bytes)
+    }
+
+    /// Point-to-point activation send `from -> to`: store-and-forward,
+    /// one step per routed hop, the full tensor each hop.
+    pub fn send_desc(&self, from: usize, to: usize, bytes: u64) -> CommDesc {
+        debug_assert!(
+            from < self.devices && to < self.devices,
+            "send endpoints must be devices"
+        );
+        let path = self.route(from, to);
+        let steps = if bytes == 0 { 0 } else { path.len() };
+        let (step_latency_us, gb_per_s) = self.path_model(&path);
+        let mut links = path;
+        links.sort_unstable();
+        links.dedup();
+        let mut group = vec![from, to];
+        group.sort_unstable();
+        group.dedup();
+        CommDesc {
+            coll: CollectiveKind::Send,
+            bytes,
+            group,
+            steps,
+            step_latency_us,
+            hop_bytes: if steps == 0 { 0.0 } else { bytes as f64 },
+            gb_per_s,
+            links,
+        }
+    }
+}
+
+/// Which fabric shape to build — the CLI/config surface of the
+/// topology layer (`--topology ring|islands[:K]|switch`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// Flat homogeneous ring: PR 5's fabric, the degenerate baseline.
+    Ring,
+    /// NVLink islands of the given size, bridged through a host hub.
+    Islands(usize),
+    /// One PCIe switch, every device a spoke.
+    Switch,
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        TopologySpec::Ring
+    }
+}
+
+impl TopologySpec {
+    /// Parse `"ring"`, `"switch"`, `"islands"` (size 4), or an island
+    /// size spelled either `"islands:K"` or `"islandsK"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("ring") {
+            return Ok(TopologySpec::Ring);
+        }
+        if t.eq_ignore_ascii_case("switch") {
+            return Ok(TopologySpec::Switch);
+        }
+        if let Some(rest) = t.strip_prefix("islands") {
+            if rest.is_empty() {
+                return Ok(TopologySpec::Islands(4));
+            }
+            let num = rest.strip_prefix(':').unwrap_or(rest);
+            if let Ok(k) = num.trim().parse::<usize>() {
+                if k >= 1 {
+                    return Ok(TopologySpec::Islands(k));
+                }
+            }
+        }
+        Err(format!(
+            "unknown topology {t:?} (expected ring, islands[:K], or switch)"
+        ))
+    }
+
+    /// Canonical name, inverse of [`TopologySpec::parse`]; recorded as
+    /// plan provenance.
+    pub fn name(&self) -> String {
+        match self {
+            TopologySpec::Ring => "ring".to_string(),
+            TopologySpec::Islands(k) => format!("islands:{k}"),
+            TopologySpec::Switch => "switch".to_string(),
+        }
+    }
+
+    /// Materialize the graph for `devices` GPUs over `link` (the ring
+    /// segment / spoke / host-bridge model; islands use NVLink
+    /// internally).
+    pub fn build(&self, devices: usize, link: LinkModel) -> Topology {
+        match self {
+            TopologySpec::Ring => Topology::ring(devices, link),
+            TopologySpec::Islands(k) => Topology::islands(devices, *k, link),
+            TopologySpec::Switch => Topology::switch(devices, link),
+        }
+    }
+}
+
+/// How the pool parallelizes training (`--strategy data|pipeline`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Replicate the model, all-reduce gradients (PR 5's scheme,
+    /// generalized to hierarchical reduces on non-ring fabrics).
+    Data,
+    /// Partition the model into stages, stream micro-batches through
+    /// them, send activations point-to-point between stages.
+    Pipeline,
+}
+
+impl Default for Strategy {
+    fn default() -> Self {
+        Strategy::Data
+    }
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("data") {
+            return Ok(Strategy::Data);
+        }
+        if t.eq_ignore_ascii_case("pipeline") {
+            return Ok(Strategy::Pipeline);
+        }
+        Err(format!("unknown strategy {t:?} (expected data or pipeline)"))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Data => "data",
+            Strategy::Pipeline => "pipeline",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_routes_take_the_short_way_around() {
+        let t = Topology::ring(8, LinkModel::pcie3());
+        assert_eq!(t.devices(), 8);
+        assert_eq!(t.links().len(), 8);
+        // adjacent: one hop over the shared segment
+        assert_eq!(t.route(0, 1), vec![0]);
+        // 0 -> 3 clockwise (3 hops) beats counter-clockwise (5 hops)
+        assert_eq!(t.route(0, 3), vec![0, 1, 2]);
+        // antipodal ties break deterministically (lowest peer first)
+        let a = t.route(0, 4);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a, t.route(0, 4), "routing is deterministic");
+        assert!(t.route(5, 5).is_empty());
+    }
+
+    #[test]
+    fn two_device_ring_has_a_single_link() {
+        let t = Topology::ring(2, LinkModel::pcie3());
+        assert_eq!(t.links().len(), 1);
+        assert_eq!(t.route(0, 1), vec![0]);
+        assert_eq!(t.route(1, 0), vec![0]);
+        assert!(Topology::ring(1, LinkModel::pcie3()).links().is_empty());
+    }
+
+    #[test]
+    fn islands_keep_intra_island_traffic_off_the_bridges() {
+        let t = Topology::islands(8, 4, LinkModel::pcie3());
+        assert_eq!(t.devices(), 8);
+        assert_eq!(t.nodes(), 9, "one host hub node");
+        let a = t.group_links(&[0, 1, 2, 3]);
+        let b = t.group_links(&[4, 5, 6, 7]);
+        assert!(!a.is_empty() && !b.is_empty());
+        assert!(
+            a.iter().all(|l| !b.contains(l)),
+            "disjoint islands must not share links: {a:?} vs {b:?}"
+        );
+        for &l in a.iter().chain(b.iter()) {
+            assert_eq!(t.links()[l].kind, LinkKind::NvLink);
+        }
+        // crossing islands goes over both host bridges
+        let cross = t.route(0, 4);
+        assert_eq!(cross.len(), 2);
+        for &l in &cross {
+            assert_eq!(t.links()[l].kind, LinkKind::HostBridge);
+        }
+    }
+
+    #[test]
+    fn single_island_needs_no_host_hub() {
+        let t = Topology::islands(4, 4, LinkModel::pcie3());
+        assert_eq!(t.nodes(), 4);
+        assert!(t
+            .links()
+            .iter()
+            .all(|l| l.kind == LinkKind::NvLink));
+    }
+
+    #[test]
+    fn switch_spokes_are_the_contention_domain() {
+        let t = Topology::switch(4, LinkModel::pcie3());
+        assert_eq!(t.nodes(), 5);
+        assert_eq!(t.links().len(), 4);
+        assert_eq!(t.route(0, 3), vec![0, 3], "two hops through the hub");
+        // transfers touching the same device contend on its spoke
+        let d01 = t.send_desc(0, 1, 1 << 20);
+        let d02 = t.send_desc(0, 2, 1 << 20);
+        let d23 = t.send_desc(2, 3, 1 << 20);
+        assert!(d01.links.iter().any(|l| d02.links.contains(l)));
+        assert!(d01.links.iter().all(|l| !d23.links.contains(l)));
+    }
+
+    #[test]
+    fn allreduce_desc_on_the_full_ring_matches_the_legacy_formula() {
+        let link = LinkModel::pcie3();
+        let t = Topology::ring(4, link);
+        let d = t.allreduce_desc(&[0, 1, 2, 3], 24_000_000);
+        assert_eq!(d.steps, 6);
+        assert_eq!(d.hop_bytes, 6_000_000.0);
+        assert_eq!(d.links.len(), 4);
+        let priced = LinkModel {
+            latency_us: d.step_latency_us,
+            gb_per_s: d.gb_per_s,
+        }
+        .staged_us(d.steps, d.hop_bytes);
+        let legacy = link.ring_allreduce_us(24_000_000, 4);
+        assert_eq!(priced.to_bits(), legacy.to_bits());
+    }
+
+    #[test]
+    fn staged_collective_shapes() {
+        let t = Topology::ring(4, LinkModel::pcie3());
+        let ag = t.allgather_desc(&[0, 1, 2, 3], 1000);
+        assert_eq!(ag.steps, 3);
+        assert_eq!(ag.hop_bytes, 250.0);
+        let rs = t.reduce_scatter_desc(&[3, 2, 1, 0], 1000);
+        assert_eq!(rs.group, vec![0, 1, 2, 3], "group is sorted");
+        assert_eq!(rs.steps, 3);
+        // degenerate groups and empty tensors are free
+        assert_eq!(t.allreduce_desc(&[2], 1000).steps, 0);
+        assert_eq!(t.allreduce_desc(&[0, 1], 0).steps, 0);
+        let send = t.send_desc(0, 2, 500);
+        assert_eq!(send.steps, 2, "one step per hop");
+        assert_eq!(send.hop_bytes, 500.0, "full tensor each hop");
+        assert_eq!(t.send_desc(1, 1, 500).steps, 0);
+    }
+
+    #[test]
+    fn bottleneck_pricing_uses_the_slowest_link_on_the_path() {
+        // leader 0 -> leader 4 crosses two host bridges (pcie3-class);
+        // the desc must price at the bridge, not at NVLink speed.
+        let t = Topology::islands(8, 4, LinkModel::pcie3());
+        let d = t.allreduce_desc(&[0, 4], 1 << 20);
+        assert_eq!(d.gb_per_s, 12.0);
+        assert_eq!(d.step_latency_us, 10.0);
+        let intra = t.allreduce_desc(&[0, 1], 1 << 20);
+        assert_eq!(intra.gb_per_s, 60.0);
+        assert_eq!(intra.step_latency_us, 5.0);
+    }
+
+    #[test]
+    fn spec_parse_round_trips() {
+        for s in ["ring", "switch", "islands:2", "islands:8"] {
+            let spec = TopologySpec::parse(s).unwrap();
+            assert_eq!(spec.name(), s);
+        }
+        assert_eq!(
+            TopologySpec::parse("islands").unwrap(),
+            TopologySpec::Islands(4)
+        );
+        assert_eq!(TopologySpec::default(), TopologySpec::Ring);
+        assert!(TopologySpec::parse("torus").is_err());
+        assert!(TopologySpec::parse("islands:0").is_err());
+
+        for s in ["data", "pipeline"] {
+            assert_eq!(Strategy::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(Strategy::default(), Strategy::Data);
+        assert!(Strategy::parse("tensor").is_err());
+    }
+
+    #[test]
+    fn spec_build_dispatches() {
+        let link = LinkModel::pcie3();
+        assert_eq!(TopologySpec::Ring.build(8, link).links().len(), 8);
+        assert_eq!(TopologySpec::Switch.build(8, link).nodes(), 9);
+        let isl = TopologySpec::Islands(4).build(8, link);
+        assert_eq!(isl.nodes(), 9);
+    }
+}

@@ -61,6 +61,16 @@ pub struct ClusterSettings {
     /// default) or serialize them after the full backward pass (`false`
     /// — the serial-tail baseline).
     pub overlap: bool,
+    /// Interconnect topology: `ring` (the flat default), `islandsN`
+    /// (NVLink islands of N devices bridged over the host), or
+    /// `switch` (one shared PCIe switch).
+    pub topology: String,
+    /// Parallelization strategy: `data` (replicated batches + gradient
+    /// reduction, the default) or `pipeline` (stage placement with
+    /// micro-batches).
+    pub strategy: String,
+    /// Micro-batch count for the pipeline strategy (ignored by `data`).
+    pub micro_batches: usize,
 }
 
 impl Default for ClusterSettings {
@@ -74,6 +84,9 @@ impl Default for ClusterSettings {
             link_latency_us: link.latency_us,
             link_gb_per_s: link.gb_per_s,
             overlap: true,
+            topology: "ring".into(),
+            strategy: "data".into(),
+            micro_batches: 4,
         }
     }
 }
@@ -200,8 +213,16 @@ const SCHEDULER_KEYS: &[&str] = &[
 ];
 
 /// Keys accepted inside `[cluster]`.
-const CLUSTER_KEYS: &[&str] =
-    &["gpus", "devices", "link_latency_us", "link_gb_per_s", "overlap"];
+const CLUSTER_KEYS: &[&str] = &[
+    "gpus",
+    "devices",
+    "link_latency_us",
+    "link_gb_per_s",
+    "overlap",
+    "topology",
+    "strategy",
+    "micro_batches",
+];
 
 /// Keys accepted inside `[workload]`.
 const WORKLOAD_KEYS: &[&str] =
@@ -271,6 +292,15 @@ impl RunConfig {
                     cd.link_gb_per_s,
                 ),
                 overlap: p.bool_or("cluster", "overlap", cd.overlap),
+                topology: p.str_or("cluster", "topology", &cd.topology),
+                strategy: p.str_or("cluster", "strategy", &cd.strategy),
+                micro_batches: p
+                    .uint_or(
+                        "cluster",
+                        "micro_batches",
+                        cd.micro_batches as u64,
+                    )
+                    .max(1) as usize,
             },
             serve: ServeSettings {
                 requests: p
@@ -473,6 +503,22 @@ priority = "fifo"
         assert_eq!(c.cluster.link_latency_us, 5.0);
         assert_eq!(c.cluster.link_gb_per_s, 60.0);
         assert!(!c.cluster.overlap);
+        // topology/strategy ride along with sane defaults
+        assert_eq!(c.cluster.topology, "ring");
+        assert_eq!(c.cluster.strategy, "data");
+        assert_eq!(c.cluster.micro_batches, 4);
+        let t = RunConfig::from_text(
+            "[cluster]\ngpus = 8\ntopology = \"islands4\"\n\
+             strategy = \"pipeline\"\nmicro_batches = 8\n",
+        )
+        .unwrap();
+        assert_eq!(t.cluster.topology, "islands4");
+        assert_eq!(t.cluster.strategy, "pipeline");
+        assert_eq!(t.cluster.micro_batches, 8);
+        // micro_batches clamps to at least one
+        let m = RunConfig::from_text("[cluster]\nmicro_batches = 0\n")
+            .unwrap();
+        assert_eq!(m.cluster.micro_batches, 1);
         // gpus clamps to at least one device
         let z = RunConfig::from_text("[cluster]\ngpus = 0\n").unwrap();
         assert_eq!(z.cluster.gpus, 1);

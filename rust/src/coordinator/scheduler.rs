@@ -138,6 +138,11 @@ pub fn non_conv_time_us(kind: &OpKind, spec: &DeviceSpec) -> f64 {
             gb_per_s: *link_gb_per_s,
         }
         .ring_allreduce_us(*bytes, *replicas),
+        OpKind::Collective(d) => crate::cluster::LinkModel {
+            latency_us: d.step_latency_us,
+            gb_per_s: d.gb_per_s,
+        }
+        .staged_us(d.steps, d.hop_bytes),
         OpKind::FullyConnected { .. } => {
             // small GEMM: compute at modest efficiency + overhead
             kind.flops() / (spec.peak_flops * 0.3) * 1e6
@@ -303,6 +308,42 @@ mod tests {
             link_latency_us: 10.0,
             link_gb_per_s: 12.0,
         };
+        assert_eq!(non_conv_time_us(&solo, &spec), 0.0);
+    }
+
+    #[test]
+    fn collectives_priced_by_their_routed_path_not_dram() {
+        use crate::graph::{CollectiveKind, CommDesc};
+        let spec = DeviceSpec::k40();
+        let kind = OpKind::Collective(CommDesc {
+            coll: CollectiveKind::AllGather,
+            bytes: 24_000_000,
+            group: vec![0, 1, 2, 3],
+            steps: 3,
+            step_latency_us: 5.0,
+            hop_bytes: 6_000_000.0,
+            gb_per_s: 60.0,
+            links: vec![0, 1, 2, 3],
+        });
+        let t = non_conv_time_us(&kind, &spec);
+        let expect = crate::cluster::LinkModel {
+            latency_us: 5.0,
+            gb_per_s: 60.0,
+        }
+        .staged_us(3, 6_000_000.0);
+        assert_eq!(t, expect);
+        assert!(t > 0.0);
+        // a zero-step collective (degenerate group) is free
+        let solo = OpKind::Collective(CommDesc {
+            coll: CollectiveKind::ReduceScatter,
+            bytes: 24_000_000,
+            group: vec![0],
+            steps: 0,
+            step_latency_us: 5.0,
+            hop_bytes: 0.0,
+            gb_per_s: 60.0,
+            links: vec![],
+        });
         assert_eq!(non_conv_time_us(&solo, &spec), 0.0);
     }
 

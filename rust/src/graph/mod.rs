@@ -9,5 +9,5 @@ pub mod training;
 
 pub use dag::{Dag, DagStats};
 pub use networks::Network;
-pub use op::{Op, OpKind};
+pub use op::{CollectiveKind, CommDesc, Op, OpKind};
 pub use training::training_dag;

@@ -50,6 +50,67 @@ pub enum OpKind {
         /// Link bandwidth, GB/s.
         link_gb_per_s: f64,
     },
+    /// A topology-routed collective (all-reduce, all-gather,
+    /// reduce-scatter) or point-to-point activation send, emitted by
+    /// `cluster::Topology`'s comm builders. Like [`OpKind::GradReduce`]
+    /// the full pricing description rides inline, so every consumer
+    /// (planner cost model, barrier replay, event executor) prices the
+    /// transfer identically; unlike `GradReduce` it also names the
+    /// physical links its routed path crosses, which is what lets the
+    /// executor run disjoint transfers concurrently and split bandwidth
+    /// between contending ones.
+    Collective(CommDesc),
+}
+
+/// Which collective pattern a [`OpKind::Collective`] op performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// Ring all-reduce over the group: `2 (g-1)` steps of `bytes / g`.
+    AllReduce,
+    /// Ring all-gather: `g - 1` steps of `bytes / g`.
+    AllGather,
+    /// Ring reduce-scatter: `g - 1` steps of `bytes / g`.
+    ReduceScatter,
+    /// Point-to-point activation send along the routed path: one step
+    /// per hop, the full tensor each hop (store-and-forward).
+    Send,
+}
+
+impl CollectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "allreduce",
+            CollectiveKind::AllGather => "allgather",
+            CollectiveKind::ReduceScatter => "reduce_scatter",
+            CollectiveKind::Send => "send",
+        }
+    }
+}
+
+/// The routed-path pricing description a [`OpKind::Collective`] carries:
+/// everything the cost model needs (`steps`, `step_latency_us`,
+/// `hop_bytes`, `gb_per_s` — the same staged shape as the ring formula)
+/// plus the participant group and the physical link ids the transfer
+/// occupies (the executor's contention domain).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommDesc {
+    pub coll: CollectiveKind,
+    /// Tensor bytes per participant.
+    pub bytes: u64,
+    /// Participating devices, sorted ascending.
+    pub group: Vec<usize>,
+    /// Pipeline steps of the staged transfer.
+    pub steps: usize,
+    /// Per-step latency, microseconds (max over the path's links).
+    pub step_latency_us: f64,
+    /// Bytes moved per step.
+    pub hop_bytes: f64,
+    /// Bottleneck bandwidth over the path's links, GB/s.
+    pub gb_per_s: f64,
+    /// Topology link ids the routed transfer occupies, sorted,
+    /// deduplicated. Two collectives whose `links` sets are disjoint
+    /// proceed concurrently; overlapping sets split bandwidth.
+    pub links: Vec<usize>,
 }
 
 impl OpKind {
@@ -99,6 +160,29 @@ impl OpKind {
                         * *bytes as f64
                 }
             }
+            // wire traffic per participant of the staged collectives;
+            // sends move the whole tensor
+            OpKind::Collective(d) => {
+                let g = d.group.len();
+                match d.coll {
+                    CollectiveKind::AllReduce => {
+                        if g <= 1 {
+                            0.0
+                        } else {
+                            2.0 * (g - 1) as f64 / g as f64 * d.bytes as f64
+                        }
+                    }
+                    CollectiveKind::AllGather
+                    | CollectiveKind::ReduceScatter => {
+                        if g <= 1 {
+                            0.0
+                        } else {
+                            (g - 1) as f64 / g as f64 * d.bytes as f64
+                        }
+                    }
+                    CollectiveKind::Send => d.bytes as f64,
+                }
+            }
         }
     }
 
@@ -115,12 +199,19 @@ impl OpKind {
             OpKind::Softmax { .. } => "softmax",
             OpKind::FullyConnected { .. } => "fc",
             OpKind::GradReduce { .. } => "grad_reduce",
+            OpKind::Collective(d) => d.coll.name(),
         }
     }
 
     /// Is this a cross-device gradient reduction (interconnect-lane op)?
     pub fn is_grad_reduce(&self) -> bool {
         matches!(self, OpKind::GradReduce { .. })
+    }
+
+    /// Is this any cross-device communication op (runs on interconnect
+    /// links, not a compute stream)?
+    pub fn is_comm(&self) -> bool {
+        matches!(self, OpKind::GradReduce { .. } | OpKind::Collective(_))
     }
 }
 
@@ -187,5 +278,61 @@ mod tests {
         assert_eq!(kind(2).dram_bytes(), 1000.0);
         assert_eq!(kind(4).dram_bytes(), 1500.0);
         assert_eq!(kind(1).dram_bytes(), 0.0);
+    }
+
+    #[test]
+    fn collective_wire_bytes_follow_the_staged_formulas() {
+        let desc = |coll, group: Vec<usize>| CommDesc {
+            coll,
+            bytes: 1000,
+            group,
+            steps: 1,
+            step_latency_us: 5.0,
+            hop_bytes: 250.0,
+            gb_per_s: 60.0,
+            links: vec![0],
+        };
+        let ar = OpKind::Collective(desc(
+            CollectiveKind::AllReduce,
+            vec![0, 1, 2, 3],
+        ));
+        assert!(ar.is_comm());
+        assert!(!ar.is_grad_reduce(), "collectives are not ring reduces");
+        assert_eq!(ar.kind_name(), "allreduce");
+        assert_eq!(ar.flops(), 0.0);
+        // same wire formula as the 4-replica ring reduce
+        assert_eq!(ar.dram_bytes(), 1500.0);
+
+        let ag =
+            OpKind::Collective(desc(CollectiveKind::AllGather, vec![0, 1]));
+        assert_eq!(ag.kind_name(), "allgather");
+        assert_eq!(ag.dram_bytes(), 500.0);
+
+        let rs = OpKind::Collective(desc(
+            CollectiveKind::ReduceScatter,
+            vec![0, 1, 2, 3],
+        ));
+        assert_eq!(rs.kind_name(), "reduce_scatter");
+        assert_eq!(rs.dram_bytes(), 750.0);
+
+        let send = OpKind::Collective(desc(CollectiveKind::Send, vec![0, 1]));
+        assert_eq!(send.kind_name(), "send");
+        assert_eq!(send.dram_bytes(), 1000.0);
+
+        let solo =
+            OpKind::Collective(desc(CollectiveKind::AllReduce, vec![0]));
+        assert_eq!(solo.dram_bytes(), 0.0);
+    }
+
+    #[test]
+    fn grad_reduce_is_comm_too() {
+        let gr = OpKind::GradReduce {
+            bytes: 8,
+            replicas: 2,
+            link_latency_us: 1.0,
+            link_gb_per_s: 12.0,
+        };
+        assert!(gr.is_comm());
+        assert!(!OpKind::Relu { bytes: 8 }.is_comm());
     }
 }

@@ -298,11 +298,18 @@ fn build(name: &str, stmts: &[Stmt]) -> Result<(String, Dag), IngestError> {
                     shape_keys.join(", ")
                 )));
             }
-            let raw = match val.split_once(',') {
-                Some((a, b)) => {
+            // comma count picks the shape: none → number, one →
+            // canonical pair (`stride="2,2"`), more → list
+            // (`links="0,1,2,3"`)
+            let parts: Vec<&str> = val.split(',').collect();
+            let raw = match parts.as_slice() {
+                [_] => RawValue::Num(val.clone()),
+                [a, b] => {
                     RawValue::Pair(a.trim().into(), b.trim().into())
                 }
-                None => RawValue::Num(val.clone()),
+                many => RawValue::List(
+                    many.iter().map(|s| s.trim().to_string()).collect(),
+                ),
             };
             fields.push((key.clone(), raw));
         }

@@ -105,7 +105,28 @@ fn push_shape_fields(out: &mut String, kind: &OpKind) {
                  \"link_gb_per_s\": {link_gb_per_s}"
             ));
         }
+        OpKind::Collective(d) => {
+            out.push_str(&format!(", \"bytes\": {}", d.bytes));
+            push_usize_list(out, "group", &d.group);
+            out.push_str(&format!(
+                ", \"steps\": {}, \"step_latency_us\": {}, \
+                 \"hop_bytes\": {}, \"gb_per_s\": {}",
+                d.steps, d.step_latency_us, d.hop_bytes, d.gb_per_s
+            ));
+            push_usize_list(out, "links", &d.links);
+        }
     }
+}
+
+fn push_usize_list(out: &mut String, key: &str, items: &[usize]) {
+    out.push_str(&format!(", \"{key}\": ["));
+    for (i, v) in items.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("{v}"));
+    }
+    out.push(']');
 }
 
 #[cfg(test)]
@@ -161,9 +182,60 @@ mod tests {
             &[cat],
         );
         g.set_device(gr, 1);
+        // routed collectives: device groups and link paths are
+        // arbitrary-length lists, including the canonical two-element
+        // spelling (which round-trips through the Pair variant)
+        use crate::graph::{CollectiveKind, CommDesc};
+        let ar = g.add_after(
+            "ar",
+            OpKind::Collective(CommDesc {
+                coll: CollectiveKind::AllReduce,
+                bytes: 4096,
+                group: vec![0, 1, 2, 3],
+                steps: 6,
+                step_latency_us: 5.0,
+                hop_bytes: 1024.0,
+                gb_per_s: 60.0,
+                links: vec![0, 1, 2, 3],
+            }),
+            &[gr],
+        );
+        let snd = g.add_after(
+            "send",
+            OpKind::Collective(CommDesc {
+                coll: CollectiveKind::Send,
+                bytes: 512,
+                group: vec![1, 2],
+                steps: 2,
+                step_latency_us: 10.0,
+                hop_bytes: 512.0,
+                gb_per_s: 12.0,
+                links: vec![4, 5],
+            }),
+            &[ar],
+        );
+        let _ = g.add_after(
+            "rs",
+            OpKind::Collective(CommDesc {
+                coll: CollectiveKind::ReduceScatter,
+                bytes: 2048,
+                group: vec![0, 2],
+                steps: 1,
+                step_latency_us: 5.0,
+                hop_bytes: 1024.0,
+                gb_per_s: 60.0,
+                links: vec![7],
+            }),
+            &[snd],
+        );
         let (_, back) = dag_to_json_roundtrip(&g);
         assert_eq!(dag_digest(&back), dag_digest(&g));
         assert_eq!(back.device_of(gr), 1);
+        let OpKind::Collective(d) = &back.ops[ar].kind else {
+            panic!("allreduce lost its kind");
+        };
+        assert_eq!(d.group, vec![0, 1, 2, 3]);
+        assert_eq!(d.links, vec![0, 1, 2, 3]);
     }
 
     fn dag_to_json_roundtrip(g: &Dag) -> (String, Dag) {

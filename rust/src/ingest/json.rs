@@ -189,7 +189,9 @@ pub fn dag_from_json(text: &str) -> Result<(String, Dag), IngestError> {
 }
 
 /// Lower a JSON shape value to the importer-neutral [`RawValue`]:
-/// numbers keep source text, two-element numeric arrays become pairs.
+/// numbers keep source text, two-element numeric arrays become pairs
+/// (the canonical stride/padding spelling), and numeric arrays of any
+/// other length become lists (collective device groups and link paths).
 fn lower_value(
     task: &str,
     key: &str,
@@ -202,11 +204,22 @@ fn lower_value(
             [JsonValue::Num(a), JsonValue::Num(b)] => {
                 Ok(RawValue::Pair(a.clone(), b.clone()))
             }
-            _ => Err(err(format!(
-                "{key:?} must be a two-element numeric array"
-            ))),
+            other => {
+                let mut nums = Vec::with_capacity(other.len());
+                for it in other {
+                    let JsonValue::Num(s) = it else {
+                        return Err(err(format!(
+                            "{key:?} must be a numeric array"
+                        )));
+                    };
+                    nums.push(s.clone());
+                }
+                Ok(RawValue::List(nums))
+            }
         },
-        _ => Err(err(format!("{key:?} must be a number or numeric pair"))),
+        _ => Err(err(format!(
+            "{key:?} must be a number or numeric array"
+        ))),
     }
 }
 

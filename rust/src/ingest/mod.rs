@@ -46,7 +46,7 @@ pub use random::{random_layered_dag, random_layered_dag_sized};
 pub use transformer::{transformer, TransformerSpec};
 
 use crate::convlib::ConvParams;
-use crate::graph::{Dag, OpKind};
+use crate::graph::{CollectiveKind, CommDesc, Dag, OpKind};
 
 /// Everything that can go wrong turning an external description into a
 /// `Dag`. Importers fail loudly and specifically: a truncated document,
@@ -100,6 +100,10 @@ pub(crate) const KIND_NAMES: &[&str] = &[
     "softmax",
     "fc",
     "grad_reduce",
+    "allreduce",
+    "allgather",
+    "reduce_scatter",
+    "send",
 ];
 
 /// Shape fields each kind requires beyond the common task keys. The
@@ -116,6 +120,15 @@ pub(crate) fn kind_shape_keys(kind: &str) -> Option<&'static [&'static str]> {
         "grad_reduce" => {
             &["bytes", "replicas", "link_latency_us", "link_gb_per_s"]
         }
+        "allreduce" | "allgather" | "reduce_scatter" | "send" => &[
+            "bytes",
+            "group",
+            "steps",
+            "step_latency_us",
+            "hop_bytes",
+            "gb_per_s",
+            "links",
+        ],
         _ => return None,
     })
 }
@@ -129,6 +142,10 @@ pub(crate) enum RawValue {
     Num(String),
     /// A two-element numeric pair (`"stride": [2, 2]` / `stride="2,2"`).
     Pair(String, String),
+    /// A numeric list of any other length (`"group": [0, 1, 2, 3]` /
+    /// `group="0,1,2,3"`) — routed collectives carry device groups and
+    /// link paths whose lengths the schema cannot fix in advance.
+    List(Vec<String>),
 }
 
 /// A task's shape attributes plus its display id, for error messages.
@@ -158,7 +175,7 @@ impl TaskFields<'_> {
             RawValue::Num(s) => s.parse().map_err(|_| {
                 self.err(format!("{key:?} is not a non-negative integer: {s:?}"))
             }),
-            RawValue::Pair(..) => {
+            RawValue::Pair(..) | RawValue::List(_) => {
                 Err(self.err(format!("{key:?} must be a single integer")))
             }
         }
@@ -169,7 +186,7 @@ impl TaskFields<'_> {
             RawValue::Num(s) => s.parse().map_err(|_| {
                 self.err(format!("{key:?} is not a non-negative integer: {s:?}"))
             }),
-            RawValue::Pair(..) => {
+            RawValue::Pair(..) | RawValue::List(_) => {
                 Err(self.err(format!("{key:?} must be a single integer")))
             }
         }
@@ -178,7 +195,7 @@ impl TaskFields<'_> {
     fn f64_field(&self, key: &str) -> Result<f64, IngestError> {
         let v = match self.get(key)? {
             RawValue::Num(s) => s.parse::<f64>().ok(),
-            RawValue::Pair(..) => None,
+            RawValue::Pair(..) | RawValue::List(_) => None,
         };
         match v {
             Some(x) if x.is_finite() => Ok(x),
@@ -199,9 +216,33 @@ impl TaskFields<'_> {
                     b.trim().parse().map_err(|_| bad())?,
                 ))
             }
-            RawValue::Num(_) => Err(self.err(format!(
+            RawValue::Num(_) | RawValue::List(_) => Err(self.err(format!(
                 "{key:?} must be a two-element pair (e.g. [1, 1])"
             ))),
+        }
+    }
+
+    /// A numeric list of any length. A lone number reads as a
+    /// one-element list and a pair as a two-element list, because the
+    /// lower layers canonicalise those lengths into the older variants
+    /// (`[0, 1]` arrives as a `Pair`, `links="2"` as a `Num`).
+    fn usize_list_field(
+        &self,
+        key: &str,
+    ) -> Result<Vec<usize>, IngestError> {
+        let bad = || {
+            self.err(format!(
+                "{key:?} must be a list of non-negative integers"
+            ))
+        };
+        let parse =
+            |s: &str| s.trim().parse::<usize>().map_err(|_| bad());
+        match self.get(key)? {
+            RawValue::Num(s) => Ok(vec![parse(s)?]),
+            RawValue::Pair(a, b) => Ok(vec![parse(a)?, parse(b)?]),
+            RawValue::List(items) => {
+                items.iter().map(|s| parse(s)).collect()
+            }
         }
     }
 }
@@ -242,6 +283,30 @@ pub(crate) fn op_kind_from(
                 link_latency_us: f.f64_field("link_latency_us")?,
                 link_gb_per_s: f.f64_field("link_gb_per_s")?,
             }
+        }
+        "allreduce" | "allgather" | "reduce_scatter" | "send" => {
+            let coll = match kind {
+                "allreduce" => CollectiveKind::AllReduce,
+                "allgather" => CollectiveKind::AllGather,
+                "reduce_scatter" => CollectiveKind::ReduceScatter,
+                _ => CollectiveKind::Send,
+            };
+            let group = f.usize_list_field("group")?;
+            if group.is_empty() {
+                return Err(
+                    f.err("\"group\" must name at least one device")
+                );
+            }
+            OpKind::Collective(CommDesc {
+                coll,
+                bytes: f.u64_field("bytes")?,
+                group,
+                steps: f.usize_field("steps")?,
+                step_latency_us: f.f64_field("step_latency_us")?,
+                hop_bytes: f.f64_field("hop_bytes")?,
+                gb_per_s: f.f64_field("gb_per_s")?,
+                links: f.usize_list_field("links")?,
+            })
         }
         other => {
             return Err(IngestError::UnknownKind {
@@ -410,6 +475,48 @@ mod tests {
         let f = TaskFields { task: "t", fields: &fields };
         let err = op_kind_from("conv", &f).unwrap_err();
         assert!(err.to_string().contains("larger than padded input"));
+    }
+
+    #[test]
+    fn collectives_build_from_any_list_spelling() {
+        // `group` as a canonical Pair (two devices), `links` as a List
+        // (four links) — both must read back as plain usize lists
+        let fields = vec![
+            ("bytes".into(), RawValue::Num("1024".into())),
+            ("group".into(), RawValue::Pair("0".into(), "1".into())),
+            ("steps".into(), RawValue::Num("3".into())),
+            ("step_latency_us".into(), RawValue::Num("5.0".into())),
+            ("hop_bytes".into(), RawValue::Num("256.0".into())),
+            ("gb_per_s".into(), RawValue::Num("60.0".into())),
+            (
+                "links".into(),
+                RawValue::List(vec![
+                    "0".into(),
+                    "1".into(),
+                    "2".into(),
+                    "3".into(),
+                ]),
+            ),
+        ];
+        let f = TaskFields { task: "ar", fields: &fields };
+        let OpKind::Collective(d) = op_kind_from("allgather", &f).unwrap()
+        else {
+            panic!("wrong kind");
+        };
+        assert_eq!(d.coll, CollectiveKind::AllGather);
+        assert_eq!(d.group, vec![0, 1]);
+        assert_eq!(d.links, vec![0, 1, 2, 3]);
+        assert_eq!(d.steps, 3);
+        // an empty group is refused loudly
+        let empty = vec![
+            ("bytes".into(), RawValue::Num("1".into())),
+            ("group".into(), RawValue::List(Vec::new())),
+        ];
+        let f = TaskFields { task: "ar", fields: &empty };
+        assert!(op_kind_from("allreduce", &f)
+            .unwrap_err()
+            .to_string()
+            .contains("at least one device"));
     }
 
     #[test]

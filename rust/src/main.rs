@@ -68,7 +68,9 @@
 use std::path::Path;
 use std::process::ExitCode;
 
-use parconv::cluster::{DevicePool, LinkModel, PoolOptions, PoolSpec};
+use parconv::cluster::{
+    DevicePool, LinkModel, PoolOptions, PoolSpec, Strategy, TopologySpec,
+};
 use parconv::config::RunConfig;
 use parconv::convlib::{kernel_desc, Algorithm, ConvParams, ALL_ALGORITHMS};
 use parconv::coordinator::{
@@ -157,6 +159,12 @@ fn parse_cli(args: Vec<String>) -> anyhow::Result<Cli> {
                 cfg.cluster.link_latency_us = val()?.parse()?
             }
             "--link-gbps" => cfg.cluster.link_gb_per_s = val()?.parse()?,
+            "--topology" => cfg.cluster.topology = val()?,
+            "--strategy" => cfg.cluster.strategy = val()?,
+            "--micro-batches" => {
+                cfg.cluster.micro_batches =
+                    val()?.parse::<usize>()?.max(1)
+            }
             "--reduce" => {
                 cfg.cluster.overlap = match val()?.as_str() {
                     "overlapped" | "overlap" => true,
@@ -364,8 +372,16 @@ end2end/training/plan/serve also take:
   --devices D1,D2xN,...   (device pool, e.g. k40,v100x2,a100;
                            overrides --device / --gpus / --serve-gpus)
 end2end/training also take: --executor event|barrier --trace FILE
-training also takes: --gpus N --link-latency-us X --link-gbps X
-                     --reduce overlapped|serial_tail  (data parallelism)
+training also takes: --gpus N
+  --link-latency-us US   (per-hop link latency, microseconds)
+  --link-gbps GBPS       (per-link bandwidth, gigaBYTES/s — feeds
+                          [cluster] link_gb_per_s)
+  --reduce overlapped|serial_tail   (gradient reduction placement)
+  --topology ring|islandsN|switch   (interconnect shape; islandsN =
+                                     NVLink islands of N over a host
+                                     bridge, e.g. islands4)
+  --strategy data|pipeline          (parallelization strategy)
+  --micro-batches M                 (pipeline micro-batch count)
 serve takes: --requests N --arrival poisson|bursty|diurnal --rate R
              --window-us W --max-batch B --slo-us S --serve-gpus N
              --mix net1,net2,... --trace-out F --trace-in F
@@ -699,6 +715,12 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
     let devices = pool(&cli.cfg)?;
     let planner = planner_kind(&cli.cfg)?;
     let exec = executor_kind(&cli.cfg)?;
+    // parse fabric knobs up front so a typo fails loudly even when the
+    // run stays single-GPU
+    let topology = TopologySpec::parse(&cli.cfg.cluster.topology)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let strategy = Strategy::parse(&cli.cfg.cluster.strategy)
+        .map_err(|e| anyhow::anyhow!(e))?;
     let (label, fwd) = workload(&cli.cfg)?;
     let train = training_dag(&fwd);
     println!(
@@ -785,8 +807,10 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
             gb_per_s: cli.cfg.cluster.link_gb_per_s,
         };
         println!(
-            "\ndata-parallel x{gpus} over {members} (ring all-reduce, \
+            "\n{}-parallel x{gpus} over {members} (topology {}, \
              {} us/hop + {} GB/s per link; configured: {}):",
+            strategy.name(),
+            topology.name(),
             link.latency_us,
             link.gb_per_s,
             if cli.cfg.cluster.overlap {
@@ -810,7 +834,10 @@ fn cmd_training(cli: &Cli) -> anyhow::Result<()> {
                     .schedule(schedule_config(&cli.cfg)?)
                     .link(link)
                     .overlap(overlap)
-                    .planner(planner),
+                    .planner(planner)
+                    .topology(topology)
+                    .strategy(strategy)
+                    .micro_batches(cli.cfg.cluster.micro_batches),
             );
             pool.set_executor(exec);
             let r = pool.run_training(&fwd);

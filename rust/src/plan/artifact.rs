@@ -25,7 +25,11 @@
 //! single recorded device into a per-device spec-name list (`pool`) —
 //! plans may now be built for *heterogeneous* pools by any of the
 //! planner family (`planner` records which one) — and `spec_digest`
-//! covers every member spec in device order.
+//! covers every member spec in device order. Schema v6 records the
+//! interconnect `topology` and parallelization `strategy` the DAG was
+//! built for, and its DAG digests cover the topology-routed
+//! `Collective` ops (all-gather / reduce-scatter / activation sends)
+//! alongside the legacy `GradReduce`.
 
 use crate::cluster::PoolSpec;
 use crate::convlib::{kernel_desc, Algorithm, KernelDesc};
@@ -41,21 +45,26 @@ use crate::util::digest::{hex16, parse_hex16, Fnv64};
 
 use super::json::{escape, JsonValue};
 
-/// Version tag of the plan JSON layout. Version 5 generalizes the device
-/// binding from one spec to a per-device `pool` of spec names (mixed
-/// K40/P100/V100/A100 pools) and records which `planner` built the plan
-/// (greedy/heft/peft/lookahead); `spec_digest` now covers every member
-/// spec in device order. Version 4 added the per-member `fallback` flag —
-/// whether the planner already downgraded that op's algorithm to fit the
-/// workspace budget — so executors can tell a re-taken fallback from a
-/// fresh runtime one and count each op once. Version 3 added per-node
-/// device assignments and the `replicas` count (multi-GPU data-parallel
-/// plans whose `nodes` include `GradReduce` ops), plus a self-`digest`
-/// field the reader verifies; version 2 added the `nodes` array — per-op
-/// dependency edges and stream-lane assignments — which the event-driven
-/// executor schedules from. Plans of version 4 and earlier are refused
-/// with [`PlanError::UnsupportedVersion`].
-pub const PLAN_FORMAT_VERSION: u32 = 5;
+/// Version tag of the plan JSON layout. Version 6 records the
+/// interconnect `topology` (ring/islands:K/switch) and parallelization
+/// `strategy` (data/pipeline) the plan's DAG was built for — pure
+/// provenance, but mandatory so a serialized plan names the fabric its
+/// communication ops were priced against. Version 5 generalized the
+/// device binding from one spec to a per-device `pool` of spec names
+/// (mixed K40/P100/V100/A100 pools) and recorded which `planner` built
+/// the plan (greedy/heft/peft/lookahead); `spec_digest` covers every
+/// member spec in device order. Version 4 added the per-member
+/// `fallback` flag — whether the planner already downgraded that op's
+/// algorithm to fit the workspace budget — so executors can tell a
+/// re-taken fallback from a fresh runtime one and count each op once.
+/// Version 3 added per-node device assignments and the `replicas` count
+/// (multi-GPU data-parallel plans whose `nodes` include `GradReduce`
+/// ops), plus a self-`digest` field the reader verifies; version 2 added
+/// the `nodes` array — per-op dependency edges and stream-lane
+/// assignments — which the event-driven executor schedules from. Plans
+/// of version 5 and earlier are refused with
+/// [`PlanError::UnsupportedVersion`].
+pub const PLAN_FORMAT_VERSION: u32 = 6;
 
 /// Errors from plan execution or deserialization.
 #[derive(Clone, Debug, PartialEq, thiserror::Error)]
@@ -79,16 +88,32 @@ pub enum PlanError {
     Unsupported { algo: Algorithm, op: usize },
     #[error(
         "unsupported plan schema version {found}: this build reads \
-         version 5 (v5 plans record the per-device spec-name pool and \
-         the planner that built them, on top of v4's per-member \
-         workspace-fallback flags, v3's per-node device assignments, \
-         gradient-reduce ops, and verified digest; v4 and earlier \
-         layouts lack one or more of these) — regenerate the plan with \
-         `parconv plan`"
+         version 6 (v6 plans record the interconnect topology and the \
+         parallelization strategy, on top of v5's per-device spec-name \
+         pool and planner provenance, v4's per-member \
+         workspace-fallback flags, and v3's per-node device \
+         assignments, gradient-reduce ops, and verified digest; v5 and \
+         earlier layouts lack one or more of these) — regenerate the \
+         plan with `parconv plan`"
     )]
     UnsupportedVersion { found: u32 },
     #[error("plan nodes disagree with the plan steps or DAG: {0}")]
     NodeMismatch(String),
+    #[error(
+        "stream-lane table corrupted on device {device}: completing op \
+         {op} expected to release lane {lane}, found {found:?} — the \
+         executor's lane bookkeeping diverged from the engine's kernel \
+         completions"
+    )]
+    LaneCorruption {
+        device: usize,
+        op: usize,
+        lane: usize,
+        /// What `Lanes::release` actually returned: `None` when the
+        /// kernel was not on any lane, `Some((lane, op))` when it was on
+        /// the wrong one.
+        found: Option<(usize, usize)>,
+    },
     #[error(
         "unknown plan field {0:?} — hand-edited or foreign plan documents \
          are refused; regenerate with `parconv plan`"
@@ -122,6 +147,12 @@ pub struct PlanMeta {
     /// `greedy`/`heft`/`peft`/`lookahead`). Informational provenance —
     /// replay never consults it.
     pub planner: String,
+    /// Interconnect topology the plan's DAG was built for (schema v6:
+    /// `ring`/`islands:K`/`switch`). Informational provenance — the
+    /// pricing itself rides inline on the DAG's comm ops.
+    pub topology: String,
+    /// Parallelization strategy (schema v6: `data`/`pipeline`).
+    pub strategy: String,
     /// Batch size, read off the first convolution (0 if the DAG has none).
     pub batch: usize,
     /// Op count of the source DAG.
@@ -265,6 +296,25 @@ pub fn dag_digest(dag: &Dag) -> u64 {
                 h.write_f64(*link_latency_us);
                 h.write_f64(*link_gb_per_s);
             }
+            OpKind::Collective(d) => {
+                // full routed-path pricing: two collectives that differ
+                // only in their link sets are different contention
+                // problems and must digest differently
+                h.write_str(d.coll.name());
+                h.write_u64(d.bytes);
+                h.write_usize(d.group.len());
+                for &g in &d.group {
+                    h.write_usize(g);
+                }
+                h.write_usize(d.steps);
+                h.write_f64(d.step_latency_us);
+                h.write_f64(d.hop_bytes);
+                h.write_f64(d.gb_per_s);
+                h.write_usize(d.links.len());
+                for &l in &d.links {
+                    h.write_usize(l);
+                }
+            }
             kind => {
                 h.write_f64(kind.flops());
                 h.write_f64(kind.dram_bytes());
@@ -352,6 +402,8 @@ impl Plan {
             h.write_str(name);
         }
         h.write_str(&m.planner);
+        h.write_str(&m.topology);
+        h.write_str(&m.strategy);
         h.write_usize(m.batch);
         h.write_usize(m.ops);
         h.write_u64(m.dag_digest);
@@ -667,9 +719,9 @@ impl Plan {
                     check_op(*op)?;
                     let kind = &dag.ops[*op].kind;
                     let dur = non_conv_time_us(kind, pool.device(op_dev[*op]));
-                    if kind.is_grad_reduce() {
-                        // the barrier replay serializes reductions with
-                        // everything else — it IS the serial tail
+                    if kind.is_comm() {
+                        // the barrier replay serializes communication
+                        // with everything else — it IS the serial tail
                         comm_us += dur;
                     }
                     ops.push(OpExec {
@@ -681,9 +733,9 @@ impl Plan {
                         end_us: clock + dur,
                         workspace_bytes: 0,
                         stream: None,
-                        // reductions occupy the interconnect, not the
-                        // device their DAG node nominally sits on
-                        device: if kind.is_grad_reduce() {
+                        // communication ops occupy the interconnect, not
+                        // the device their DAG node nominally sits on
+                        device: if kind.is_comm() {
                             None
                         } else {
                             Some(op_dev[*op])
@@ -812,6 +864,14 @@ impl Plan {
             "  \"planner\": \"{}\",\n",
             escape(&m.planner)
         ));
+        s.push_str(&format!(
+            "  \"topology\": \"{}\",\n",
+            escape(&m.topology)
+        ));
+        s.push_str(&format!(
+            "  \"strategy\": \"{}\",\n",
+            escape(&m.strategy)
+        ));
         s.push_str(&format!("  \"batch\": {},\n", m.batch));
         s.push_str(&format!("  \"ops\": {},\n", m.ops));
         s.push_str(&format!(
@@ -937,6 +997,8 @@ impl Plan {
             "device",
             "pool",
             "planner",
+            "topology",
+            "strategy",
             "batch",
             "ops",
             "dag_digest",
@@ -983,9 +1045,10 @@ impl Plan {
             // v1 plans recorded ordered groups only; v2 plans lack device
             // assignments, the replica count, and the verified digest; v3
             // plans lack the per-member fallback flags; v4 plans lack
-            // the per-device pool and planner provenance. A dedicated
-            // error (rather than a generic parse failure) tells the
-            // operator exactly what to do.
+            // the per-device pool and planner provenance; v5 plans lack
+            // the topology/strategy provenance. A dedicated error
+            // (rather than a generic parse failure) tells the operator
+            // exactly what to do.
             return Err(PlanError::UnsupportedVersion { found: version });
         }
         if version != PLAN_FORMAT_VERSION {
@@ -1013,6 +1076,8 @@ impl Plan {
             device: str_field("device")?,
             pool,
             planner: str_field("planner")?,
+            topology: str_field("topology")?,
+            strategy: str_field("strategy")?,
             batch: u64_field("batch")? as usize,
             ops: u64_field("ops")? as usize,
             dag_digest: digest_field("dag_digest")?,

@@ -33,6 +33,11 @@ pub struct Planner {
     cfg: ScheduleConfig,
     kind: PlannerKind,
     scheduler: Box<dyn Scheduler>,
+    /// Interconnect-topology provenance stamped into every plan
+    /// (`"ring"` unless a pool overrides it).
+    topology: String,
+    /// Parallelization-strategy provenance (`"data"` by default).
+    strategy: String,
 }
 
 impl Planner {
@@ -58,7 +63,18 @@ impl Planner {
             cfg,
             kind,
             scheduler: kind.build(),
+            topology: "ring".to_string(),
+            strategy: "data".to_string(),
         }
+    }
+
+    /// Record which interconnect topology and parallelization strategy
+    /// the DAGs planned here were built for — pure provenance, stamped
+    /// into [`Plan::meta`](super::artifact::PlanMeta) so a serialized
+    /// plan names the fabric it was priced against.
+    pub fn set_comm_provenance(&mut self, topology: &str, strategy: &str) {
+        self.topology = topology.to_string();
+        self.strategy = strategy.to_string();
     }
 
     /// The first member's spec — the legacy accessor; heterogeneous-aware
@@ -124,6 +140,8 @@ impl Planner {
         };
         let mut plan = self.scheduler.plan(dag, &eff, &self.cfg);
         plan.meta.label = label.to_string();
+        plan.meta.topology = self.topology.clone();
+        plan.meta.strategy = self.strategy.clone();
         plan
     }
 }

@@ -115,7 +115,9 @@ impl PlannerKind {
     }
 }
 
-/// Assemble the v5 meta block every scheduler stamps onto its plan.
+/// Assemble the v6 meta block every scheduler stamps onto its plan.
+/// Topology/strategy default to the flat-ring data-parallel provenance;
+/// `Planner::plan` overwrites them with the pool's configured fabric.
 pub(crate) fn plan_meta(
     dag: &Dag,
     pool: &PoolSpec,
@@ -138,6 +140,8 @@ pub(crate) fn plan_meta(
         device: pool.device(0).name.clone(),
         pool: pool.names(),
         planner: planner.to_string(),
+        topology: "ring".to_string(),
+        strategy: "data".to_string(),
         batch,
         ops: dag.len(),
         dag_digest: dag_digest(dag),

@@ -105,6 +105,14 @@ impl Session {
         self.executor
     }
 
+    /// Record topology/strategy provenance for plans built by this
+    /// session (see `Planner::set_comm_provenance`). `DevicePool::new`
+    /// calls this with its configured fabric; standalone sessions keep
+    /// the `"ring"`/`"data"` defaults.
+    pub fn set_comm_provenance(&mut self, topology: &str, strategy: &str) {
+        self.planner.set_comm_provenance(topology, strategy);
+    }
+
     /// Session whose workspace allocator spuriously refuses a `rate`
     /// fraction of allocations (robustness testing: replay must degrade to
     /// workspace-free algorithms, never fail an op).

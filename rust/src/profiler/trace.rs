@@ -51,11 +51,14 @@ pub fn chrome_trace_json(result: &SimResult) -> String {
 
 /// Serialize a whole-DAG schedule (the op-level event log) as a Chrome
 /// trace-event JSON document: one *process* ("pid") per device plus, for
-/// multi-GPU schedules, an `interconnect` process carrying the gradient
-/// reductions. Within each device, ops on the serial host lane sit on
-/// track 0 and convolutions on track `lane + 1`. Process- and
-/// thread-name metadata events label everything, and each op's
-/// algorithm, workspace, and device ride along in `args`.
+/// multi-GPU schedules, an `interconnect` process carrying the comm ops —
+/// legacy ring reductions on its track 0 (`ring`) and routed collectives
+/// on one track per link (`link N`), so concurrent transfers over
+/// disjoint links render as parallel rows. Within each device, ops on
+/// the serial host lane sit on track 0 and convolutions on track
+/// `lane + 1`. Process- and thread-name metadata events label
+/// everything, and each op's algorithm, workspace, and device ride
+/// along in `args`.
 pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
     let mut out = String::from("{\"traceEvents\":[");
     // track-name metadata: every device's host + every lane observed,
@@ -63,14 +66,26 @@ pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
     let mut max_lane: Option<usize> = None;
     let mut max_device = 0usize;
     let mut has_comm = false;
+    // comm ops carry a *link* id in `stream` (routed collectives) or
+    // None (the legacy serialized ring lane); device ops carry lanes
+    let mut max_link: Option<usize> = None;
     for o in &result.ops {
-        if let Some(l) = o.stream {
-            max_lane = Some(max_lane.map_or(l, |m: usize| m.max(l)));
+        match (o.device, o.stream) {
+            (Some(d), l) => {
+                max_device = max_device.max(d);
+                if let Some(l) = l {
+                    max_lane =
+                        Some(max_lane.map_or(l, |m: usize| m.max(l)));
+                }
+            }
+            (None, l) => {
+                has_comm = true;
+                if let Some(l) = l {
+                    max_link =
+                        Some(max_link.map_or(l, |m: usize| m.max(l)));
+                }
+            }
         }
-        if let Some(d) = o.device {
-            max_device = max_device.max(d);
-        }
-        has_comm |= o.device.is_none();
     }
     let comm_pid = max_device + 1;
     for d in 0..=max_device {
@@ -104,6 +119,19 @@ pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
             ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{comm_pid},\
              \"tid\":0,\"args\":{{\"name\":\"ring\"}}}}"
         ));
+        // one track per observed link: routed transfers land on
+        // `tid = link + 1`, so concurrent transfers over disjoint
+        // links render as parallel rows
+        if let Some(m) = max_link {
+            for link in 0..=m {
+                out.push_str(&format!(
+                    ",{{\"name\":\"thread_name\",\"ph\":\"M\",\
+                     \"pid\":{comm_pid},\"tid\":{},\
+                     \"args\":{{\"name\":\"link {link}\"}}}}",
+                    link + 1
+                ));
+            }
+        }
     }
     for o in &result.ops {
         // metadata events always precede, so every op record is
@@ -112,7 +140,7 @@ pub fn schedule_chrome_trace_json(result: &ScheduleResult) -> String {
         // interconnect residency is recorded on the op itself
         // (`device: None`), not inferred from the kind string
         let (pid, tid) = match o.device {
-            None => (comm_pid, 0),
+            None => (comm_pid, o.stream.map_or(0, |l| l + 1)),
             Some(d) => (d, o.stream.map_or(0, |l| l + 1)),
         };
         let algo = o

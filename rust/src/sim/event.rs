@@ -91,9 +91,9 @@ impl EventQueue {
     /// Cancel a pending event by its token. A token for an event that
     /// already popped (or was already cancelled) is a silent no-op for
     /// an in-flight stamp set bounded by the number of live cancels.
-    /// Wired for shed-style controllers (the serving layer retracts
-    /// speculative completions); the unit tests below pin the semantics.
-    #[allow(dead_code)]
+    /// The executor's bandwidth re-pricing path retracts a transfer's
+    /// completion event through here whenever its fair share changes;
+    /// the unit tests below pin the semantics.
     pub fn cancel(&mut self, token: EventToken) {
         self.cancelled.insert(token.0);
     }

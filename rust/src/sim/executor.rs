@@ -8,7 +8,7 @@
 //! device's running mix (the engine re-plans per-SM quotas for the new
 //! mix through the existing `plan_intra_sm` dispatch path).
 //!
-//! Multi-device plans (schema v5: per-node device assignments over a
+//! Multi-device plans (schema v6: per-node device assignments over a
 //! per-device [`PoolSpec`], built by `cluster::DevicePool` or placed by
 //! the list schedulers) add two things on top of the single-GPU
 //! machinery:
@@ -16,15 +16,22 @@
 //! - every device owns its own engine, stream lanes, host lane, and
 //!   workspace allocator — replicas never contend for each other's SMs or
 //!   memory, only for the interconnect;
-//! - `GradReduce` ops run on a single shared **interconnect lane** (one
-//!   collective at a time on the ring, NCCL-style). Their dependency
-//!   edges are the per-replica gradient producers, so a reduction
-//!   launches the moment the last replica's weight gradient resolves —
-//!   overlapping communication with the rest of the backward pass. The
-//!   executor merges all engines' kernel events and the op-level event
-//!   queue in global time order, so a reduce starts at its gradient's
-//!   true completion time even while another device's simulation is
-//!   mid-flight.
+//! - comm ops run on **channels** derived from their routed link sets:
+//!   ops whose `CommDesc` names the same links serialize on one channel
+//!   (one collective at a time per communicator, NCCL-style), channels
+//!   whose link sets are disjoint proceed concurrently, and channels
+//!   that share a link split its bandwidth fairly — every in-flight
+//!   transfer is re-priced whenever a transfer starts or finishes.
+//!   Legacy `GradReduce` ops carry no routed path; they all map to one
+//!   reserved virtual link, reproducing the single serialized
+//!   interconnect lane of flat-ring topologies bit-identically. A comm
+//!   op's dependency edges are the per-replica gradient producers, so a
+//!   reduction launches the moment the last replica's weight gradient
+//!   resolves — overlapping communication with the rest of the backward
+//!   pass. The executor merges all engines' kernel events and the
+//!   op-level event queue in global time order, so a reduce starts at
+//!   its gradient's true completion time even while another device's
+//!   simulation is mid-flight.
 //!
 //! Single-device plans take exactly the pre-cluster code path (one
 //! engine, an always-empty comm lane), keeping their timelines
@@ -64,7 +71,7 @@ use crate::graph::{Dag, OpKind};
 use crate::memory::DeviceMemory;
 use crate::plan::{Plan, PlanError, PlanStep};
 
-use super::event::{EventQueue, SimEvent};
+use super::event::{EventQueue, EventToken, SimEvent};
 use super::fluid::{fluid_makespan_with, FluidScratch};
 use super::streams::Lanes;
 
@@ -79,6 +86,61 @@ struct RunInfo {
     lane: usize,
     alloc: Option<u64>,
     desc: KernelDesc,
+}
+
+/// An in-flight interconnect transfer. `rem_us` is the remaining
+/// duration *at unit share* (exclusive use of every link on its path);
+/// the wall-clock remainder is `rem_us * share`, where `share` is the
+/// transfer's current bandwidth divisor. When the set of active flows
+/// changes, [`EventRun::reprice_flows`] settles elapsed progress into
+/// `rem_us`, cancels the flow's completion event, and reschedules it at
+/// the new rate — unless the share is unchanged, in which case the
+/// original event (and its float-exact completion time) survives.
+struct Flow {
+    op: usize,
+    chan: usize,
+    start: f64,
+    /// Virtual time of the last settle (start or last share change).
+    last: f64,
+    rem_us: f64,
+    share: f64,
+    token: EventToken,
+}
+
+/// Hard invariant: releasing a completed kernel's stream lane must hand
+/// back exactly the `(lane, op)` pair recorded at launch. A mismatch
+/// means the lane table and the run bookkeeping disagree — a corrupted
+/// schedule, not a recoverable condition — and surfaces as a typed
+/// error in every build profile (this was a `debug_assert_eq!` before,
+/// vacuous in release builds).
+fn check_lane_release(
+    device: usize,
+    released: Option<(usize, usize)>,
+    lane: usize,
+    op: usize,
+) -> Result<(), PlanError> {
+    if released == Some((lane, op)) {
+        Ok(())
+    } else {
+        Err(PlanError::LaneCorruption {
+            device,
+            op,
+            lane,
+            found: released,
+        })
+    }
+}
+
+/// The link set a comm op occupies, or `None` for compute/host ops.
+/// Legacy `GradReduce` ops (and degenerate collectives with an empty
+/// route) return `Some(&[])`, which the channel builder canonicalises
+/// to the reserved global virtual link.
+fn comm_links(kind: &OpKind) -> Option<&[usize]> {
+    match kind {
+        OpKind::GradReduce { .. } => Some(&[]),
+        OpKind::Collective(d) => Some(&d.links),
+        _ => None,
+    }
 }
 
 /// Min-heap of ready ops keyed by `(rank, op)`; ranks are unique, so the
@@ -105,7 +167,13 @@ struct ExecScratch {
     indeg: Vec<usize>,
     conv_ready: Vec<ReadyHeap>,
     host_ready: Vec<ReadyHeap>,
-    comm_ready: ReadyHeap,
+    chan_ready: Vec<ReadyHeap>,
+    chan_busy: Vec<bool>,
+    chan_of_op: Vec<usize>,
+    chan_links: Vec<Vec<usize>>,
+    link_load: Vec<u32>,
+    flows: Vec<Flow>,
+    comm_spans: Vec<(f64, f64)>,
     running: Vec<Vec<Option<RunInfo>>>,
     host_busy: Vec<bool>,
     done: Vec<KernelId>,
@@ -167,18 +235,30 @@ struct EventRun<'a> {
     /// quadratic.
     conv_ready: Vec<ReadyHeap>,
     host_ready: Vec<ReadyHeap>,
-    /// Interconnect queue (global): gradient reductions awaiting the ring.
-    comm_ready: ReadyHeap,
+    /// Per-channel interconnect queues: comm ops awaiting their
+    /// communicator (ops with identical routed link sets share one).
+    chan_ready: Vec<ReadyHeap>,
+    chan_busy: Vec<bool>,
+    /// Channel per op (`usize::MAX` for compute/host ops).
+    chan_of_op: Vec<usize>,
+    /// Canonical link list per channel (the fair-share footprint).
+    chan_links: Vec<Vec<usize>>,
+    /// Active-flow count per link id, rebuilt on every re-price.
+    link_load: Vec<u32>,
+    /// In-flight transfers, in launch order.
+    flows: Vec<Flow>,
+    /// `(start, end)` of every completed transfer; the busy-interval
+    /// union of these is the run's `comm_us` (overlapping transfers on
+    /// disjoint channels must not double-count wire time).
+    comm_spans: Vec<(f64, f64)>,
     /// Bookkeeping per device per engine kernel id (dense: each engine
     /// assigns ids in its own injection order).
     running: Vec<Vec<Option<RunInfo>>>,
     ops_out: Vec<OpExec>,
     host_busy: Vec<bool>,
-    comm_busy: bool,
     clock: f64,
     rounds: u64,
     ws_fallbacks: u64,
-    comm_us: f64,
     // Event-loop scratch (from ExecScratch; returned to it afterwards).
     done: Vec<KernelId>,
     deferred: Vec<(usize, usize)>,
@@ -190,7 +270,7 @@ struct EventRun<'a> {
 impl<'a> EventRun<'a> {
     /// Merge every engine's kernel events and the op-level queue in
     /// global time order until all sources run dry.
-    fn drive(&mut self) {
+    fn drive(&mut self) -> Result<(), PlanError> {
         loop {
             // earliest pending kernel event across devices (ties break to
             // the lowest device id — deterministic)
@@ -235,7 +315,10 @@ impl<'a> EventRun<'a> {
                 let t = self.engines[d].now();
                 self.clock = self.clock.max(t);
                 for &kid in &done {
-                    self.complete_conv(d, kid, t);
+                    if let Err(e) = self.complete_conv(d, kid, t) {
+                        self.done = done;
+                        return Err(e);
+                    }
                 }
                 done.clear();
                 self.done = done;
@@ -244,23 +327,41 @@ impl<'a> EventRun<'a> {
             }
             self.admit_ready();
         }
+        Ok(())
     }
 
     fn pop_op_event(&mut self) {
         let Some((t, ev)) = self.events.pop() else { return };
         self.clock = self.clock.max(t);
-        let (op, start, device) = match ev {
+        let (op, start, device, stream) = match ev {
             SimEvent::HostDone { op, start } => {
                 let d = self.op_dev[op];
                 self.host_busy[d] = false;
-                (op, start, Some(d))
+                (op, start, Some(d), None)
             }
             SimEvent::CommDone { op, start } => {
-                self.comm_busy = false;
-                self.comm_us += t - start;
-                // the reduce ran on the shared interconnect lane, not on
-                // the device its DAG node nominally sits on
-                (op, start, None)
+                let idx = self
+                    .flows
+                    .iter()
+                    .position(|f| f.op == op)
+                    .expect("flow bookkeeping");
+                // `remove`, not `swap_remove`: flow order stays launch
+                // order, keeping re-price iteration deterministic
+                let f = self.flows.remove(idx);
+                self.chan_busy[f.chan] = false;
+                self.comm_spans.push((start, t));
+                // one flow fewer on this path: surviving flows that
+                // shared a link with it speed up from here on
+                self.reprice_flows(t);
+                // the transfer ran on the interconnect, not on the
+                // device its DAG node nominally sits on; routed
+                // collectives report their first link as their lane,
+                // legacy ring reduces keep the serialized lane (None)
+                let stream = match &self.dag.ops[op].kind {
+                    OpKind::Collective(d) => d.links.first().copied(),
+                    _ => None,
+                };
+                (op, start, None, stream)
             }
         };
         let dag = self.dag;
@@ -272,17 +373,22 @@ impl<'a> EventRun<'a> {
             start_us: start,
             end_us: t,
             workspace_bytes: 0,
-            stream: None,
+            stream,
             device,
         });
         self.finish_op(op);
     }
 
-    fn complete_conv(&mut self, device: usize, kid: KernelId, t: f64) {
+    fn complete_conv(
+        &mut self,
+        device: usize,
+        kid: KernelId,
+        t: f64,
+    ) -> Result<(), PlanError> {
         let info =
             self.running[device][kid].take().expect("kernel bookkeeping");
         let released = self.lanes[device].release(kid);
-        debug_assert_eq!(released, Some((info.lane, info.op)));
+        check_lane_release(device, released, info.lane, info.op)?;
         // workspace freed at the completion event — not at a batch
         // boundary — which is what makes peak() a true concurrent
         // high-watermark
@@ -303,6 +409,7 @@ impl<'a> EventRun<'a> {
             device: Some(device),
         });
         self.finish_op(info.op);
+        Ok(())
     }
 
     /// Resolve dependency edges out of a completed op; newly-ready ops
@@ -321,11 +428,11 @@ impl<'a> EventRun<'a> {
         let rank = self.rank[op];
         let dev = self.op_dev[op];
         let is_conv = self.decision[op].is_some();
-        let is_comm = !is_conv && self.dag.ops[op].kind.is_grad_reduce();
+        let chan = self.chan_of_op[op];
         let heap: &mut ReadyHeap = if is_conv {
             &mut self.conv_ready[dev]
-        } else if is_comm {
-            &mut self.comm_ready
+        } else if chan != usize::MAX {
+            &mut self.chan_ready[chan]
         } else {
             &mut self.host_ready[dev]
         };
@@ -376,8 +483,8 @@ impl<'a> EventRun<'a> {
     /// Launch everything that can start right now: per device, the next
     /// host op onto its serial host lane and ready convolutions (in rank
     /// order) onto free stream lanes, subject to the join guard and
-    /// workspace admission; then the next gradient reduction onto the
-    /// shared interconnect lane.
+    /// workspace admission; then, per interconnect channel, the next
+    /// waiting transfer.
     fn admit_ready(&mut self) {
         let t = self.clock;
         for d in 0..self.engines.len() {
@@ -473,23 +580,86 @@ impl<'a> EventRun<'a> {
             }
             self.deferred = deferred;
         }
-        // Interconnect: one collective at a time on the ring, in rank
-        // (dispatch-priority) order — which, reductions being enqueued as
-        // their gradients resolve, is their readiness order.
-        if !self.comm_busy {
-            if let Some(Reverse((_, op))) = self.comm_ready.pop() {
-                let dag = self.dag;
-                // GradReduce pricing embeds its own link parameters; the
-                // spec argument is unused for it, so device 0 stands in
-                let dur = non_conv_time_us(
-                    &dag.ops[op].kind,
-                    self.pool.device(0),
-                );
-                self.events
-                    .push(t + dur, SimEvent::CommDone { op, start: t });
-                self.comm_busy = true;
+        // Interconnect: one collective at a time *per channel*, in rank
+        // (dispatch-priority) order — which, reductions being enqueued
+        // as their gradients resolve, is their readiness order.
+        // Channels over disjoint link sets launch side by side; the
+        // re-price below settles bandwidth splits where they overlap.
+        let mut launched = false;
+        for c in 0..self.chan_ready.len() {
+            if self.chan_busy[c] {
+                continue;
+            }
+            let Some(Reverse((_, op))) = self.chan_ready[c].pop() else {
+                continue;
+            };
+            let dag = self.dag;
+            // comm pricing embeds its own link parameters; the spec
+            // argument is unused for it, so device 0 stands in
+            let dur =
+                non_conv_time_us(&dag.ops[op].kind, self.pool.device(0));
+            let token = self
+                .events
+                .push(t + dur, SimEvent::CommDone { op, start: t });
+            self.chan_busy[c] = true;
+            self.flows.push(Flow {
+                op,
+                chan: c,
+                start: t,
+                last: t,
+                rem_us: dur,
+                share: 1.0,
+                token,
+            });
+            launched = true;
+        }
+        if launched {
+            self.reprice_flows(t);
+        }
+    }
+
+    /// Settle and re-schedule every in-flight transfer after the active
+    /// flow set changed. Fair sharing is per link: a flow's bandwidth
+    /// divisor is the *maximum* number of concurrent flows over any
+    /// link it crosses, so no link is ever asked for more than its
+    /// capacity (`Σ rate_f / n_l ≤ C_l` on every link `l`). A flow
+    /// whose divisor did not change keeps its original completion event
+    /// untouched — uncontended transfers (every flat-ring plan) retain
+    /// their float-exact completion times, which is what keeps
+    /// ring-degenerate topologies bit-identical to the single
+    /// serialized lane they replace.
+    fn reprice_flows(&mut self, t: f64) {
+        let mut flows = std::mem::take(&mut self.flows);
+        for l in self.link_load.iter_mut() {
+            *l = 0;
+        }
+        for f in flows.iter() {
+            for &l in &self.chan_links[f.chan] {
+                self.link_load[l] += 1;
             }
         }
+        for f in flows.iter_mut() {
+            let mut contenders = 1u32;
+            for &l in &self.chan_links[f.chan] {
+                contenders = contenders.max(self.link_load[l]);
+            }
+            let share = contenders as f64;
+            if share != f.share {
+                f.rem_us -= (t - f.last) / f.share;
+                f.rem_us = f.rem_us.max(0.0);
+                f.last = t;
+                f.share = share;
+                self.events.cancel(f.token);
+                f.token = self.events.push(
+                    t + f.rem_us * f.share,
+                    SimEvent::CommDone {
+                        op: f.op,
+                        start: f.start,
+                    },
+                );
+            }
+        }
+        self.flows = flows;
     }
 }
 
@@ -508,7 +678,7 @@ fn conv_overlap(ops: &[OpExec]) -> f64 {
 }
 
 /// Execute a plan event-driven. Provenance (DAG/pool digests) and the
-/// v5 node list have already been checked by `Plan::execute_with_memory`
+/// v6 node list have already been checked by `Plan::execute_with_memory`
 /// (`Plan::validate_nodes` runs for both executors); this builds the
 /// scheduling state off the nodes and drives the discrete-event loop.
 /// The node records are the placement authority: each op runs on the
@@ -636,7 +806,62 @@ fn execute_event_with(
     while s.host_ready.len() < devices {
         s.host_ready.push(ReadyHeap::new());
     }
-    s.comm_ready.clear();
+    // Channel table: comm ops whose routed link sets are identical
+    // serialize on one channel; distinct link sets get distinct
+    // channels (concurrent when disjoint, bandwidth-split when they
+    // overlap). Legacy `GradReduce` ops carry no route and all map to
+    // one reserved virtual link — one past the largest routed id —
+    // reproducing the PR 5 single serialized interconnect lane.
+    let mut global_link = 0usize;
+    for op in &dag.ops {
+        if let OpKind::Collective(d) = &op.kind {
+            for &l in &d.links {
+                global_link = global_link.max(l + 1);
+            }
+        }
+    }
+    let mut chan_of_op = std::mem::take(&mut s.chan_of_op);
+    chan_of_op.clear();
+    chan_of_op.resize(n, usize::MAX);
+    let mut chan_links = std::mem::take(&mut s.chan_links);
+    let mut n_chans = 0usize;
+    for (i, op) in dag.ops.iter().enumerate() {
+        let Some(links) = comm_links(&op.kind) else { continue };
+        let global = [global_link];
+        let canon: &[usize] =
+            if links.is_empty() { &global } else { links };
+        let mut chan = n_chans;
+        for c in 0..n_chans {
+            if chan_links[c].as_slice() == canon {
+                chan = c;
+                break;
+            }
+        }
+        if chan == n_chans {
+            // new channel; reuse a warm inner vec when one exists
+            if chan_links.len() == n_chans {
+                chan_links.push(Vec::new());
+            }
+            chan_links[n_chans].clear();
+            chan_links[n_chans].extend_from_slice(canon);
+            n_chans += 1;
+        }
+        chan_of_op[i] = chan;
+    }
+    chan_links.truncate(n_chans);
+    s.chan_ready.truncate(n_chans);
+    for h in s.chan_ready.iter_mut() {
+        h.clear();
+    }
+    while s.chan_ready.len() < n_chans {
+        s.chan_ready.push(ReadyHeap::new());
+    }
+    s.chan_busy.clear();
+    s.chan_busy.resize(n_chans, false);
+    s.link_load.clear();
+    s.link_load.resize(global_link + 1, 0);
+    s.flows.clear();
+    s.comm_spans.clear();
     s.running.truncate(devices);
     for v in s.running.iter_mut() {
         v.clear();
@@ -665,15 +890,19 @@ fn execute_event_with(
         indeg,
         conv_ready: std::mem::take(&mut s.conv_ready),
         host_ready: std::mem::take(&mut s.host_ready),
-        comm_ready: std::mem::take(&mut s.comm_ready),
+        chan_ready: std::mem::take(&mut s.chan_ready),
+        chan_busy: std::mem::take(&mut s.chan_busy),
+        chan_of_op,
+        chan_links,
+        link_load: std::mem::take(&mut s.link_load),
+        flows: std::mem::take(&mut s.flows),
+        comm_spans: std::mem::take(&mut s.comm_spans),
         running: std::mem::take(&mut s.running),
         ops_out: Vec::with_capacity(n),
         host_busy: std::mem::take(&mut s.host_busy),
-        comm_busy: false,
         clock: 0.0,
         rounds: 0,
         ws_fallbacks: plan.meta.planned_ws_fallbacks,
-        comm_us: 0.0,
         done: std::mem::take(&mut s.done),
         deferred: std::mem::take(&mut s.deferred),
         join_descs: std::mem::take(&mut s.join_descs),
@@ -686,7 +915,7 @@ fn execute_event_with(
         }
     }
     run.admit_ready();
-    run.drive();
+    let driven = run.drive();
     let covered = run.ops_out.len();
     let engine_events: u64 =
         run.engines.iter().map(Engine::events_processed).sum();
@@ -696,7 +925,6 @@ fn execute_event_with(
         run.mems.iter().map(DeviceMemory::peak).max().unwrap_or(0);
     let ws_fallbacks = run.ws_fallbacks;
     let rounds = run.rounds;
-    let comm_us = run.comm_us;
     // Return the warm state to the scratch before the result is built,
     // error or not.
     let EventRun {
@@ -711,7 +939,13 @@ fn execute_event_with(
         indeg,
         conv_ready,
         host_ready,
-        comm_ready,
+        chan_ready,
+        chan_busy,
+        chan_of_op,
+        chan_links,
+        link_load,
+        mut flows,
+        mut comm_spans,
         mut running,
         host_busy,
         done,
@@ -723,9 +957,30 @@ fn execute_event_with(
         ..
     } = run;
     events.clear();
+    flows.clear();
     for v in running.iter_mut() {
         v.clear();
     }
+    // Interconnect busy time is the *union* of the transfer spans, not
+    // their sum: concurrent transfers on disjoint channels overlap in
+    // wall time and must not double-count. A fully serialized lane (any
+    // flat-ring plan) has non-overlapping spans in completion order, so
+    // the union accumulates exactly the old per-op `end - start` sum —
+    // bit-identical, which `cluster_scaling` pins.
+    comm_spans
+        .sort_unstable_by(|a, b| a.partial_cmp(b).expect("finite spans"));
+    let mut comm_us = 0.0;
+    let mut cur_end = f64::NEG_INFINITY;
+    for &(cs, ce) in &comm_spans {
+        if cs >= cur_end {
+            comm_us += ce - cs;
+            cur_end = ce;
+        } else if ce > cur_end {
+            comm_us += ce - cur_end;
+            cur_end = ce;
+        }
+    }
+    comm_spans.clear();
     s.engines = engines;
     s.lanes = lanes;
     s.events = events;
@@ -737,7 +992,13 @@ fn execute_event_with(
     s.indeg = indeg;
     s.conv_ready = conv_ready;
     s.host_ready = host_ready;
-    s.comm_ready = comm_ready;
+    s.chan_ready = chan_ready;
+    s.chan_busy = chan_busy;
+    s.chan_of_op = chan_of_op;
+    s.chan_links = chan_links;
+    s.link_load = link_load;
+    s.flows = flows;
+    s.comm_spans = comm_spans;
     s.running = running;
     s.host_busy = host_busy;
     s.done = done;
@@ -745,6 +1006,7 @@ fn execute_event_with(
     s.join_descs = join_descs;
     s.join_lefts = join_lefts;
     s.fluid = fluid;
+    driven?;
     if covered != n {
         return Err(PlanError::IncompleteCoverage {
             executed: covered,
@@ -938,5 +1200,96 @@ mod tests {
         for o in r.ops.iter().filter(|o| o.kind == "grad_reduce") {
             assert_eq!(o.device, None, "{} on a compute device", o.name);
         }
+    }
+
+    #[test]
+    fn lane_release_invariant_is_a_hard_error() {
+        // the matching release passes
+        assert!(check_lane_release(0, Some((1, 7)), 1, 7).is_ok());
+        // a vanished kernel is a typed error in every build profile,
+        // not a debug-only assert
+        let miss = check_lane_release(2, None, 1, 7).unwrap_err();
+        match &miss {
+            PlanError::LaneCorruption {
+                device,
+                op,
+                lane,
+                found,
+            } => {
+                assert_eq!(
+                    (*device, *op, *lane, *found),
+                    (2, 7, 1, None)
+                );
+            }
+            other => panic!("wrong error variant: {other:?}"),
+        }
+        assert!(
+            format!("{miss}").contains("lane"),
+            "error must name the lane table"
+        );
+        // wrong lane and wrong op are equally fatal
+        let wrong_lane =
+            check_lane_release(0, Some((0, 7)), 1, 7).unwrap_err();
+        assert!(matches!(
+            wrong_lane,
+            PlanError::LaneCorruption { .. }
+        ));
+        let wrong_op =
+            check_lane_release(0, Some((1, 8)), 1, 7).unwrap_err();
+        assert!(matches!(wrong_op, PlanError::LaneCorruption { .. }));
+    }
+
+    #[test]
+    fn serialized_comm_us_is_the_legacy_span_sum() {
+        use crate::cluster::{
+            data_parallel_dag, reduce_sites, ClusterConfig, LinkModel,
+        };
+        use crate::graph::training_dag;
+        // Flat-ring (degenerate) topology: every reduce serializes on
+        // the one virtual interconnect lane, spans never overlap, and
+        // the busy-interval union must reproduce the historical
+        // per-op `end - start` sum bit for bit — the value `comm_us`
+        // reported before overlapping transfers existed.
+        let fwd = Network::GoogleNet.build(4);
+        let train = training_dag(&fwd);
+        let sites = reduce_sites(&fwd, &train);
+        let cluster = ClusterConfig {
+            replicas: 2,
+            link: LinkModel::pcie3(),
+            overlap: true,
+        };
+        let dag = data_parallel_dag(&train, &sites, &cluster);
+        let spec = DeviceSpec::k40();
+        let plan = Planner::new(spec.clone(), config(2)).plan(&dag, "");
+        let r = execute_event(
+            &plan,
+            &dag,
+            &PoolSpec::homogeneous(spec, 2),
+            DeviceMemory::new(plan.meta.workspace_limit),
+        )
+        .unwrap();
+        let mut spans: Vec<(f64, f64)> = r
+            .ops
+            .iter()
+            .filter(|o| o.kind == "grad_reduce")
+            .map(|o| (o.start_us, o.end_us))
+            .collect();
+        assert!(!spans.is_empty(), "plan must carry reductions");
+        spans.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in spans.windows(2) {
+            assert!(
+                w[0].1 <= w[1].0,
+                "reduces must serialize on the degenerate lane: \
+                 {:?} overlaps {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        let legacy_sum: f64 = spans.iter().map(|(s, e)| e - s).sum();
+        assert_eq!(
+            r.comm_us, legacy_sum,
+            "serialized busy-union must equal the old per-op sum \
+             bit for bit"
+        );
     }
 }

@@ -249,6 +249,41 @@ fn oom_fallback_chain_survives_with_reduces_in_flight() {
 }
 
 #[test]
+fn explicit_ring_topology_is_bit_identical_to_the_flat_default() {
+    // The topology-equivalence acceptance contract: a degenerate
+    // flat-ring topology must reproduce the PR 5 serialized-lane
+    // timelines bit for bit, under BOTH executors — the channel/flow
+    // comm engine costs nothing when only one communicator exists.
+    use parconv::cluster::TopologySpec;
+    for net in [Network::GoogleNet, Network::ResNet50] {
+        let fwd = net.build(4);
+        for replicas in [2usize, 4] {
+            for exec in [ExecutorKind::Event, ExecutorKind::Barrier] {
+                let mut flat =
+                    DevicePool::new(opts(2, GB4, replicas, true));
+                flat.set_executor(exec);
+                let baseline = flat.run_training(&fwd);
+                let mut ringed = DevicePool::new(
+                    opts(2, GB4, replicas, true)
+                        .topology(TopologySpec::Ring),
+                );
+                ringed.set_executor(exec);
+                let ring = ringed.run_training(&fwd);
+                assert_identical(
+                    &ring,
+                    &baseline,
+                    &format!(
+                        "{} N={replicas} {} ring-degenerate",
+                        net.name(),
+                        exec.name()
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn weak_scaling_keeps_overlapped_makespan_near_flat() {
     // Weak scaling in one assertion: the overlapped N=4 makespan stays
     // within 35% of N=1 on GoogleNet — per-device work is constant, so

@@ -289,6 +289,304 @@ fn ten_thousand_node_dag_satisfies_invariants_on_two_gpus() {
     );
 }
 
+/// A one-step collective whose contention domain is exactly `links`
+/// and whose uncontended duration is exactly `us` microseconds
+/// (1 GB/s moves 1e3 bytes per microsecond; zero step latency).
+fn timed_comm(links: Vec<usize>, us: f64) -> OpKind {
+    use parconv::graph::{CollectiveKind, CommDesc};
+    OpKind::Collective(CommDesc {
+        coll: CollectiveKind::AllGather,
+        bytes: 1 << 20,
+        group: vec![0, 1],
+        steps: 1,
+        step_latency_us: 0.0,
+        hop_bytes: us * 1e3,
+        gb_per_s: 1.0,
+        links,
+    })
+}
+
+/// `op_id -> (start, end)` spans of one executed schedule.
+fn spans(r: &ScheduleResult) -> Vec<(f64, f64)> {
+    let mut s = vec![(0.0f64, 0.0f64); r.ops.len()];
+    for o in &r.ops {
+        s[o.op_id] = (o.start_us, o.end_us);
+    }
+    s
+}
+
+fn run_event(dag: &Dag) -> ScheduleResult {
+    Session::new(DeviceSpec::k40(), config(2, GB4)).run(dag)
+}
+
+#[test]
+fn disjoint_link_transfers_overlap_and_shared_links_split_bandwidth() {
+    // The PR 5 bug this PR fixes: reduces over disjoint device subsets
+    // queued behind each other on the one global lane. Pinned fixed
+    // behavior — transfers whose routed paths share no link proceed
+    // concurrently; identical link sets serialize FIFO on their
+    // channel; partially overlapping link sets split bandwidth fairly.
+    let us = 800.0;
+    let solo = {
+        let mut dag = Dag::new();
+        dag.add("c0", timed_comm(vec![0], us));
+        run_event(&dag).makespan_us
+    };
+    assert!(
+        (solo - us).abs() < 1e-6,
+        "uncontended flow must run at full link rate: {solo} vs {us}"
+    );
+
+    // identical link sets -> same channel -> strict serialization
+    {
+        let mut dag = Dag::new();
+        dag.add("c0", timed_comm(vec![0], us));
+        dag.add("c1", timed_comm(vec![0], us));
+        let r = run_event(&dag);
+        let s = spans(&r);
+        let (first, second) = if s[0].0 <= s[1].0 {
+            (s[0], s[1])
+        } else {
+            (s[1], s[0])
+        };
+        assert!(
+            first.1 <= second.0 + 1e-6,
+            "same-channel transfers overlapped: {first:?} vs {second:?}"
+        );
+        assert!(
+            r.makespan_us >= 2.0 * solo - 1e-6,
+            "serialized pair must pay both wire times"
+        );
+        assert!((r.comm_us - 2.0 * solo).abs() < 1e-6);
+    }
+
+    // disjoint link sets -> concurrent, makespan of ONE transfer
+    {
+        let mut dag = Dag::new();
+        dag.add("c0", timed_comm(vec![0], us));
+        dag.add("c1", timed_comm(vec![1], us));
+        let r = run_event(&dag);
+        let s = spans(&r);
+        assert!(
+            s[0].0 < s[1].1 && s[1].0 < s[0].1,
+            "disjoint-link transfers must overlap: {:?} vs {:?}",
+            s[0],
+            s[1]
+        );
+        assert!(
+            r.makespan_us <= solo + 1e-6,
+            "two disjoint transfers cost one: {} vs {solo}",
+            r.makespan_us
+        );
+        // busy-interval union, not the double-counting per-op sum
+        assert!(
+            (r.comm_us - solo).abs() < 1e-6,
+            "comm_us must be the busy union {solo}, got {}",
+            r.comm_us
+        );
+    }
+
+    // partially overlapping link sets -> both run, at half bandwidth
+    {
+        let mut dag = Dag::new();
+        dag.add("c0", timed_comm(vec![0, 1], us));
+        dag.add("c1", timed_comm(vec![1, 2], us));
+        let r = run_event(&dag);
+        let s = spans(&r);
+        assert!(
+            s[0].0 < s[1].1 && s[1].0 < s[0].1,
+            "contending transfers still make progress together"
+        );
+        for (i, &(start, end)) in s.iter().enumerate() {
+            assert!(
+                end - start >= 2.0 * solo - 1e-6,
+                "flow {i} shares link 1 two ways, must stretch to \
+                 {}: got {:?}",
+                2.0 * solo,
+                (start, end)
+            );
+            assert!(end - start <= 2.0 * solo + 1e-6, "over-stretched");
+        }
+        assert!(
+            (r.makespan_us - 2.0 * solo).abs() < 1e-6,
+            "fair split finishes both at 2x solo"
+        );
+        assert!(
+            (r.comm_us - 2.0 * solo).abs() < 1e-6,
+            "overlapping spans must not double-count wire time"
+        );
+    }
+}
+
+#[test]
+fn no_link_is_oversubscribed_and_routes_conserve_bytes() {
+    use parconv::cluster::Topology;
+    use parconv::graph::OpKind as K;
+
+    // (a) a contended mesh of transfers: integrated over time, the
+    // work each link carries can never exceed its capacity — for every
+    // link, the sum of the solo durations of the flows that cross it
+    // fits inside the union of their executed spans (capacity 1 after
+    // normalizing by bandwidth), and no flow beats its solo time.
+    let mut dag = Dag::new();
+    let a = dag.add("a", timed_comm(vec![0], 500.0));
+    dag.add("b", timed_comm(vec![0, 1], 700.0));
+    dag.add("c", timed_comm(vec![1, 2], 600.0));
+    let d = dag.add("d", timed_comm(vec![2], 400.0));
+    dag.add_after("e", timed_comm(vec![0, 2], 300.0), &[a]);
+    dag.add_after("f", timed_comm(vec![1], 200.0), &[d]);
+    let r = run_event(&dag);
+    let s = spans(&r);
+    let desc_of = |i: usize| match &dag.ops[i].kind {
+        K::Collective(d) => d.clone(),
+        other => panic!("op {i} is not a collective: {other:?}"),
+    };
+    for i in 0..dag.len() {
+        let desc = desc_of(i);
+        let solo = LinkModel {
+            latency_us: desc.step_latency_us,
+            gb_per_s: desc.gb_per_s,
+        }
+        .staged_us(desc.steps, desc.hop_bytes);
+        assert!(
+            s[i].1 - s[i].0 >= solo - 1e-6,
+            "op {i} finished faster than its uncontended link allows"
+        );
+    }
+    for link in 0usize..3 {
+        let flows: Vec<usize> = (0..dag.len())
+            .filter(|&i| desc_of(i).links.contains(&link))
+            .collect();
+        let solo_sum: f64 = flows
+            .iter()
+            .map(|&i| {
+                let desc = desc_of(i);
+                LinkModel {
+                    latency_us: desc.step_latency_us,
+                    gb_per_s: desc.gb_per_s,
+                }
+                .staged_us(desc.steps, desc.hop_bytes)
+            })
+            .sum();
+        let mut windows: Vec<(f64, f64)> =
+            flows.iter().map(|&i| s[i]).collect();
+        windows.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let mut union = 0.0;
+        let mut cur_end = f64::NEG_INFINITY;
+        for (cs, ce) in windows {
+            if cs >= cur_end {
+                union += ce - cs;
+                cur_end = ce;
+            } else if ce > cur_end {
+                union += ce - cur_end;
+                cur_end = ce;
+            }
+        }
+        assert!(
+            solo_sum <= union + 1e-6,
+            "link {link} carried {solo_sum}us of work in {union}us of \
+             wall time: over its bandwidth"
+        );
+    }
+
+    // (b) routed bytes in = bytes out: every route is a connected
+    // walk from source to destination, and a store-and-forward send
+    // moves the full tensor across every hop it crosses.
+    let topos = [
+        Topology::switch(6, LinkModel::pcie3()),
+        Topology::islands(8, 4, LinkModel::pcie3()),
+        Topology::ring(5, LinkModel::pcie3()),
+    ];
+    for t in &topos {
+        for from in 0..t.devices() {
+            for to in 0..t.devices() {
+                let path = t.route(from, to);
+                let mut cur = from;
+                for &l in &path {
+                    let link = t.links()[l];
+                    assert!(
+                        link.a == cur || link.b == cur,
+                        "route {from}->{to}: link {l} does not touch \
+                         node {cur}"
+                    );
+                    cur = if link.a == cur { link.b } else { link.a };
+                }
+                assert_eq!(
+                    cur, to,
+                    "route {from}->{to} ends at node {cur}"
+                );
+                let send = t.send_desc(from, to, 4096);
+                if from == to {
+                    assert_eq!(send.steps, 0, "self-send is free");
+                } else {
+                    assert_eq!(
+                        send.steps,
+                        path.len(),
+                        "one step per routed hop"
+                    );
+                    assert_eq!(
+                        send.hop_bytes, 4096.0,
+                        "the bytes entering a hop must leave it"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn island_local_reduces_no_longer_queue_behind_each_other() {
+    // The system-level shape of the fix: on an islands topology the
+    // hierarchical reduce's intra-island phases share no links across
+    // islands, so the executor must run them concurrently — while any
+    // two collectives with the SAME contention domain stay serialized.
+    use parconv::cluster::{DevicePool, PoolOptions, TopologySpec};
+    use parconv::graph::{Network, OpKind as K};
+    let fwd = Network::GoogleNet.build(8);
+    let mk = || {
+        DevicePool::new(
+            PoolOptions::homogeneous(DeviceSpec::k40(), 4)
+                .schedule(config(2, GB4))
+                .link(LinkModel::pcie3())
+                .overlap(true)
+                .topology(TopologySpec::Islands(2)),
+        )
+    };
+    let cdag = mk().training_dag(&fwd);
+    let r = mk().run_training(&fwd);
+    let comm: Vec<usize> = (0..cdag.len())
+        .filter(|&i| matches!(cdag.ops[i].kind, K::Collective(_)))
+        .collect();
+    assert!(!comm.is_empty(), "hierarchical reduce must emit collectives");
+    let s = spans(&r);
+    let links_of = |i: usize| match &cdag.ops[i].kind {
+        K::Collective(d) => d.links.clone(),
+        _ => unreachable!(),
+    };
+    let mut overlapped_disjoint = false;
+    for (x, &i) in comm.iter().enumerate() {
+        for &j in &comm[x + 1..] {
+            let (li, lj) = (links_of(i), links_of(j));
+            let overlap = s[i].0 < s[j].1 && s[j].0 < s[i].1;
+            if li.iter().all(|l| !lj.contains(l)) {
+                overlapped_disjoint |= overlap;
+            } else if li == lj {
+                assert!(
+                    !overlap,
+                    "ops {i} and {j} share one channel ({li:?}) yet \
+                     overlapped: {:?} vs {:?}",
+                    s[i], s[j]
+                );
+            }
+        }
+    }
+    assert!(
+        overlapped_disjoint,
+        "no two disjoint-island reduces ever overlapped — transfers \
+         are still queueing on a global lane"
+    );
+}
+
 #[test]
 fn random_dag_generator_is_deterministic_and_nonlinear_often() {
     // the harness is only as good as its generator: same seed, same

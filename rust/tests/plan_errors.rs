@@ -21,7 +21,7 @@ fn config() -> ScheduleConfig {
     }
 }
 
-fn v5_json() -> String {
+fn v6_json() -> String {
     let dag = Network::GoogleNet.build(8);
     Session::new(DeviceSpec::k40(), config())
         .plan_labeled(&dag, "googlenet")
@@ -30,7 +30,7 @@ fn v5_json() -> String {
 
 #[test]
 fn truncated_documents_fail_with_parse_errors() {
-    let json = v5_json();
+    let json = v6_json();
     // every prefix family: mid-structure, mid-token, empty
     for cut in [json.len() / 2, json.len() - 3, 25, 1, 0] {
         match Plan::from_json(&json[..cut]) {
@@ -42,10 +42,10 @@ fn truncated_documents_fail_with_parse_errors() {
 
 #[test]
 fn unknown_top_level_keys_are_refused() {
-    let json = v5_json();
+    let json = v6_json();
     let bad = json.replacen(
-        "\"version\": 5,",
-        "\"version\": 5,\n  \"wat\": 1,",
+        "\"version\": 6,",
+        "\"version\": 6,\n  \"wat\": 1,",
         1,
     );
     match Plan::from_json(&bad) {
@@ -56,7 +56,7 @@ fn unknown_top_level_keys_are_refused() {
 
 #[test]
 fn unknown_nested_keys_and_missing_node_device_are_refused() {
-    let json = v5_json();
+    let json = v6_json();
     // a stray key inside a node object is invisible to the self-digest
     // (it covers the *parsed* content), so the reader must refuse it
     let node_key = json.replacen(
@@ -88,10 +88,10 @@ fn unknown_nested_keys_and_missing_node_device_are_refused() {
 
 #[test]
 fn stale_versioned_documents_fail_with_the_versioned_error() {
-    let json = v5_json();
-    for old in [1u32, 2, 3, 4] {
+    let json = v6_json();
+    for old in [1u32, 2, 3, 4, 5] {
         let stale = json.replacen(
-            "\"version\": 5",
+            "\"version\": 6",
             &format!("\"version\": {old}"),
             1,
         );
@@ -103,7 +103,7 @@ fn stale_versioned_documents_fail_with_the_versioned_error() {
     }
     // a future version is refused too (generic parse error: we cannot
     // know what it means)
-    let future = json.replacen("\"version\": 5", "\"version\": 9", 1);
+    let future = json.replacen("\"version\": 6", "\"version\": 9", 1);
     assert!(matches!(
         Plan::from_json(&future),
         Err(PlanError::Parse(_))
@@ -112,7 +112,7 @@ fn stale_versioned_documents_fail_with_the_versioned_error() {
 
 #[test]
 fn tampered_content_fails_the_digest_check() {
-    let json = v5_json();
+    let json = v6_json();
     // flip a recorded decision value but keep the written digest: the
     // reader recomputes over content and must refuse
     assert!(json.contains("\"streams\": 2"), "fixture changed");
@@ -136,7 +136,7 @@ fn tampered_content_fails_the_digest_check() {
 
 #[test]
 fn malformed_node_entries_fail_typed() {
-    let json = v5_json();
+    let json = v6_json();
     // non-numeric lane
     let bad_lane = json.replacen("\"lane\": 0", "\"lane\": \"zero\"", 1);
     assert!(matches!(
@@ -197,10 +197,11 @@ fn replica_count_is_validated_against_the_dag() {
 
 #[test]
 fn multi_gpu_plans_roundtrip_with_devices_and_reduce_ops() {
-    // the happy path of the v3/v4/v5 additions: a 2-replica plan
+    // the happy path of the v3..v6 additions: a 2-replica plan
     // serializes device assignments + reduce nodes + per-member
-    // fallback flags + the per-device spec pool, reloads
-    // digest-identical, and replays to the same timeline
+    // fallback flags + the per-device spec pool + topology/strategy
+    // provenance, reloads digest-identical, and replays to the same
+    // timeline
     let fwd = Network::GoogleNet.build(4);
     let pool = DevicePool::new(
         PoolOptions::homogeneous(DeviceSpec::k40(), 2).schedule(config()),
@@ -208,14 +209,22 @@ fn multi_gpu_plans_roundtrip_with_devices_and_reduce_ops() {
     let cdag = pool.training_dag(&fwd);
     let plan = (*pool.session().plan(&cdag)).clone();
     let json = plan.to_json();
-    assert!(json.contains("\"version\": 5"));
+    assert!(json.contains("\"version\": 6"));
     assert!(json.contains("\"replicas\": 2"));
     assert!(json.contains("\"device\": 1"));
     assert!(json.contains("_allreduce"));
     assert!(json.contains("\"fallback\": false"));
     assert!(json.contains("\"pool\": ["), "v5 records the device pool");
     assert!(json.contains("\"planner\": \"greedy\""), "v5 provenance");
-    let reloaded = Plan::from_json(&json).expect("v5 round-trip");
+    assert!(
+        json.contains("\"topology\": \"ring\""),
+        "v6 topology provenance"
+    );
+    assert!(
+        json.contains("\"strategy\": \"data\""),
+        "v6 strategy provenance"
+    );
+    let reloaded = Plan::from_json(&json).expect("v6 round-trip");
     assert_eq!(reloaded.digest(), plan.digest());
     assert_eq!(reloaded.nodes, plan.nodes);
     let a = plan.execute(&cdag, pool.session().spec()).unwrap();
